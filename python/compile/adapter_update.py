@@ -1,0 +1,104 @@
+"""L2: worker-side update graphs — the computation ColA offloads (Eq. 6).
+
+Each graph receives the adaptation data the server shipped —
+``x`` (hidden inputs, flattened to rows) and ``ghat`` (gradient of the
+fine-tuned hidden representation) — plus the worker's current adapter
+parameters, and returns the surrogate-loss gradients:
+
+    target = g_w(x) - ghat          (the worker recomputes dh = g_w(x)
+                                     itself, exactly Algorithm 1 line 13)
+    grads  = d/dw  1/2 sum_i ||g_w(x_i) - target_i||^2
+
+By Prop. 1 these equal the coupled parameter gradients of the task loss.
+The heavy contractions run in the Pallas ``fit_step`` kernels so they
+lower into the same HLO artifact.
+
+Gradients (not updated weights) are returned: the Rust worker accumulates
+them across the adaptation interval I natively, scales by 1/I, and applies
+its own (tested-equivalent) SGD/AdamW — this keeps one artifact valid for
+every interval setting. A reference ``adamw_step``/``sgd_step`` graph is
+also lowered so the Rust optimizer can be verified bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fit_step as kfit
+from .model import ADAPTER_SCALE, MLP_HIDDEN, RANK
+
+
+def make_fit_grad(kind: str, d_in: int, d_out: int, n_rows: int):
+    """Build fn(x, ghat, params...) -> grads... for one adapter site.
+
+    Returns (fn, input_names, output_names, specs).
+    """
+    s = ADAPTER_SCALE
+    xspec = jax.ShapeDtypeStruct((n_rows, d_in), jnp.float32)
+    gspec = jax.ShapeDtypeStruct((n_rows, d_out), jnp.float32)
+
+    if kind == "lowrank":
+        def fn(x, ghat, a, b):
+            delta = s * (x @ a) @ b
+            target = delta - ghat
+            da, db = kfit.fit_step_lowrank(x, target, a, b, s)
+            return (da, db)
+        names = ["x", "ghat", "A", "B"]
+        specs = [xspec, gspec,
+                 jax.ShapeDtypeStruct((d_in, RANK), jnp.float32),
+                 jax.ShapeDtypeStruct((RANK, d_out), jnp.float32)]
+        onames = ["dA", "dB"]
+    elif kind == "linear":
+        def fn(x, ghat, w):
+            delta = s * x @ w
+            target = delta - ghat
+            return (kfit.fit_step_linear(x, target, w, s),)
+        names = ["x", "ghat", "W"]
+        specs = [xspec, gspec, jax.ShapeDtypeStruct((d_in, d_out), jnp.float32)]
+        onames = ["dW"]
+    elif kind == "mlp":
+        def fn(x, ghat, w1, b1, w2, b2):
+            delta = s * (jnp.maximum(x @ w1 + b1, 0.0) @ w2 + b2)
+            target = delta - ghat
+            return kfit.fit_step_mlp(x, target, w1, b1, w2, b2)
+        names = ["x", "ghat", "W1", "b1", "W2", "b2"]
+        specs = [xspec, gspec,
+                 jax.ShapeDtypeStruct((d_in, MLP_HIDDEN), jnp.float32),
+                 jax.ShapeDtypeStruct((MLP_HIDDEN,), jnp.float32),
+                 jax.ShapeDtypeStruct((MLP_HIDDEN, d_out), jnp.float32),
+                 jax.ShapeDtypeStruct((d_out,), jnp.float32)]
+        onames = ["dW1", "db1", "dW2", "db2"]
+    else:
+        raise ValueError(kind)
+    return fn, names, onames, specs
+
+
+def make_adamw_step(n: int):
+    """Reference AdamW over a flat f32[n] parameter vector.
+
+    fn(w, g, m, v, t, lr, beta1, beta2, eps, wd) -> (w', m', v')
+    t is the 1-based step count (f32 scalar). Matches the paper's AdamW
+    (decoupled weight decay) and the Rust-native optimizer bit-for-bit.
+    """
+    def fn(w, g, m, v, t, lr, beta1, beta2, eps, wd):
+        m2 = beta1 * m + (1.0 - beta1) * g
+        v2 = beta2 * v + (1.0 - beta2) * g * g
+        mhat = m2 / (1.0 - beta1 ** t)
+        vhat = v2 / (1.0 - beta2 ** t)
+        w2 = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w)
+        return (w2, m2, v2)
+
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    sc = jax.ShapeDtypeStruct((), jnp.float32)
+    names = ["w", "g", "m", "v", "t", "lr", "beta1", "beta2", "eps", "wd"]
+    return fn, names, ["w2", "m2", "v2"], [vec, vec, vec, vec, sc, sc, sc, sc, sc, sc]
+
+
+def make_sgd_step(n: int):
+    """fn(w, g, lr, wd) -> (w',) — plain SGD with decoupled weight decay."""
+    def fn(w, g, lr, wd):
+        return (w - lr * (g + wd * w),)
+
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    sc = jax.ShapeDtypeStruct((), jnp.float32)
+    return fn, ["w", "g", "lr", "wd"], ["w2"], [vec, vec, sc, sc]

@@ -1,0 +1,213 @@
+"""AOT driver: lower every L2 graph to ``artifacts/*.hlo.txt`` + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator is
+self-contained afterwards. Emits:
+
+  artifacts/<name>.hlo.txt        one HLO-text module per graph
+  artifacts/manifest.json         name -> {file, inputs, outputs} with
+                                  [name, dtype, dims] triples in call order
+  artifacts/init/<group>/<p>.bin  raw little-endian f32 initial values
+                                  (base weights, adapter + tunable inits)
+
+Usage: python -m compile.aot --out ../artifacts [--sizes tiny,small,base]
+       [--filter regex] [--skip-init]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import adapter_update, baselines, ic_models, model
+from .hlo import lower_to_hlo_text
+
+N_CLASSES_SEQCLS = 4
+BASELINE_METHODS = ["ft", "lora", "ia3", "prompt", "ptuning", "prefix"]
+
+
+def _spec_entry(name, spec):
+    return [name, str(spec.dtype), list(spec.shape)]
+
+
+class Emitter:
+    def __init__(self, out_dir, filter_re=None):
+        self.out_dir = out_dir
+        self.filter_re = re.compile(filter_re) if filter_re else None
+        self.manifest = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, builder):
+        if self.filter_re and not self.filter_re.search(name):
+            return
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        fn, in_names, out_names, specs = builder()
+        text = lower_to_hlo_text(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_entry(n, s) for n, s in zip(in_names, specs)],
+            "outputs": out_names,
+        }
+        print(f"  [{time.time()-t0:6.1f}s] {name}  ({len(text)//1024} KiB)")
+
+
+def export_init(out_dir, group, tree):
+    d = os.path.join(out_dir, "init", group)
+    os.makedirs(d, exist_ok=True)
+    index = {}
+    for name, arr in tree.items():
+        fname = name.replace("/", "_") + ".bin"
+        np.asarray(arr, dtype=np.float32).tofile(os.path.join(d, fname))
+        index[name] = {"file": fname, "shape": list(np.shape(arr))}
+    with open(os.path.join(d, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+
+
+def emit_lm_size(em, size, cfg, *, full=True):
+    # perf (§Perf): tiny keeps Pallas attention (kernel-integration
+    # coverage); larger sizes lower attention/LN via jnp (1.7x faster on
+    # CPU PJRT; the adapter/fit Pallas kernels remain in all artifacts)
+    model.ATTN_PALLAS = size == "tiny"
+    kinds = ["lowrank", "linear", "mlp", "none"] if full else ["none", "linear"]
+    for kind in kinds:
+        em.emit(f"lm_fwdbwd_{size}_{kind}",
+                lambda k=kind: model.make_lm_fwdbwd(cfg, k))
+    em.emit(f"lm_fwd_{size}", lambda: model.make_lm_fwd(cfg))
+    # worker fit graphs for this width (shared by q/v sites)
+    d, rows = cfg["d"], cfg["batch"] * cfg["seq"]
+    fit_kinds = ["lowrank", "linear", "mlp"] if full else ["linear"]
+    for kind in fit_kinds:
+        em.emit(f"fit_{kind}_{d}x{d}_n{rows}",
+                lambda k=kind: adapter_update.make_fit_grad(k, d, d, rows))
+
+
+def emit_tiny_extras(em, cfg):
+    """Artifacts only the tiny size needs: seq-cls task graphs, coupled
+    baselines, batch-size variants for the computation-eval bench."""
+    size = "tiny"
+    model.ATTN_PALLAS = True
+    for kind in ["lowrank", "linear", "mlp", "none"]:
+        em.emit(f"seqcls_fwdbwd_{size}_{kind}",
+                lambda k=kind: model.make_seqcls_fwdbwd(cfg, k, N_CLASSES_SEQCLS))
+    for meth in BASELINE_METHODS:
+        em.emit(f"coupled_clm_{size}_{meth}",
+                lambda m=meth: baselines.make_coupled_clm_step(cfg, m))
+        em.emit(f"coupled_seqcls_{size}_{meth}",
+                lambda m=meth: baselines.make_coupled_seqcls_step(
+                    cfg, m, N_CLASSES_SEQCLS))
+    # head-site fit (classifier trained from scratch through a Linear
+    # ColA adapter, B rows per batch)
+    em.emit(f"fit_linear_{cfg['d']}x{N_CLASSES_SEQCLS}_n{cfg['batch']}",
+            lambda: adapter_update.make_fit_grad(
+                "linear", cfg["d"], N_CLASSES_SEQCLS, cfg["batch"]))
+    # batch variants for Tables 10-18 (memory/runtime sweep)
+    for b in (1, 32):
+        cb = dict(cfg, batch=b)
+        em.emit(f"lm_fwdbwd_{size}_lowrank_b{b}",
+                lambda c=cb: model.make_lm_fwdbwd(c, "lowrank"))
+        em.emit(f"lm_fwdbwd_{size}_none_b{b}",
+                lambda c=cb: model.make_lm_fwdbwd(c, "none"))
+        em.emit(f"coupled_clm_{size}_lora_b{b}",
+                lambda c=cb: baselines.make_coupled_clm_step(c, "lora"))
+        em.emit(f"coupled_clm_{size}_ft_b{b}",
+                lambda c=cb: baselines.make_coupled_clm_step(c, "ft"))
+        d, rows = cfg["d"], b * cfg["seq"]
+        em.emit(f"fit_lowrank_{d}x{d}_n{rows}",
+                lambda r=rows, dd=d: adapter_update.make_fit_grad(
+                    "lowrank", dd, dd, r))
+
+
+def emit_ic(em, batch=32):
+    for m in ["linear", "mlp", "cnn"]:
+        for kind in ["lowrank", "linear", "mlp"]:
+            em.emit(f"ic_{m}_fwdbwd_{kind}",
+                    lambda mm=m, k=kind: ic_models.make_ic_fwdbwd(mm, k, batch))
+        em.emit(f"ic_{m}_fwdbwd_merged",
+                lambda mm=m: ic_models.make_ic_fwdbwd_merged(mm, batch))
+        for meth in ["ft", "lora"]:
+            em.emit(f"ic_{m}_coupled_{meth}",
+                    lambda mm=m, me=meth: ic_models.make_ic_coupled(mm, me, batch))
+        # fit graphs for every site shape of this model
+        for site, (din, dout, rows) in ic_models.ic_site_dims(m).items():
+            n = batch * rows
+            for kind in ["lowrank", "linear", "mlp"]:
+                em.emit(f"fit_{kind}_{din}x{dout}_n{n}",
+                        lambda k=kind, a=din, b=dout, nn=n:
+                        adapter_update.make_fit_grad(k, a, b, nn))
+
+
+def emit_opt_refs(em):
+    for n in (64, 1024):
+        em.emit(f"adamw_n{n}", lambda nn=n: adapter_update.make_adamw_step(nn))
+        em.emit(f"sgd_n{n}", lambda nn=n: adapter_update.make_sgd_step(nn))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    ap.add_argument("--filter", default=None)
+    ap.add_argument("--skip-init", action="store_true")
+    args = ap.parse_args()
+
+    sizes = args.sizes.split(",")
+    em = Emitter(args.out, args.filter)
+    t0 = time.time()
+
+    for size in sizes:
+        cfg = dict(model.CONFIGS[size], batch=8)
+        print(f"== {size}: {cfg}")
+        emit_lm_size(em, size, cfg, full=(size != "base"))
+        if size == "tiny":
+            emit_tiny_extras(em, cfg)
+    if not args.filter or "ic_" in args.filter or re.search("fit", args.filter or ""):
+        emit_ic(em)
+    emit_opt_refs(em)
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    existing = {}
+    if os.path.exists(manifest_path) and args.filter:
+        with open(manifest_path) as f:
+            existing = json.load(f).get("artifacts", {})
+    existing.update(em.manifest)
+    configs = {s: dict(model.CONFIGS[s], batch=8) for s in model.CONFIGS}
+    with open(manifest_path, "w") as f:
+        json.dump({"artifacts": existing, "configs": configs,
+                   "rank": model.RANK, "mlp_hidden": model.MLP_HIDDEN,
+                   "n_classes_seqcls": N_CLASSES_SEQCLS,
+                   "prompt_len": baselines.PROMPT_LEN,
+                   "prefix_len": baselines.PREFIX_LEN}, f, indent=1)
+
+    if not args.skip_init:
+        print("== exporting initial values")
+        for size in sizes:
+            cfg = dict(model.CONFIGS[size], batch=8)
+            export_init(args.out, f"lm_{size}", model.init_lm_params(cfg))
+            for kind in ["lowrank", "linear", "mlp"]:
+                export_init(args.out, f"adapters_{size}_{kind}",
+                            model.init_adapter_params(cfg, kind))
+            if size == "tiny":
+                for meth in BASELINE_METHODS:
+                    export_init(args.out, f"tunables_{size}_{meth}",
+                                baselines.init_tunables(cfg, meth))
+                    export_init(args.out, f"tunables_seqcls_{size}_{meth}",
+                                baselines.init_tunables(
+                                    cfg, meth, n_classes=N_CLASSES_SEQCLS))
+        for m in ["linear", "mlp", "cnn"]:
+            export_init(args.out, f"ic_base_{m}", ic_models.init_ic_base(m))
+            for kind in ["lowrank", "linear", "mlp"]:
+                export_init(args.out, f"ic_{m}_{kind}",
+                            ic_models.init_ic_adapters(m, kind))
+
+    print(f"done: {len(em.manifest)} artifacts in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

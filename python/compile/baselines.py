@@ -1,0 +1,228 @@
+"""L2: coupled-baseline step graphs (classic PEFT / FT autodiff).
+
+These are the comparators of Tables 2/3/6/7: full fine-tuning (FT), LoRA,
+IA3, Prompt Tuning, Prefix Tuning and P-Tuning, implemented as ordinary
+coupled autodiff — the loss gradient w.r.t. the tunable parameters is
+computed in the same backward pass as the hidden-representation
+gradients (exactly what ColA decouples).
+
+Each graph returns (loss[, acc], grads-of-tunables...); the optimizer
+runs in the Rust coordinator (same optimizer implementation for every
+method, so quality comparisons isolate the learning rule, and the
+coupled LoRA graph doubles as the Prop.1 exactness oracle against the
+decoupled ColA path).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .model import (RANK, adapter_param_shapes, ce_labels, lm_forward,
+                    lm_logits, lm_param_names, lm_param_shapes, masked_ce,
+                    masked_token_acc, seqcls_logits)
+
+PROMPT_LEN = 8     # prompt/p-tuning virtual tokens
+PREFIX_LEN = 8     # prefix-tuning K/V positions
+PTUNE_HIDDEN = 32  # p-tuning reparameterization MLP hidden size
+
+
+def tunable_shapes(cfg, method: str, n_classes=None):
+    """Ordered tunable-parameter shapes per baseline method."""
+    d, L, dff, v = cfg["d"], cfg["layers"], cfg["dff"], cfg["vocab"]
+    shapes = OrderedDict()
+    if method == "ft":
+        shapes.update(lm_param_shapes(cfg))
+    elif method == "lora":
+        shapes.update(adapter_param_shapes(cfg, "lowrank"))
+    elif method == "ia3":
+        for i in range(L):
+            shapes[f"l{i}.lk"] = (d,)
+            shapes[f"l{i}.lv"] = (d,)
+            shapes[f"l{i}.lff"] = (dff,)
+    elif method == "prompt":
+        shapes["prompt"] = (PROMPT_LEN, d)
+    elif method == "ptuning":
+        # p-tuning: prompt produced by a small MLP over learned anchors
+        shapes["anchor"] = (PROMPT_LEN, d)
+        shapes["pt.W1"] = (d, PTUNE_HIDDEN)
+        shapes["pt.b1"] = (PTUNE_HIDDEN,)
+        shapes["pt.W2"] = (PTUNE_HIDDEN, d)
+        shapes["pt.b2"] = (d,)
+    elif method == "prefix":
+        for i in range(L):
+            shapes[f"l{i}.pk"] = (PREFIX_LEN, d)
+            shapes[f"l{i}.pv"] = (PREFIX_LEN, d)
+    else:
+        raise ValueError(method)
+    if n_classes is not None:
+        shapes["head.W"] = (d, n_classes)
+    return shapes
+
+
+def init_tunables(cfg, method: str, n_classes=None, seed: int = 2):
+    shapes = tunable_shapes(cfg, method, n_classes)
+    key = jax.random.PRNGKey(seed)
+    out = OrderedDict()
+    for name, shp in shapes.items():
+        key, sub = jax.random.split(key)
+        if method == "ft":
+            # FT starts from the pretrained stand-in; Rust passes those in.
+            out[name] = jnp.zeros(shp, jnp.float32)
+        elif name.endswith((".A", ".W1")) or name in ("prompt", "anchor") \
+                or name.startswith(("pt.W",)) or ".p" in name:
+            out[name] = 0.1 * jax.random.normal(sub, shp, jnp.float32)
+        elif name.endswith((".lk", ".lv", ".lff")):
+            out[name] = jnp.ones(shp, jnp.float32)  # IA3 starts at identity
+        else:
+            out[name] = jnp.zeros(shp, jnp.float32)
+    return out
+
+
+def _forward_for_method(params, tunables, tokens, cfg, method, use_pallas):
+    """Dispatch the forward pass for a baseline method (causal)."""
+    L = cfg["layers"]
+    if method == "ft":
+        p2 = OrderedDict((k, tunables[k]) for k in lm_param_names(cfg))
+        hidden, _ = lm_forward(p2, tokens, cfg, use_pallas=use_pallas)
+        return hidden, p2, 0
+    if method == "lora":
+        hidden, _ = lm_forward(params, tokens, cfg, kind="lowrank",
+                               adapters=tunables, use_pallas=use_pallas)
+        return hidden, params, 0
+    if method == "ia3":
+        hidden, _ = lm_forward(params, tokens, cfg, ia3=tunables,
+                               use_pallas=use_pallas)
+        return hidden, params, 0
+    if method == "prompt":
+        hidden, _ = lm_forward(params, tokens, cfg, prompt=tunables["prompt"],
+                               use_pallas=False)
+        return hidden, params, PROMPT_LEN
+    if method == "ptuning":
+        pr = jnp.maximum(tunables["anchor"] @ tunables["pt.W1"] + tunables["pt.b1"],
+                         0.0) @ tunables["pt.W2"] + tunables["pt.b2"]
+        hidden, _ = lm_forward(params, tokens, cfg, prompt=pr, use_pallas=False)
+        return hidden, params, PROMPT_LEN
+    if method == "prefix":
+        bsz = tokens.shape[0]
+        kvp = [(jnp.broadcast_to(tunables[f"l{i}.pk"][None], (bsz, PREFIX_LEN, cfg["d"])),
+                jnp.broadcast_to(tunables[f"l{i}.pv"][None], (bsz, PREFIX_LEN, cfg["d"])))
+               for i in range(L)]
+        hidden, _ = lm_forward(params, tokens, cfg, kv_prefixes=kvp,
+                               use_pallas=False)
+        return hidden, params, 0
+    raise ValueError(method)
+
+
+def make_coupled_clm_step(cfg, method: str, use_pallas: bool = True):
+    """fn(weights..., tunables..., tokens, targets, mask) ->
+    (loss, acc, grads-of-tunables...).
+
+    For method='ft' the frozen weights are NOT inputs (FT never reads
+    them; XLA would prune the unused parameters and desync the manifest).
+    """
+    wnames = lm_param_names(cfg) if method != "ft" else []
+    wshapes = lm_param_shapes(cfg)
+    tshapes = tunable_shapes(cfg, method)
+    tnames = list(tshapes.keys())
+    bsz, s = cfg["batch"], cfg["seq"]
+
+    def fn(*args):
+        params = OrderedDict(zip(wnames, args[: len(wnames)]))
+        tun = OrderedDict(zip(tnames, args[len(wnames): len(wnames) + len(tnames)]))
+        tokens, targets, mask = args[len(wnames) + len(tnames):]
+
+        def loss_fn(tun):
+            hidden, head_p, p = _forward_for_method(params, tun, tokens, cfg,
+                                                    method, use_pallas)
+            logits = lm_logits(head_p, hidden)
+            if p:
+                logits = logits[:, p:, :]  # drop prompt positions
+            return masked_ce(logits, targets, mask), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(tun)
+        acc = masked_token_acc(logits, targets, mask)
+        return (loss, acc) + tuple(grads[n] for n in tnames)
+
+    input_names = wnames + tnames + ["tokens", "targets", "mask"]
+    specs = [jax.ShapeDtypeStruct(wshapes[n], jnp.float32) for n in wnames]
+    specs += [jax.ShapeDtypeStruct(tshapes[n], jnp.float32) for n in tnames]
+    specs += [jax.ShapeDtypeStruct((bsz, s), jnp.int32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.int32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.float32)]
+    onames = ["loss", "acc"] + [f"d.{n}" for n in tnames]
+    return fn, input_names, onames, specs
+
+
+def make_coupled_seqcls_step(cfg, method: str, n_classes: int,
+                             use_pallas: bool = True):
+    """Sequence-classification coupled step (bidirectional trunk + head).
+
+    fn(weights..., tunables..., tokens, labels, mask) ->
+    (loss, acc, grads...). The head is always part of the tunables.
+    For method='ft' the frozen weights are not inputs (see CLM note).
+    """
+    wnames = lm_param_names(cfg) if method != "ft" else []
+    wshapes = lm_param_shapes(cfg)
+    tshapes = tunable_shapes(cfg, method, n_classes=n_classes)
+    tnames = list(tshapes.keys())
+    bsz, s = cfg["batch"], cfg["seq"]
+
+    def fn(*args):
+        params = OrderedDict(zip(wnames, args[: len(wnames)]))
+        tun = OrderedDict(zip(tnames, args[len(wnames): len(wnames) + len(tnames)]))
+        tokens, labels, mask = args[len(wnames) + len(tnames):]
+
+        def loss_fn(tun):
+            body = OrderedDict((k, v) for k, v in tun.items() if k != "head.W")
+            if method == "ft":
+                p2 = OrderedDict((k, body[k]) for k in lm_param_names(cfg))
+                hidden, _ = lm_forward(p2, tokens, cfg, causal=False,
+                                       use_pallas=use_pallas)
+                pmask = mask
+            elif method == "lora":
+                hidden, _ = lm_forward(params, tokens, cfg, kind="lowrank",
+                                       adapters=body, causal=False,
+                                       use_pallas=use_pallas)
+                pmask = mask
+            elif method == "ia3":
+                hidden, _ = lm_forward(params, tokens, cfg, ia3=body,
+                                       causal=False, use_pallas=use_pallas)
+                pmask = mask
+            elif method in ("prompt", "ptuning"):
+                if method == "prompt":
+                    pr = body["prompt"]
+                else:
+                    pr = jnp.maximum(body["anchor"] @ body["pt.W1"] + body["pt.b1"],
+                                     0.0) @ body["pt.W2"] + body["pt.b2"]
+                hidden, _ = lm_forward(params, tokens, cfg, prompt=pr,
+                                       causal=False, use_pallas=False)
+                ones = jnp.ones((bsz, PROMPT_LEN), jnp.float32)
+                pmask = jnp.concatenate([ones, mask], axis=1)
+            elif method == "prefix":
+                kvp = [(jnp.broadcast_to(body[f"l{i}.pk"][None],
+                                         (bsz, PREFIX_LEN, cfg["d"])),
+                        jnp.broadcast_to(body[f"l{i}.pv"][None],
+                                         (bsz, PREFIX_LEN, cfg["d"])))
+                       for i in range(cfg["layers"])]
+                hidden, _ = lm_forward(params, tokens, cfg, kv_prefixes=kvp,
+                                       causal=False, use_pallas=False)
+                pmask = mask
+            else:
+                raise ValueError(method)
+            _, logits = seqcls_logits(hidden, pmask, tun["head.W"])
+            return ce_labels(logits, labels), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(tun)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return (loss, acc) + tuple(grads[n] for n in tnames)
+
+    input_names = wnames + tnames + ["tokens", "labels", "mask"]
+    specs = [jax.ShapeDtypeStruct(wshapes[n], jnp.float32) for n in wnames]
+    specs += [jax.ShapeDtypeStruct(tshapes[n], jnp.float32) for n in tnames]
+    specs += [jax.ShapeDtypeStruct((bsz, s), jnp.int32),
+              jax.ShapeDtypeStruct((bsz,), jnp.int32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.float32)]
+    onames = ["loss", "acc"] + [f"d.{n}" for n in tnames]
+    return fn, input_names, onames, specs

@@ -1,0 +1,22 @@
+"""Lowering helper: jitted JAX function -> HLO *text* artifact.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, specs) -> str:
+    """Lower ``fn(*specs)`` to HLO text with a tuple root (the Rust side
+    unwraps with ``decompose_tuple``)."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,271 @@
+"""L2: image-classification models for the learning-from-scratch study.
+
+Appendix C.3 trains Linear / MLP / CNN models from scratch with ColA:
+the base weights are identically zero and the adapters learn the whole
+function (ColA(Linear) == full training without approximation; LoRA's
+low-rank bottleneck shows up as the accuracy gap in Table 9 / Figs 2-3).
+
+Convolutions are expressed via **im2col + matmul**, so a conv layer is a
+linear site exactly like a projection in the transformer: its hidden
+input x_m is the (rows = B*H*W, cols = k*k*C_in) patch matrix and the
+same Pallas fit kernels update its adapters. This is also what makes a
+conv adapter mergeable under Prop. 2 (conv is linear in its input).
+
+Site inventory:
+  ic_linear : fc   (784 -> 10)
+  ic_mlp    : fc1  (784 -> 128), fc2 (128 -> 10)
+  ic_cnn    : conv1 (9 -> 16), conv2 (144 -> 32), fc (1568 -> 10)
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lora as klora
+from .model import ADAPTER_SCALE, MLP_HIDDEN, RANK, apply_adapter, ce_labels
+
+IMG = 28          # synthetic image side (MNIST-shaped)
+N_CLASSES = 10
+
+
+def ic_site_dims(model: str):
+    """Ordered {site: (d_in, d_out, rows_per_image)}; rows = spatial
+    positions contributing rows to the site's im2col/feature matrix."""
+    if model == "linear":
+        return OrderedDict(fc=(IMG * IMG, N_CLASSES, 1))
+    if model == "mlp":
+        return OrderedDict(fc1=(IMG * IMG, 128, 1), fc2=(128, N_CLASSES, 1))
+    if model == "cnn":
+        return OrderedDict(
+            conv1=(9, 16, IMG * IMG),          # 3x3x1 patches, SAME pad
+            conv2=(16 * 9, 32, 14 * 14),       # after 2x2 avgpool
+            fc=(32 * 7 * 7, N_CLASSES, 1),     # after second pool
+        )
+    raise ValueError(model)
+
+
+def ic_adapter_shapes(model: str, kind: str):
+    shapes = OrderedDict()
+    for site, (din, dout, _) in ic_site_dims(model).items():
+        if kind == "lowrank":
+            r = min(RANK, din, dout)
+            shapes[f"{site}.A"] = (din, r)
+            shapes[f"{site}.B"] = (r, dout)
+        elif kind == "linear":
+            shapes[f"{site}.W"] = (din, dout)
+        elif kind == "mlp":
+            shapes[f"{site}.W1"] = (din, MLP_HIDDEN)
+            shapes[f"{site}.b1"] = (MLP_HIDDEN,)
+            shapes[f"{site}.W2"] = (MLP_HIDDEN, dout)
+            shapes[f"{site}.b2"] = (dout,)
+        else:
+            raise ValueError(kind)
+    return shapes
+
+
+def init_ic_base(model: str, seed: int = 4):
+    """Random base initialization (He-style): 'learning from scratch'
+    trains this network via ColA — base frozen, adapters learn the
+    update; ColA(Linear) merged is exactly full training (App. C.3)."""
+    import numpy as _np
+    key = jax.random.PRNGKey(seed)
+    out = OrderedDict()
+    for site, (din, dout, _) in ic_site_dims(model).items():
+        key, sub = jax.random.split(key)
+        std = (2.0 / din) ** 0.5
+        out[f"{site}.Wbase"] = std * jax.random.normal(sub, (din, dout), jnp.float32)
+    return out
+
+
+def init_ic_adapters(model: str, kind: str, seed: int = 3):
+    """Adapter init: A/W1 random + B/W/W2 zero gives g(x)=0 at t=0
+    (paper's zero-init convention)."""
+    shapes = ic_adapter_shapes(model, kind)
+    key = jax.random.PRNGKey(seed)
+    out = OrderedDict()
+    for name, shp in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith((".A", ".W1")):
+            out[name] = (1.0 / shp[0]) ** 0.5 * jax.random.normal(sub, shp, jnp.float32)
+        else:
+            out[name] = jnp.zeros(shp, jnp.float32)
+    return out
+
+
+def _im2col(x, k=3):
+    """x: (B,H,W,C) -> (B,H,W, k*k*C) SAME-padded 3x3 patches."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2), (k, k), (1, 1), "SAME")
+    # (B, C*k*k, H, W) -> (B,H,W,C*k*k)
+    return patches.transpose(0, 2, 3, 1)
+
+
+def _avgpool2(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def ic_forward(model, kind, aps, images, eps=None, use_pallas=True,
+               merged_ws=None, base_ws=None):
+    """Forward with frozen random base + adapters (or merged weights).
+
+    images: (B, H, W, 1). Returns (logits, xs dict of 2-D row matrices).
+    If merged_ws is given (dict site->W), the model runs as a plain
+    parameterized network (merged mode / FT baseline); otherwise every
+    site computes x @ W_base + g(x), the ColA from-scratch arrangement.
+    """
+    eps = eps or {}
+    dims = ic_site_dims(model)
+
+    def site_out(site, x2d):
+        if merged_ws is not None:
+            out = x2d @ merged_ws[site]
+        else:
+            din, dout, _ = dims[site]
+            h0 = (x2d @ base_ws[site] if base_ws is not None
+                  else jnp.zeros((x2d.shape[0], dout), jnp.float32))
+            out = apply_adapter(kind, aps, site, x2d, h0, use_pallas)
+        if site in eps:
+            out = out + eps[site]
+        return out
+
+    xs = {}
+    b = images.shape[0]
+    if model == "linear":
+        x = images.reshape(b, -1)
+        xs["fc"] = x
+        return site_out("fc", x), xs
+    if model == "mlp":
+        x = images.reshape(b, -1)
+        xs["fc1"] = x
+        hmid = jnp.maximum(site_out("fc1", x), 0.0)
+        xs["fc2"] = hmid
+        return site_out("fc2", hmid), xs
+    if model == "cnn":
+        p1 = _im2col(images).reshape(-1, 9)          # (B*28*28, 9)
+        xs["conv1"] = p1
+        c1 = site_out("conv1", p1).reshape(b, IMG, IMG, 16)
+        c1 = _avgpool2(jnp.maximum(c1, 0.0))          # (B,14,14,16)
+        p2 = _im2col(c1).reshape(-1, 144)             # (B*14*14, 144)
+        xs["conv2"] = p2
+        c2 = site_out("conv2", p2).reshape(b, 14, 14, 32)
+        c2 = _avgpool2(jnp.maximum(c2, 0.0))          # (B,7,7,32)
+        flat = c2.reshape(b, -1)
+        xs["fc"] = flat
+        return site_out("fc", flat), xs
+    raise ValueError(model)
+
+
+def make_ic_fwdbwd(model: str, kind: str, batch: int, use_pallas=True):
+    """Decoupled fwd/bwd: fn(base W..., adapters..., images, labels) ->
+    (loss, acc, x_site..., ghat_site...)."""
+    dims = ic_site_dims(model)
+    ashapes = ic_adapter_shapes(model, kind)
+    anames = list(ashapes.keys())
+    bnames = [f"{s}.Wbase" for s in dims]
+
+    def fn(*args):
+        base = {s: w for s, w in zip(dims, args[: len(bnames)])}
+        aps = OrderedDict(zip(anames, args[len(bnames): len(bnames) + len(anames)]))
+        images, labels = args[len(bnames) + len(anames):]
+
+        def inner(eps):
+            logits, xs = ic_forward(model, kind, aps, images, eps=eps,
+                                    use_pallas=use_pallas, base_ws=base)
+            return ce_labels(logits, labels), (xs, logits)
+
+        eps0 = {site: jnp.zeros((batch * rows, dout), jnp.float32)
+                for site, (_, dout, rows) in dims.items()}
+        (loss, (xs, logits)), geps = jax.value_and_grad(inner, has_aux=True)(eps0)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        outs = [loss, acc]
+        outs += [xs[s] for s in dims]
+        outs += [geps[s] for s in dims]
+        return tuple(outs)
+
+    input_names = bnames + anames + ["images", "labels"]
+    specs = [jax.ShapeDtypeStruct((dims[s][0], dims[s][1]), jnp.float32)
+             for s in dims]
+    specs += [jax.ShapeDtypeStruct(ashapes[n], jnp.float32) for n in anames]
+    specs += [jax.ShapeDtypeStruct((batch, IMG, IMG, 1), jnp.float32),
+              jax.ShapeDtypeStruct((batch,), jnp.int32)]
+    onames = (["loss", "acc"] + [f"{s}.x" for s in dims] + [f"{s}.g" for s in dims])
+    return fn, input_names, onames, specs
+
+
+def make_ic_fwdbwd_merged(model: str, batch: int, use_pallas=True):
+    """Merged-mode decoupled graph: fn(W_site..., images, labels) -> same
+    outputs. The site weights are the merged base+adapter matrices."""
+    dims = ic_site_dims(model)
+    wnames = [f"{s}.W" for s in dims]
+
+    def fn(*args):
+        ws = {s: w for s, w in zip(dims, args[: len(wnames)])}
+        images, labels = args[len(wnames):]
+
+        def inner(eps):
+            logits, xs = ic_forward(model, "none", {}, images, eps=eps,
+                                    use_pallas=use_pallas, merged_ws=ws)
+            return ce_labels(logits, labels), (xs, logits)
+
+        eps0 = {site: jnp.zeros((batch * rows, dout), jnp.float32)
+                for site, (_, dout, rows) in dims.items()}
+        (loss, (xs, logits)), geps = jax.value_and_grad(inner, has_aux=True)(eps0)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        outs = [loss, acc] + [xs[s] for s in dims] + [geps[s] for s in dims]
+        return tuple(outs)
+
+    input_names = wnames + ["images", "labels"]
+    specs = [jax.ShapeDtypeStruct((dims[s][0], dims[s][1]), jnp.float32)
+             for s in dims]
+    specs += [jax.ShapeDtypeStruct((batch, IMG, IMG, 1), jnp.float32),
+              jax.ShapeDtypeStruct((batch,), jnp.int32)]
+    onames = (["loss", "acc"] + [f"{s}.x" for s in dims] + [f"{s}.g" for s in dims])
+    return fn, input_names, onames, specs
+
+
+def make_ic_coupled(model: str, method: str, batch: int, use_pallas=True):
+    """Coupled baselines: method='ft' (site weights directly) or
+    'lora' (low-rank adapters, autodiff). fn(tunables..., images, labels)
+    -> (loss, acc, grads...)."""
+    dims = ic_site_dims(model)
+    if method == "ft":
+        tshapes = OrderedDict((f"{s}.W", (d[0], d[1])) for s, d in dims.items())
+    elif method == "lora":
+        tshapes = ic_adapter_shapes(model, "lowrank")
+    else:
+        raise ValueError(method)
+    tnames = list(tshapes.keys())
+
+    dims2 = dims
+    bnames = [] if method == "ft" else [f"{s}.Wbase" for s in dims2]
+
+    def fn(*args):
+        base = {s: w for s, w in zip(dims2, args[: len(bnames)])}
+        tun = OrderedDict(zip(tnames, args[len(bnames): len(bnames) + len(tnames)]))
+        images, labels = args[len(bnames) + len(tnames):]
+
+        def loss_fn(tun):
+            if method == "ft":
+                ws = {s: tun[f"{s}.W"] for s in dims2}
+                logits, _ = ic_forward(model, "none", {}, images,
+                                       use_pallas=use_pallas, merged_ws=ws)
+            else:
+                logits, _ = ic_forward(model, "lowrank", tun, images,
+                                       use_pallas=use_pallas, base_ws=base)
+            return ce_labels(logits, labels), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(tun)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return (loss, acc) + tuple(grads[n] for n in tnames)
+
+    input_names = bnames + tnames + ["images", "labels"]
+    specs = [jax.ShapeDtypeStruct((dims2[s][0], dims2[s][1]), jnp.float32)
+             for s in dims2 if method != "ft"]
+    specs += [jax.ShapeDtypeStruct(tshapes[n], jnp.float32) for n in tnames]
+    specs += [jax.ShapeDtypeStruct((batch, IMG, IMG, 1), jnp.float32),
+              jax.ShapeDtypeStruct((batch,), jnp.int32)]
+    onames = ["loss", "acc"] + [f"d.{n}" for n in tnames]
+    return fn, input_names, onames, specs

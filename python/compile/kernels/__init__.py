@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for ColA's compute hot-spots + pure-jnp oracles.
+
+- ``lora.py``      -- fused adapter application (server forward path)
+- ``fit_step.py``  -- fused GL surrogate gradients (worker update path)
+- ``attention.py`` -- flash-style attention + layernorm (base model)
+- ``ref.py``       -- pure-jnp reference oracles (the semantic spec)
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs
+on the CPU PJRT client the Rust runtime uses.
+"""
+from . import attention, fit_step, lora, ref  # noqa: F401

@@ -1,0 +1,98 @@
+"""Pallas flash-style attention kernel (base-model compute hot spot).
+
+Row-block online-softmax attention for a single head. The grid walks query
+row blocks; K and V for the whole sequence are VMEM-resident per block
+(S*dh floats each — e.g. S=256, dh=64: 128 KiB for K+V, comfortably inside
+the ~16 MiB VMEM budget; the block table in DESIGN.md §Perf sizes this for
+the configs we lower). The (block_q x S) logit tile is formed on the MXU,
+the numerically-stable softmax runs in-block, and the (block_q x dh)
+output tile accumulates in f32.
+
+This is the TPU re-think of the paper's GPU attention: no shared-memory
+K/V staging loop per threadblock — one BlockSpec per operand expresses the
+whole HBM->VMEM schedule.
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_Q = 64
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, block_q, scale):
+    i = pl.program_id(0)
+    q = q_ref[...]                                 # (bq, dh)
+    k = k_ref[...]                                 # (s, dh)
+    v = v_ref[...]                                 # (s, dh)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        s = k.shape[0]
+        row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(col <= row, logits, jnp.finfo(jnp.float32).min)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def attention(q, k, v, causal: bool, *, block_q: int = DEFAULT_BLOCK_Q):
+    """Single-head attention. q,k,v: (s, dh) -> (s, dh).
+
+    Requires s % block_q == 0 (the coordinator only lowers power-of-two
+    sequence lengths); asserts otherwise at trace time.
+    """
+    s, dh = q.shape
+    bq = min(block_q, s)
+    if s % bq != 0:
+        raise ValueError(f"seq len {s} not divisible by block_q {bq}")
+    scale = 1.0 / (dh ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, causal=causal, block_q=bq, scale=scale),
+        grid=(s // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dh), lambda i: (i, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = ((x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]).astype(
+        o_ref.dtype
+    )
+
+
+def layernorm(x, gamma, beta, *, eps: float = 1e-5, block_n: int = 128):
+    """Row-wise layernorm over row blocks. x: (n, d)."""
+    n, d = x.shape
+    bn = min(block_n, n)
+    rem = n % bn
+    xp = jnp.pad(x, ((0, bn - rem), (0, 0))) if rem else x
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(xp.shape[0] // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], d), x.dtype),
+        interpret=True,
+    )(xp, gamma.reshape(1, -1), beta.reshape(1, -1))
+    return out[:n]

@@ -1,0 +1,103 @@
+"""Pallas kernels for adapter application (the server-side hot spot).
+
+These implement the fused forward of ColA adapters:
+
+  lora_apply   : h + scale * (x @ A) @ B        (low-rank, LoRA-shaped)
+  linear_apply : h + scale * x @ W              (full-matrix, Prop.2 class)
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of a CUDA
+threadblock per output tile, we express the HBM<->VMEM schedule with a
+BlockSpec grid over row blocks. The rank-r intermediate ``x @ A`` lives
+entirely in VMEM (registers/scratch under interpret mode) and never
+round-trips HBM — that is the fusion the paper gets implicitly from
+cuBLAS call ordering. A and B are small enough to be resident per block
+(d*r + r*d floats), so the kernel is a single pass over x/h rows feeding
+the MXU with (block_n x d_in) @ (d_in x r) and (block_n x r) @ (r x d_out)
+matmuls.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode lowers them to plain HLO
+(see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_N = 128
+
+
+def _pad_rows(arr, block_n):
+    n = arr.shape[0]
+    rem = n % block_n
+    if rem == 0:
+        return arr, n
+    pad = block_n - rem
+    return jnp.pad(arr, ((0, pad),) + ((0, 0),) * (arr.ndim - 1)), n
+
+
+def _lora_apply_kernel(x_ref, a_ref, b_ref, h_ref, o_ref, *, scale):
+    # One row block: (bn, d_in) @ (d_in, r) stays in VMEM, then (bn, r) @
+    # (r, d_out). f32 accumulation on the MXU.
+    xa = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = h_ref[...] + scale * jnp.dot(
+        xa, b_ref[...], preferred_element_type=jnp.float32
+    ).astype(h_ref.dtype)
+
+
+def lora_apply(x, a, b, h, scale, *, block_n: int = DEFAULT_BLOCK_N):
+    """Fused ``h + scale * (x @ a) @ b`` over row blocks of x/h.
+
+    x: (n, d_in), a: (d_in, r), b: (r, d_out), h: (n, d_out) -> (n, d_out).
+    """
+    (n, d_in), (_, r), (_, d_out) = x.shape, a.shape, b.shape
+    bn = min(block_n, n)
+    xp, n0 = _pad_rows(x, bn)
+    hp, _ = _pad_rows(h, bn)
+    grid = (xp.shape[0] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_lora_apply_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((bn, d_out), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], d_out), h.dtype),
+        interpret=True,
+    )(xp, a, b, hp)
+    return out[:n0]
+
+
+def _linear_apply_kernel(x_ref, w_ref, h_ref, o_ref, *, scale):
+    o_ref[...] = h_ref[...] + scale * jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(h_ref.dtype)
+
+
+def linear_apply(x, w, h, scale, *, block_n: int = DEFAULT_BLOCK_N):
+    """Fused ``h + scale * x @ w`` (full-matrix adapter) over row blocks."""
+    (n, d_in), (_, d_out) = x.shape, w.shape
+    bn = min(block_n, n)
+    xp, n0 = _pad_rows(x, bn)
+    hp, _ = _pad_rows(h, bn)
+    grid = (xp.shape[0] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_linear_apply_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((bn, d_out), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], d_out), h.dtype),
+        interpret=True,
+    )(xp, w, hp)
+    return out[:n0]

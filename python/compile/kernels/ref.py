@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to fp error) pure
+``jax.numpy`` counterpart here. ``python/tests/test_kernels.py`` sweeps
+shapes/dtypes with hypothesis and asserts allclose between the Pallas
+(interpret=True) output and these functions. The references are also the
+semantic spec: anything unclear about a kernel is defined by its ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_apply_ref(x, a, b, h, scale):
+    """h + scale * (x @ a) @ b  — fused low-rank adapter application.
+
+    x: (n, d_in), a: (d_in, r), b: (r, d_out), h: (n, d_out).
+    """
+    return h + scale * (x @ a) @ b
+
+
+def linear_apply_ref(x, w, h, scale):
+    """h + scale * x @ w — full-matrix (Prop.2 mergeable) adapter."""
+    return h + scale * x @ w
+
+
+def fit_step_lowrank_ref(x, target, a, b, scale):
+    """Gradients of the GL surrogate loss for a low-rank adapter.
+
+    l(w) = 1/2 sum_i ||scale*(x_i @ a) @ b - target_i||^2   (SUM reduction:
+    the targets are built from the gradient of the *mean* task loss, so a
+    sum here reproduces the coupled parameter gradient exactly — Prop. 1.)
+
+    Returns (da, db).
+    """
+    xa = x @ a                       # (n, r)
+    res = scale * xa @ b - target    # (n, d_out)
+    da = scale * x.T @ (res @ b.T)   # (d_in, r)
+    db = scale * xa.T @ res          # (r, d_out)
+    return da, db
+
+
+def fit_step_linear_ref(x, target, w, scale):
+    """Gradient of the GL surrogate for a full linear adapter. Returns dw."""
+    res = scale * x @ w - target
+    return scale * x.T @ res
+
+
+def fit_step_mlp_ref(x, target, w1, b1, w2, b2):
+    """Gradients of the GL surrogate for a 2-layer ReLU MLP adapter.
+
+    g(x) = relu(x @ w1 + b1) @ w2 + b2. Returns (dw1, db1, dw2, db2).
+    """
+    z = x @ w1 + b1
+    hmid = jnp.maximum(z, 0.0)
+    res = hmid @ w2 + b2 - target          # (n, d_out)
+    dw2 = hmid.T @ res
+    db2 = jnp.sum(res, axis=0)
+    dmid = (res @ w2.T) * (z > 0.0)
+    dw1 = x.T @ dmid
+    db1 = jnp.sum(dmid, axis=0)
+    return dw1, db1, dw2, db2
+
+
+def attention_ref(q, k, v, causal: bool):
+    """Single-head scaled dot-product attention, optional causal mask.
+
+    q,k,v: (s, dh). Numerically stable softmax, f32 accumulation.
+    """
+    s, dh = q.shape
+    logits = (q @ k.T) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Row-wise layer norm. x: (n, d)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta

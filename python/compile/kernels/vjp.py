@@ -1,0 +1,137 @@
+"""custom_vjp wrappers: Pallas forward + exact backward.
+
+``pl.pallas_call`` has no automatic reverse-mode rule, but the ColA server
+graph differentiates *through* every kernel on the path from the loss to
+the epsilon probes. Each wrapper here pairs the Pallas forward with an
+explicit VJP:
+
+- adapter applies: dx reuses the *same Pallas kernels* with transposed
+  operands (``dx = s*(g @ B^T) @ A^T`` is just ``lora_apply`` again); the
+  dA/dB cotangents are written as plain matmuls — in the decoupled server
+  artifact they are dead code (the loss is differentiated w.r.t. eps
+  only) and XLA DCEs them; in the coupled-LoRA baseline they are the
+  standard LoRA gradients.
+- attention: flash-style rematerializing backward (save q,k,v, recompute
+  the probability tile) in jnp; forward stays the Pallas kernel.
+- layernorm: standard fused backward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as katt
+from . import lora as klora
+
+
+# -- low-rank adapter apply --------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lora_apply(x, a, b, h, scale):
+    return klora.lora_apply(x, a, b, h, scale)
+
+
+def _lora_fwd(x, a, b, h, scale):
+    return klora.lora_apply(x, a, b, h, scale), (x, a, b)
+
+
+def _lora_bwd(scale, res, g):
+    x, a, b = res
+    # dx via the same Pallas kernel, transposed: s*(g@B^T)@A^T
+    dx = klora.lora_apply(g, b.T, a.T, jnp.zeros_like(x), scale)
+    xa = x @ a
+    da = scale * x.T @ (g @ b.T)
+    db = scale * xa.T @ g
+    return dx, da, db, g
+
+
+lora_apply.defvjp(_lora_fwd, _lora_bwd)
+
+
+# -- full-matrix adapter apply ------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_apply(x, w, h, scale):
+    return klora.linear_apply(x, w, h, scale)
+
+
+def _linear_fwd(x, w, h, scale):
+    return klora.linear_apply(x, w, h, scale), (x, w)
+
+
+def _linear_bwd(scale, res, g):
+    x, w = res
+    dx = klora.linear_apply(g, w.T, jnp.zeros_like(x), scale)
+    dw = scale * x.T @ g
+    return dx, dw, g
+
+
+linear_apply.defvjp(_linear_fwd, _linear_bwd)
+
+
+# -- attention ----------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal):
+    return katt.attention(q, k, v, causal)
+
+
+def _att_fwd(q, k, v, causal):
+    return katt.attention(q, k, v, causal), (q, k, v)
+
+
+def _att_bwd(causal, res, do):
+    q, k, v = res
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = (q @ k.T) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    dv = p.T @ do
+    dp = do @ v.T
+    dl = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = (dl @ k) * scale
+    dk = (dl.T @ q) * scale
+    return dq, dk, dv
+
+
+attention.defvjp(_att_fwd, _att_bwd)
+
+
+# -- layernorm ------------------------------------------------------------------
+
+EPS = 1e-5
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    return katt.layernorm(x, gamma, beta, eps=EPS)
+
+
+def _ln_fwd(x, gamma, beta):
+    return katt.layernorm(x, gamma, beta, eps=EPS), (x, gamma)
+
+
+def _ln_bwd(res, g):
+    x, gamma = res
+    d = x.shape[-1]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = xc * inv
+    dgamma = jnp.sum(g * xhat, axis=0)
+    dbeta = jnp.sum(g, axis=0)
+    gg = g * gamma
+    dx = inv * (gg - jnp.mean(gg, axis=-1, keepdims=True)
+                - xhat * jnp.mean(gg * xhat, axis=-1, keepdims=True))
+    return dx, dgamma, dbeta
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

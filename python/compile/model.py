@@ -1,0 +1,460 @@
+"""L2: the base-model compute graphs for ColA (build-time JAX, AOT to HLO).
+
+The central artifact is the *decoupled* fwd/bwd graph of Algorithm 1:
+given base weights, live adapter parameters (unmerged mode) or merged
+weights (merged mode), and a batch, it returns
+
+    loss,  x_{1:M}  (hidden inputs of every adapter site),
+           grad_hhat_{1:M}  (gradient of the loss w.r.t. each fine-tuned
+                             hidden representation)
+
+and — deliberately — **no parameter gradients**. That is Gradient
+Decoupling: the server never materializes grad-w; the Rust coordinator
+ships (x_m, grad_hhat_m) to low-cost workers which recover grad-w exactly
+via the surrogate loss (Prop. 1, python/compile/adapter_update.py).
+
+grad_hhat extraction uses the epsilon-probe trick: every site output is
+``hhat_m = h_m + g_w(x_m) + eps_m`` with ``eps_m = 0``; differentiating
+w.r.t. eps_m yields exactly d loss / d hhat_m while keeping hhat itself on
+the natural forward path.
+
+Adapter sites follow the paper's LoRA default: the q and v projections of
+every attention block (M = 2*layers), plus a classifier-head site for
+sequence classification (the head is trained from scratch through a
+'linear' ColA adapter, as in §4.2).
+
+Pallas kernels (interpret=True) from ``kernels/`` are called inline so
+they lower into the same HLO: attention + layernorm on the base path,
+lora/linear apply on the adapter path.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import vjp as kv
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # name: vocab, d_model, layers, heads, d_ff, seq
+    "tiny": dict(vocab=512, d=128, layers=2, heads=4, dff=512, seq=64),
+    "small": dict(vocab=2048, d=256, layers=4, heads=8, dff=1024, seq=128),
+    "base": dict(vocab=4096, d=384, layers=8, heads=8, dff=1536, seq=128),
+}
+
+RANK = 8          # low-rank adapter rank (paper: r=8)
+MLP_HIDDEN = 64   # MLP adapter hidden size (paper: 128; scaled with model)
+ADAPTER_SCALE = 1.0  # alpha; GL requires alpha=1 (Sec. 3.2)
+
+# Whether attention/layernorm lower through the Pallas kernels. On the
+# CPU-PJRT testbed interpret-mode grid loops cannot fuse and cost ~1.7x
+# (EXPERIMENTS.md §Perf), so aot.py lowers the larger sizes with the jnp
+# path; adapter apply + worker fit stay Pallas everywhere. On a real TPU
+# both paths would be Mosaic-compiled and this switch would stay True.
+ATTN_PALLAS = True
+
+
+def n_sites(cfg) -> int:
+    return 2 * cfg["layers"]
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def lm_param_names(cfg):
+    """Canonical (ordered) base-weight names — the L3 interface contract."""
+    names = ["embed", "pos"]
+    for i in range(cfg["layers"]):
+        names += [
+            f"l{i}.ln1g", f"l{i}.ln1b",
+            f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2g", f"l{i}.ln2b",
+            f"l{i}.w1", f"l{i}.b1", f"l{i}.w2", f"l{i}.b2",
+        ]
+    names += ["lnfg", "lnfb"]
+    return names
+
+
+def lm_param_shapes(cfg):
+    v, d, dff, s = cfg["vocab"], cfg["d"], cfg["dff"], cfg["seq"]
+    shapes = OrderedDict()
+    shapes["embed"] = (v, d)
+    shapes["pos"] = (s, d)
+    for i in range(cfg["layers"]):
+        shapes[f"l{i}.ln1g"] = (d,)
+        shapes[f"l{i}.ln1b"] = (d,)
+        shapes[f"l{i}.wq"] = (d, d)
+        shapes[f"l{i}.wk"] = (d, d)
+        shapes[f"l{i}.wv"] = (d, d)
+        shapes[f"l{i}.wo"] = (d, d)
+        shapes[f"l{i}.ln2g"] = (d,)
+        shapes[f"l{i}.ln2b"] = (d,)
+        shapes[f"l{i}.w1"] = (d, dff)
+        shapes[f"l{i}.b1"] = (dff,)
+        shapes[f"l{i}.w2"] = (dff, d)
+        shapes[f"l{i}.b2"] = (d,)
+    shapes["lnfg"] = (d,)
+    shapes["lnfb"] = (d,)
+    return shapes
+
+
+def init_lm_params(cfg, seed: int = 0):
+    """Deterministic pretrained-stand-in initialization."""
+    shapes = lm_param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = OrderedDict()
+    for name, shp in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1g", "ln2g", "lnfg")):
+            params[name] = jnp.ones(shp, jnp.float32)
+        elif name.endswith(("ln1b", "ln2b", "lnfb", ".b1", ".b2")):
+            params[name] = jnp.zeros(shp, jnp.float32)
+        else:
+            fan_in = shp[0] if len(shp) > 1 else shp[0]
+            std = (1.0 / fan_in) ** 0.5
+            params[name] = std * jax.random.normal(sub, shp, jnp.float32)
+    return params
+
+
+def adapter_param_shapes(cfg, kind: str):
+    """Ordered adapter parameter shapes for all sites of an LM."""
+    d = cfg["d"]
+    shapes = OrderedDict()
+    for i in range(cfg["layers"]):
+        for proj in ("q", "v"):
+            p = f"l{i}.{proj}"
+            if kind == "lowrank":
+                shapes[f"{p}.A"] = (d, RANK)
+                shapes[f"{p}.B"] = (RANK, d)
+            elif kind == "linear":
+                shapes[f"{p}.W"] = (d, d)
+            elif kind == "mlp":
+                shapes[f"{p}.W1"] = (d, MLP_HIDDEN)
+                shapes[f"{p}.b1"] = (MLP_HIDDEN,)
+                shapes[f"{p}.W2"] = (MLP_HIDDEN, d)
+                shapes[f"{p}.b2"] = (d,)
+            elif kind == "none":
+                pass
+            else:
+                raise ValueError(kind)
+    return shapes
+
+
+def init_adapter_params(cfg, kind: str, seed: int = 1):
+    """Paper init: adapters start at zero output. LoRA-style: A random,
+    B zero; linear: zero; MLP: W1 random, W2 zero (so g(x)=b2=0)."""
+    shapes = adapter_param_shapes(cfg, kind)
+    key = jax.random.PRNGKey(seed)
+    out = OrderedDict()
+    for name, shp in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(".A") or name.endswith(".W1"):
+            out[name] = (1.0 / shp[0]) ** 0.5 * jax.random.normal(sub, shp, jnp.float32)
+        else:
+            out[name] = jnp.zeros(shp, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# adapter application
+# ---------------------------------------------------------------------------
+
+def apply_adapter(kind, aps, prefix, x2d, h2d, use_pallas=True):
+    """hhat = h + scale * g(x) for one site; x2d,h2d: (n, d)."""
+    s = ADAPTER_SCALE
+    if kind == "none":
+        return h2d
+    if kind == "lowrank":
+        a, b = aps[f"{prefix}.A"], aps[f"{prefix}.B"]
+        if use_pallas:
+            return kv.lora_apply(x2d, a, b, h2d, s)
+        return h2d + s * (x2d @ a) @ b
+    if kind == "linear":
+        w = aps[f"{prefix}.W"]
+        if use_pallas:
+            return kv.linear_apply(x2d, w, h2d, s)
+        return h2d + s * x2d @ w
+    if kind == "mlp":
+        w1, b1 = aps[f"{prefix}.W1"], aps[f"{prefix}.b1"]
+        w2, b2 = aps[f"{prefix}.W2"], aps[f"{prefix}.b2"]
+        return h2d + s * (jnp.maximum(x2d @ w1 + b1, 0.0) @ w2 + b2)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# transformer forward
+# ---------------------------------------------------------------------------
+
+def _mha(q, k, v, heads, causal, use_pallas, kv_prefix=None):
+    use_pallas = use_pallas and ATTN_PALLAS
+    """q,k,v: (B,S,d) -> (B,S,d). Optional prefix K/V (B,P,d) pairs
+    (prefix-tuning baseline) are concatenated before attention."""
+    bsz, s, d = q.shape
+    dh = d // heads
+
+    def split(t):
+        return t.reshape(bsz, t.shape[1], heads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    if kv_prefix is not None:
+        pk, pv = kv_prefix  # (B,P,d) each
+        kh = jnp.concatenate([split(pk), kh], axis=2)
+        vh = jnp.concatenate([split(pv), vh], axis=2)
+    if use_pallas and kv_prefix is None:
+        att = jax.vmap(jax.vmap(lambda q1, k1, v1: kv.attention(q1, k1, v1, causal)))
+        oh = att(qh, kh, vh)
+    else:
+        skv = kh.shape[2]
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(
+            jnp.asarray(dh, jnp.float32))
+        if causal:
+            p = skv - s  # prefix length: always attendable
+            row = jnp.arange(s)[:, None]
+            col = jnp.arange(skv)[None, :]
+            mask = col <= row + p
+            logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(logits, axis=-1)
+        oh = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return oh.transpose(0, 2, 1, 3).reshape(bsz, s, d)
+
+
+def _ln(x3d, g, b, use_pallas):
+    use_pallas = use_pallas and ATTN_PALLAS
+    bsz, s, d = x3d.shape
+    if use_pallas:
+        return kv.layernorm(x3d.reshape(-1, d), g, b).reshape(bsz, s, d)
+    mu = jnp.mean(x3d, axis=-1, keepdims=True)
+    var = jnp.mean((x3d - mu) ** 2, axis=-1, keepdims=True)
+    return (x3d - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def lm_forward(params, tokens, cfg, kind="none", adapters=None, eps=None,
+               causal=True, use_pallas=True, ia3=None, kv_prefixes=None,
+               prompt=None, collect_xs=False):
+    """Transformer forward with adapter sites at every q/v projection.
+
+    Returns (hidden (B,S,d) pre-head, xs dict) where xs maps
+    ``l{i}.x`` -> hidden input of layer i's adapter sites (the layernormed
+    attention input — both q and v adapters read it, like LoRA).
+
+    eps: optional dict ``l{i}.q``/``l{i}.v`` -> (B,S,d) probe added to the
+    fine-tuned site output (zeros at runtime; differentiated for grad_hhat).
+    ia3: optional dict l{i}.lk/l{i}.lv/l{i}.lff -> scaling vectors (IA3).
+    kv_prefixes: optional list per layer of (pk, pv) (B,P,d) prefix K/V.
+    prompt: optional (P, d) learnable prompt prepended after embedding
+    (prompt-tuning / p-tuning baselines). Loss positions shift accordingly.
+    """
+    adapters = adapters or {}
+    eps = eps or {}
+    bsz, s = tokens.shape
+    d = cfg["d"]
+    h = params["embed"][tokens] + params["pos"][None, :s, :]
+    if prompt is not None:
+        p = prompt.shape[0]
+        h = jnp.concatenate([jnp.broadcast_to(prompt[None], (bsz, p, d)), h], axis=1)
+        # pos embeddings only cover seq; prompt carries its own values.
+        s = s + p
+    xs = {}
+    for i in range(cfg["layers"]):
+        pre = _ln(h, params[f"l{i}.ln1g"], params[f"l{i}.ln1b"], use_pallas)
+        x2d = pre.reshape(-1, d)
+        if collect_xs:
+            xs[f"l{i}.x"] = pre
+        q = (x2d @ params[f"l{i}.wq"]).reshape(bsz, s, d)
+        k = (x2d @ params[f"l{i}.wk"]).reshape(bsz, s, d)
+        v = (x2d @ params[f"l{i}.wv"]).reshape(bsz, s, d)
+        # fine-tuned site outputs: hhat = h + g(x) + eps
+        q2 = apply_adapter(kind, adapters, f"l{i}.q", x2d, q.reshape(-1, d),
+                           use_pallas).reshape(bsz, s, d)
+        v2 = apply_adapter(kind, adapters, f"l{i}.v", x2d, v.reshape(-1, d),
+                           use_pallas).reshape(bsz, s, d)
+        if f"l{i}.q" in eps:
+            q2 = q2 + eps[f"l{i}.q"]
+        if f"l{i}.v" in eps:
+            v2 = v2 + eps[f"l{i}.v"]
+        if ia3 is not None:
+            k = k * ia3[f"l{i}.lk"][None, None, :]
+            v2 = v2 * ia3[f"l{i}.lv"][None, None, :]
+        kvp = kv_prefixes[i] if kv_prefixes is not None else None
+        att = _mha(q2, k, v2, cfg["heads"], causal, use_pallas, kv_prefix=kvp)
+        h = h + (att.reshape(-1, d) @ params[f"l{i}.wo"]).reshape(bsz, s, d)
+        pre2 = _ln(h, params[f"l{i}.ln2g"], params[f"l{i}.ln2b"], use_pallas)
+        mid = jnp.maximum(pre2.reshape(-1, d) @ params[f"l{i}.w1"] + params[f"l{i}.b1"], 0.0)
+        if ia3 is not None:
+            mid = mid * ia3[f"l{i}.lff"][None, :]
+        h = h + (mid @ params[f"l{i}.w2"] + params[f"l{i}.b2"]).reshape(bsz, s, d)
+    h = _ln(h, params["lnfg"], params["lnfb"], use_pallas)
+    return h, xs
+
+
+def lm_logits(params, hidden):
+    """Tied-embedding LM head."""
+    bsz, s, d = hidden.shape
+    return (hidden.reshape(-1, d) @ params["embed"].T).reshape(bsz, s, -1)
+
+
+def masked_ce(logits, targets, mask):
+    """Mean cross-entropy over mask=1 positions. targets: (B,S) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def masked_token_acc(logits, targets, mask):
+    """Teacher-forced token accuracy over mask=1 positions (the
+    ROUGE-Longest stand-in for synthetic S2S/CLM tasks)."""
+    hit = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+    return jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# seq-classification head
+# ---------------------------------------------------------------------------
+
+def seqcls_logits(hidden, mask, head_w, eps_head=None):
+    """Masked mean-pool + linear head. The base head is identically zero;
+    the ColA 'linear' head adapter (head_w) learns the classifier from
+    scratch, matching §4.2 ('we use a Linear auxiliary model to train the
+    newly initialized classifier layers')."""
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(hidden * mask[..., None], axis=1) / denom  # (B,d)
+    out = pooled @ head_w
+    if eps_head is not None:
+        out = out + eps_head
+    return pooled, out
+
+
+def ce_labels(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# decoupled fwd/bwd graph builders (the ColA server artifact)
+# ---------------------------------------------------------------------------
+
+def make_lm_fwdbwd(cfg, kind: str, use_pallas: bool = True):
+    """Build fn(weights..., adapters..., tokens, targets, mask) ->
+    (loss, x_0..x_{L-1}, gq_0..gq_{L-1}, gv_0..gv_{L-1}).
+
+    kind='none' is the merged-mode graph (adapters folded into wq/wv by
+    the Rust coordinator; zero adapter inputs).
+    Returns (fn, input_names, output_names, input_specs).
+    """
+    wnames = lm_param_names(cfg)
+    wshapes = lm_param_shapes(cfg)
+    anames = list(adapter_param_shapes(cfg, kind).keys())
+    ashapes = adapter_param_shapes(cfg, kind)
+    bsz, s, d = cfg["batch"], cfg["seq"], cfg["d"]
+    L = cfg["layers"]
+
+    def fn(*args):
+        params = OrderedDict(zip(wnames, args[: len(wnames)]))
+        aps = OrderedDict(zip(anames, args[len(wnames): len(wnames) + len(anames)]))
+        tokens, targets, mask = args[len(wnames) + len(anames):]
+
+        def inner(eps):
+            hidden, xs = lm_forward(params, tokens, cfg, kind=kind,
+                                    adapters=aps, eps=eps, causal=True,
+                                    use_pallas=use_pallas, collect_xs=True)
+            logits = lm_logits(params, hidden)
+            loss = masked_ce(logits, targets, mask)
+            return loss, (xs, logits)
+
+        eps0 = {f"l{i}.{p}": jnp.zeros((bsz, s, d), jnp.float32)
+                for i in range(L) for p in ("q", "v")}
+        (loss, (xs, logits)), geps = jax.value_and_grad(inner, has_aux=True)(eps0)
+        acc = masked_token_acc(logits, targets, mask)
+        outs = [loss, acc]
+        outs += [xs[f"l{i}.x"] for i in range(L)]
+        outs += [geps[f"l{i}.q"] for i in range(L)]
+        outs += [geps[f"l{i}.v"] for i in range(L)]
+        return tuple(outs)
+
+    input_names = wnames + anames + ["tokens", "targets", "mask"]
+    specs = [jax.ShapeDtypeStruct(wshapes[n], jnp.float32) for n in wnames]
+    specs += [jax.ShapeDtypeStruct(ashapes[n], jnp.float32) for n in anames]
+    specs += [jax.ShapeDtypeStruct((bsz, s), jnp.int32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.int32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.float32)]
+    output_names = (["loss", "acc"] + [f"l{i}.x" for i in range(L)]
+                    + [f"l{i}.gq" for i in range(L)]
+                    + [f"l{i}.gv" for i in range(L)])
+    return fn, input_names, output_names, specs
+
+
+def make_lm_fwd(cfg, use_pallas: bool = True):
+    """Inference graph (merged weights): fn(weights..., tokens) -> logits."""
+    wnames = lm_param_names(cfg)
+    wshapes = lm_param_shapes(cfg)
+    bsz, s = cfg["batch"], cfg["seq"]
+
+    def fn(*args):
+        params = OrderedDict(zip(wnames, args[:-1]))
+        tokens = args[-1]
+        hidden, _ = lm_forward(params, tokens, cfg, kind="none",
+                               causal=True, use_pallas=use_pallas)
+        return (lm_logits(params, hidden),)
+
+    input_names = wnames + ["tokens"]
+    specs = [jax.ShapeDtypeStruct(wshapes[n], jnp.float32) for n in wnames]
+    specs += [jax.ShapeDtypeStruct((bsz, s), jnp.int32)]
+    return fn, input_names, ["logits"], specs
+
+
+def make_seqcls_fwdbwd(cfg, kind: str, n_classes: int, use_pallas: bool = True):
+    """Seq-classification decoupled graph. Sites: q/v per layer + head.
+
+    fn(weights..., adapters..., head_w, tokens, labels, mask) ->
+    (loss, acc, x_0.., head_x, gq_0.., gv_0.., head_g)
+    """
+    wnames = lm_param_names(cfg)
+    wshapes = lm_param_shapes(cfg)
+    anames = list(adapter_param_shapes(cfg, kind).keys())
+    ashapes = adapter_param_shapes(cfg, kind)
+    bsz, s, d = cfg["batch"], cfg["seq"], cfg["d"]
+    L = cfg["layers"]
+
+    def fn(*args):
+        params = OrderedDict(zip(wnames, args[: len(wnames)]))
+        aps = OrderedDict(zip(anames, args[len(wnames): len(wnames) + len(anames)]))
+        head_w, tokens, labels, mask = args[len(wnames) + len(anames):]
+
+        def inner(eps, eps_head):
+            hidden, xs = lm_forward(params, tokens, cfg, kind=kind,
+                                    adapters=aps, eps=eps, causal=False,
+                                    use_pallas=use_pallas, collect_xs=True)
+            pooled, logits = seqcls_logits(hidden, mask, head_w, eps_head)
+            loss = ce_labels(logits, labels)
+            return loss, (xs, pooled, logits)
+
+        eps0 = {f"l{i}.{p}": jnp.zeros((bsz, s, d), jnp.float32)
+                for i in range(L) for p in ("q", "v")}
+        eph0 = jnp.zeros((bsz, n_classes), jnp.float32)
+        (loss, (xs, pooled, logits)), (geps, ghead) = jax.value_and_grad(
+            inner, argnums=(0, 1), has_aux=True)(eps0, eph0)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        outs = [loss, acc]
+        outs += [xs[f"l{i}.x"] for i in range(L)] + [pooled]
+        outs += [geps[f"l{i}.q"] for i in range(L)]
+        outs += [geps[f"l{i}.v"] for i in range(L)] + [ghead]
+        return tuple(outs)
+
+    input_names = wnames + anames + ["head.W", "tokens", "labels", "mask"]
+    specs = [jax.ShapeDtypeStruct(wshapes[n], jnp.float32) for n in wnames]
+    specs += [jax.ShapeDtypeStruct(ashapes[n], jnp.float32) for n in anames]
+    specs += [jax.ShapeDtypeStruct((d, n_classes), jnp.float32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.int32),
+              jax.ShapeDtypeStruct((bsz,), jnp.int32),
+              jax.ShapeDtypeStruct((bsz, s), jnp.float32)]
+    output_names = (["loss", "acc"] + [f"l{i}.x" for i in range(L)] + ["head.x"]
+                    + [f"l{i}.gq" for i in range(L)]
+                    + [f"l{i}.gv" for i in range(L)] + ["head.g"])
+    return fn, input_names, output_names, specs

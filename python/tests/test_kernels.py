@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every kernel must match its ref across row
+counts that do and don't divide the block size, multiple block sizes,
+and non-trivial scales.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as katt
+from compile.kernels import fit_step as kfit
+from compile.kernels import lora as klora
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+dims = st.sampled_from([1, 3, 8, 16, 32, 64])
+rows = st.sampled_from([1, 5, 8, 64, 100, 128, 200])
+blocks = st.sampled_from([16, 64, 128])
+scales = st.sampled_from([1.0, 0.5, 2.0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=rows, d_in=dims, r=st.sampled_from([1, 4, 8]), d_out=dims,
+       bn=blocks, s=scales, seed=st.integers(0, 2**16))
+def test_lora_apply_matches_ref(n, d_in, r, d_out, bn, s, seed):
+    rng = np.random.default_rng(seed)
+    x, a, b, h = arr(rng, n, d_in), arr(rng, d_in, r), arr(rng, r, d_out), arr(rng, n, d_out)
+    got = klora.lora_apply(x, a, b, h, s, block_n=bn)
+    want = ref.lora_apply_ref(x, a, b, h, s)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=rows, d_in=dims, d_out=dims, bn=blocks, s=scales,
+       seed=st.integers(0, 2**16))
+def test_linear_apply_matches_ref(n, d_in, d_out, bn, s, seed):
+    rng = np.random.default_rng(seed)
+    x, w, h = arr(rng, n, d_in), arr(rng, d_in, d_out), arr(rng, n, d_out)
+    got = klora.linear_apply(x, w, h, s, block_n=bn)
+    np.testing.assert_allclose(got, ref.linear_apply_ref(x, w, h, s),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=rows, d_in=dims, r=st.sampled_from([1, 4, 8]), d_out=dims,
+       bn=blocks, s=scales, seed=st.integers(0, 2**16))
+def test_fit_lowrank_matches_ref(n, d_in, r, d_out, bn, s, seed):
+    rng = np.random.default_rng(seed)
+    x, t = arr(rng, n, d_in), arr(rng, n, d_out)
+    a, b = arr(rng, d_in, r), arr(rng, r, d_out)
+    da, db = kfit.fit_step_lowrank(x, t, a, b, s, block_n=bn)
+    rda, rdb = ref.fit_step_lowrank_ref(x, t, a, b, s)
+    np.testing.assert_allclose(da, rda, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(db, rdb, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=rows, d_in=dims, d_out=dims, bn=blocks, s=scales,
+       seed=st.integers(0, 2**16))
+def test_fit_linear_matches_ref(n, d_in, d_out, bn, s, seed):
+    rng = np.random.default_rng(seed)
+    x, t, w = arr(rng, n, d_in), arr(rng, n, d_out), arr(rng, d_in, d_out)
+    got = kfit.fit_step_linear(x, t, w, s, block_n=bn)
+    np.testing.assert_allclose(got, ref.fit_step_linear_ref(x, t, w, s),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=rows, d_in=dims, dh=st.sampled_from([4, 16]), d_out=dims,
+       bn=blocks, seed=st.integers(0, 2**16))
+def test_fit_mlp_matches_ref(n, d_in, dh, d_out, bn, seed):
+    rng = np.random.default_rng(seed)
+    x, t = arr(rng, n, d_in), arr(rng, n, d_out)
+    w1, b1 = arr(rng, d_in, dh), arr(rng, dh)
+    w2, b2 = arr(rng, dh, d_out), arr(rng, d_out)
+    got = kfit.fit_step_mlp(x, t, w1, b1, w2, b2, block_n=bn)
+    want = ref.fit_step_mlp_ref(x, t, w1, b1, w2, b2)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=4e-4, atol=4e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([16, 64, 128]), dh=st.sampled_from([4, 16, 32]),
+       bq=st.sampled_from([8, 16, 64]), causal=st.booleans(),
+       seed=st.integers(0, 2**16))
+def test_attention_matches_ref(s, dh, bq, causal, seed):
+    if s % min(bq, s) != 0:
+        return
+    rng = np.random.default_rng(seed)
+    q, k, v = arr(rng, s, dh), arr(rng, s, dh), arr(rng, s, dh)
+    got = katt.attention(q, k, v, causal, block_q=bq)
+    np.testing.assert_allclose(got, ref.attention_ref(q, k, v, causal),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=rows, d=dims, seed=st.integers(0, 2**16))
+def test_layernorm_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = arr(rng, n, d), arr(rng, d), arr(rng, d)
+    got = katt.layernorm(x, g, b)
+    np.testing.assert_allclose(got, ref.layernorm_ref(x, g, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_rejects_bad_seq():
+    q = jnp.ones((100, 8))
+    with pytest.raises(ValueError):
+        katt.attention(q, q, q, True, block_q=64)
+
+
+def test_fit_lowrank_zero_rows_padding_neutral():
+    """Explicitly: zero-padded rows contribute zero gradient."""
+    rng = np.random.default_rng(0)
+    x, t = arr(rng, 7, 8), arr(rng, 7, 8)
+    a, b = arr(rng, 8, 4), arr(rng, 4, 8)
+    da1, db1 = kfit.fit_step_lowrank(x, t, a, b, 1.0, block_n=128)
+    da2, db2 = ref.fit_step_lowrank_ref(x, t, a, b, 1.0)
+    np.testing.assert_allclose(da1, da2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db1, db2, rtol=1e-4, atol=1e-4)

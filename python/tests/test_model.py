@@ -1,0 +1,178 @@
+"""L2 model graphs: merge correctness (Prop. 2), shapes, baselines."""
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import baselines, ic_models, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = dict(model.CONFIGS["tiny"], batch=4, seq=32)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, CFG["vocab"], (CFG["batch"], CFG["seq"]))
+                         .astype(np.int32))
+    targets = jnp.asarray(rng.integers(0, CFG["vocab"], (CFG["batch"], CFG["seq"]))
+                          .astype(np.int32))
+    mask = jnp.ones((CFG["batch"], CFG["seq"]), jnp.float32)
+    return tokens, targets, mask
+
+
+def _rand_adapters(kind, scale=0.05, seed=7):
+    aps = model.init_adapter_params(CFG, kind)
+    rng = np.random.default_rng(seed)
+    return OrderedDict(
+        (k, jnp.asarray(rng.normal(scale=scale, size=v.shape).astype(np.float32)))
+        for k, v in aps.items())
+
+
+def _merge_lowrank(params, aps):
+    """Prop. 2: wq' = wq + scale * A@B (adapter linear in input)."""
+    out = OrderedDict(params)
+    for i in range(CFG["layers"]):
+        for proj, wname in (("q", f"l{i}.wq"), ("v", f"l{i}.wv")):
+            p = f"l{i}.{proj}"
+            out[wname] = params[wname] + model.ADAPTER_SCALE * (
+                aps[f"{p}.A"] @ aps[f"{p}.B"])
+    return out
+
+
+def test_merged_equals_unmerged_lowrank():
+    """Forward+backward through merged weights == live lowrank adapters:
+    same loss, same x_m, same grad_hhat_m."""
+    params = model.init_lm_params(CFG)
+    aps = _rand_adapters("lowrank")
+    tokens, targets, mask = _batch()
+
+    un, _, onames, _ = model.make_lm_fwdbwd(CFG, "lowrank")
+    args_un = list(params.values()) + list(aps.values()) + [tokens, targets, mask]
+    outs_un = dict(zip(onames, un(*args_un)))
+
+    merged = _merge_lowrank(params, aps)
+    mg, _, monames, _ = model.make_lm_fwdbwd(CFG, "none")
+    args_m = list(merged.values()) + [tokens, targets, mask]
+    outs_m = dict(zip(monames, mg(*args_m)))
+
+    np.testing.assert_allclose(outs_un["loss"], outs_m["loss"], rtol=1e-5, atol=1e-6)
+    for i in range(CFG["layers"]):
+        np.testing.assert_allclose(outs_un[f"l{i}.x"], outs_m[f"l{i}.x"],
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(outs_un[f"l{i}.gq"], outs_m[f"l{i}.gq"],
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(outs_un[f"l{i}.gv"], outs_m[f"l{i}.gv"],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_merge_unmerge_roundtrip():
+    params = model.init_lm_params(CFG)
+    aps = _rand_adapters("lowrank")
+    merged = _merge_lowrank(params, aps)
+    for i in range(CFG["layers"]):
+        for proj, wname in (("q", f"l{i}.wq"), ("v", f"l{i}.wv")):
+            p = f"l{i}.{proj}"
+            back = merged[wname] - model.ADAPTER_SCALE * (aps[f"{p}.A"] @ aps[f"{p}.B"])
+            np.testing.assert_allclose(back, params[wname], rtol=1e-5, atol=1e-6)
+
+
+def test_multi_user_merge_composition():
+    """Merging K users' adapters == adding all deltas (collaboration)."""
+    params = model.init_lm_params(CFG)
+    users = [_rand_adapters("lowrank", seed=s) for s in (1, 2, 3)]
+    merged = OrderedDict(params)
+    for aps in users:
+        merged = _merge_lowrank(merged, aps)
+    for i in range(CFG["layers"]):
+        for proj, wname in (("q", f"l{i}.wq"), ("v", f"l{i}.wv")):
+            p = f"l{i}.{proj}"
+            total = sum(aps[f"{p}.A"] @ aps[f"{p}.B"] for aps in users)
+            np.testing.assert_allclose(merged[wname], params[wname] + total,
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_lm_fwd_shapes_and_determinism():
+    fwd, _, _, _ = model.make_lm_fwd(CFG)
+    params = model.init_lm_params(CFG)
+    tokens, _, _ = _batch()
+    (logits,) = fwd(*params.values(), tokens)
+    assert logits.shape == (CFG["batch"], CFG["seq"], CFG["vocab"])
+    (logits2,) = fwd(*params.values(), tokens)
+    np.testing.assert_array_equal(logits, logits2)
+
+
+def test_all_baseline_graphs_run():
+    params = model.init_lm_params(CFG)
+    tokens, targets, mask = _batch(2)
+    for meth in ("ft", "lora", "ia3", "prompt", "ptuning", "prefix"):
+        tun = baselines.init_tunables(CFG, meth)
+        if meth == "ft":
+            tun = OrderedDict((k, v) for k, v in model.init_lm_params(CFG).items())
+        step, _, onames, _ = baselines.make_coupled_clm_step(CFG, meth)
+        # FT artifacts exclude the frozen weights (XLA would prune them)
+        wargs = [] if meth == "ft" else list(params.values())
+        outs = step(*wargs, *tun.values(), tokens, targets, mask)
+        loss, acc = outs[0], outs[1]
+        assert np.isfinite(loss), meth
+        assert 0.0 <= float(acc) <= 1.0, meth
+        assert len(outs) == 2 + len(tun), meth
+        # gradients must be finite and at least one nonzero
+        total = sum(float(jnp.sum(jnp.abs(g))) for g in outs[2:])
+        assert np.isfinite(total) and total > 0, meth
+
+
+def test_baseline_seqcls_graphs_run():
+    params = model.init_lm_params(CFG)
+    rng = np.random.default_rng(0)
+    tokens, _, mask = _batch(3)
+    labels = jnp.asarray(rng.integers(0, 4, (CFG["batch"],)).astype(np.int32))
+    for meth in ("ft", "lora", "ia3", "prompt", "ptuning", "prefix"):
+        tun = baselines.init_tunables(CFG, meth, n_classes=4)
+        if meth == "ft":
+            base = model.init_lm_params(CFG)
+            tun = OrderedDict(base)
+            tun["head.W"] = jnp.zeros((CFG["d"], 4), jnp.float32)
+        step, _, onames, _ = baselines.make_coupled_seqcls_step(CFG, meth, 4)
+        wargs = [] if meth == "ft" else list(params.values())
+        outs = step(*wargs, *tun.values(), tokens, labels, mask)
+        assert np.isfinite(outs[0]) and 0.0 <= float(outs[1]) <= 1.0, meth
+
+
+def test_ic_merged_equals_adapter_forward():
+    """IC: zero base + linear adapters == merged weights (Prop. 2)."""
+    batch = 8
+    rng = np.random.default_rng(1)
+    images = jnp.asarray(rng.normal(size=(batch, 28, 28, 1)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, (batch,)).astype(np.int32))
+    for m in ("linear", "mlp", "cnn"):
+        base = ic_models.init_ic_base(m)
+        aps = ic_models.init_ic_adapters(m, "linear")
+        aps = OrderedDict(
+            (k, jnp.asarray(rng.normal(scale=0.05, size=v.shape).astype(np.float32)))
+            for k, v in aps.items())
+        un, _, onames, _ = ic_models.make_ic_fwdbwd(m, "linear", batch)
+        outs_u = dict(zip(onames, un(*base.values(), *aps.values(),
+                                     images, labels)))
+        ws = [base[f"{s}.Wbase"] + aps[f"{s}.W"]
+              for s in ic_models.ic_site_dims(m)]
+        mg, _, monames, _ = ic_models.make_ic_fwdbwd_merged(m, batch)
+        outs_m = dict(zip(monames, mg(*ws, images, labels)))
+        np.testing.assert_allclose(outs_u["loss"], outs_m["loss"],
+                                   rtol=1e-5, atol=1e-6)
+        for s in ic_models.ic_site_dims(m):
+            np.testing.assert_allclose(outs_u[f"{s}.g"], outs_m[f"{s}.g"],
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_prompt_shifts_positions():
+    """Prompt baseline: logits are cut back to seq positions, loss masked
+    identically to no-prompt shape conventions."""
+    params = model.init_lm_params(CFG)
+    tun = baselines.init_tunables(CFG, "prompt")
+    tokens, targets, mask = _batch(4)
+    step, _, _, _ = baselines.make_coupled_clm_step(CFG, "prompt")
+    outs = step(*params.values(), *tun.values(), tokens, targets, mask)
+    assert np.isfinite(outs[0])
+    assert outs[2].shape == tun["prompt"].shape

@@ -1,0 +1,228 @@
+"""Proposition 1 — the heart of ColA.
+
+The decoupled path (server ships (x_m, grad_hhat_m); worker computes the
+surrogate-loss gradient) must produce EXACTLY the coupled autodiff
+gradients of the task loss w.r.t. the adapter parameters, for every
+adapter architecture and site. These tests verify it at the JAX level on
+the same graphs that get AOT-lowered.
+"""
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import adapter_update, baselines, ic_models, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = dict(model.CONFIGS["tiny"], batch=4, seq=32)
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, CFG["vocab"], (CFG["batch"], CFG["seq"]))
+                         .astype(np.int32))
+    targets = jnp.asarray(rng.integers(0, CFG["vocab"], (CFG["batch"], CFG["seq"]))
+                          .astype(np.int32))
+    mask = jnp.asarray((rng.random((CFG["batch"], CFG["seq"])) > 0.2)
+                       .astype(np.float32))
+    return tokens, targets, mask
+
+
+def _perturbed_lowrank(cfg, seed=7):
+    """Adapters with non-zero B so gradients flow through both factors."""
+    aps = model.init_adapter_params(cfg, "lowrank")
+    rng = np.random.default_rng(seed)
+    out = OrderedDict()
+    for k, v in aps.items():
+        out[k] = jnp.asarray(rng.normal(scale=0.05, size=v.shape).astype(np.float32))
+    return out
+
+
+def test_prop1_lowrank_clm():
+    """Decoupled fit grads == coupled LoRA grads, every site, exact."""
+    params = model.init_lm_params(CFG)
+    aps = _perturbed_lowrank(CFG)
+    tokens, targets, mask = _batch()
+
+    fwdbwd, in_names, out_names, _ = model.make_lm_fwdbwd(CFG, "lowrank")
+    args = list(params.values()) + list(aps.values()) + [tokens, targets, mask]
+    outs = dict(zip(out_names, fwdbwd(*args)))
+
+    coupled, cin, conames, _ = baselines.make_coupled_clm_step(CFG, "lora")
+    couts = dict(zip(conames, coupled(*args)))
+
+    np.testing.assert_allclose(outs["loss"], couts["loss"], rtol=1e-5)
+
+    d = CFG["d"]
+    for i in range(CFG["layers"]):
+        x = outs[f"l{i}.x"].reshape(-1, d)
+        for proj, gkey in (("q", f"l{i}.gq"), ("v", f"l{i}.gv")):
+            ghat = outs[gkey].reshape(-1, d)
+            fit, _, _, _ = adapter_update.make_fit_grad("lowrank", d, d,
+                                                        x.shape[0])
+            da, db = fit(x, ghat, aps[f"l{i}.{proj}.A"], aps[f"l{i}.{proj}.B"])
+            np.testing.assert_allclose(da, couts[f"d.l{i}.{proj}.A"],
+                                       rtol=RTOL, atol=ATOL)
+            np.testing.assert_allclose(db, couts[f"d.l{i}.{proj}.B"],
+                                       rtol=RTOL, atol=ATOL)
+
+
+def test_prop1_linear_and_mlp_clm():
+    """Prop.1 holds for any auxiliary architecture (model-agnostic)."""
+    params = model.init_lm_params(CFG)
+    tokens, targets, mask = _batch(1)
+    d = CFG["d"]
+    for kind in ("linear", "mlp"):
+        aps = model.init_adapter_params(CFG, kind)
+        rng = np.random.default_rng(11)
+        aps = OrderedDict(
+            (k, jnp.asarray(rng.normal(scale=0.02, size=v.shape).astype(np.float32)))
+            for k, v in aps.items())
+        fwdbwd, _, out_names, _ = model.make_lm_fwdbwd(CFG, kind)
+        args = list(params.values()) + list(aps.values()) + [tokens, targets, mask]
+        outs = dict(zip(out_names, fwdbwd(*args)))
+
+        # coupled oracle via direct autodiff on the same forward
+        def loss_fn(aps_d):
+            hidden, _ = model.lm_forward(params, tokens, CFG, kind=kind,
+                                         adapters=aps_d, use_pallas=True)
+            return model.masked_ce(model.lm_logits(params, hidden), targets, mask)
+
+        grads = jax.grad(loss_fn)(aps)
+
+        for i in range(CFG["layers"]):
+            x = outs[f"l{i}.x"].reshape(-1, d)
+            for proj, gkey in (("q", f"l{i}.gq"), ("v", f"l{i}.gv")):
+                ghat = outs[gkey].reshape(-1, d)
+                fit, _, onames, _ = adapter_update.make_fit_grad(
+                    kind, d, d, x.shape[0])
+                p = f"l{i}.{proj}"
+                if kind == "linear":
+                    (dw,) = fit(x, ghat, aps[f"{p}.W"])
+                    np.testing.assert_allclose(dw, grads[f"{p}.W"],
+                                               rtol=RTOL, atol=ATOL)
+                else:
+                    douts = fit(x, ghat, aps[f"{p}.W1"], aps[f"{p}.b1"],
+                                aps[f"{p}.W2"], aps[f"{p}.b2"])
+                    for got, name in zip(douts, ("W1", "b1", "W2", "b2")):
+                        np.testing.assert_allclose(
+                            got, grads[f"{p}.{name}"], rtol=4e-4, atol=4e-4)
+
+
+def test_prop1_seqcls_head():
+    """The classifier head trained through a 'linear' ColA adapter gets
+    exactly the coupled head gradient."""
+    n_classes = 4
+    params = model.init_lm_params(CFG)
+    aps = _perturbed_lowrank(CFG)
+    rng = np.random.default_rng(3)
+    head_w = jnp.asarray(rng.normal(scale=0.05,
+                                    size=(CFG["d"], n_classes)).astype(np.float32))
+    tokens, _, mask = _batch(2)
+    labels = jnp.asarray(rng.integers(0, n_classes, (CFG["batch"],)).astype(np.int32))
+
+    fwdbwd, _, out_names, _ = model.make_seqcls_fwdbwd(CFG, "lowrank", n_classes)
+    args = (list(params.values()) + list(aps.values())
+            + [head_w, tokens, labels, mask])
+    outs = dict(zip(out_names, fwdbwd(*args)))
+
+    def loss_fn(hw):
+        hidden, _ = model.lm_forward(params, tokens, CFG, kind="lowrank",
+                                     adapters=aps, causal=False, use_pallas=True)
+        _, logits = model.seqcls_logits(hidden, mask, hw)
+        return model.ce_labels(logits, labels)
+
+    ghead_ref = jax.grad(loss_fn)(head_w)
+
+    fit, _, _, _ = adapter_update.make_fit_grad("linear", CFG["d"], n_classes,
+                                                CFG["batch"])
+    (dw,) = fit(outs["head.x"], outs["head.g"], head_w)
+    np.testing.assert_allclose(dw, ghead_ref, rtol=RTOL, atol=ATOL)
+
+
+def test_prop1_one_sgd_step_identical():
+    """A full GL round (fit grads -> SGD) lands on the same adapter
+    weights as a coupled LoRA SGD step: ColA(LowRank) == LoRA exactly."""
+    params = model.init_lm_params(CFG)
+    aps = _perturbed_lowrank(CFG)
+    tokens, targets, mask = _batch(4)
+    lr = 0.1
+    d = CFG["d"]
+
+    fwdbwd, _, out_names, _ = model.make_lm_fwdbwd(CFG, "lowrank")
+    args = list(params.values()) + list(aps.values()) + [tokens, targets, mask]
+    outs = dict(zip(out_names, fwdbwd(*args)))
+
+    coupled, _, conames, _ = baselines.make_coupled_clm_step(CFG, "lora")
+    couts = dict(zip(conames, coupled(*args)))
+
+    for i in range(CFG["layers"]):
+        x = outs[f"l{i}.x"].reshape(-1, d)
+        for proj, gkey in (("q", f"l{i}.gq"), ("v", f"l{i}.gv")):
+            ghat = outs[gkey].reshape(-1, d)
+            fit, _, _, _ = adapter_update.make_fit_grad("lowrank", d, d, x.shape[0])
+            p = f"l{i}.{proj}"
+            da, db = fit(x, ghat, aps[f"{p}.A"], aps[f"{p}.B"])
+            a_gl = aps[f"{p}.A"] - lr * da
+            a_cp = aps[f"{p}.A"] - lr * couts[f"d.{p}.A"]
+            np.testing.assert_allclose(a_gl, a_cp, rtol=RTOL, atol=ATOL)
+            b_gl = aps[f"{p}.B"] - lr * db
+            b_cp = aps[f"{p}.B"] - lr * couts[f"d.{p}.B"]
+            np.testing.assert_allclose(b_gl, b_cp, rtol=RTOL, atol=ATOL)
+
+
+def test_prop1_ic_models():
+    """Prop.1 on the image models (from-scratch study), incl. conv sites
+    via im2col."""
+    batch = 8
+    rng = np.random.default_rng(5)
+    images = jnp.asarray(rng.normal(size=(batch, ic_models.IMG, ic_models.IMG, 1))
+                         .astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, (batch,)).astype(np.int32))
+    for m in ("linear", "mlp", "cnn"):
+        base = ic_models.init_ic_base(m)
+        aps = ic_models.init_ic_adapters(m, "lowrank")
+        aps = OrderedDict(
+            (k, jnp.asarray(rng.normal(scale=0.05, size=v.shape).astype(np.float32)))
+            for k, v in aps.items())
+        fwdbwd, _, onames, _ = ic_models.make_ic_fwdbwd(m, "lowrank", batch)
+        outs = dict(zip(onames, fwdbwd(*base.values(), *aps.values(),
+                                       images, labels)))
+
+        coupled, _, cnames, _ = ic_models.make_ic_coupled(m, "lora", batch)
+        couts = dict(zip(cnames, coupled(*base.values(), *aps.values(),
+                                         images, labels)))
+        np.testing.assert_allclose(outs["loss"], couts["loss"], rtol=1e-5)
+
+        for site, (din, dout, rows) in ic_models.ic_site_dims(m).items():
+            fit, _, _, _ = adapter_update.make_fit_grad(
+                "lowrank", din, dout, batch * rows)
+            # adjust rank for narrow sites
+            da, db = fit(outs[f"{site}.x"], outs[f"{site}.g"],
+                         aps[f"{site}.A"], aps[f"{site}.B"])
+            np.testing.assert_allclose(da, couts[f"d.{site}.A"],
+                                       rtol=4e-4, atol=4e-4)
+            np.testing.assert_allclose(db, couts[f"d.{site}.B"],
+                                       rtol=4e-4, atol=4e-4)
+
+
+def test_interval_buffering_sums_per_batch_grads():
+    """Fitting on the concatenation of I buffered batches equals the sum
+    of per-batch fit gradients (SUM-reduction surrogate) — the invariant
+    the Rust buffer relies on."""
+    rng = np.random.default_rng(9)
+    d, n = 16, 64
+    a = jnp.asarray(rng.normal(size=(d, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4, d)).astype(np.float32))
+    xs = [jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)) for _ in range(3)]
+    gs = [jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)) for _ in range(3)]
+    fit_n, _, _, _ = adapter_update.make_fit_grad("lowrank", d, d, n)
+    fit_3n, _, _, _ = adapter_update.make_fit_grad("lowrank", d, d, 3 * n)
+    da_cat, db_cat = fit_3n(jnp.concatenate(xs), jnp.concatenate(gs), a, b)
+    da_sum = sum(fit_n(x, g, a, b)[0] for x, g in zip(xs, gs))
+    db_sum = sum(fit_n(x, g, a, b)[1] for x, g in zip(xs, gs))
+    np.testing.assert_allclose(da_cat, da_sum, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(db_cat, db_sum, rtol=2e-4, atol=2e-4)

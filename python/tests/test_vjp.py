@@ -1,0 +1,70 @@
+"""custom_vjp wrappers: gradients through Pallas kernels match autodiff
+through the pure-jnp references (the server graph depends on these)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, vjp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 64, 130]), d=st.sampled_from([8, 32]),
+       r=st.sampled_from([2, 8]), seed=st.integers(0, 2**16))
+def test_lora_apply_vjp(n, d, r, seed):
+    rng = np.random.default_rng(seed)
+    x, a, b, h = arr(rng, n, d), arr(rng, d, r), arr(rng, r, d), arr(rng, n, d)
+    f1 = lambda *args: jnp.sum(jnp.sin(vjp.lora_apply(*args, 0.5)))
+    f2 = lambda *args: jnp.sum(jnp.sin(ref.lora_apply_ref(*args, 0.5)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2, 3))(x, a, b, h)
+    g2 = jax.grad(f2, argnums=(0, 1, 2, 3))(x, a, b, h)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=4e-4, atol=4e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 64]), d=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**16))
+def test_linear_apply_vjp(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x, w, h = arr(rng, n, d), arr(rng, d, d), arr(rng, n, d)
+    f1 = lambda *args: jnp.sum(jnp.sin(vjp.linear_apply(*args, 1.0)))
+    f2 = lambda *args: jnp.sum(jnp.sin(ref.linear_apply_ref(*args, 1.0)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(x, w, h)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(x, w, h)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=4e-4, atol=4e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 64]), dh=st.sampled_from([4, 16]),
+       causal=st.booleans(), seed=st.integers(0, 2**16))
+def test_attention_vjp(s, dh, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = arr(rng, s, dh), arr(rng, s, dh), arr(rng, s, dh)
+    f1 = lambda *args: jnp.sum(jnp.cos(vjp.attention(*args, causal)))
+    f2 = lambda *args: jnp.sum(jnp.cos(ref.attention_ref(*args, causal)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for u, v_ in zip(g1, g2):
+        np.testing.assert_allclose(u, v_, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 100]), d=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**16))
+def test_layernorm_vjp(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = arr(rng, n, d), arr(rng, d), arr(rng, d)
+    f1 = lambda *args: jnp.sum(jnp.sin(vjp.layernorm(*args)))
+    f2 = lambda *args: jnp.sum(jnp.sin(ref.layernorm_ref(*args)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(x, g, b)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(x, g, b)
+    for u, v in zip(g1, g2):
+        np.testing.assert_allclose(u, v, rtol=5e-4, atol=5e-4)

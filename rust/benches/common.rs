@@ -1,0 +1,93 @@
+//! Shared bench plumbing: the method grid of the paper's quality tables
+//! and a uniform runner. Included by each bench via `#[path]`.
+
+#![allow(dead_code)]
+
+use std::sync::OnceLock;
+
+use cola::config::{AdapterKind, Method, Mode, Task, TrainConfig};
+use cola::coordinator::{Driver, RunReport, Trainer};
+use cola::runtime::Runtime;
+
+/// One shared server device for all quality arms in a bench process —
+/// the XLA executable cache is reused, so each artifact compiles once.
+pub fn shared_runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::load("artifacts").expect("make artifacts"))
+}
+
+/// The quality-table method grid (Tables 2/3/6): every coupled baseline
+/// plus ColA in all adapter architectures and both modes.
+pub fn method_grid() -> Vec<(String, Method, Mode)> {
+    use AdapterKind::*;
+    vec![
+        ("FT".into(), Method::Ft, Mode::Unmerged),
+        ("LoRA".into(), Method::Lora, Mode::Unmerged),
+        ("IA3".into(), Method::Ia3, Mode::Unmerged),
+        ("Prompt Tuning".into(), Method::Prompt, Mode::Unmerged),
+        ("P-Tuning".into(), Method::PTuning, Mode::Unmerged),
+        ("Prefix Tuning".into(), Method::Prefix, Mode::Unmerged),
+        ("ColA (Low Rank) unmerged".into(), Method::Cola(LowRank), Mode::Unmerged),
+        ("ColA (Low Rank) merged".into(), Method::Cola(LowRank), Mode::Merged),
+        ("ColA (Linear) unmerged".into(), Method::Cola(Linear), Mode::Unmerged),
+        ("ColA (Linear) merged".into(), Method::Cola(Linear), Mode::Merged),
+        ("ColA (MLP) unmerged".into(), Method::Cola(Mlp), Mode::Unmerged),
+    ]
+}
+
+/// Reduced grid for --quick runs.
+pub fn quick_grid() -> Vec<(String, Method, Mode)> {
+    method_grid()
+        .into_iter()
+        .filter(|(n, _, _)| {
+            matches!(n.as_str(),
+                     "LoRA" | "IA3" | "ColA (Low Rank) merged" | "ColA (Linear) merged")
+        })
+        .collect()
+}
+
+pub fn base_quality_cfg(task: Task, dataset: &str, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.task = task;
+    cfg.size = "tiny".into();
+    cfg.dataset = dataset.into();
+    cfg.steps = steps;
+    cfg.interval = 1;
+    cfg.eval_every = 0; // single eval at the end
+    cfg.eval_batches = 8;
+    cfg.workers = 2;
+    cfg
+}
+
+/// Run one (method, mode) arm on the shared device; returns the report.
+pub fn run_arm(mut cfg: TrainConfig, method: Method, mode: Mode)
+               -> anyhow::Result<RunReport> {
+    cfg = cfg.preset_for_method(method);
+    cfg.mode = if method.is_cola() { mode } else { Mode::Unmerged };
+    let rt = shared_runtime().clone();
+    let driver = Driver::new(&cfg, &rt.manifest)?;
+    let mut t = Trainer::with_driver(cfg, rt, driver)?;
+    t.run()
+}
+
+pub fn fmt_params(n: usize) -> String {
+    if n >= 1_000_000 {
+        format!("{:.1} M", n as f64 / 1e6)
+    } else {
+        format!("{:.1} K", n as f64 / 1e3)
+    }
+}
+
+/// steps/quick from argv (benches receive `--bench` etc from cargo —
+/// ignore unknown args).
+pub fn bench_args() -> (usize, bool) {
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick")
+        || std::env::var("COLA_BENCH_QUICK").is_ok();
+    let steps = argv
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|s| s.parse().ok());
+    (steps.unwrap_or(if quick { 40 } else { 60 }), quick)
+}

@@ -1,0 +1,88 @@
+//! Figures 4-11: adaptation-interval ablation. For I in {1, 2, 4, 8}
+//! train with the same number of server iterations (so I=8 updates the
+//! adapters 8x less often), on seq-cls, CLM, and IC tasks; emit eval
+//! curves as CSV and the end scores as a table. The paper's finding:
+//! larger I ~ larger effective batch, satisfactory convergence with
+//! fewer (and cheaper, amortized) adapter updates.
+
+#[path = "common.rs"]
+mod common;
+
+use cola::bench_harness::BenchReport;
+use cola::config::{AdapterKind, Method, Mode, Optimizer, Task, TrainConfig};
+use cola::coordinator::{Driver, Trainer};
+use cola::metrics::{curves_to_csv, markdown_table, Curve};
+
+const INTERVALS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() -> anyhow::Result<()> {
+    let (steps, quick) = common::bench_args();
+    let mut report = BenchReport::new(&format!(
+        "Figs 4-11 — adaptation interval ablation, {steps} steps"));
+    let mut curves: Vec<Curve> = Vec::new();
+
+    // seq-cls (Figs 4-6) + CLM (Fig 9)
+    let lm_arms: Vec<(&str, Task, &str)> = if quick {
+        vec![("sst2", Task::SeqCls, "sst2")]
+    } else {
+        vec![("sst2", Task::SeqCls, "sst2"),
+             ("mnli", Task::SeqCls, "mnli"),
+             ("fpb", Task::S2s, "fpb"),
+             ("dolly", Task::Clm, "dolly")]
+    };
+    for (name, task, dataset) in lm_arms {
+        let mut rows = Vec::new();
+        for &interval in &INTERVALS {
+            let mut cfg = common::base_quality_cfg(task, dataset, steps);
+            cfg.method = Method::Cola(AdapterKind::LowRank);
+            cfg.mode = Mode::Unmerged; // matches the paper's ablation setup
+            cfg.interval = interval;
+            cfg.eval_every = (steps / 8).max(1);
+            let mut t = Trainer::new(cfg)?;
+            let r = t.run()?;
+            let score = r.score();
+            println!("[{name:6}] I={interval}  score {score:.1}");
+            rows.push(vec![format!("{interval}"), format!("{score:.1}"),
+                           format!("{}", steps / interval)]);
+            let mut c = r.eval_acc.clone();
+            c.name = format!("{name}/I{interval}");
+            curves.push(c);
+        }
+        report.section(&format!("{name}: score vs adaptation interval"),
+                       markdown_table(&["I", "score", "adapter updates"], &rows));
+    }
+
+    // IC (Figs 10-11)
+    if !quick {
+        let mut rows = Vec::new();
+        for &interval in &INTERVALS {
+            let rt = common::shared_runtime().clone();
+            let driver = Driver::new_ic("mlp", "smnist", 32, 7)?;
+            let mut cfg = TrainConfig::default();
+            cfg.method = Method::Cola(AdapterKind::Linear);
+            cfg.mode = Mode::Unmerged;
+            cfg.steps = steps;
+            cfg.batch = 32;
+            cfg.lr = 0.05;
+            cfg.optimizer = Optimizer::Sgd;
+            cfg.interval = interval;
+            cfg.eval_every = (steps / 8).max(1);
+            cfg.eval_batches = 6;
+            let mut t = Trainer::with_driver(cfg, rt, driver)?;
+            let r = t.run()?;
+            let acc = 100.0 * r.eval_acc.tail_mean(2);
+            println!("[ic-mlp] I={interval}  acc {acc:.1}");
+            rows.push(vec![format!("{interval}"), format!("{acc:.1}")]);
+            let mut c = r.eval_acc.clone();
+            c.name = format!("ic-mlp/I{interval}");
+            curves.push(c);
+        }
+        report.section("ic-mlp (smnist): accuracy vs interval",
+                       markdown_table(&["I", "acc"], &rows));
+    }
+
+    report.emit("fig_interval")?;
+    let refs: Vec<&Curve> = curves.iter().collect();
+    report.write_csv("fig4_11_interval_curves", &curves_to_csv(&refs))?;
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Tables 10-18: computation evaluation.
+//!
+//! Two halves, mirroring the paper:
+//!  (a) **measured** — real step-time breakdowns on the tiny profile at
+//!      batch {1, 8, 32} for LoRA / FT / ColA x {unmerged, merged} x
+//!      offload {cpu-native, pjrt-device}, plus the K=8 collaboration
+//!      arm (Tables 16-18 trend) — run on this testbed's server device;
+//!  (b) **analytic** — the byte ledger instantiated on the paper's
+//!      RoBERTa/BART/GPT-2/Llama-2 profiles (what needs an A6000),
+//!      reproducing who fits in 48 GB and what grows with K.
+
+#[path = "common.rs"]
+mod common;
+
+use cola::bench_harness::BenchReport;
+use cola::config::{AdapterKind, Method, Mode, OffloadTarget, Task, TrainConfig};
+use cola::coordinator::Trainer;
+use cola::memory::{footprint, Arrangement, ModelProfile, GB};
+use cola::metrics::markdown_table;
+
+fn measured_row(label: &str, mut cfg: TrainConfig)
+                -> anyhow::Result<Vec<String>> {
+    cfg.steps = 10;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    let mut t = Trainer::new(cfg)?;
+    let r = t.run()?;
+    let tm = &r.timings;
+    Ok(vec![
+        label.to_string(),
+        format!("{:.2}", r.server_resident_bytes as f64 / (1024.0 * 1024.0)),
+        format!("{:.4}", tm.per_step(tm.fwdbwd)),
+        format!("{:.4}", tm.per_step(tm.transfer)),
+        format!("{:.4}", tm.per_step(tm.worker)),
+        format!("{:.1}", tm.bytes_offloaded as f64 / (1024.0 * 1024.0)
+                / tm.steps as f64),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let (_steps, quick) = common::bench_args();
+    let mut report = BenchReport::new("Tables 10-18 — computation evaluation");
+
+    // (a) measured, batch sweep
+    let batches: &[usize] = if quick { &[8] } else { &[1, 8, 32] };
+    for &b in batches {
+        let mut rows = Vec::new();
+        let base = || {
+            let mut c = TrainConfig::default();
+            c.task = Task::Clm;
+            c.size = "tiny".into();
+            c.batch = b;
+            c.workers = 2;
+            c
+        };
+        let mut c = base();
+        c.method = Method::Ft;
+        rows.push(measured_row("FT (coupled)", c)?);
+        let mut c = base();
+        c.method = Method::Lora;
+        rows.push(measured_row("LoRA (coupled)", c)?);
+        for (label, mode, offload) in [
+            ("ColA LowRank unmerged / cpu", Mode::Unmerged, OffloadTarget::NativeCpu),
+            ("ColA LowRank unmerged / gpu-dev", Mode::Unmerged, OffloadTarget::PjrtDevice),
+            ("ColA LowRank merged / cpu", Mode::Merged, OffloadTarget::NativeCpu),
+        ] {
+            let mut c = base();
+            c.method = Method::Cola(AdapterKind::LowRank);
+            c.mode = mode;
+            c.offload = offload;
+            rows.push(measured_row(label, c)?);
+        }
+        report.section(
+            &format!("measured, tiny profile, batch {b} (s/step; offload MiB/step)"),
+            markdown_table(&["method", "server MiB", "base s", "transfer s",
+                             "worker s", "offload MiB"], &rows));
+    }
+
+    // (a2) K-user collaboration residency (Tables 16-18 trend)
+    if !quick {
+        let mut rows = Vec::new();
+        for users in [1usize, 2, 4, 8] {
+            let mut c = TrainConfig::default();
+            c.task = Task::Clm;
+            c.size = "tiny".into();
+            c.users = users;
+            c.batch = 8;
+            c.workers = users.min(4);
+            c.method = Method::Cola(AdapterKind::LowRank);
+            c.mode = Mode::Merged;
+            c.dataset = "per-user".into();
+            c.steps = 6;
+            c.eval_every = 0;
+            c.eval_batches = 1;
+            let mut t = Trainer::new(c)?;
+            let r = t.run()?;
+            rows.push(vec![
+                format!("{users}"),
+                format!("{:.2}", r.server_resident_bytes as f64 / (1024.0 * 1024.0)),
+                format!("{:.2}", r.worker_state_bytes as f64 / (1024.0 * 1024.0)),
+                format!("{:.4}", r.timings.per_step(r.timings.fwdbwd)),
+            ]);
+        }
+        report.section(
+            "measured: merged-mode server residency vs number of users K \
+             (flat server column = Tables 16-18 headline)",
+            markdown_table(&["users K", "server MiB", "worker MiB", "base s/step"],
+                           &rows));
+    }
+
+    // (b) analytic paper-scale tables
+    use AdapterKind::*;
+    for (profile_name, table) in [("roberta-base", "Table 10"),
+                                  ("bart-base", "Table 11"),
+                                  ("gpt2", "Table 12"),
+                                  ("llama2-qv", "Table 13"),
+                                  ("llama2-all", "Table 14")] {
+        let p = ModelProfile::by_name(profile_name).unwrap();
+        let mut rows = Vec::new();
+        for &b in &[1usize, 8, 32] {
+            let arms: Vec<(String, Arrangement)> = vec![
+                (format!("b{b} FT"), Arrangement::FullFt),
+                (format!("b{b} LoRA"), Arrangement::Peft { kind: LowRank, users: 1 }),
+                (format!("b{b} ColA LowRank unmerged"),
+                 Arrangement::Cola { kind: LowRank, merged: false, users: 1 }),
+                (format!("b{b} ColA LowRank merged"),
+                 Arrangement::Cola { kind: LowRank, merged: true, users: 1 }),
+                (format!("b{b} ColA Linear merged"),
+                 Arrangement::Cola { kind: Linear, merged: true, users: 1 }),
+            ];
+            for (label, arr) in arms {
+                let fp = footprint(&p, arr, b, 1, 8, 64);
+                let server = fp.server_total() as f64 / GB;
+                rows.push(vec![
+                    label,
+                    if server > 48.0 { format!("{server:.1} — OOM") }
+                    else { format!("{server:.1}") },
+                    format!("{:.2}", fp.worker_total() as f64 / GB),
+                    format!("{:.3}", fp.transfer_per_step as f64 / GB),
+                ]);
+            }
+        }
+        report.section(
+            &format!("{table} analytic: {profile_name} on a 48 GB device"),
+            markdown_table(&["arrangement", "server GB", "worker GB",
+                             "transfer GB/step"], &rows));
+    }
+
+    report.emit("table10_compute")?;
+    Ok(())
+}

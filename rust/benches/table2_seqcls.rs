@@ -1,0 +1,60 @@
+//! Table 2: sequence classification (GLUE substitute) — 8 synthetic
+//! tasks x the full method grid, reporting end-of-training accuracy
+//! (x100, the GLUE-metric stand-in) and trainable parameters. Learning
+//! curves (Figs 12-14) are emitted as CSV.
+//!
+//!   cargo bench --bench table2_seqcls            full grid
+//!   cargo bench --bench table2_seqcls -- --quick reduced grid
+//!   ... -- --steps N                             override steps
+
+#[path = "common.rs"]
+mod common;
+
+use cola::bench_harness::BenchReport;
+use cola::config::Task;
+use cola::data::seqcls::TASKS;
+use cola::metrics::{curves_to_csv, markdown_table, Curve};
+
+fn main() -> anyhow::Result<()> {
+    let (steps, quick) = common::bench_args();
+    let grid = if quick { common::quick_grid() } else { common::method_grid() };
+    let tasks: &[&str] = if quick { &TASKS[..2] } else { &TASKS };
+
+    let mut report = BenchReport::new(&format!(
+        "Table 2 — seq classification, {} tasks x {} methods, {} steps",
+        tasks.len(), grid.len(), steps));
+    let mut rows = Vec::new();
+    let mut curves: Vec<Curve> = Vec::new();
+
+    for (label, method, mode) in &grid {
+        let mut row = vec![label.clone(), String::new()];
+        let mut scores = Vec::new();
+        for task in tasks {
+            let cfg = common::base_quality_cfg(Task::SeqCls, task, steps);
+            let mut cfg = cfg;
+            cfg.eval_every = (steps / 6).max(1);
+            let r = common::run_arm(cfg, *method, *mode)?;
+            let score = r.score();
+            scores.push(score);
+            row.push(format!("{score:.1}"));
+            row[1] = common::fmt_params(r.trainable_params);
+            let mut c = r.eval_acc.clone();
+            c.name = format!("{label}/{task}");
+            curves.push(c);
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        row.push(format!("{avg:.1}"));
+        println!("{label:32} avg {avg:.1}");
+        rows.push(row);
+    }
+
+    let mut headers: Vec<&str> = vec!["Method", "Trainable"];
+    headers.extend(tasks.iter().copied());
+    headers.push("Avg.");
+    report.section("accuracy x100 (GLUE-metric stand-in)",
+                   markdown_table(&headers, &rows));
+    report.emit("table2_seqcls")?;
+    let refs: Vec<&Curve> = curves.iter().collect();
+    report.write_csv("fig12_14_seqcls_curves", &curves_to_csv(&refs))?;
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Table 3: sequence-to-sequence (BART/S2S-suite substitute) — 6
+//! synthetic transform tasks x the method grid, teacher-forced token
+//! accuracy x100 as the ROUGE-Longest stand-in. Curves -> Figs 15-16 CSV.
+
+#[path = "common.rs"]
+mod common;
+
+use cola::bench_harness::BenchReport;
+use cola::config::Task;
+use cola::data::lm::S2S_TASKS;
+use cola::metrics::{curves_to_csv, markdown_table, Curve};
+
+fn main() -> anyhow::Result<()> {
+    let (steps, quick) = common::bench_args();
+    let grid = if quick { common::quick_grid() } else { common::method_grid() };
+    let tasks: &[&str] = if quick { &S2S_TASKS[..2] } else { &S2S_TASKS };
+
+    let mut report = BenchReport::new(&format!(
+        "Table 3 — seq2seq, {} tasks x {} methods, {} steps",
+        tasks.len(), grid.len(), steps));
+    let mut rows = Vec::new();
+    let mut curves: Vec<Curve> = Vec::new();
+
+    for (label, method, mode) in &grid {
+        let mut row = vec![label.clone(), String::new()];
+        let mut scores = Vec::new();
+        for task in tasks {
+            let mut cfg = common::base_quality_cfg(Task::S2s, task, steps);
+            cfg.eval_every = (steps / 6).max(1);
+            let r = common::run_arm(cfg, *method, *mode)?;
+            let score = r.score();
+            scores.push(score);
+            row.push(format!("{score:.1}"));
+            row[1] = common::fmt_params(r.trainable_params);
+            let mut c = r.eval_acc.clone();
+            c.name = format!("{label}/{task}");
+            curves.push(c);
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        row.push(format!("{avg:.1}"));
+        println!("{label:32} avg {avg:.1}");
+        rows.push(row);
+    }
+
+    let mut headers: Vec<&str> = vec!["Method", "Trainable"];
+    headers.extend(tasks.iter().copied());
+    headers.push("Avg.");
+    report.section("token accuracy x100 (ROUGE-Longest stand-in)",
+                   markdown_table(&headers, &rows));
+    report.emit("table3_s2s")?;
+    let refs: Vec<&Curve> = curves.iter().collect();
+    report.write_csv("fig15_16_s2s_curves", &curves_to_csv(&refs))?;
+    Ok(())
+}

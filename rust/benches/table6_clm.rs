@@ -1,0 +1,68 @@
+//! Tables 6 & 7: causal language modeling on the instruction mix
+//! (Dolly substitute). Table 6 arm = tiny profile (GPT-2 stand-in) with
+//! the full method grid; Table 7 arm = small profile (Llama-2 stand-in,
+//! ColA + LoRA-class methods). Curves -> Fig 17 CSV.
+
+#[path = "common.rs"]
+mod common;
+
+use cola::bench_harness::BenchReport;
+use cola::config::{AdapterKind, Method, Mode, Task};
+use cola::metrics::{curves_to_csv, markdown_table, Curve};
+
+fn main() -> anyhow::Result<()> {
+    let (steps, quick) = common::bench_args();
+    let mut report = BenchReport::new(&format!(
+        "Tables 6-7 — causal LM instruction tuning, {steps} steps"));
+    let mut curves: Vec<Curve> = Vec::new();
+
+    // Table 6: tiny (GPT-2 stand-in), full grid
+    let grid = if quick { common::quick_grid() } else { common::method_grid() };
+    let mut rows = Vec::new();
+    for (label, method, mode) in &grid {
+        let mut cfg = common::base_quality_cfg(Task::Clm, "dolly", steps);
+        cfg.eval_every = (steps / 6).max(1);
+        let r = common::run_arm(cfg, *method, *mode)?;
+        println!("[tiny ] {label:32} {:.1}", r.score());
+        rows.push(vec![label.clone(), common::fmt_params(r.trainable_params),
+                       format!("{:.1}", r.score())]);
+        let mut c = r.eval_acc.clone();
+        c.name = format!("tiny/{label}");
+        curves.push(c);
+    }
+    report.section("Table 6 (GPT-2 stand-in = tiny): token acc x100 on Dolly substitute",
+                   markdown_table(&["Method", "Trainable", "Score"], &rows));
+
+    // Table 7: small (Llama-2 stand-in), ColA arms + LoRA
+    if !quick {
+        let arms: Vec<(&str, Method, Mode)> = vec![
+            ("ColA (Low Rank) unmerged", Method::Cola(AdapterKind::LowRank), Mode::Unmerged),
+            ("ColA (Low Rank) merged", Method::Cola(AdapterKind::LowRank), Mode::Merged),
+            ("ColA (Linear) merged", Method::Cola(AdapterKind::Linear), Mode::Merged),
+            ("ColA (MLP) unmerged", Method::Cola(AdapterKind::Mlp), Mode::Unmerged),
+        ];
+        let mut rows = Vec::new();
+        let small_steps = steps / 2; // larger model, half the budget
+        for (label, method, mode) in arms {
+            let mut cfg = common::base_quality_cfg(Task::Clm, "dolly", small_steps);
+            cfg.size = "small".into();
+            cfg.eval_every = (small_steps / 4).max(1);
+            let r = common::run_arm(cfg, method, mode)?;
+            println!("[small] {label:32} {:.1}", r.score());
+            rows.push(vec![label.to_string(),
+                           common::fmt_params(r.trainable_params),
+                           format!("{:.1}", r.score())]);
+            let mut c = r.eval_acc.clone();
+            c.name = format!("small/{label}");
+            curves.push(c);
+        }
+        report.section(
+            "Table 7 (Llama-2 stand-in = small): ColA arms",
+            markdown_table(&["Method", "Trainable", "Score"], &rows));
+    }
+
+    report.emit("table6_clm")?;
+    let refs: Vec<&Curve> = curves.iter().collect();
+    report.write_csv("fig17_clm_curves", &curves_to_csv(&refs))?;
+    Ok(())
+}

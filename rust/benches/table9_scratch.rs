@@ -1,0 +1,74 @@
+//! Table 9 + Figures 2-3: learning from scratch on the image models.
+//! Linear/MLP/CNN x {FT, LoRA, ColA LowRank u/m, ColA Linear u/m,
+//! ColA MLP} x {smnist, scifar}; accuracy + trainable params, learning
+//! curves to CSV.
+
+#[path = "common.rs"]
+mod common;
+
+use cola::bench_harness::BenchReport;
+use cola::config::{AdapterKind, Method, Mode, Optimizer, TrainConfig};
+use cola::coordinator::{Driver, Trainer};
+use cola::metrics::{curves_to_csv, markdown_table, Curve};
+
+fn run(model: &str, set: &str, method: Method, mode: Mode, steps: usize)
+       -> anyhow::Result<(f64, usize, Curve)> {
+    let rt = common::shared_runtime().clone();
+    let driver = Driver::new_ic(model, set, 32, 7)?;
+    let mut cfg = TrainConfig::default();
+    cfg.method = method;
+    cfg.mode = mode;
+    cfg.steps = steps;
+    cfg.batch = 32;
+    cfg.lr = 0.05;
+    cfg.optimizer = Optimizer::Sgd;
+    cfg.eval_every = (steps / 8).max(1);
+    cfg.eval_batches = 6;
+    let mut t = Trainer::with_driver(cfg, rt, driver)?;
+    let r = t.run()?;
+    Ok((100.0 * r.eval_acc.tail_mean(2), r.trainable_params, r.eval_acc))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (steps, quick) = common::bench_args();
+    let models: &[&str] = if quick { &["mlp"] } else { &["linear", "mlp", "cnn"] };
+    let sets: &[&str] = if quick { &["smnist"] } else { &["smnist", "scifar"] };
+    let arms: Vec<(&str, Method, Mode)> = vec![
+        ("FT", Method::Ft, Mode::Unmerged),
+        ("LoRA", Method::Lora, Mode::Unmerged),
+        ("ColA (Low Rank) unmerged", Method::Cola(AdapterKind::LowRank), Mode::Unmerged),
+        ("ColA (Low Rank) merged", Method::Cola(AdapterKind::LowRank), Mode::Merged),
+        ("ColA (Linear) unmerged", Method::Cola(AdapterKind::Linear), Mode::Unmerged),
+        ("ColA (Linear) merged", Method::Cola(AdapterKind::Linear), Mode::Merged),
+        ("ColA (MLP) unmerged", Method::Cola(AdapterKind::Mlp), Mode::Unmerged),
+    ];
+
+    let mut report = BenchReport::new(&format!(
+        "Table 9 / Figs 2-3 — learning from scratch, {steps} steps"));
+    let mut curves: Vec<Curve> = Vec::new();
+
+    for model in models {
+        let mut rows = Vec::new();
+        for (label, method, mode) in &arms {
+            let mut row = vec![label.to_string(), String::new()];
+            for set in sets {
+                let (acc, params, mut curve) = run(model, set, *method, *mode, steps)?;
+                row[1] = common::fmt_params(params);
+                row.push(format!("{acc:.1}"));
+                curve.name = format!("{model}/{set}/{label}");
+                curves.push(curve);
+                println!("[{model:6}] {label:28} {set:7} {acc:5.1}");
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["Method", "Trainable"];
+        headers.extend(sets.iter().copied());
+        report.section(&format!("model = {model}"),
+                       markdown_table(&headers, &rows));
+    }
+
+    report.emit("table9_scratch")?;
+    let refs: Vec<&Curve> = curves.iter().collect();
+    report.write_csv("fig2_3_scratch_curves", &curves_to_csv(&refs))?;
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! Adapter (auxiliary-model) state and the native worker update path.
+//!
+//! ColA is model-agnostic (§3.2): a site's auxiliary model can be any
+//! function of the hidden input. We implement the paper's three:
+//! LowRank (LoRA-shaped), Linear (full matrix, Prop.2-mergeable), and a
+//! 2-layer ReLU MLP (not mergeable).
+//!
+//! `fit_grads` is the native-CPU twin of the Pallas `fit_step` kernels:
+//! the surrogate residual at w = w^t collapses to grad_hhat (Eq. 6 /
+//! Prop. 1), so the gradients are plain contractions of (x, grad_hhat).
+//! Integration tests assert the native path matches the PJRT artifact
+//! path to fp tolerance.
+
+pub mod optimizer;
+
+use anyhow::{bail, Result};
+
+pub use optimizer::{OptState, OptimizerCfg};
+
+use crate::config::AdapterKind;
+use crate::rng::Rng;
+use crate::tensor::{self, Tensor};
+
+/// GL requires alpha = 1 (Sec. 3.2); kept symbolic for clarity.
+pub const SCALE: f32 = 1.0;
+
+/// Parameters of one site's auxiliary model.
+#[derive(Clone, Debug)]
+pub enum AdapterParams {
+    LowRank { a: Tensor, b: Tensor },
+    Linear { w: Tensor },
+    Mlp { w1: Tensor, b1: Tensor, w2: Tensor, b2: Tensor },
+}
+
+impl AdapterParams {
+    /// Paper init: adapter output starts at zero (A/W1 random, rest 0).
+    pub fn init(kind: AdapterKind, d_in: usize, d_out: usize, rank: usize,
+                hidden: usize, rng: &mut Rng) -> AdapterParams {
+        let std = (1.0 / d_in as f32).sqrt();
+        match kind {
+            AdapterKind::LowRank => {
+                let r = rank.min(d_in).min(d_out);
+                AdapterParams::LowRank {
+                    a: Tensor::randn(&[d_in, r], std, rng),
+                    b: Tensor::zeros(&[r, d_out]),
+                }
+            }
+            AdapterKind::Linear => AdapterParams::Linear {
+                w: Tensor::zeros(&[d_in, d_out]),
+            },
+            AdapterKind::Mlp => AdapterParams::Mlp {
+                w1: Tensor::randn(&[d_in, hidden], std, rng),
+                b1: Tensor::zeros(&[hidden]),
+                w2: Tensor::zeros(&[hidden, d_out]),
+                b2: Tensor::zeros(&[d_out]),
+            },
+        }
+    }
+
+    pub fn kind(&self) -> AdapterKind {
+        match self {
+            AdapterParams::LowRank { .. } => AdapterKind::LowRank,
+            AdapterParams::Linear { .. } => AdapterKind::Linear,
+            AdapterParams::Mlp { .. } => AdapterKind::Mlp,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors().iter().map(|t| t.len()).sum()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.n_params() * 4
+    }
+
+    pub fn tensors(&self) -> Vec<&Tensor> {
+        match self {
+            AdapterParams::LowRank { a, b } => vec![a, b],
+            AdapterParams::Linear { w } => vec![w],
+            AdapterParams::Mlp { w1, b1, w2, b2 } => vec![w1, b1, w2, b2],
+        }
+    }
+
+    pub fn tensors_mut(&mut self) -> Vec<&mut Tensor> {
+        match self {
+            AdapterParams::LowRank { a, b } => vec![a, b],
+            AdapterParams::Linear { w } => vec![w],
+            AdapterParams::Mlp { w1, b1, w2, b2 } => vec![w1, b1, w2, b2],
+        }
+    }
+
+    /// Canonical tensor names (match the artifact manifest suffixes).
+    pub fn tensor_names(&self) -> Vec<&'static str> {
+        match self {
+            AdapterParams::LowRank { .. } => vec!["A", "B"],
+            AdapterParams::Linear { .. } => vec!["W"],
+            AdapterParams::Mlp { .. } => vec!["W1", "b1", "W2", "b2"],
+        }
+    }
+
+    /// delta = scale * g(x); x: (n, d_in) -> (n, d_out).
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        match self {
+            AdapterParams::LowRank { a, b } => {
+                let xa = tensor::matmul(x, a);
+                tensor::scale(&tensor::matmul(&xa, b), SCALE)
+            }
+            AdapterParams::Linear { w } => tensor::scale(&tensor::matmul(x, w), SCALE),
+            AdapterParams::Mlp { w1, b1, w2, b2 } => {
+                let z = tensor::add_row(&tensor::matmul(x, w1), b1);
+                let h = tensor::relu(&z);
+                tensor::scale(&tensor::add_row(&tensor::matmul(&h, w2), b2), SCALE)
+            }
+        }
+    }
+
+    /// The Prop.2 merge delta: the (d_in, d_out) matrix W such that
+    /// g(x) = x @ W — only for linear-in-input adapters.
+    pub fn delta_matrix(&self) -> Result<Tensor> {
+        match self {
+            AdapterParams::LowRank { a, b } => Ok(tensor::matmul(a, b)),
+            AdapterParams::Linear { w } => Ok(w.clone()),
+            AdapterParams::Mlp { .. } => {
+                bail!("Prop. 2: MLP adapters are not linear in their input \
+                       and cannot be merged")
+            }
+        }
+    }
+
+    /// Surrogate-loss gradients from shipped adaptation data.
+    ///
+    /// The worker recomputes delta = g_w(x) itself (Algorithm 1 line 13),
+    /// the residual at w^t collapses to grad_hhat, and the gradients are
+    /// (Prop. 1) exactly the coupled parameter gradients. Mirrors
+    /// `python/compile/kernels/fit_step.py`.
+    pub fn fit_grads(&self, x: &Tensor, ghat: &Tensor) -> Vec<Tensor> {
+        match self {
+            AdapterParams::LowRank { a, b } => {
+                // da = s * x^T (ghat B^T); db = s * (xA)^T ghat
+                let gbt = tensor::matmul_nt(ghat, b);
+                let da = tensor::scale(&tensor::matmul_tn(x, &gbt), SCALE);
+                let xa = tensor::matmul(x, a);
+                let db = tensor::scale(&tensor::matmul_tn(&xa, ghat), SCALE);
+                vec![da, db]
+            }
+            AdapterParams::Linear { .. } => {
+                vec![tensor::scale(&tensor::matmul_tn(x, ghat), SCALE)]
+            }
+            AdapterParams::Mlp { w1, b1, w2, .. } => {
+                // z = xW1+b1; hmid = relu(z); res = ghat (scale=1)
+                let z = tensor::add_row(&tensor::matmul(x, w1), b1);
+                let hmid = tensor::relu(&z);
+                let dw2 = tensor::matmul_tn(&hmid, ghat);
+                let db2 = tensor::col_sum(ghat);
+                let mut dmid = tensor::matmul_nt(ghat, w2);
+                for (m, zv) in dmid.data_mut().iter_mut().zip(z.data()) {
+                    if *zv <= 0.0 {
+                        *m = 0.0;
+                    }
+                }
+                let dw1 = tensor::matmul_tn(x, &dmid);
+                let db1 = tensor::col_sum(&dmid);
+                vec![dw1, db1, dw2, db2]
+            }
+        }
+    }
+}
+
+/// One adapter site with its optimizer state (optimizer state lives on
+/// the worker device — the ZeRO-Offload-style saving of §3.2).
+#[derive(Clone, Debug)]
+pub struct SiteAdapter {
+    pub site: String,
+    pub params: AdapterParams,
+    pub opt: OptState,
+}
+
+impl SiteAdapter {
+    pub fn new(site: &str, params: AdapterParams, opt_cfg: &OptimizerCfg) -> Self {
+        let opt = OptState::new(opt_cfg, &params.tensors().iter().map(|t| t.len())
+                                               .collect::<Vec<_>>());
+        SiteAdapter { site: site.to_string(), params, opt }
+    }
+
+    /// One optimizer step from (already accumulated & scaled) gradients.
+    pub fn step(&mut self, grads: &[Tensor]) {
+        self.opt.apply(&mut self.params.tensors_mut(), grads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn init_outputs_zero() {
+        let mut r = rng();
+        for kind in [AdapterKind::LowRank, AdapterKind::Linear, AdapterKind::Mlp] {
+            let p = AdapterParams::init(kind, 16, 12, 8, 8, &mut r);
+            let x = Tensor::randn(&[5, 16], 1.0, &mut r);
+            assert_eq!(tensor::norm(&p.apply(&x)), 0.0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn lowrank_fit_grads_match_finite_difference() {
+        // d/dA of L(w) where the "task loss" is <g(x), ghat> has gradient
+        // equal to fit_grads by Prop.1 (res == ghat identically).
+        let mut r = rng();
+        let a = Tensor::randn(&[6, 3], 0.5, &mut r);
+        let b = Tensor::randn(&[3, 4], 0.5, &mut r);
+        let p = AdapterParams::LowRank { a: a.clone(), b: b.clone() };
+        let x = Tensor::randn(&[9, 6], 1.0, &mut r);
+        let ghat = Tensor::randn(&[9, 4], 1.0, &mut r);
+        let grads = p.fit_grads(&x, &ghat);
+
+        let loss = |aa: &Tensor, bb: &Tensor| -> f32 {
+            let d = tensor::matmul(&tensor::matmul(&x, aa), bb);
+            d.data().iter().zip(ghat.data()).map(|(u, v)| u * v).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 5, 17] {
+            let mut ap = a.clone();
+            ap.data_mut()[idx] += eps;
+            let mut am = a.clone();
+            am.data_mut()[idx] -= eps;
+            let fd = (loss(&ap, &b) - loss(&am, &b)) / (2.0 * eps);
+            let an = grads[0].data()[idx];
+            assert!((fd - an).abs() < 2e-2, "idx {idx}: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn mlp_fit_grads_shapes() {
+        let mut r = rng();
+        let p = AdapterParams::init(AdapterKind::Mlp, 10, 6, 8, 4, &mut r);
+        let x = Tensor::randn(&[7, 10], 1.0, &mut r);
+        let g = Tensor::randn(&[7, 6], 1.0, &mut r);
+        let grads = p.fit_grads(&x, &g);
+        assert_eq!(grads[0].shape(), &[10, 4]);
+        assert_eq!(grads[1].shape(), &[4]);
+        assert_eq!(grads[2].shape(), &[4, 6]);
+        assert_eq!(grads[3].shape(), &[6]);
+    }
+
+    #[test]
+    fn delta_matrix_matches_apply() {
+        let mut r = rng();
+        let mut p = AdapterParams::init(AdapterKind::LowRank, 8, 8, 4, 4, &mut r);
+        if let AdapterParams::LowRank { b, .. } = &mut p {
+            *b = Tensor::randn(&[4, 8], 0.3, &mut r);
+        }
+        let x = Tensor::randn(&[5, 8], 1.0, &mut r);
+        let via_delta = tensor::matmul(&x, &p.delta_matrix().unwrap());
+        assert!(p.apply(&x).allclose(&via_delta, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn mlp_merge_rejected() {
+        let mut r = rng();
+        let p = AdapterParams::init(AdapterKind::Mlp, 8, 8, 4, 4, &mut r);
+        assert!(p.delta_matrix().is_err());
+    }
+}

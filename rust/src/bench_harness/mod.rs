@@ -1,0 +1,106 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations + robust stats, with markdown emission. All
+//! `rust/benches/*.rs` binaries (one per paper table/figure) run on
+//! this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            format!("{}", self.iters),
+            format!("{:.4}", self.mean.as_secs_f64()),
+            format!("{:.4}", self.median.as_secs_f64()),
+            format!("{:.4}", self.p95.as_secs_f64()),
+        ]
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize,
+                mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters.max(1) as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: times[times.len() / 2],
+        p95: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        min: times[0],
+    }
+}
+
+/// Standard bench-result output: print + append to a results file.
+pub struct BenchReport {
+    pub title: String,
+    sections: Vec<String>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str) -> Self {
+        BenchReport { title: title.to_string(), sections: Vec::new() }
+    }
+
+    pub fn section(&mut self, heading: &str, body: String) {
+        self.sections.push(format!("### {heading}\n\n{body}"));
+    }
+
+    pub fn render(&self) -> String {
+        format!("## {}\n\n{}\n", self.title, self.sections.join("\n\n"))
+    }
+
+    /// Print to stdout and append to `results/<slug>.md`.
+    pub fn emit(&self, slug: &str) -> std::io::Result<()> {
+        let text = self.render();
+        println!("{text}");
+        std::fs::create_dir_all("results")?;
+        std::fs::write(format!("results/{slug}.md"), &text)?;
+        Ok(())
+    }
+
+    pub fn write_csv(&self, slug: &str, csv: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("results")?;
+        std::fs::write(format!("results/{slug}.csv"), csv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut r = BenchReport::new("T");
+        r.section("a", "body".into());
+        let t = r.render();
+        assert!(t.contains("## T") && t.contains("### a"));
+    }
+}

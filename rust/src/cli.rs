@@ -1,0 +1,116 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `cola <subcommand> [--key value]... [--flag]...`
+//! `--key=value` is also accepted. Unknown keys are rejected by the
+//! consumer (`TrainConfig::set`), so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options
+                        .insert(body.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --method cola-lowrank --steps=100 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("method"), Some("cola-lowrank"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("bench --quick --out x.md");
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get("out"), Some("x.md"));
+    }
+
+    #[test]
+    fn parse_or_types() {
+        let a = parse("x --n 5");
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 5);
+        assert_eq!(a.parse_or("m", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("x --lr -0.5");
+        // "-0.5" doesn't start with --, so it is taken as the value
+        assert_eq!(a.get("lr"), Some("-0.5"));
+    }
+}

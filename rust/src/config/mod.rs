@@ -1,0 +1,380 @@
+//! Config system: typed experiment configs + a TOML-subset file format +
+//! CLI overrides (clap/serde are unavailable offline — this is the
+//! framework's real config substrate, exercised by every bench/example).
+//!
+//! File format: `[section]` headers, `key = value` lines, `#` comments.
+//! Values: string (quoted or bare), int, float, bool. Flat keys override
+//! via dotted names, e.g. `train.interval = 4`.
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use toml::TomlDoc;
+
+/// Which fine-tuning method a run uses (paper Tables 2-4, 6-9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Method {
+    /// full fine-tuning (coupled autodiff over all weights)
+    Ft,
+    /// coupled LoRA baseline
+    Lora,
+    /// coupled IA3 baseline
+    Ia3,
+    /// coupled prompt tuning baseline
+    Prompt,
+    /// coupled p-tuning baseline
+    PTuning,
+    /// coupled prefix tuning baseline
+    Prefix,
+    /// ColA with the given auxiliary architecture
+    Cola(AdapterKind),
+}
+
+impl Method {
+    pub fn is_cola(&self) -> bool {
+        matches!(self, Method::Cola(_))
+    }
+
+    pub fn baseline_name(&self) -> &'static str {
+        match self {
+            Method::Ft => "ft",
+            Method::Lora => "lora",
+            Method::Ia3 => "ia3",
+            Method::Prompt => "prompt",
+            Method::PTuning => "ptuning",
+            Method::Prefix => "prefix",
+            Method::Cola(_) => panic!("cola is not a coupled baseline"),
+        }
+    }
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ft" => Method::Ft,
+            "lora" => Method::Lora,
+            "ia3" => Method::Ia3,
+            "prompt" => Method::Prompt,
+            "ptuning" => Method::PTuning,
+            "prefix" => Method::Prefix,
+            "cola-lowrank" => Method::Cola(AdapterKind::LowRank),
+            "cola-linear" => Method::Cola(AdapterKind::Linear),
+            "cola-mlp" => Method::Cola(AdapterKind::Mlp),
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Method::Cola(k) => write!(f, "cola-{k}"),
+            m => write!(f, "{}", m.baseline_name()),
+        }
+    }
+}
+
+/// Auxiliary-model architecture (paper §3.2: model-agnostic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AdapterKind {
+    LowRank,
+    Linear,
+    Mlp,
+}
+
+impl AdapterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdapterKind::LowRank => "lowrank",
+            AdapterKind::Linear => "linear",
+            AdapterKind::Mlp => "mlp",
+        }
+    }
+
+    /// Prop. 2: only linear-in-input adapters can be merged.
+    pub fn mergeable(&self) -> bool {
+        !matches!(self, AdapterKind::Mlp)
+    }
+}
+
+impl fmt::Display for AdapterKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl FromStr for AdapterKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lowrank" => AdapterKind::LowRank,
+            "linear" => AdapterKind::Linear,
+            "mlp" => AdapterKind::Mlp,
+            other => bail!("unknown adapter kind '{other}'"),
+        })
+    }
+}
+
+/// ColA training mode (Table 1): merged folds adapters into base weights
+/// during training; unmerged keeps them live on the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Merged,
+    Unmerged,
+}
+
+impl FromStr for Mode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "merged" => Mode::Merged,
+            "unmerged" => Mode::Unmerged,
+            other => bail!("unknown mode '{other}'"),
+        })
+    }
+}
+
+/// Where the offloaded gradient computation runs (Tables 10-18: CPU vs
+/// secondary GPU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OffloadTarget {
+    /// native Rust math on the worker thread (the paper's CPU device)
+    NativeCpu,
+    /// PJRT executable on the worker thread (the paper's low-end GPU)
+    PjrtDevice,
+}
+
+impl FromStr for OffloadTarget {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cpu" | "native" => OffloadTarget::NativeCpu,
+            "gpu" | "pjrt" => OffloadTarget::PjrtDevice,
+            other => bail!("unknown offload target '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    AdamW,
+}
+
+impl FromStr for Optimizer {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sgd" => Optimizer::Sgd,
+            "adamw" => Optimizer::AdamW,
+            other => bail!("unknown optimizer '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// causal language modeling (Dolly-substitute instruction mix)
+    Clm,
+    /// sequence classification (GLUE substitute)
+    SeqCls,
+    /// sequence-to-sequence via prefix-LM masking (BART substitute)
+    S2s,
+}
+
+impl FromStr for Task {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "clm" => Task::Clm,
+            "seqcls" => Task::SeqCls,
+            "s2s" => Task::S2s,
+            other => bail!("unknown task '{other}'"),
+        })
+    }
+}
+
+/// Full training-run configuration (defaults follow paper Table 5,
+/// scaled to this testbed).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub task: Task,
+    pub size: String,
+    pub method: Method,
+    pub mode: Mode,
+    pub offload: OffloadTarget,
+    pub optimizer: Optimizer,
+    pub users: usize,
+    pub steps: usize,
+    pub batch: usize,
+    /// adaptation interval I (Algorithm 1)
+    pub interval: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub workers: usize,
+    /// dataset/task variant id (which synthetic task)
+    pub dataset: String,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub artifacts_dir: String,
+    /// overlap worker fits with the next server steps (§3.2: "run two
+    /// decoupled gradient computations in parallel"). Updates apply one
+    /// interval late (bounded staleness).
+    pub async_offload: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            task: Task::Clm,
+            size: "tiny".into(),
+            method: Method::Cola(AdapterKind::LowRank),
+            mode: Mode::Unmerged,
+            offload: OffloadTarget::NativeCpu,
+            optimizer: Optimizer::AdamW,
+            users: 1,
+            steps: 200,
+            batch: 8,
+            interval: 1,
+            lr: 3e-4,          // Table 5: PEFT/ColA lr
+            weight_decay: 5e-4, // Table 5
+            seed: 0,
+            workers: 2,
+            dataset: "default".into(),
+            eval_every: 50,
+            eval_batches: 8,
+            artifacts_dir: "artifacts".into(),
+            async_offload: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Paper Table 5: FT uses a smaller lr.
+    pub fn preset_for_method(mut self, m: Method) -> Self {
+        self.method = m;
+        if m == Method::Ft {
+            self.lr = 5e-5; // scaled from 5e-6; our models are untied/tiny
+        }
+        self
+    }
+
+    /// Apply `key=value` overrides (dotted keys from CLI or TOML).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "task" => self.task = val.parse()?,
+            "size" => self.size = val.into(),
+            "method" => self.method = val.parse()?,
+            "mode" => self.mode = val.parse()?,
+            "offload" => self.offload = val.parse()?,
+            "optimizer" => self.optimizer = val.parse()?,
+            "users" => self.users = val.parse().context("users")?,
+            "steps" => self.steps = val.parse().context("steps")?,
+            "batch" => self.batch = val.parse().context("batch")?,
+            "interval" => self.interval = val.parse().context("interval")?,
+            "lr" => self.lr = val.parse().context("lr")?,
+            "weight_decay" => self.weight_decay = val.parse().context("weight_decay")?,
+            "seed" => self.seed = val.parse().context("seed")?,
+            "workers" => self.workers = val.parse().context("workers")?,
+            "dataset" => self.dataset = val.into(),
+            "eval_every" => self.eval_every = val.parse().context("eval_every")?,
+            "eval_batches" => self.eval_batches = val.parse().context("eval_batches")?,
+            "artifacts_dir" => self.artifacts_dir = val.into(),
+            "async_offload" => self.async_offload = val.parse().context("async_offload")?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = TrainConfig::default();
+        for (k, v) in doc.flat() {
+            let key = k.strip_prefix("train.").unwrap_or(&k);
+            cfg.set(key, &v)
+                .with_context(|| format!("config key {k}"))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.interval == 0 {
+            bail!("interval must be >= 1");
+        }
+        if self.users == 0 {
+            bail!("users must be >= 1");
+        }
+        if self.mode == Mode::Merged {
+            if let Method::Cola(k) = self.method {
+                if !k.mergeable() {
+                    bail!("Prop. 2: adapter kind '{k}' is not linear in its \
+                           input and cannot be merged — use mode=unmerged");
+                }
+            } else {
+                bail!("mode=merged only applies to ColA methods");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Flat override map used by CLI parsing.
+pub type Overrides = BTreeMap<String, String>;
+
+pub fn apply_overrides(cfg: &mut TrainConfig, ov: &Overrides) -> Result<()> {
+    for (k, v) in ov {
+        cfg.set(k, v).map_err(|e| anyhow!("--{k}: {e}"))?;
+    }
+    cfg.validate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_methods() {
+        assert_eq!("cola-mlp".parse::<Method>().unwrap(),
+                   Method::Cola(AdapterKind::Mlp));
+        assert_eq!("lora".parse::<Method>().unwrap(), Method::Lora);
+        assert!("bogus".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn merged_mlp_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.method = Method::Cola(AdapterKind::Mlp);
+        cfg.mode = Mode::Merged;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn merged_baseline_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.method = Method::Lora;
+        cfg.mode = Mode::Merged;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn overrides_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("interval", "4").unwrap();
+        cfg.set("method", "cola-linear").unwrap();
+        cfg.set("mode", "merged").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.interval, 4);
+    }
+
+    #[test]
+    fn ft_preset_lowers_lr() {
+        let cfg = TrainConfig::default().preset_for_method(Method::Ft);
+        assert!(cfg.lr < 1e-4);
+    }
+}

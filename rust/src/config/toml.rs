@@ -1,0 +1,120 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supports: `[section]` headers, `key = value`, `#` comments, quoted
+//! and bare scalar values. Nested tables flatten to dotted keys
+//! (`[train]` + `interval = 4` -> `train.interval`). This covers every
+//! config file the repo ships; anything fancier is a parse error, not a
+//! silent misread.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String)>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut section = String::new();
+        let mut entries = Vec::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected 'key = value'", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            let val = unquote(line[eq + 1..].trim());
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.push((full, val));
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn load(path: &str) -> Result<TomlDoc> {
+        let src = std::fs::read_to_string(path)?;
+        TomlDoc::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn flat(&self) -> Vec<(String, String)> {
+        self.entries.clone()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse(
+            "# experiment\nsteps = 100\n[train]\nmethod = \"cola-lowrank\"\ninterval = 4 # I\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("steps"), Some("100"));
+        assert_eq!(doc.get("train.method"), Some("cola-lowrank"));
+        assert_eq!(doc.get("train.interval"), Some("4"));
+    }
+
+    #[test]
+    fn later_entries_win() {
+        let doc = TomlDoc::parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(doc.get("a"), Some("2"));
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+    }
+}

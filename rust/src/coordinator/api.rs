@@ -1,0 +1,99 @@
+//! FTaaS service facade — the programmatic front end of Figure 1.
+//!
+//! Users register fine-tuning jobs (their data category + adapter
+//! architecture preference); the service runs collaborative rounds on
+//! the shared base model (merged mode: server memory independent of the
+//! number of users) and users can fetch their trained adapters or
+//! per-category quality at any time.
+
+use anyhow::{bail, Result};
+
+use super::server::Trainer;
+use crate::adapters::AdapterParams;
+use crate::config::{AdapterKind, Method, Mode, TrainConfig};
+
+/// A registered FTaaS user.
+#[derive(Clone, Debug)]
+pub struct UserJob {
+    pub user: usize,
+    pub category: usize,
+    pub kind: AdapterKind,
+}
+
+/// Service status snapshot.
+#[derive(Clone, Debug)]
+pub struct ServiceStatus {
+    pub users: usize,
+    pub rounds_completed: u64,
+    pub last_train_loss: Option<f64>,
+    pub server_resident_bytes: usize,
+    pub worker_state_bytes: usize,
+}
+
+pub struct FtaasService {
+    trainer: Trainer,
+    jobs: Vec<UserJob>,
+    rounds: u64,
+    last_loss: Option<f64>,
+}
+
+impl FtaasService {
+    /// Start a service for `users` collaborators. All users share the
+    /// merged base model; each trains on their own data category
+    /// (Table 4 'Collaboration').
+    pub fn start(mut cfg: TrainConfig, kind: AdapterKind) -> Result<FtaasService> {
+        if cfg.users == 0 {
+            bail!("need at least one user");
+        }
+        cfg.method = Method::Cola(kind);
+        cfg.mode = Mode::Merged;
+        cfg.dataset = "per-user".into();
+        cfg.validate()?;
+        let users = cfg.users;
+        let trainer = Trainer::new(cfg)?;
+        let jobs = (0..users)
+            .map(|u| UserJob { user: u, category: u % 8, kind })
+            .collect();
+        Ok(FtaasService { trainer, jobs, rounds: 0, last_loss: None })
+    }
+
+    pub fn jobs(&self) -> &[UserJob] {
+        &self.jobs
+    }
+
+    /// Run `n` collaborative training rounds (each = one Algorithm-1
+    /// iteration over all users' data).
+    pub fn run_rounds(&mut self, n: u64) -> Result<()> {
+        for _ in 0..n {
+            let (loss, _) = self.trainer.step(self.rounds)?;
+            self.last_loss = Some(loss as f64);
+            self.rounds += 1;
+        }
+        Ok(())
+    }
+
+    /// Per-category quality of the current shared model.
+    pub fn category_score(&mut self, category: usize) -> Result<f64> {
+        let (_, acc) = self.trainer.eval_category(category)?;
+        Ok(acc.map(|a| a * 100.0).unwrap_or(f64::NAN))
+    }
+
+    /// A user downloads their trained adapter (Figure 1's local path).
+    pub fn fetch_adapter(&self, user: usize, site: &str) -> Result<AdapterParams> {
+        self.trainer.adapter_snapshot(user, site)
+    }
+
+    pub fn status(&self) -> Result<ServiceStatus> {
+        Ok(ServiceStatus {
+            users: self.jobs.len(),
+            rounds_completed: self.rounds,
+            last_train_loss: self.last_loss,
+            server_resident_bytes: self.trainer.rt.server.resident_bytes()?,
+            worker_state_bytes: 0,
+        })
+    }
+
+    pub fn trainer_mut(&mut self) -> &mut Trainer {
+        &mut self.trainer
+    }
+}

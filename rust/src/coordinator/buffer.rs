@@ -1,0 +1,136 @@
+//! Adaptation-data buffers (Algorithm 1 lines 10-16).
+//!
+//! The server pushes one `(x_m, grad_hhat_m)` pair per site per step;
+//! every `I` steps (the adaptation interval) the buffer drains into one
+//! concatenated `FitJob` whose gradients average over the effective
+//! batch B*I. The invariant that concatenated fitting equals summed
+//! per-batch gradients is tested at the JAX level
+//! (python/tests/test_prop1.py::test_interval_buffering_sums_per_batch_grads)
+//! and again here against the native path.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// Buffered rows for one (user, site).
+#[derive(Clone, Debug, Default)]
+pub struct SiteBuffer {
+    xs: Vec<Tensor>,
+    ghats: Vec<Tensor>,
+}
+
+impl SiteBuffer {
+    pub fn push(&mut self, x: Tensor, ghat: Tensor) {
+        assert_eq!(x.dims2().0, ghat.dims2().0, "row mismatch");
+        self.xs.push(x);
+        self.ghats.push(ghat);
+    }
+
+    pub fn batches(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.xs.iter().map(Tensor::bytes).sum::<usize>()
+            + self.ghats.iter().map(Tensor::bytes).sum::<usize>()
+    }
+
+    /// Drain into (x_cat, ghat_cat, grad_scale).
+    pub fn drain(&mut self) -> Option<(Tensor, Tensor, f32)> {
+        if self.xs.is_empty() {
+            return None;
+        }
+        let n = self.xs.len() as f32;
+        let x = Tensor::cat_rows(&self.xs.iter().collect::<Vec<_>>());
+        let g = Tensor::cat_rows(&self.ghats.iter().collect::<Vec<_>>());
+        self.xs.clear();
+        self.ghats.clear();
+        Some((x, g, 1.0 / n))
+    }
+}
+
+/// All buffers, keyed by (user, site).
+#[derive(Debug, Default)]
+pub struct AdaptationBuffers {
+    map: BTreeMap<(usize, String), SiteBuffer>,
+}
+
+impl AdaptationBuffers {
+    pub fn push(&mut self, user: usize, site: &str, x: Tensor, ghat: Tensor) {
+        self.map
+            .entry((user, site.to_string()))
+            .or_default()
+            .push(x, ghat);
+    }
+
+    /// Total buffered bytes (the worker_buffer line of the accountant).
+    pub fn bytes(&self) -> usize {
+        self.map.values().map(SiteBuffer::bytes).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.values().all(|b| b.batches() == 0)
+    }
+
+    /// Drain every non-empty buffer into (user, site, x, ghat, scale).
+    pub fn drain_all(&mut self) -> Vec<(usize, String, Tensor, Tensor, f32)> {
+        let mut out = Vec::new();
+        for ((user, site), buf) in self.map.iter_mut() {
+            if let Some((x, g, scale)) = buf.drain() {
+                out.push((*user, site.clone(), x, g, scale));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(rows: usize, val: f32) -> Tensor {
+        Tensor::from_fn(&[rows, 3], |_| val)
+    }
+
+    #[test]
+    fn push_drain_concatenates() {
+        let mut b = SiteBuffer::default();
+        b.push(t(2, 1.0), t(2, 10.0));
+        b.push(t(3, 2.0), t(3, 20.0));
+        let (x, g, scale) = b.drain().unwrap();
+        assert_eq!(x.dims2(), (5, 3));
+        assert_eq!(g.dims2(), (5, 3));
+        assert_eq!(scale, 0.5);
+        assert_eq!(x.data()[0], 1.0);
+        assert_eq!(x.data()[14], 2.0);
+        assert!(b.drain().is_none());
+    }
+
+    #[test]
+    fn bytes_track_contents() {
+        let mut bufs = AdaptationBuffers::default();
+        assert_eq!(bufs.bytes(), 0);
+        bufs.push(0, "l0.q", t(4, 0.0), t(4, 0.0));
+        assert_eq!(bufs.bytes(), 2 * 4 * 3 * 4);
+        bufs.drain_all();
+        assert_eq!(bufs.bytes(), 0);
+        assert!(bufs.is_empty());
+    }
+
+    #[test]
+    fn drain_all_keyed_per_user_site() {
+        let mut bufs = AdaptationBuffers::default();
+        bufs.push(0, "a", t(1, 0.0), t(1, 0.0));
+        bufs.push(1, "a", t(1, 0.0), t(1, 0.0));
+        bufs.push(0, "b", t(1, 0.0), t(1, 0.0));
+        let jobs = bufs.drain_all();
+        assert_eq!(jobs.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_mismatch_panics() {
+        let mut b = SiteBuffer::default();
+        b.push(t(2, 0.0), t(3, 0.0));
+    }
+}

@@ -1,0 +1,328 @@
+//! Task drivers: bind a (task, model size, dataset) triple to concrete
+//! artifacts, adapter sites, and batch generators — the composable model
+//! definition of the framework. The `Trainer` is generic over this.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{AdapterKind, Method, Task, TrainConfig};
+use crate::data::images::{ImageSet, ImgTaskGen, N_CLASSES as IMG_CLASSES};
+use crate::data::lm::{LmTaskGen, CATEGORIES, S2S_TASKS};
+use crate::data::seqcls::{ClsTaskGen, N_CLASSES as CLS_CLASSES, TASKS as CLS_TASKS};
+use crate::data::Split;
+use crate::runtime::{Manifest, Value};
+
+/// One adapter site as seen by the coordinator.
+#[derive(Clone, Debug)]
+pub struct SiteSpec {
+    /// site id, e.g. "l0.q", "head", "conv1"
+    pub site: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// artifact output carrying the hidden input x_m
+    pub x_output: String,
+    /// artifact output carrying grad_hhat_m
+    pub g_output: String,
+    /// merged-mode base weight name this site folds into
+    pub weight_name: String,
+}
+
+/// LM data variants sharing the decoupled LM graphs.
+#[derive(Clone, Debug)]
+pub enum LmVariant {
+    /// instruction mix; None = all categories mixed (the 'Joint' setup)
+    Instruct(Option<usize>),
+    /// collaboration: user k trains on category k % 8 (Table 4)
+    PerUserCategory,
+    /// one of the six S2S transforms
+    S2s(usize),
+    /// pretraining corpus (full-sequence loss)
+    Corpus,
+}
+
+#[derive(Clone, Debug)]
+pub enum TaskData {
+    Lm { generator: LmTaskGen, variant: LmVariant },
+    SeqCls { generator: ClsTaskGen, task: usize },
+    Ic { generator: ImgTaskGen, model: String },
+}
+
+/// Resolved driver for one run.
+#[derive(Clone, Debug)]
+pub struct Driver {
+    pub size: String,
+    pub task: Task,
+    pub data: TaskData,
+    pub sites: Vec<SiteSpec>,
+    /// base-weight names in artifact input order (empty for IC adapters-
+    /// only graphs)
+    pub weight_names: Vec<String>,
+    pub batch: usize,
+    pub seq: usize,
+    pub has_acc: bool,
+}
+
+impl Driver {
+    pub fn new(cfg: &TrainConfig, manifest: &Manifest) -> Result<Driver> {
+        match cfg.task {
+            Task::Clm | Task::S2s => Self::new_lm(cfg, manifest),
+            Task::SeqCls => Self::new_seqcls(cfg, manifest),
+        }
+    }
+
+    fn lm_weight_names(layers: usize) -> Vec<String> {
+        let mut names = vec!["embed".to_string(), "pos".to_string()];
+        for i in 0..layers {
+            for suffix in ["ln1g", "ln1b", "wq", "wk", "wv", "wo",
+                           "ln2g", "ln2b", "w1", "b1", "w2", "b2"] {
+                names.push(format!("l{i}.{suffix}"));
+            }
+        }
+        names.push("lnfg".into());
+        names.push("lnfb".into());
+        names
+    }
+
+    fn lm_sites(layers: usize, d: usize) -> Vec<SiteSpec> {
+        let mut sites = Vec::new();
+        for i in 0..layers {
+            for proj in ["q", "v"] {
+                sites.push(SiteSpec {
+                    site: format!("l{i}.{proj}"),
+                    d_in: d,
+                    d_out: d,
+                    x_output: format!("l{i}.x"),
+                    g_output: format!("l{i}.g{proj}"),
+                    weight_name: format!("l{i}.w{proj}"),
+                });
+            }
+        }
+        sites
+    }
+
+    fn new_lm(cfg: &TrainConfig, manifest: &Manifest) -> Result<Driver> {
+        let sz = manifest.size(&cfg.size)?;
+        let generator = LmTaskGen::new(sz.vocab, sz.seq, cfg.seed);
+        let variant = match (&cfg.task, cfg.dataset.as_str()) {
+            (Task::S2s, name) => {
+                let idx = S2S_TASKS.iter().position(|t| *t == name).ok_or_else(
+                    || anyhow!("unknown s2s dataset '{name}' (have {S2S_TASKS:?})"))?;
+                LmVariant::S2s(idx)
+            }
+            (_, "corpus") => LmVariant::Corpus,
+            (_, "per-user") => LmVariant::PerUserCategory,
+            (_, "default") | (_, "dolly") => LmVariant::Instruct(None),
+            (_, name) => {
+                let idx = CATEGORIES.iter().position(|c| *c == name).ok_or_else(
+                    || anyhow!("unknown clm category '{name}' (have {CATEGORIES:?})"))?;
+                LmVariant::Instruct(Some(idx))
+            }
+        };
+        Ok(Driver {
+            size: cfg.size.clone(),
+            task: cfg.task,
+            data: TaskData::Lm { generator, variant },
+            sites: Self::lm_sites(sz.layers, sz.d),
+            weight_names: Self::lm_weight_names(sz.layers),
+            batch: cfg.batch,
+            seq: sz.seq,
+            has_acc: true,
+        })
+    }
+
+    fn new_seqcls(cfg: &TrainConfig, manifest: &Manifest) -> Result<Driver> {
+        let sz = manifest.size(&cfg.size)?;
+        let task = CLS_TASKS
+            .iter()
+            .position(|t| *t == cfg.dataset)
+            .or_else(|| if cfg.dataset == "default" { Some(0) } else { None })
+            .ok_or_else(|| anyhow!("unknown seqcls dataset '{}'", cfg.dataset))?;
+        let mut sites = Self::lm_sites(sz.layers, sz.d);
+        sites.push(SiteSpec {
+            site: "head".into(),
+            d_in: sz.d,
+            d_out: CLS_CLASSES,
+            x_output: "head.x".into(),
+            g_output: "head.g".into(),
+            weight_name: "head.W".into(),
+        });
+        Ok(Driver {
+            size: cfg.size.clone(),
+            task: cfg.task,
+            data: TaskData::SeqCls {
+                generator: ClsTaskGen::new(sz.vocab, sz.seq, cfg.seed),
+                task,
+            },
+            sites,
+            weight_names: Self::lm_weight_names(sz.layers),
+            batch: cfg.batch,
+            seq: sz.seq,
+            has_acc: true,
+        })
+    }
+
+    /// IC driver (from-scratch study). `model` in {linear, mlp, cnn};
+    /// `set` in {smnist, scifar}. Not reachable from `Task` — built
+    /// directly by the table9 bench and the from-scratch example.
+    pub fn new_ic(model: &str, set: &str, batch: usize, seed: u64) -> Result<Driver> {
+        let set = ImageSet::parse(set).ok_or_else(|| anyhow!("unknown image set {set}"))?;
+        let dims: Vec<(&str, usize, usize)> = match model {
+            "linear" => vec![("fc", 28 * 28, IMG_CLASSES)],
+            "mlp" => vec![("fc1", 28 * 28, 128), ("fc2", 128, IMG_CLASSES)],
+            "cnn" => vec![("conv1", 9, 16), ("conv2", 144, 32),
+                          ("fc", 32 * 7 * 7, IMG_CLASSES)],
+            other => bail!("unknown ic model '{other}'"),
+        };
+        let sites = dims
+            .iter()
+            .map(|(s, din, dout)| SiteSpec {
+                site: s.to_string(),
+                d_in: *din,
+                d_out: *dout,
+                x_output: format!("{s}.x"),
+                g_output: format!("{s}.g"),
+                weight_name: format!("{s}.W"),
+            })
+            .collect();
+        Ok(Driver {
+            size: model.to_string(),
+            task: Task::Clm, // unused for IC
+            data: TaskData::Ic {
+                generator: ImgTaskGen::new(set, seed),
+                model: model.to_string(),
+            },
+            sites,
+            weight_names: vec![],
+            batch,
+            seq: 1,
+            has_acc: true,
+        })
+    }
+
+    pub fn is_ic(&self) -> bool {
+        matches!(self.data, TaskData::Ic { .. })
+    }
+
+    /// Artifact for the decoupled (ColA) step.
+    pub fn decoupled_artifact(&self, kind: Option<AdapterKind>, batch: usize) -> String {
+        let k = kind.map(|k| k.name()).unwrap_or("none");
+        match &self.data {
+            TaskData::Lm { .. } => {
+                if batch == 8 {
+                    format!("lm_fwdbwd_{}_{k}", self.size)
+                } else {
+                    format!("lm_fwdbwd_{}_{k}_b{batch}", self.size)
+                }
+            }
+            TaskData::SeqCls { .. } => format!("seqcls_fwdbwd_{}_{k}", self.size),
+            TaskData::Ic { model, .. } => {
+                if kind.is_none() {
+                    format!("ic_{model}_fwdbwd_merged")
+                } else {
+                    format!("ic_{model}_fwdbwd_{k}")
+                }
+            }
+        }
+    }
+
+    /// Artifact for a coupled baseline step.
+    pub fn coupled_artifact(&self, method: Method, batch: usize) -> String {
+        let m = method.baseline_name();
+        match &self.data {
+            TaskData::Lm { .. } => {
+                if batch == 8 {
+                    format!("coupled_clm_{}_{m}", self.size)
+                } else {
+                    format!("coupled_clm_{}_{m}_b{batch}", self.size)
+                }
+            }
+            TaskData::SeqCls { .. } => format!("coupled_seqcls_{}_{m}", self.size),
+            TaskData::Ic { model, .. } => format!("ic_{model}_coupled_{m}"),
+        }
+    }
+
+    /// Batch inputs by artifact input name. `user_batch` is this user's
+    /// portion of the global batch.
+    pub fn data_inputs(&self, user_batch: usize, user: usize, split: Split,
+                       step: u64) -> Vec<(String, Value)> {
+        // fold the user into the stream so users see disjoint data
+        let ustep = step.wrapping_mul(64).wrapping_add(user as u64);
+        match &self.data {
+            TaskData::Lm { generator, variant } => {
+                let b = match variant {
+                    LmVariant::Instruct(cat) => {
+                        generator.instruct_batch(user_batch, *cat, split, ustep)
+                    }
+                    LmVariant::PerUserCategory => {
+                        generator.instruct_batch(user_batch, Some(user % 8), split, ustep)
+                    }
+                    LmVariant::S2s(t) => generator.s2s_batch(user_batch, *t, split, ustep),
+                    LmVariant::Corpus => generator.corpus_batch(user_batch, split, ustep),
+                };
+                vec![
+                    ("tokens".into(), b.tokens.into()),
+                    ("targets".into(), b.targets.into()),
+                    ("mask".into(), b.mask.into()),
+                ]
+            }
+            TaskData::SeqCls { generator, task } => {
+                let b = generator.batch(user_batch, *task, split, ustep);
+                vec![
+                    ("tokens".into(), b.tokens.into()),
+                    ("labels".into(), b.labels.into()),
+                    ("mask".into(), b.mask.into()),
+                ]
+            }
+            TaskData::Ic { generator, .. } => {
+                let b = generator.batch(user_batch, split, ustep);
+                vec![
+                    ("images".into(), b.images.into()),
+                    ("labels".into(), b.labels.into()),
+                ]
+            }
+        }
+    }
+
+    /// The init group name for base weights. IC models ship a random
+    /// frozen base (`{site}.Wbase`), the learning-from-scratch setup.
+    pub fn weights_init_group(&self) -> Option<String> {
+        match &self.data {
+            TaskData::Ic { model, .. } => Some(format!("ic_base_{model}")),
+            _ => Some(format!("lm_{}", self.size)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_sites_shape() {
+        let sites = Driver::lm_sites(2, 128);
+        assert_eq!(sites.len(), 4);
+        assert_eq!(sites[0].site, "l0.q");
+        assert_eq!(sites[0].weight_name, "l0.wq");
+        assert_eq!(sites[3].g_output, "l1.gv");
+    }
+
+    #[test]
+    fn ic_driver_sites() {
+        let d = Driver::new_ic("cnn", "smnist", 32, 0).unwrap();
+        assert_eq!(d.sites.len(), 3);
+        assert_eq!(d.sites[1].d_in, 144);
+        assert_eq!(d.decoupled_artifact(Some(AdapterKind::LowRank), 32),
+                   "ic_cnn_fwdbwd_lowrank");
+        assert_eq!(d.decoupled_artifact(None, 32), "ic_cnn_fwdbwd_merged");
+    }
+
+    #[test]
+    fn unknown_ic_model_rejected() {
+        assert!(Driver::new_ic("resnet", "smnist", 8, 0).is_err());
+    }
+
+    #[test]
+    fn weight_names_count() {
+        // 2 + 12*L + 2
+        assert_eq!(Driver::lm_weight_names(4).len(), 2 + 48 + 2);
+    }
+}

@@ -1,0 +1,19 @@
+//! The ColA coordinator — the paper's system contribution (L3).
+//!
+//! - `driver`  — binds (task, size, dataset) to artifacts/sites/batches
+//! - `buffer`  — adaptation-interval buffering (Algorithm 1 lines 10-16)
+//! - `offload` — Gradient Offloading worker pool ("low-cost devices")
+//! - `server`  — the training loop (Algorithm 1) + coupled baselines
+//! - `api`     — FTaaS service facade (Figure 1)
+
+pub mod api;
+pub mod buffer;
+pub mod driver;
+pub mod offload;
+pub mod server;
+
+pub use api::FtaasService;
+pub use buffer::AdaptationBuffers;
+pub use driver::{Driver, LmVariant, SiteSpec, TaskData};
+pub use offload::{FitJob, FitResult, TransferModel, Worker, WorkerPool};
+pub use server::{RunReport, Trainer};

@@ -1,0 +1,375 @@
+//! Gradient Offloading — the worker ("low-cost device") pool.
+//!
+//! Each worker is a thread that *owns* the adapters (and optimizer
+//! state) of the users assigned to it — the server never holds adapter
+//! gradients or moments (Table 1). A worker serves `FitJob`s: buffered
+//! adaptation data `(x, grad_hhat)` comes in, the surrogate gradients
+//! are computed (natively, or on the worker's own PJRT device = the
+//! paper's "offload to GPU" arm), the optimizer steps, and the reply
+//! carries either the new adapter tensors (unmerged) or the merged-mode
+//! delta difference.
+//!
+//! An optional `TransferModel` injects link latency/bandwidth so the
+//! CPU-vs-GPU offload gap of Tables 10-18 can be swept on one testbed.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::adapters::{AdapterParams, SiteAdapter};
+use crate::config::OffloadTarget;
+use crate::merge;
+use crate::runtime::{Device, Input, Manifest, OutputPlan, Value};
+use crate::tensor::{self, Tensor};
+
+/// Simulated interconnect: delay = latency + bytes / bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferModel {
+    pub latency: Duration,
+    pub bytes_per_sec: f64,
+}
+
+impl TransferModel {
+    /// Calibrated stand-ins for the paper's links (A6000 testbed):
+    /// pcie-gpu ~ 12 GB/s, cpu link ~ 2 GB/s with higher latency.
+    pub fn gpu_link() -> Self {
+        TransferModel { latency: Duration::from_micros(30), bytes_per_sec: 12e9 }
+    }
+
+    pub fn cpu_link() -> Self {
+        TransferModel { latency: Duration::from_micros(120), bytes_per_sec: 2e9 }
+    }
+
+    pub fn delay_for(&self, bytes: usize) -> Duration {
+        self.latency + Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec)
+    }
+
+    pub fn apply(&self, bytes: usize) {
+        std::thread::sleep(self.delay_for(bytes));
+    }
+}
+
+/// A buffered-interval update job for one (user, site).
+pub struct FitJob {
+    pub user: usize,
+    pub site: String,
+    /// concatenated hidden inputs over the interval (n, d_in)
+    pub x: Tensor,
+    /// concatenated grad_hhat over the interval (n, d_out)
+    pub ghat: Tensor,
+    /// 1 / number-of-batches in the buffer (grad averaging)
+    pub grad_scale: f32,
+    /// if true, reply carries the merged-mode delta difference
+    pub merged: bool,
+}
+
+/// Worker reply for one job.
+pub struct FitResult {
+    pub user: usize,
+    pub site: String,
+    /// unmerged mode: fresh copies of the adapter tensors (to refresh
+    /// the server-resident copies)
+    pub new_params: Option<Vec<Tensor>>,
+    /// merged mode: s * (D_new - D_old) to add to the merged weight
+    pub delta_diff: Option<Tensor>,
+    /// pure compute time on the worker
+    pub compute: Duration,
+    /// simulated/measured transfer time for this job's payload
+    pub transfer: Duration,
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+}
+
+enum WorkerCmd {
+    Register { user: usize, site: String, adapter: SiteAdapter },
+    Fit(FitJob, Sender<Result<FitResult>>),
+    /// fetch a snapshot of an adapter's parameters
+    Snapshot { user: usize, site: String, reply: Sender<Result<AdapterParams>> },
+    /// bytes of adapter + optimizer state held by this worker
+    StateBytes(Sender<usize>),
+    Shutdown,
+}
+
+/// Handle to one worker thread.
+#[derive(Clone)]
+pub struct Worker {
+    tx: Sender<WorkerCmd>,
+    pub id: usize,
+}
+
+impl Worker {
+    pub fn register(&self, user: usize, site: &str, adapter: SiteAdapter) -> Result<()> {
+        self.tx
+            .send(WorkerCmd::Register { user, site: site.to_string(), adapter })
+            .map_err(|_| anyhow!("worker {} gone", self.id))
+    }
+
+    pub fn fit(&self, job: FitJob) -> Result<Receiver<Result<FitResult>>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::Fit(job, tx))
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        Ok(rx)
+    }
+
+    pub fn snapshot(&self, user: usize, site: &str) -> Result<AdapterParams> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::Snapshot { user, site: site.to_string(), reply: tx })
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        rx.recv()?
+    }
+
+    pub fn state_bytes(&self) -> Result<usize> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::StateBytes(tx))
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(WorkerCmd::Shutdown);
+    }
+}
+
+/// The pool: users are sharded across workers (user k -> worker k % N),
+/// mirroring "multiple low-cost devices ... in parallel" (§3.2).
+pub struct WorkerPool {
+    workers: Vec<Worker>,
+}
+
+impl WorkerPool {
+    pub fn spawn(
+        n: usize,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+    ) -> Result<WorkerPool> {
+        let mut workers = Vec::with_capacity(n);
+        for id in 0..n {
+            let (tx, rx) = channel();
+            let m = manifest.clone();
+            std::thread::Builder::new()
+                .name(format!("worker-{id}"))
+                .spawn(move || worker_main(id, rx, target, m, transfer))?;
+            workers.push(Worker { tx, id });
+        }
+        Ok(WorkerPool { workers })
+    }
+
+    pub fn for_user(&self, user: usize) -> &Worker {
+        &self.workers[user % self.workers.len()]
+    }
+
+    pub fn workers(&self) -> &[Worker] {
+        &self.workers
+    }
+
+    pub fn total_state_bytes(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|w| w.state_bytes().unwrap_or(0))
+            .sum()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            w.shutdown();
+        }
+    }
+}
+
+struct WorkerState {
+    adapters: BTreeMap<(usize, String), SiteAdapter>,
+    target: OffloadTarget,
+    pjrt: Option<Device>,
+    manifest: Arc<Manifest>,
+    transfer: Option<TransferModel>,
+}
+
+fn worker_main(
+    id: usize,
+    rx: Receiver<WorkerCmd>,
+    target: OffloadTarget,
+    manifest: Arc<Manifest>,
+    transfer: Option<TransferModel>,
+) {
+    // the PJRT "low-end GPU" device is spawned lazily on first use
+    let mut st = WorkerState {
+        adapters: BTreeMap::new(),
+        target,
+        pjrt: None,
+        manifest,
+        transfer,
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            WorkerCmd::Register { user, site, adapter } => {
+                st.adapters.insert((user, site), adapter);
+            }
+            WorkerCmd::Fit(job, reply) => {
+                let _ = reply.send(run_fit(&mut st, id, job));
+            }
+            WorkerCmd::Snapshot { user, site, reply } => {
+                let r = st
+                    .adapters
+                    .get(&(user, site.clone()))
+                    .map(|a| a.params.clone())
+                    .ok_or_else(|| anyhow!("worker {id}: no adapter ({user}, {site})"));
+                let _ = reply.send(r);
+            }
+            WorkerCmd::StateBytes(reply) => {
+                let bytes = st
+                    .adapters
+                    .values()
+                    .map(|a| a.params.bytes() + a.opt.bytes())
+                    .sum();
+                let _ = reply.send(bytes);
+            }
+            WorkerCmd::Shutdown => break,
+        }
+    }
+}
+
+fn run_fit(st: &mut WorkerState, id: usize, job: FitJob) -> Result<FitResult> {
+    let bytes_in = job.x.bytes() + job.ghat.bytes();
+    let t_transfer = Instant::now();
+    if let Some(tm) = &st.transfer {
+        tm.apply(bytes_in);
+    }
+    let transfer_in = t_transfer.elapsed();
+
+    let key = (job.user, job.site.clone());
+    // take ownership for the duration of the fit (avoids double borrows
+    // of st when the PJRT path needs &mut st.pjrt)
+    let mut adapter = st
+        .adapters
+        .remove(&key)
+        .ok_or_else(|| anyhow!("worker {id}: no adapter for ({}, {})", job.user, job.site))?;
+
+    let old = if job.merged { Some(adapter.params.clone()) } else { None };
+
+    let t0 = Instant::now();
+    let mut grads = match st.target {
+        OffloadTarget::NativeCpu => adapter.params.fit_grads(&job.x, &job.ghat),
+        OffloadTarget::PjrtDevice => pjrt_fit_grads(st, &adapter.params, &job)?,
+    };
+    for g in &mut grads {
+        tensor::scale_mut(g, job.grad_scale);
+    }
+    adapter.step(&grads);
+    let compute = t0.elapsed();
+
+    let (new_params, delta_diff, bytes_out) = if job.merged {
+        let diff = merge::delta_diff(old.as_ref().unwrap(), &adapter.params)?;
+        let b = diff.bytes();
+        (None, Some(diff), b)
+    } else {
+        let ps: Vec<Tensor> = adapter.params.tensors().iter().map(|t| (*t).clone()).collect();
+        let b: usize = ps.iter().map(|t| t.bytes()).sum();
+        (Some(ps), None, b)
+    };
+
+    let t1 = Instant::now();
+    if let Some(tm) = &st.transfer {
+        tm.apply(bytes_out);
+    }
+    let transfer = transfer_in + t1.elapsed();
+
+    st.adapters.insert(key, adapter);
+    Ok(FitResult {
+        user: job.user,
+        site: job.site,
+        new_params,
+        delta_diff,
+        compute,
+        transfer,
+        bytes_in,
+        bytes_out,
+    })
+}
+
+/// The "offload to low-end GPU" arm: run the lowered fit artifact on the
+/// worker's own PJRT device. Artifact name encodes (kind, dims, rows);
+/// the buffer is padded with zero rows up to the lowered row count
+/// (zero rows are gradient-neutral — tested in python/tests).
+fn pjrt_fit_grads(st: &mut WorkerState, params: &AdapterParams, job: &FitJob)
+                  -> Result<Vec<Tensor>> {
+    if st.pjrt.is_none() {
+        st.pjrt = Some(Device::spawn("worker-pjrt", st.manifest.clone())?);
+    }
+    let dev = st.pjrt.as_ref().unwrap();
+    let (n, d_in) = job.x.dims2();
+    let d_out = job.ghat.dims2().1;
+    let kind = params.kind().name();
+    // find a lowered fit artifact with enough rows
+    let best = st
+        .manifest
+        .artifacts
+        .keys()
+        .filter_map(|name| {
+            let prefix = format!("fit_{kind}_{d_in}x{d_out}_n");
+            name.strip_prefix(&prefix)
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&rows| rows >= n)
+                .map(|rows| (rows, name.clone()))
+        })
+        .min()
+        .ok_or_else(|| anyhow!("no fit artifact fit_{kind}_{d_in}x{d_out}_n>={n}"))?;
+    let (rows, artifact) = best;
+
+    let pad = |t: &Tensor| -> Tensor {
+        let (tn, td) = t.dims2();
+        let mut data = t.data().to_vec();
+        data.resize(rows * td, 0.0);
+        let _ = tn;
+        Tensor::new(vec![rows, td], data)
+    };
+    let mut inputs = vec![Input::Val(pad(&job.x).into()), Input::Val(pad(&job.ghat).into())];
+    for t in params.tensors() {
+        inputs.push(Input::Val(t.clone().into()));
+    }
+    let n_out = params.tensors().len();
+    let plan = OutputPlan { keep: vec![], fetch: (0..n_out).collect() };
+    let res = dev.execute(&artifact, inputs, plan)?;
+    let mut grads = Vec::with_capacity(n_out);
+    for (_, v) in res.fetched {
+        let t = match v {
+            Value::F32(t) => t,
+            _ => anyhow::bail!("fit artifact returned non-f32"),
+        };
+        grads.push(t);
+    }
+    // bias grads come back as (1, d) from the kernels; flatten to (d,)
+    for (g, p) in grads.iter_mut().zip(params.tensors()) {
+        if g.shape().len() == 2 && p.shape().len() == 1 {
+            *g = g.clone().reshape(&[p.shape()[0]]);
+        }
+    }
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_model_delay_monotone() {
+        let tm = TransferModel::cpu_link();
+        assert!(tm.delay_for(1 << 20) < tm.delay_for(1 << 24));
+        assert!(tm.delay_for(0) >= tm.latency);
+    }
+
+    #[test]
+    fn gpu_link_faster() {
+        let bytes = 8 << 20;
+        assert!(TransferModel::gpu_link().delay_for(bytes)
+                < TransferModel::cpu_link().delay_for(bytes));
+    }
+}

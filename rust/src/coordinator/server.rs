@@ -1,0 +1,713 @@
+//! The ColA training server — Algorithm 1 end to end.
+//!
+//! Per training iteration t:
+//!   1. sample a batch across the K collaborating users;
+//!   2. run the decoupled fwd/bwd artifact on the *server device* (the
+//!      GPU of the paper): forward through base + adapters (unmerged) or
+//!      merged weights, backward producing grad_hhat — and NO parameter
+//!      gradients;
+//!   3. ship each user's (x_m, grad_hhat_m) slices into the adaptation
+//!      buffers (Gradient Offloading);
+//!   4. every I steps, drain buffers into FitJobs dispatched to the
+//!      worker pool; workers fit the surrogate (Prop. 1) and step their
+//!      optimizers; replies refresh the server state (new adapter
+//!      buffers, or merged-weight delta diffs).
+//!
+//! Coupled baselines (FT/LoRA/IA3/prompt/...) run through their own
+//! artifacts with the optimizer on the server — the thing ColA avoids.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::buffer::AdaptationBuffers;
+use super::driver::{Driver, TaskData};
+use super::offload::{FitJob, TransferModel, WorkerPool};
+use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
+use crate::config::{AdapterKind, Method, Mode, Optimizer, Task, TrainConfig};
+use crate::data::Split;
+use crate::merge;
+use crate::metrics::{Curve, Timings};
+use crate::runtime::{Input, Runtime, Value};
+use crate::tensor::{self, Tensor};
+
+/// Summary of a finished run (consumed by benches/examples).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub train_loss: Curve,
+    pub train_acc: Curve,
+    pub eval_loss: Curve,
+    pub eval_acc: Curve,
+    pub timings: Timings,
+    pub trainable_params: usize,
+    pub server_resident_bytes: usize,
+    pub worker_state_bytes: usize,
+}
+
+impl RunReport {
+    /// End-of-training quality score in [0,100] (the ROUGE/GLUE stand-in:
+    /// tail-mean eval accuracy x 100).
+    pub fn score(&self) -> f64 {
+        100.0 * self.eval_acc.tail_mean(3)
+    }
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub rt: Runtime,
+    pub driver: Driver,
+    /// authoritative host copy of base (or merged) weights
+    weights: BTreeMap<String, Tensor>,
+    /// coordinator-side cache of coupled-baseline tunables
+    tunables: BTreeMap<String, Tensor>,
+    coupled_opt: Option<OptState>,
+    pool: Option<WorkerPool>,
+    /// in-flight worker fits (async offload overlap)
+    pending: Vec<std::sync::mpsc::Receiver<Result<super::offload::FitResult>>>,
+    buffers: AdaptationBuffers,
+    pub timings: Timings,
+    opt_cfg: OptimizerCfg,
+    trainable_params: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let driver = Driver::new(&cfg, &rt.manifest)?;
+        Self::with_driver(cfg, rt, driver)
+    }
+
+    /// Build with an explicit driver (the IC study constructs its own).
+    pub fn with_driver(cfg: TrainConfig, rt: Runtime, driver: Driver) -> Result<Trainer> {
+        cfg.validate()?;
+        if cfg.users > 1 && cfg.mode != Mode::Merged {
+            bail!("multi-user training in one server requires mode=merged \
+                   (the 'Alone' arm of Table 4 is separate runs)");
+        }
+        if cfg.users > 1 && cfg.batch % cfg.users != 0 {
+            bail!("batch ({}) must divide evenly across users ({})",
+                  cfg.batch, cfg.users);
+        }
+        let opt_cfg = match cfg.optimizer {
+            Optimizer::Sgd => OptimizerCfg::sgd(cfg.lr, cfg.weight_decay),
+            Optimizer::AdamW => OptimizerCfg::adamw(cfg.lr, cfg.weight_decay),
+        };
+        let mut t = Trainer {
+            cfg,
+            rt,
+            driver,
+            weights: BTreeMap::new(),
+            tunables: BTreeMap::new(),
+            coupled_opt: None,
+            pool: None,
+            pending: Vec::new(),
+            buffers: AdaptationBuffers::default(),
+            timings: Timings::default(),
+            opt_cfg,
+            trainable_params: 0,
+        };
+        t.init_weights()?;
+        match t.cfg.method {
+            Method::Cola(kind) => t.init_cola(kind)?,
+            m => t.init_coupled(m)?,
+        }
+        Ok(t)
+    }
+
+    // ------------------------------------------------------------------
+    // initialization
+    // ------------------------------------------------------------------
+
+    fn init_weights(&mut self) -> Result<()> {
+        if let Some(group) = self.driver.weights_init_group() {
+            self.weights = self.rt.manifest.load_init(&group)?;
+        }
+        if self.cfg.task == Task::SeqCls && self.cfg.mode == Mode::Merged {
+            // merged-mode classifier head starts at zero (trained through
+            // the head's linear adapter)
+            let d = self.rt.manifest.size(&self.cfg.size)?.d;
+            let c = self.rt.manifest.n_classes_seqcls;
+            self.weights.insert("head.W".into(), Tensor::zeros(&[d, c]));
+        }
+        if self.driver.is_ic() && self.cfg.mode == Mode::Merged {
+            // from-scratch merged: merged weights start at the random
+            // base init ({site}.Wbase -> {site}.W)
+            let base: Vec<(String, Tensor)> = self
+                .weights
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_suffix(".Wbase")
+                        .map(|s| (format!("{s}.W"), v.clone()))
+                })
+                .collect();
+            self.weights.extend(base);
+        }
+        for (name, t) in &self.weights {
+            self.rt
+                .server
+                .upload(&format!("w.{name}"), Value::F32(t.clone()))?;
+        }
+        Ok(())
+    }
+
+    fn init_cola(&mut self, kind: AdapterKind) -> Result<()> {
+        let transfer = None::<TransferModel>;
+        let pool = WorkerPool::spawn(self.cfg.workers, self.cfg.offload,
+                                     self.rt.manifest.clone(), transfer)?;
+        let rank = self.rt.manifest.rank;
+        let hidden = self.rt.manifest.mlp_hidden;
+        let mut rng = crate::rng::Rng::new(self.cfg.seed ^ 0xADA7);
+        for user in 0..self.cfg.users {
+            for s in &self.driver.sites {
+                // the head site is always a 'linear' adapter (§4.2)
+                let k = if s.site == "head" { AdapterKind::Linear } else { kind };
+                let params = AdapterParams::init(k, s.d_in, s.d_out, rank, hidden,
+                                                 &mut rng.fork(user as u64));
+                self.trainable_params += params.n_params();
+                if self.cfg.mode == Mode::Unmerged {
+                    // server-resident copies used by the forward pass
+                    for (t, n) in params.tensors().iter().zip(params.tensor_names()) {
+                        self.rt.server.upload(
+                            &format!("u{user}.{}.{n}", s.site),
+                            Value::F32((*t).clone()),
+                        )?;
+                    }
+                }
+                pool.for_user(user)
+                    .register(user, &s.site,
+                              SiteAdapter::new(&s.site, params, &self.opt_cfg))?;
+            }
+        }
+        self.pool = Some(pool);
+        Ok(())
+    }
+
+    fn init_coupled(&mut self, method: Method) -> Result<()> {
+        let m = method.baseline_name();
+        self.tunables = match &self.driver.data {
+            TaskData::Ic { model, .. } => {
+                if method == Method::Ft {
+                    // FT trains the site weights directly from the same
+                    // random base init the ColA arms use
+                    self.rt
+                        .manifest
+                        .load_init(&format!("ic_base_{model}"))?
+                        .into_iter()
+                        .map(|(k, v)| {
+                            (k.replace(".Wbase", ".W"), v)
+                        })
+                        .collect()
+                } else if method == Method::Lora {
+                    self.rt.manifest.load_init(&format!("ic_{model}_lowrank"))?
+                } else {
+                    bail!("IC supports only ft/lora coupled baselines")
+                }
+            }
+            TaskData::SeqCls { .. } => {
+                let mut t = if method == Method::Ft {
+                    let mut w = self.rt.manifest
+                        .load_init(&format!("lm_{}", self.cfg.size))?;
+                    let d = self.rt.manifest.size(&self.cfg.size)?.d;
+                    let c = self.rt.manifest.n_classes_seqcls;
+                    w.insert("head.W".into(), Tensor::zeros(&[d, c]));
+                    w
+                } else {
+                    self.rt.manifest
+                        .load_init(&format!("tunables_seqcls_{}_{m}", self.cfg.size))?
+                };
+                // FT init group has no head; others include it
+                if !t.contains_key("head.W") {
+                    let d = self.rt.manifest.size(&self.cfg.size)?.d;
+                    let c = self.rt.manifest.n_classes_seqcls;
+                    t.insert("head.W".into(), Tensor::zeros(&[d, c]));
+                }
+                t
+            }
+            TaskData::Lm { .. } => {
+                if method == Method::Ft {
+                    self.rt.manifest.load_init(&format!("lm_{}", self.cfg.size))?
+                } else {
+                    self.rt.manifest
+                        .load_init(&format!("tunables_{}_{m}", self.cfg.size))?
+                }
+            }
+        };
+        self.trainable_params = self.tunables.values().map(Tensor::len).sum();
+        let sizes: Vec<usize> = self.tunables.values().map(Tensor::len).collect();
+        self.coupled_opt = Some(OptState::new(&self.opt_cfg, &sizes));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // the training loop
+    // ------------------------------------------------------------------
+
+    pub fn run(&mut self) -> Result<RunReport> {
+        let mut train_loss = Curve::new("train_loss");
+        let mut train_acc = Curve::new("train_acc");
+        let mut eval_loss = Curve::new("eval_loss");
+        let mut eval_acc = Curve::new("eval_acc");
+        for t in 0..self.cfg.steps as u64 {
+            let (loss, acc) = self.step(t)?;
+            train_loss.push(t, loss as f64);
+            if let Some(a) = acc {
+                train_acc.push(t, a as f64);
+            }
+            if self.cfg.eval_every > 0
+                && (t + 1) % self.cfg.eval_every as u64 == 0
+            {
+                self.collect_pending()?;
+                let (el, ea) = self.eval(t)?;
+                eval_loss.push(t + 1, el);
+                if let Some(a) = ea {
+                    eval_acc.push(t + 1, a);
+                }
+            }
+        }
+        // final drain so no adaptation data is dropped
+        self.flush_adapters()?;
+        self.collect_pending()?;
+        let (el, ea) = self.eval(self.cfg.steps as u64)?;
+        eval_loss.push(self.cfg.steps as u64, el);
+        if let Some(a) = ea {
+            eval_acc.push(self.cfg.steps as u64, a);
+        }
+        Ok(RunReport {
+            train_loss,
+            train_acc,
+            eval_loss,
+            eval_acc,
+            timings: self.timings.clone(),
+            trainable_params: self.trainable_params,
+            server_resident_bytes: self.rt.server.resident_bytes()?,
+            worker_state_bytes: self
+                .pool
+                .as_ref()
+                .map(|p| p.total_state_bytes())
+                .unwrap_or(0),
+        })
+    }
+
+    /// One training iteration. Returns (loss, acc).
+    pub fn step(&mut self, t: u64) -> Result<(f32, Option<f32>)> {
+        self.timings.steps += 1;
+        match self.cfg.method {
+            Method::Cola(kind) => self.step_cola(t, kind),
+            m => self.step_coupled(t, m),
+        }
+    }
+
+    fn artifact_kind(&self) -> Option<AdapterKind> {
+        match (self.cfg.mode, self.cfg.method) {
+            (Mode::Merged, _) => None,
+            (Mode::Unmerged, Method::Cola(k)) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Assemble + execute the decoupled artifact for one joint batch.
+    /// Returns (outputs, exec, compile, host-transfer, bytes fetched).
+    fn exec_decoupled(&self, split: Split, t: u64, fetch_adaptation: bool)
+                      -> Result<(BTreeMap<String, Value>, std::time::Duration,
+                                 std::time::Duration, std::time::Duration,
+                                 usize)> {
+        let artifact = self
+            .driver
+            .decoupled_artifact(self.artifact_kind(), self.cfg.batch);
+        let per_user = self.cfg.batch / self.cfg.users;
+        // joint batch: concatenate per-user sub-batches (row-contiguous)
+        let mut parts: Vec<Vec<(String, Value)>> = (0..self.cfg.users)
+            .map(|u| self.driver.data_inputs(per_user, u, split, t))
+            .collect();
+        let data = if self.cfg.users == 1 {
+            parts.pop().unwrap()
+        } else {
+            concat_user_batches(parts)?
+        };
+        let data_map: BTreeMap<String, Value> = data.into_iter().collect();
+
+        let inputs = self.rt.assemble(&artifact, |io| {
+            if let Some(v) = data_map.get(&io.name) {
+                return Ok(Input::Val(v.clone()));
+            }
+            if self.weights.contains_key(&io.name) {
+                return Ok(Input::Ref(format!("w.{}", io.name)));
+            }
+            // unmerged adapter parameter (single-user only)
+            Ok(Input::Ref(format!("u0.{}", io.name)))
+        })?;
+
+        let spec = self.rt.manifest.artifact(&artifact)?;
+        let mut fetch: Vec<&str> = vec!["loss"];
+        if self.driver.has_acc {
+            fetch.push("acc");
+        }
+        if fetch_adaptation {
+            for s in &self.driver.sites {
+                if !fetch.contains(&s.x_output.as_str()) {
+                    fetch.push(&s.x_output);
+                }
+                fetch.push(&s.g_output);
+            }
+        }
+        let _ = spec;
+        let t0 = Instant::now();
+        let (outs, res) = self.rt.execute_fetch(&self.rt.server, &artifact,
+                                                inputs, &fetch)?;
+        let transfer = t0
+            .elapsed()
+            .saturating_sub(res.exec_time)
+            .saturating_sub(res.compile_time);
+        if std::env::var("COLA_TRACE").is_ok() {
+            eprintln!("[trace] exec {:?} compile {:?} up {:?} fetch {:?} other {:?}",
+                      res.exec_time, res.compile_time, res.upload_time,
+                      res.fetch_time,
+                      transfer.saturating_sub(res.upload_time + res.fetch_time));
+        }
+        Ok((outs, res.exec_time, res.compile_time, transfer, res.bytes_down))
+    }
+
+    fn step_cola(&mut self, t: u64, _kind: AdapterKind) -> Result<(f32, Option<f32>)> {
+        let (outs, exec_time, compile, transfer, bytes_down) =
+            self.exec_decoupled(Split::Train, t, true)?;
+        self.timings.fwdbwd += exec_time;
+        self.timings.compile += compile;
+        self.timings.transfer += transfer;
+        self.timings.bytes_offloaded += bytes_down as u64;
+
+        let loss = outs["loss"].scalar_f32()?;
+        let acc = outs.get("acc").and_then(|v| v.scalar_f32().ok());
+
+        // route adaptation data to per-user buffers
+        let per_user = self.cfg.batch / self.cfg.users;
+        for s in &self.driver.sites {
+            let x = outs
+                .get(&s.x_output)
+                .ok_or_else(|| anyhow!("missing x output {}", s.x_output))?
+                .as_f32()
+                .unwrap()
+                .clone()
+                .to_rows();
+            let g = outs[&s.g_output].as_f32().unwrap().clone().to_rows();
+            let rows = x.dims2().0;
+            let rpe = rows / self.cfg.batch; // rows per example
+            for u in 0..self.cfg.users {
+                let (r0, r1) = (u * per_user * rpe, (u + 1) * per_user * rpe);
+                self.buffers
+                    .push(u, &s.site, x.rows(r0, r1), g.rows(r0, r1));
+            }
+        }
+
+        if (t + 1) % self.cfg.interval as u64 == 0 {
+            self.flush_adapters()?;
+        }
+        Ok((loss, acc))
+    }
+
+    /// Drain buffers -> dispatch FitJobs -> apply replies. With
+    /// async_offload the replies of the PREVIOUS interval are collected
+    /// here instead, and this interval's fits overlap the next server
+    /// steps (one-interval bounded staleness).
+    fn flush_adapters(&mut self) -> Result<()> {
+        if self.pool.is_none() {
+            return Ok(());
+        }
+        if !self.buffers.is_empty() {
+            let merged = self.cfg.mode == Mode::Merged;
+            let jobs = self.buffers.drain_all();
+            let pool = self.pool.as_ref().unwrap();
+            for (user, site, x, ghat, grad_scale) in jobs {
+                let rx = pool
+                    .for_user(user)
+                    .fit(FitJob { user, site, x, ghat, grad_scale, merged })?;
+                self.pending.push(rx);
+            }
+        }
+        if self.cfg.async_offload && self.pending.len()
+            <= self.cfg.users * self.driver.sites.len()
+        {
+            // keep at most one interval in flight
+            return Ok(());
+        }
+        self.collect_pending()
+    }
+
+    /// Apply all in-flight worker replies to the server state.
+    fn collect_pending(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let mut results = Vec::new();
+        for rx in self.pending.drain(..) {
+            results.push(rx.recv().context("worker reply")??);
+        }
+        let t0 = Instant::now();
+        let mut touched_weights: Vec<String> = Vec::new();
+        for r in results {
+            self.timings.worker += r.compute;
+            self.timings.transfer += r.transfer;
+            self.timings.bytes_returned += r.bytes_out as u64;
+            let site_spec = self
+                .driver
+                .sites
+                .iter()
+                .find(|s| s.site == r.site)
+                .ok_or_else(|| anyhow!("unknown site {}", r.site))?;
+            if let Some(diff) = r.delta_diff {
+                // merged: W += s * (D_new - D_old) on the host copy
+                let w = self
+                    .weights
+                    .get_mut(&site_spec.weight_name)
+                    .ok_or_else(|| anyhow!("no weight {}", site_spec.weight_name))?;
+                tensor::axpy(w, 1.0, &diff);
+                if !touched_weights.contains(&site_spec.weight_name) {
+                    touched_weights.push(site_spec.weight_name.clone());
+                }
+            } else if let Some(ps) = r.new_params {
+                // unmerged: refresh server-resident adapter buffers
+                let names = match ps.len() {
+                    2 => vec!["A", "B"],
+                    1 => vec!["W"],
+                    4 => vec!["W1", "b1", "W2", "b2"],
+                    n => bail!("unexpected adapter tensor count {n}"),
+                };
+                for (p, n) in ps.into_iter().zip(names) {
+                    self.rt.server.upload(
+                        &format!("u{}.{}.{n}", r.user, r.site),
+                        Value::F32(p),
+                    )?;
+                }
+            }
+        }
+        // re-upload merged weights the deltas touched
+        for name in touched_weights {
+            self.rt.server.upload(
+                &format!("w.{name}"),
+                Value::F32(self.weights[&name].clone()),
+            )?;
+        }
+        self.timings.merge += t0.elapsed();
+        Ok(())
+    }
+
+    fn step_coupled(&mut self, t: u64, method: Method) -> Result<(f32, Option<f32>)> {
+        let artifact = self.driver.coupled_artifact(method, self.cfg.batch);
+        let data: BTreeMap<String, Value> = self
+            .driver
+            .data_inputs(self.cfg.batch, 0, Split::Train, t)
+            .into_iter()
+            .collect();
+        let inputs = self.rt.assemble(&artifact, |io| {
+            if let Some(v) = data.get(&io.name) {
+                return Ok(Input::Val(v.clone()));
+            }
+            if let Some(w) = self.tunables.get(&io.name) {
+                return Ok(Input::Val(Value::F32(w.clone())));
+            }
+            // frozen base weight
+            Ok(Input::Ref(format!("w.{}", io.name)))
+        })?;
+        let spec = self.rt.manifest.artifact(&artifact)?;
+        let mut fetch: Vec<&str> = vec!["loss"];
+        if spec.outputs.iter().any(|o| o == "acc") {
+            fetch.push("acc");
+        }
+        let grad_names: Vec<String> =
+            self.tunables.keys().map(|n| format!("d.{n}")).collect();
+        for g in &grad_names {
+            fetch.push(g);
+        }
+        let t0 = Instant::now();
+        let (outs, res) = self.rt.execute_fetch(&self.rt.server, &artifact,
+                                                inputs, &fetch)?;
+        self.timings.fwdbwd += res.exec_time;
+        self.timings.compile += res.compile_time;
+        self.timings.transfer += t0
+            .elapsed()
+            .saturating_sub(res.exec_time)
+            .saturating_sub(res.compile_time);
+
+        let loss = outs["loss"].scalar_f32()?;
+        let acc = outs.get("acc").and_then(|v| v.scalar_f32().ok());
+
+        // optimizer on the server (the coupled cost ColA avoids)
+        let grads: Vec<Tensor> = self
+            .tunables
+            .keys()
+            .map(|n| outs[&format!("d.{n}")].as_f32().unwrap().clone())
+            .collect();
+        let opt = self.coupled_opt.as_mut().unwrap();
+        let mut refs: Vec<&mut Tensor> = self.tunables.values_mut().collect();
+        opt.apply(&mut refs, &grads);
+        Ok((loss, acc))
+    }
+
+    /// Evaluate on held-out batches. Returns (mean loss, mean acc).
+    pub fn eval(&mut self, t: u64) -> Result<(f64, Option<f64>)> {
+        let mut losses = Vec::new();
+        let mut accs = Vec::new();
+        for i in 0..self.cfg.eval_batches as u64 {
+            let (loss, acc) = match self.cfg.method {
+                Method::Cola(_) => {
+                    let (outs, _, _, _, _) =
+                        self.exec_decoupled(Split::Eval, t * 1000 + i, false)?;
+                    (outs["loss"].scalar_f32()?,
+                     outs.get("acc").and_then(|v| v.scalar_f32().ok()))
+                }
+                m => {
+                    let artifact = self.driver.coupled_artifact(m, self.cfg.batch);
+                    let data: BTreeMap<String, Value> = self
+                        .driver
+                        .data_inputs(self.cfg.batch, 0, Split::Eval, t * 1000 + i)
+                        .into_iter()
+                        .collect();
+                    let inputs = self.rt.assemble(&artifact, |io| {
+                        if let Some(v) = data.get(&io.name) {
+                            return Ok(Input::Val(v.clone()));
+                        }
+                        if let Some(w) = self.tunables.get(&io.name) {
+                            return Ok(Input::Val(Value::F32(w.clone())));
+                        }
+                        Ok(Input::Ref(format!("w.{}", io.name)))
+                    })?;
+                    let spec = self.rt.manifest.artifact(&artifact)?;
+                    let mut fetch = vec!["loss"];
+                    if spec.outputs.iter().any(|o| o == "acc") {
+                        fetch.push("acc");
+                    }
+                    let (outs, _) = self.rt.execute_fetch(
+                        &self.rt.server, &artifact, inputs, &fetch)?;
+                    (outs["loss"].scalar_f32()?,
+                     outs.get("acc").and_then(|v| v.scalar_f32().ok()))
+                }
+            };
+            losses.push(loss as f64);
+            if let Some(a) = acc {
+                accs.push(a as f64);
+            }
+        }
+        let ml = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        let ma = if accs.is_empty() {
+            None
+        } else {
+            Some(accs.iter().sum::<f64>() / accs.len() as f64)
+        };
+        Ok((ml, ma))
+    }
+
+    /// Evaluate on a specific instruction category (Table 4 columns) by
+    /// temporarily overriding the LM data variant.
+    pub fn eval_category(&mut self, category: usize) -> Result<(f64, Option<f64>)> {
+        use super::driver::LmVariant;
+        let old = match &mut self.driver.data {
+            TaskData::Lm { variant, .. } => {
+                std::mem::replace(variant, LmVariant::Instruct(Some(category)))
+            }
+            _ => bail!("eval_category only applies to LM tasks"),
+        };
+        let r = self.eval(7777 + category as u64);
+        if let TaskData::Lm { variant, .. } = &mut self.driver.data {
+            *variant = old;
+        }
+        r
+    }
+
+    /// Snapshot a user's adapter for a site (from its worker).
+    pub fn adapter_snapshot(&self, user: usize, site: &str) -> Result<AdapterParams> {
+        self.pool
+            .as_ref()
+            .ok_or_else(|| anyhow!("no worker pool (coupled method?)"))?
+            .for_user(user)
+            .snapshot(user, site)
+    }
+
+    /// Host copy of a (merged) weight.
+    pub fn weight(&self, name: &str) -> Option<&Tensor> {
+        self.weights.get(name)
+    }
+
+    /// Merge a user's current adapters into the host weights (post-
+    /// training merge for inference, 'Alone -> merged' arm of Table 4).
+    pub fn merge_user_adapters(&mut self, user: usize) -> Result<()> {
+        let pool = self
+            .pool
+            .as_ref()
+            .ok_or_else(|| anyhow!("no worker pool"))?;
+        let sites: Vec<String> =
+            self.driver.sites.iter().map(|s| s.site.clone()).collect();
+        for site in sites {
+            let params = pool.for_user(user).snapshot(user, &site)?;
+            merge::merge_into(&mut self.weights, &site, &params)?;
+        }
+        Ok(())
+    }
+}
+
+/// Concatenate per-user data inputs row-wise (same key sets).
+fn concat_user_batches(parts: Vec<Vec<(String, Value)>>) -> Result<Vec<(String, Value)>> {
+    use crate::runtime::value::IntTensor;
+    let keys: Vec<String> = parts[0].iter().map(|(k, _)| k.clone()).collect();
+    let mut out = Vec::new();
+    for key in keys {
+        let vals: Vec<&Value> = parts
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .find(|(k, _)| *k == key)
+                    .map(|(_, v)| v)
+                    .ok_or_else(|| anyhow!("missing key {key}"))
+            })
+            .collect::<Result<_>>()?;
+        let cat = match vals[0] {
+            Value::F32(_) => {
+                let mut shape = vals[0].shape().to_vec();
+                let mut data = Vec::new();
+                shape[0] = 0;
+                for v in &vals {
+                    shape[0] += v.shape()[0];
+                    data.extend_from_slice(v.as_f32().unwrap().data());
+                }
+                Value::F32(Tensor::new(shape, data))
+            }
+            Value::I32(_) => {
+                let mut shape = vals[0].shape().to_vec();
+                let mut data = Vec::new();
+                shape[0] = 0;
+                for v in &vals {
+                    if let Value::I32(t) = v {
+                        shape[0] += t.shape()[0];
+                        data.extend_from_slice(t.data());
+                    }
+                }
+                Value::I32(IntTensor::new(shape, data))
+            }
+        };
+        out.push((key, cat));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::value::IntTensor;
+
+    #[test]
+    fn concat_user_batches_rows() {
+        let a = vec![
+            ("tokens".to_string(), Value::I32(IntTensor::new(vec![2, 3], vec![1; 6]))),
+            ("mask".to_string(), Value::F32(Tensor::zeros(&[2, 3]))),
+        ];
+        let b = vec![
+            ("tokens".to_string(), Value::I32(IntTensor::new(vec![2, 3], vec![2; 6]))),
+            ("mask".to_string(), Value::F32(Tensor::zeros(&[2, 3]))),
+        ];
+        let cat = concat_user_batches(vec![a, b]).unwrap();
+        assert_eq!(cat[0].1.shape(), &[4, 3]);
+        if let Value::I32(t) = &cat[0].1 {
+            assert_eq!(t.data()[0], 1);
+            assert_eq!(t.data()[6], 2);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Synthetic dataset substrates (the no-network substitutes for GLUE /
+//! the S2S suite / Dolly / MNIST+CIFAR10 — see DESIGN.md §2).
+//!
+//! Every generator is a pure function of (task id, seed, index), so any
+//! batch is reproducible and train/eval splits are disjoint by index
+//! range. Tasks are *graded in difficulty and noise* so that the method
+//! ordering the paper's quality tables measure (FT ≈ ColA(Linear/MLP) ≥
+//! LoRA ≈ ColA(LowRank) > IA3 > prompt-class) has room to show.
+
+pub mod images;
+pub mod lm;
+pub mod seqcls;
+
+use crate::runtime::value::IntTensor;
+use crate::tensor::Tensor;
+
+/// Special token ids (content tokens start at [`CONTENT0`]).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const EOS: i32 = 3;
+/// category tokens for the instruction mix occupy [4, 12)
+pub const CAT0: i32 = 4;
+pub const CONTENT0: i32 = 16;
+
+/// A causal-LM / seq2seq batch (loss on mask=1 positions).
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub tokens: IntTensor,
+    pub targets: IntTensor,
+    pub mask: Tensor,
+}
+
+impl LmBatch {
+    pub fn batch_size(&self) -> usize {
+        self.tokens.shape()[0]
+    }
+}
+
+/// A sequence-classification batch.
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    pub tokens: IntTensor,
+    pub labels: IntTensor,
+    pub mask: Tensor,
+}
+
+/// An image-classification batch.
+#[derive(Clone, Debug)]
+pub struct ImgBatch {
+    pub images: Tensor,
+    pub labels: IntTensor,
+}
+
+/// Train/eval split by index range: eval indices are negative offsets
+/// into a disjoint stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Eval,
+}
+
+impl Split {
+    /// Mixes the split into the per-example seed so streams are disjoint.
+    pub fn salt(&self) -> u64 {
+        match self {
+            Split::Train => 0x7261696e,
+            Split::Eval => 0x6576616c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_salts_differ() {
+        assert_ne!(Split::Train.salt(), Split::Eval.salt());
+    }
+
+    #[test]
+    fn token_regions_disjoint() {
+        assert!(PAD < BOS && BOS < SEP && SEP < EOS && EOS < CAT0);
+        assert!(CAT0 + 8 <= CONTENT0);
+    }
+}

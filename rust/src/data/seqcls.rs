@@ -1,0 +1,168 @@
+//! Sequence-classification tasks (the 8-dataset GLUE substitute).
+//!
+//! Each task is a deterministic labeling rule over a random token
+//! sequence plus a task-specific label-noise rate, giving the graded
+//! headroom the paper's Table 2 shows across GLUE datasets. All tasks
+//! use 4 classes (STS-B regression is substituted by 4-way bucketing,
+//! noted in DESIGN.md).
+
+use super::{ClsBatch, Split, CONTENT0};
+use crate::rng::Rng;
+use crate::runtime::value::IntTensor;
+use crate::tensor::Tensor;
+
+pub const N_CLASSES: usize = 4;
+
+/// GLUE-substitute task names in Table 2 column order.
+pub const TASKS: [&str; 8] = [
+    "mnli", "sst2", "mrpc", "cola", "qnli", "qqp", "rte", "stsb",
+];
+
+#[derive(Clone, Debug)]
+pub struct ClsTaskGen {
+    pub vocab: usize,
+    pub seq: usize,
+    pub seed: u64,
+}
+
+impl ClsTaskGen {
+    pub fn new(vocab: usize, seq: usize, seed: u64) -> Self {
+        ClsTaskGen { vocab, seq, seed }
+    }
+
+    /// Per-task label-noise rate (controls achievable ceiling).
+    fn noise(task: usize) -> f32 {
+        [0.05, 0.02, 0.08, 0.15, 0.04, 0.06, 0.20, 0.05][task % 8]
+    }
+
+    fn label_rule(&self, task: usize, toks: &[i32], rng: &mut Rng) -> usize {
+        let v = self.vocab as i64 - CONTENT0 as i64;
+        let content: Vec<i64> = toks.iter().map(|&t| (t - CONTENT0) as i64).collect();
+        let n = content.len() as i64;
+        let raw = match task % 8 {
+            // mnli: bucket of the mean token value
+            0 => (content.iter().sum::<i64>() / n) * 4 / v,
+            // sst2: count of "positive-region" tokens vs threshold
+            1 => {
+                let pos = content.iter().filter(|&&c| c < v / 4).count() as i64;
+                pos * 4 / (n / 2 + 1)
+            }
+            // mrpc: first-half/second-half similarity bucket
+            2 => {
+                let h = content.len() / 2;
+                let a: i64 = content[..h].iter().sum();
+                let b: i64 = content[h..].iter().sum();
+                ((a - b).abs() * 4) / (v * n / 3 + 1)
+            }
+            // cola: parity-pair rule (hard for shallow nets)
+            3 => {
+                let odd = content.iter().filter(|&&c| c % 2 == 1).count() as i64;
+                let asc = content.windows(2).filter(|w| w[1] > w[0]).count() as i64;
+                (odd % 2) * 2 + (asc % 2)
+            }
+            // qnli: position of the max token, bucketed
+            4 => {
+                let arg = content
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .map(|(i, _)| i as i64)
+                    .unwrap_or(0);
+                arg * 4 / n
+            }
+            // qqp: sum mod 4
+            5 => content.iter().sum::<i64>() % 4,
+            // rte: noisy xor of two buckets (low ceiling, like paper's RTE)
+            6 => ((content[0] * 2 / v) % 2) * 2 + ((content[n as usize - 1] * 2 / v) % 2),
+            // stsb: bucketed "similarity score"
+            _ => {
+                let h = content.len() / 2;
+                let dot: i64 = content[..h]
+                    .iter()
+                    .zip(&content[h..])
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                3 - (dot * 4 / (v * h as i64 + 1)).min(3)
+            }
+        };
+        let mut label = raw.rem_euclid(N_CLASSES as i64) as usize;
+        if rng.next_f32() < Self::noise(task) {
+            label = rng.below(N_CLASSES);
+        }
+        label
+    }
+
+    pub fn batch(&self, batch: usize, task: usize, split: Split, step: u64) -> ClsBatch {
+        let mut rng = Rng::new(self.seed ^ split.salt()
+                               ^ (task as u64) << 40
+                               ^ step.wrapping_mul(0x9E37));
+        let len = self.seq; // full-length sequences, mask all ones
+        let mut toks = Vec::with_capacity(batch * self.seq);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let row: Vec<i32> = (0..len)
+                .map(|_| CONTENT0 + rng.below(self.vocab - CONTENT0 as usize) as i32)
+                .collect();
+            labels.push(self.label_rule(task, &row, &mut rng) as i32);
+            toks.extend_from_slice(&row);
+        }
+        ClsBatch {
+            tokens: IntTensor::new(vec![batch, self.seq], toks),
+            labels: IntTensor::new(vec![batch], labels),
+            mask: Tensor::from_fn(&[batch, self.seq], |_| 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> ClsTaskGen {
+        ClsTaskGen::new(512, 64, 11)
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = gen();
+        let a = g.batch(8, 0, Split::Train, 5);
+        let b = g.batch(8, 0, Split::Train, 5);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn labels_in_range_all_tasks() {
+        let g = gen();
+        for task in 0..8 {
+            let b = g.batch(16, task, Split::Train, 0);
+            for &l in b.labels.data() {
+                assert!((0..N_CLASSES as i32).contains(&l), "task {task}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_nontrivially_distributed() {
+        // every task must use at least 2 classes over a large sample
+        let g = gen();
+        for task in 0..8 {
+            let mut seen = [false; N_CLASSES];
+            for step in 0..8 {
+                let b = g.batch(16, task, Split::Train, step);
+                for &l in b.labels.data() {
+                    seen[l as usize] = true;
+                }
+            }
+            assert!(seen.iter().filter(|&&s| s).count() >= 2, "task {task}");
+        }
+    }
+
+    #[test]
+    fn tasks_differ() {
+        let g = gen();
+        let a = g.batch(16, 0, Split::Train, 0);
+        let b = g.batch(16, 1, Split::Train, 0);
+        assert_ne!(a.labels, b.labels);
+    }
+}

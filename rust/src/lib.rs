@@ -1,0 +1,37 @@
+//! # ColA: Collaborative Adaptation with Gradient Learning
+//!
+//! A production-grade reproduction of *ColA: Collaborative Adaptation
+//! with Gradient Learning* (Diao et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the FTaaS coordinator: server device hosting
+//!   the base model, Gradient Offloading to low-cost worker devices,
+//!   adaptation-interval buffering, Prop.-2 parameter merging, a memory
+//!   accountant, synthetic task generators, and the full bench suite
+//!   regenerating every table/figure of the paper.
+//! - **L2 (python/compile, build time)** — JAX graphs AOT-lowered to
+//!   HLO text (`artifacts/`), executed here via PJRT.
+//! - **L1 (python/compile/kernels, build time)** — Pallas kernels for
+//!   the adapter-apply and surrogate-fit hot spots.
+//!
+//! Python never runs at serving/training time: `make artifacts` once,
+//! then the `cola` binary is self-contained.
+//!
+//! Start at [`coordinator::Trainer`] (Algorithm 1) and
+//! [`coordinator::FtaasService`] (Figure 1).
+
+pub mod adapters;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod merge;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::Result;

@@ -1,0 +1,158 @@
+//! `cola` CLI — launcher for training runs, the FTaaS demo service,
+//! memory reports, and experiment drivers.
+
+use anyhow::{bail, Context, Result};
+
+use cola::cli::Args;
+use cola::config::{apply_overrides, Method, TrainConfig};
+use cola::coordinator::{FtaasService, Trainer};
+use cola::memory::{footprint, Arrangement, ModelProfile, GB};
+use cola::metrics::markdown_table;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "memory" => cmd_memory(&args),
+        "table1" => cmd_table1(),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `cola help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "cola — Collaborative Adaptation with Gradient Learning\n\n\
+         USAGE: cola <subcommand> [--key value]...\n\n\
+         SUBCOMMANDS\n\
+           train    run one fine-tuning job\n\
+                    --task clm|s2s|seqcls --size tiny|small|base\n\
+                    --method ft|lora|ia3|prompt|ptuning|prefix|cola-lowrank|cola-linear|cola-mlp\n\
+                    --mode merged|unmerged --interval I --steps N --users K\n\
+                    --offload cpu|gpu --dataset <name> --seed S\n\
+           serve    FTaaS collaboration demo (--users K --rounds N)\n\
+           memory   analytic memory report\n\
+                    --profile llama2-qv|llama2-all|gpt2|roberta-base|bart-base|tiny|small\n\
+                    --batch B --interval I\n\
+           table1   print the Table-1 computation-space complexity summary\n"
+    );
+}
+
+fn config_from_args(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(m) = args.get("method") {
+        cfg = cfg.preset_for_method(m.parse()?);
+    }
+    apply_overrides(&mut cfg, &args.options)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    println!("config: {cfg:?}");
+    let mut trainer = Trainer::new(cfg).context("building trainer")?;
+    let report = trainer.run()?;
+    println!("train loss (last): {:.4}", report.train_loss.last().unwrap_or(f64::NAN));
+    println!("eval  loss (tail): {:.4}", report.eval_loss.tail_mean(3));
+    if report.eval_acc.last().is_some() {
+        println!("score            : {:.1}", report.score());
+    }
+    println!("trainable params : {}", report.trainable_params);
+    println!("server resident  : {:.1} MiB",
+             report.server_resident_bytes as f64 / (1024.0 * 1024.0));
+    println!("worker state     : {:.1} MiB",
+             report.worker_state_bytes as f64 / (1024.0 * 1024.0));
+    println!("timings: {}", report.timings.report());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    if !args.options.contains_key("users") {
+        cfg.users = 4;
+    }
+    if cfg.batch % cfg.users != 0 {
+        cfg.batch = cfg.users * (cfg.batch / cfg.users).max(1);
+    }
+    let rounds: u64 = args.parse_or("rounds", 64)?;
+    let kind = match cfg.method {
+        Method::Cola(k) => k,
+        _ => cola::config::AdapterKind::LowRank,
+    };
+    println!("FTaaS service: {} users, adapter {kind}, {rounds} rounds", cfg.users);
+    let mut svc = FtaasService::start(cfg, kind)?;
+    for job in svc.jobs() {
+        println!("  user {} -> category {} ({})", job.user, job.category,
+                 cola::data::lm::CATEGORIES[job.category]);
+    }
+    let chunk = (rounds / 8).max(1);
+    let mut done = 0;
+    while done < rounds {
+        let n = chunk.min(rounds - done);
+        svc.run_rounds(n)?;
+        done += n;
+        let st = svc.status()?;
+        println!("round {done}/{rounds}: loss {:.4}, server resident {:.1} MiB",
+                 st.last_train_loss.unwrap_or(f64::NAN),
+                 st.server_resident_bytes as f64 / (1024.0 * 1024.0));
+    }
+    println!("\nper-category quality of the shared model:");
+    for c in 0..8 {
+        println!("  {:24} {:.1}", cola::data::lm::CATEGORIES[c],
+                 svc.category_score(c)?);
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let name = args.get_or("profile", "llama2-qv");
+    let profile = ModelProfile::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+    let batch: usize = args.parse_or("batch", 8)?;
+    let interval: usize = args.parse_or("interval", 1)?;
+    let users: usize = args.parse_or("users", 1)?;
+    use cola::config::AdapterKind::*;
+    let mut rows = Vec::new();
+    let mut push = |label: &str, arr: Arrangement| {
+        let fp = footprint(&profile, arr, batch, interval, 8, 64);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", fp.server_total() as f64 / GB),
+            format!("{:.2}", fp.worker_total() as f64 / GB),
+            format!("{:.3}", fp.transfer_per_step as f64 / GB),
+        ]);
+    };
+    push("FT", Arrangement::FullFt);
+    push("LoRA", Arrangement::Peft { kind: LowRank, users });
+    push("ColA(LowRank, unmerged)", Arrangement::Cola { kind: LowRank, merged: false, users });
+    push("ColA(LowRank, merged)", Arrangement::Cola { kind: LowRank, merged: true, users });
+    push("ColA(Linear, merged)", Arrangement::Cola { kind: Linear, merged: true, users });
+    push("ColA(MLP, unmerged)", Arrangement::Cola { kind: Mlp, merged: false, users });
+    println!("profile {name}: {} params, batch {batch}, interval {interval}, users {users}",
+             profile.params());
+    println!("{}", markdown_table(
+        &["method", "server GB", "worker GB", "transfer GB/step"], &rows));
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    println!("Table 1 — computation-space complexity (see memory/ for bytes)\n");
+    let rows = vec![
+        vec!["FT".into(), "theta".into(), "h".into(), "grad h".into(), "grad theta".into()],
+        vec!["PEFT (unmerged)".into(), "theta, w".into(), "h, h~".into(),
+             "grad h, grad h~".into(), "grad w".into()],
+        vec!["ColA (unmerged)".into(), "theta, w".into(), "h, h~".into(),
+             "grad h, grad h~".into(), "{grad w}".into()],
+        vec!["ColA (merged)".into(), "theta-hat, {w}".into(), "h, {h~}".into(),
+             "grad h, {h~}".into(), "{grad w}".into()],
+    ];
+    println!("{}", markdown_table(
+        &["method", "params", "fwd reps", "bwd reps", "param grads"], &rows));
+    println!("{{.}} = lives on low-cost devices (offloaded)");
+    Ok(())
+}

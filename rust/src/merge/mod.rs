@@ -1,0 +1,148 @@
+//! Parameter merging (Prop. 2) — folding adapters into base weights.
+//!
+//! Only adapters linear in their input merge: `W_hat = W + s * D` where
+//! `D = A@B` (low-rank) or the full matrix. The coordinator's merged
+//! mode keeps the server's weights always-merged; after a worker updates
+//! its adapter it ships only the *delta difference*
+//! `s * (D_new - D_old)` and the server adds it in place — the server
+//! never stores adapter parameters at all (Table 1, ColA merged row).
+//!
+//! Multi-user collaboration is merge composition: all K users' deltas
+//! sum into the same base weight (Table 4 'Collaboration').
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::adapters::{AdapterParams, SCALE};
+use crate::tensor::{self, Tensor};
+
+/// Which base weight a site's adapter folds into.
+///
+/// LM sites: `l{i}.q` -> `l{i}.wq`, `l{i}.v` -> `l{i}.wv`.
+/// Seq-cls head: `head` -> the dedicated `head.W` input.
+/// IC models: site `s` -> `s.W`.
+pub fn site_weight_name(site: &str) -> String {
+    if let Some(layer) = site.strip_suffix(".q") {
+        format!("{layer}.wq")
+    } else if let Some(layer) = site.strip_suffix(".v") {
+        format!("{layer}.wv")
+    } else {
+        format!("{site}.W")
+    }
+}
+
+/// Merge an adapter into a weight map in place: W += s * D.
+pub fn merge_into(weights: &mut BTreeMap<String, Tensor>, site: &str,
+                  params: &AdapterParams) -> Result<()> {
+    let wname = site_weight_name(site);
+    let delta = params.delta_matrix()?;
+    let w = weights
+        .get_mut(&wname)
+        .ok_or_else(|| anyhow!("merge: no base weight '{wname}' for site '{site}'"))?;
+    tensor::axpy(w, SCALE, &delta);
+    Ok(())
+}
+
+/// Unmerge: W -= s * D.
+pub fn unmerge_from(weights: &mut BTreeMap<String, Tensor>, site: &str,
+                    params: &AdapterParams) -> Result<()> {
+    let wname = site_weight_name(site);
+    let delta = params.delta_matrix()?;
+    let w = weights
+        .get_mut(&wname)
+        .ok_or_else(|| anyhow!("unmerge: no base weight '{wname}'"))?;
+    tensor::axpy(w, -SCALE, &delta);
+    Ok(())
+}
+
+/// The incremental merged-mode update a worker ships after an optimizer
+/// step: `s * (D_new - D_old)`, to be added to the merged server weight.
+pub fn delta_diff(old: &AdapterParams, new: &AdapterParams) -> Result<Tensor> {
+    let d_old = old.delta_matrix()?;
+    let d_new = new.delta_matrix()?;
+    Ok(tensor::scale(&tensor::sub(&d_new, &d_old), SCALE))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn lowrank(rng: &mut Rng) -> AdapterParams {
+        AdapterParams::LowRank {
+            a: Tensor::randn(&[8, 4], 0.3, rng),
+            b: Tensor::randn(&[4, 8], 0.3, rng),
+        }
+    }
+
+    #[test]
+    fn site_names() {
+        assert_eq!(site_weight_name("l3.q"), "l3.wq");
+        assert_eq!(site_weight_name("l0.v"), "l0.wv");
+        assert_eq!(site_weight_name("head"), "head.W");
+        assert_eq!(site_weight_name("conv1"), "conv1.W");
+    }
+
+    #[test]
+    fn merge_unmerge_roundtrip() {
+        let mut rng = Rng::new(1);
+        let base = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let mut ws = BTreeMap::from([("l0.wq".to_string(), base.clone())]);
+        let p = lowrank(&mut rng);
+        merge_into(&mut ws, "l0.q", &p).unwrap();
+        assert!(!ws["l0.wq"].allclose(&base, 1e-6, 1e-6));
+        unmerge_from(&mut ws, "l0.q", &p).unwrap();
+        assert!(ws["l0.wq"].allclose(&base, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn merged_forward_equals_live_adapter() {
+        let mut rng = Rng::new(2);
+        let base = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let p = lowrank(&mut rng);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let live = tensor::add(&tensor::matmul(&x, &base), &p.apply(&x));
+        let mut ws = BTreeMap::from([("l0.wq".to_string(), base)]);
+        merge_into(&mut ws, "l0.q", &p).unwrap();
+        let merged = tensor::matmul(&x, &ws["l0.wq"]);
+        assert!(live.allclose(&merged, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn delta_diff_applies_update() {
+        let mut rng = Rng::new(3);
+        let old = lowrank(&mut rng);
+        let new = lowrank(&mut rng);
+        let base = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        // merged with old, then apply diff == merged with new
+        let mut ws1 = BTreeMap::from([("s.W".to_string(), base.clone())]);
+        merge_into(&mut ws1, "s", &old).unwrap();
+        let diff = delta_diff(&old, &new).unwrap();
+        tensor::axpy(ws1.get_mut("s.W").unwrap(), 1.0, &diff);
+        let mut ws2 = BTreeMap::from([("s.W".to_string(), base)]);
+        merge_into(&mut ws2, "s", &new).unwrap();
+        assert!(ws1["s.W"].allclose(&ws2["s.W"], 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn multi_user_composition() {
+        let mut rng = Rng::new(4);
+        let base = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let users: Vec<_> = (0..3).map(|_| lowrank(&mut rng)).collect();
+        let mut ws = BTreeMap::from([("s.W".to_string(), base.clone())]);
+        for u in &users {
+            merge_into(&mut ws, "s", u).unwrap();
+        }
+        let mut expect = base;
+        for u in &users {
+            tensor::axpy(&mut expect, SCALE, &u.delta_matrix().unwrap());
+        }
+        assert!(ws["s.W"].allclose(&expect, 1e-4, 1e-4));
+        // unmerge one user leaves the other two
+        unmerge_from(&mut ws, "s", &users[1]).unwrap();
+        let mut expect2 = expect;
+        tensor::axpy(&mut expect2, -SCALE, &users[1].delta_matrix().unwrap());
+        assert!(ws["s.W"].allclose(&expect2, 1e-4, 1e-4));
+    }
+}

@@ -1,0 +1,171 @@
+//! Metrics: loss/accuracy curves, per-step timing breakdowns, and the
+//! markdown/CSV emitters the benches use to regenerate the paper's
+//! tables and figures.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// A (step, value) series — learning curves (Figs 2-17).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Curve {
+        Curve { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|(_, v)| *v)
+    }
+
+    /// Mean of the final `k` points (stable end-of-training estimate).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let s = self.points.len().saturating_sub(k);
+        let tail = &self.points[s..];
+        tail.iter().map(|(_, v)| v).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("step,{}\n", self.name);
+        for (s, v) in &self.points {
+            let _ = writeln!(out, "{s},{v}");
+        }
+        out
+    }
+}
+
+/// Write multiple aligned curves as one CSV (one column per curve).
+pub fn curves_to_csv(curves: &[&Curve]) -> String {
+    let mut out = String::from("step");
+    for c in curves {
+        out.push(',');
+        out.push_str(&c.name);
+    }
+    out.push('\n');
+    let n = curves.iter().map(|c| c.points.len()).max().unwrap_or(0);
+    for i in 0..n {
+        let step = curves
+            .iter()
+            .find_map(|c| c.points.get(i).map(|(s, _)| *s))
+            .unwrap_or(i as u64);
+        let _ = write!(out, "{step}");
+        for c in curves {
+            match c.points.get(i) {
+                Some((_, v)) => {
+                    let _ = write!(out, ",{v}");
+                }
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Accumulated wall-clock breakdown of the training loop (the run-time
+/// columns of Tables 10-18).
+#[derive(Clone, Debug, Default)]
+pub struct Timings {
+    pub steps: u64,
+    /// one-time XLA compilation (setup, not per-step cost)
+    pub compile: Duration,
+    /// server fwd+bwd execute time
+    pub fwdbwd: Duration,
+    /// host<->device + inter-device transfer time (adaptation data,
+    /// adapter updates)
+    pub transfer: Duration,
+    /// worker fit + optimizer time
+    pub worker: Duration,
+    /// merge/unmerge bookkeeping
+    pub merge: Duration,
+    /// bytes shipped server -> workers
+    pub bytes_offloaded: u64,
+    /// bytes shipped workers -> server (adapter updates / deltas)
+    pub bytes_returned: u64,
+}
+
+impl Timings {
+    pub fn per_step(&self, d: Duration) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        d.as_secs_f64() / self.steps as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "steps {} | compile {:.1}s once | base {:.4}s/step | transfer {:.4}s/step | worker {:.4}s/step | merge {:.4}s/step | offloaded {:.1} MiB | returned {:.1} MiB",
+            self.steps,
+            self.compile.as_secs_f64(),
+            self.per_step(self.fwdbwd),
+            self.per_step(self.transfer),
+            self.per_step(self.worker),
+            self.per_step(self.merge),
+            self.bytes_offloaded as f64 / (1024.0 * 1024.0),
+            self.bytes_returned as f64 / (1024.0 * 1024.0),
+        )
+    }
+}
+
+/// Render a markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "| {} |", headers.join(" | "));
+    let _ = writeln!(out, "|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        let _ = writeln!(out, "| {} |", row.join(" | "));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_tail_mean() {
+        let mut c = Curve::new("loss");
+        for i in 0..10 {
+            c.push(i, i as f64);
+        }
+        assert_eq!(c.tail_mean(2), 8.5);
+        assert_eq!(c.last(), Some(9.0));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut a = Curve::new("a");
+        a.push(0, 1.0);
+        a.push(1, 2.0);
+        let mut b = Curve::new("b");
+        b.push(0, 3.0);
+        let csv = curves_to_csv(&[&a, &b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,3");
+        assert_eq!(lines[2], "1,2,");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| x | y |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn timings_report_nonpanic() {
+        let t = Timings::default();
+        assert!(t.report().contains("steps 0"));
+    }
+}

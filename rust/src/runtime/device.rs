@@ -1,0 +1,322 @@
+//! Device thread: the unit of "a device" in the FTaaS topology.
+//!
+//! PJRT types (`PjRtClient`, `Literal`, executables) are !Send — each
+//! device thread owns its own client, its executable cache, and a store
+//! of named resident buffers (base weights stay on the server device and
+//! are never re-uploaded per step). The rest of the system talks to it
+//! through a channel protocol with plain `Value`s, which makes every
+//! host<->device transfer explicit and measurable.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::value::{as_bytes, IntTensor, Value};
+use crate::tensor::Tensor;
+
+/// One positional input to an execution.
+#[derive(Clone, Debug)]
+pub enum Input {
+    /// a named buffer resident on the device
+    Ref(String),
+    /// an inline value (uploaded for this call)
+    Val(Value),
+}
+
+/// What to do with each output of an execution.
+#[derive(Clone, Debug, Default)]
+pub struct OutputPlan {
+    /// output index -> keep resident on the device under this name
+    pub keep: Vec<(usize, String)>,
+    /// output indices to return to the caller as Values
+    pub fetch: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct ExecResult {
+    /// (output index, value) for every fetched index
+    pub fetched: Vec<(usize, Value)>,
+    /// pure execute wall time on the device
+    pub exec_time: Duration,
+    /// one-time XLA compile on first use of the artifact (0 afterwards)
+    pub compile_time: Duration,
+    /// host->device input literal construction time
+    pub upload_time: Duration,
+    /// device->host output conversion time (tuple decompose + to_vec)
+    pub fetch_time: Duration,
+    /// bytes uploaded (inline inputs) and downloaded (fetched outputs)
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+}
+
+enum Cmd {
+    Upload(String, Value, Sender<Result<()>>),
+    Read(String, Sender<Result<Value>>),
+    Free(String, Sender<Result<()>>),
+    Execute {
+        artifact: String,
+        inputs: Vec<Input>,
+        plan: OutputPlan,
+        reply: Sender<Result<ExecResult>>,
+    },
+    /// total bytes currently resident in named buffers
+    ResidentBytes(Sender<usize>),
+    Shutdown,
+}
+
+/// Handle to a device thread. Cloneable and Send.
+#[derive(Clone)]
+pub struct Device {
+    tx: Sender<Cmd>,
+    name: Arc<String>,
+}
+
+impl Device {
+    /// Spawn a PJRT CPU device thread serving artifacts from `manifest`.
+    pub fn spawn(name: &str, manifest: Arc<Manifest>) -> Result<Device> {
+        let (tx, rx) = channel::<Cmd>();
+        let thread_name = format!("device-{name}");
+        std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || device_main(rx, manifest))
+            .context("spawning device thread")?;
+        Ok(Device { tx, name: Arc::new(name.to_string()) })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn upload(&self, name: &str, value: Value) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Upload(name.to_string(), value, tx))
+            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        rx.recv()?
+    }
+
+    pub fn read(&self, name: &str) -> Result<Value> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Read(name.to_string(), tx))
+            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        rx.recv()?
+    }
+
+    pub fn free(&self, name: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Free(name.to_string(), tx))
+            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        rx.recv()?
+    }
+
+    pub fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<Input>,
+        plan: OutputPlan,
+    ) -> Result<ExecResult> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                plan,
+                reply: tx,
+            })
+            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        rx.recv()?
+    }
+
+    pub fn resident_bytes(&self) -> Result<usize> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Cmd::ResidentBytes(tx))
+            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+}
+
+struct DeviceState {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    store: HashMap<String, (xla::Literal, usize)>, // literal + byte size
+}
+
+fn device_main(rx: Receiver<Cmd>, manifest: Arc<Manifest>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("device: PJRT client failed: {e}");
+            return;
+        }
+    };
+    let mut st = DeviceState { client, manifest, exes: HashMap::new(),
+                               store: HashMap::new() };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Upload(name, value, reply) => {
+                let r = value_to_literal(&value).map(|lit| {
+                    st.store.insert(name, (lit, value.bytes()));
+                });
+                let _ = reply.send(r);
+            }
+            Cmd::Read(name, reply) => {
+                let r = st
+                    .store
+                    .get(&name)
+                    .ok_or_else(|| anyhow!("no buffer '{name}'"))
+                    .and_then(|(lit, _)| literal_to_value(lit));
+                let _ = reply.send(r);
+            }
+            Cmd::Free(name, reply) => {
+                st.store.remove(&name);
+                let _ = reply.send(Ok(()));
+            }
+            Cmd::Execute { artifact, inputs, plan, reply } => {
+                let _ = reply.send(run_execute(&mut st, &artifact, inputs, plan));
+            }
+            Cmd::ResidentBytes(reply) => {
+                let _ = reply.send(st.store.values().map(|(_, b)| b).sum());
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
+fn run_execute(
+    st: &mut DeviceState,
+    artifact: &str,
+    inputs: Vec<Input>,
+    plan: OutputPlan,
+) -> Result<ExecResult> {
+    let t_compile = Instant::now();
+    let mut compiled_now = false;
+    if !st.exes.contains_key(artifact) {
+        compiled_now = true;
+        let spec = st.manifest.artifact(artifact)?;
+        let path = spec.file.clone(); // manifest stores dir-joined paths
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("loading HLO {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = st
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {artifact}"))?;
+        st.exes.insert(artifact.to_string(), exe);
+    }
+    let compile_time = if compiled_now { t_compile.elapsed() } else { Duration::ZERO };
+
+    // Assemble positional literals. Inline values become temporaries.
+    let t_up = Instant::now();
+    let mut bytes_up = 0usize;
+    let mut temps: Vec<(usize, xla::Literal)> = Vec::new();
+    for (i, input) in inputs.iter().enumerate() {
+        if let Input::Val(v) = input {
+            bytes_up += v.bytes();
+            temps.push((i, value_to_literal(v)?));
+        }
+    }
+    let upload_time = t_up.elapsed();
+    let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+    let mut temp_it = temps.iter().peekable();
+    for (i, input) in inputs.iter().enumerate() {
+        match input {
+            Input::Ref(name) => {
+                let (lit, _) = st
+                    .store
+                    .get(name)
+                    .ok_or_else(|| anyhow!("{artifact}: no resident buffer '{name}'"))?;
+                refs.push(lit);
+            }
+            Input::Val(_) => {
+                let (ti, lit) = temp_it.next().unwrap();
+                debug_assert_eq!(*ti, i);
+                refs.push(lit);
+            }
+        }
+    }
+
+    let exe = st.exes.get(artifact).unwrap();
+    let t0 = Instant::now();
+    let result = exe
+        .execute::<&xla::Literal>(&refs)
+        .with_context(|| format!("executing {artifact}"))?;
+    let root = result[0][0]
+        .to_literal_sync()
+        .with_context(|| format!("sync {artifact}"))?;
+    let exec_time = t0.elapsed();
+    let t_fetch = Instant::now();
+    let outs = root.to_tuple()?;
+
+    let mut fetched = Vec::new();
+    let mut bytes_down = 0usize;
+    for idx in &plan.fetch {
+        let lit = outs
+            .get(*idx)
+            .ok_or_else(|| anyhow!("{artifact}: no output index {idx}"))?;
+        let v = literal_to_value(lit)?;
+        bytes_down += v.bytes();
+        fetched.push((*idx, v));
+    }
+    // Keep after fetch: keeping consumes literals by index.
+    let mut outs: Vec<Option<xla::Literal>> = outs.into_iter().map(Some).collect();
+    for (idx, name) in &plan.keep {
+        let lit = outs
+            .get_mut(*idx)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow!("{artifact}: keep index {idx} invalid/duplicate"))?;
+        let sz = lit.size_bytes();
+        st.store.insert(name.clone(), (lit, sz));
+    }
+
+    let fetch_time = t_fetch.elapsed();
+    Ok(ExecResult { fetched, exec_time, compile_time, upload_time, fetch_time,
+                    bytes_up, bytes_down })
+}
+
+fn value_to_literal(v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<usize> = v.shape().to_vec();
+    match v {
+        Value::F32(t) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims,
+            as_bytes(t.data()),
+        )
+        .map_err(|e| anyhow!("literal f32: {e:?}")),
+        Value::I32(t) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &dims,
+            as_bytes(t.data()),
+        )
+        .map_err(|e| anyhow!("literal i32: {e:?}")),
+    }
+}
+
+fn literal_to_value(lit: &xla::Literal) -> Result<Value> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Ok(Value::F32(Tensor::new(dims, data)))
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Ok(Value::I32(IntTensor::new(dims, data)))
+        }
+        other => bail!("unsupported element type {other:?}"),
+    }
+}

@@ -1,0 +1,245 @@
+//! Artifact manifest: the L2->L3 interface contract.
+//!
+//! `aot.py` writes `artifacts/manifest.json` recording, for every lowered
+//! HLO module, the positional input list (name, dtype, dims) and output
+//! names. The Rust side never guesses shapes — everything is looked up
+//! here, and input assembly is by name.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input '{}'", self.name, name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output '{}'", self.name, name))
+    }
+}
+
+/// A model-size config echoed from python (model.CONFIGS).
+#[derive(Clone, Debug)]
+pub struct SizeConfig {
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub dff: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, SizeConfig>,
+    pub rank: usize,
+    pub mlp_hidden: usize,
+    pub n_classes_seqcls: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: no artifacts object"))?
+        {
+            let file = spec
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: no file"))?;
+            let mut inputs = Vec::new();
+            for entry in spec
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
+            {
+                let t = entry.as_arr().ok_or_else(|| anyhow!("bad input entry"))?;
+                inputs.push(IoSpec {
+                    name: t[0].as_str().unwrap_or_default().to_string(),
+                    dtype: DType::parse(t[1].as_str().unwrap_or_default())?,
+                    dims: t[2]
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                });
+            }
+            let outputs = spec
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: no outputs"))?
+                .iter()
+                .filter_map(|o| o.as_str().map(String::from))
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = j.get("configs").and_then(Json::as_obj) {
+            for (name, c) in cfgs {
+                let g = |k: &str| -> Result<usize> {
+                    c.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("config {name}: missing {k}"))
+                };
+                configs.insert(
+                    name.clone(),
+                    SizeConfig {
+                        vocab: g("vocab")?,
+                        d: g("d")?,
+                        layers: g("layers")?,
+                        heads: g("heads")?,
+                        dff: g("dff")?,
+                        seq: g("seq")?,
+                        batch: g("batch")?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            configs,
+            rank: j.get("rank").and_then(Json::as_usize).unwrap_or(8),
+            mlp_hidden: j.get("mlp_hidden").and_then(Json::as_usize).unwrap_or(64),
+            n_classes_seqcls: j
+                .get("n_classes_seqcls")
+                .and_then(Json::as_usize)
+                .unwrap_or(4),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact '{name}' in manifest (have {})",
+                                   self.artifacts.len()))
+    }
+
+    pub fn size(&self, name: &str) -> Result<&SizeConfig> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("no size config '{name}'"))
+    }
+
+    /// Load an initial-value group exported by aot.py
+    /// (`artifacts/init/<group>/`), as name -> Tensor.
+    pub fn load_init(&self, group: &str) -> Result<BTreeMap<String, crate::tensor::Tensor>> {
+        let dir = self.dir.join("init").join(group);
+        let idx_src = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("init group {group}"))?;
+        let idx = Json::parse(&idx_src).map_err(|e| anyhow!("init index: {e}"))?;
+        let mut out = BTreeMap::new();
+        for (name, entry) in idx.as_obj().ok_or_else(|| anyhow!("bad init index"))? {
+            let file = entry.get("file").and_then(Json::as_str).unwrap();
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let bytes = std::fs::read(dir.join(file))?;
+            let mut data = vec![0f32; bytes.len() / 4];
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            out.insert(name.clone(), crate::tensor::Tensor::new(shape, data));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn iospec_sizes() {
+        let s = IoSpec { name: "x".into(), dtype: DType::F32, dims: vec![8, 64] };
+        assert_eq!(s.elems(), 512);
+        assert_eq!(s.bytes(), 2048);
+    }
+}

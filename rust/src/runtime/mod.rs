@@ -1,0 +1,92 @@
+//! Runtime: PJRT loading/execution of the AOT artifacts (L2 -> L3 bridge).
+//!
+//! - `manifest` — the artifact interface contract written by `aot.py`
+//! - `value`    — Send-able tensors crossing device threads
+//! - `device`   — a device thread owning a PJRT client + resident buffers
+//!
+//! `Runtime` wires them together: it owns the manifest and the *server*
+//! device (the paper's GPU hosting the base model); worker devices are
+//! spawned by `coordinator::offload`.
+
+pub mod device;
+pub mod manifest;
+pub mod value;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+pub use device::{Device, ExecResult, Input, OutputPlan};
+pub use manifest::{ArtifactSpec, DType, IoSpec, Manifest, SizeConfig};
+pub use value::{IntTensor, Value};
+
+/// Cloning shares the same server device thread (and its executable
+/// cache) — quality benches reuse one device across arms; memory
+/// benches construct fresh `Runtime`s so residency is per-run.
+#[derive(Clone)]
+pub struct Runtime {
+    pub manifest: Arc<Manifest>,
+    pub server: Device,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Arc::new(Manifest::load(Path::new(artifacts_dir))?);
+        let server = Device::spawn("server", manifest.clone())?;
+        Ok(Runtime { manifest, server })
+    }
+
+    /// Spawn an additional device thread (a "low-cost device").
+    pub fn spawn_device(&self, name: &str) -> Result<Device> {
+        Device::spawn(name, self.manifest.clone())
+    }
+
+    /// Assemble positional inputs for `artifact` by looking each input
+    /// name up through `lookup`.
+    pub fn assemble(
+        &self,
+        artifact: &str,
+        mut lookup: impl FnMut(&IoSpec) -> Result<Input>,
+    ) -> Result<Vec<Input>> {
+        let spec = self.manifest.artifact(artifact)?;
+        spec.inputs.iter().map(|io| {
+            lookup(io).map_err(|e| anyhow!("{artifact} input '{}': {e}", io.name))
+        }).collect()
+    }
+
+    /// Execute with named fetch outputs; returns name -> Value.
+    pub fn execute_fetch(
+        &self,
+        device: &Device,
+        artifact: &str,
+        inputs: Vec<Input>,
+        fetch_names: &[&str],
+    ) -> Result<(BTreeMap<String, Value>, ExecResult)> {
+        let spec = self.manifest.artifact(artifact)?;
+        let fetch: Vec<usize> = fetch_names
+            .iter()
+            .map(|n| spec.output_index(n))
+            .collect::<Result<_>>()?;
+        let plan = OutputPlan { keep: vec![], fetch };
+        let res = device.execute(artifact, inputs, plan)?;
+        let mut out = BTreeMap::new();
+        for (idx, v) in &res.fetched {
+            out.insert(spec.outputs[*idx].clone(), v.clone());
+        }
+        Ok((out, res))
+    }
+
+    /// Execute fetching ALL outputs.
+    pub fn execute_all(
+        &self,
+        device: &Device,
+        artifact: &str,
+        inputs: Vec<Input>,
+    ) -> Result<(BTreeMap<String, Value>, ExecResult)> {
+        let spec = self.manifest.artifact(artifact)?;
+        let names: Vec<&str> = spec.outputs.iter().map(|s| s.as_str()).collect();
+        self.execute_fetch(device, artifact, inputs, &names)
+    }
+}

@@ -1,0 +1,129 @@
+//! `Value` — the typed array that crosses device-thread boundaries.
+//!
+//! PJRT `Literal`s wrap raw pointers and are !Send, so only `Value`s
+//! (plain `Vec`-backed tensors) move between threads. Every crossing is
+//! an explicit host copy — exactly the transfer the paper's offload
+//! model charges for, so the transfer ledger falls out of the type
+//! system.
+
+use crate::tensor::Tensor;
+
+/// Integer tensor (tokens / targets / labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            Value::F32(t) => t.bytes(),
+            Value::I32(t) => t.bytes(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Tensor> {
+        match self {
+            Value::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => anyhow::bail!("expected f32 value, got i32"),
+        }
+    }
+
+    /// Scalar f32 convenience (loss outputs).
+    pub fn scalar_f32(&self) -> anyhow::Result<f32> {
+        match self {
+            Value::F32(t) if t.len() == 1 => Ok(t.data()[0]),
+            other => anyhow::bail!("expected scalar f32, got shape {:?}", other.shape()),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+/// View a POD slice as bytes (f32/i32 only; used for Literal building).
+pub fn as_bytes<T: Copy>(xs: &[T]) -> &[u8] {
+    // SAFETY: f32/i32 are plain-old-data with no padding.
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let v: Value = Tensor::zeros(&[2, 3]).into();
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.bytes(), 24);
+        assert!(v.as_f32().is_some());
+        let i: Value = IntTensor::new(vec![4], vec![1, 2, 3, 4]).into();
+        assert_eq!(i.bytes(), 16);
+        assert!(i.as_f32().is_none());
+    }
+
+    #[test]
+    fn scalar() {
+        let v: Value = Tensor::scalar(3.5).into();
+        assert_eq!(v.scalar_f32().unwrap(), 3.5);
+        let w: Value = Tensor::zeros(&[2]).into();
+        assert!(w.scalar_f32().is_err());
+    }
+
+    #[test]
+    fn bytes_view() {
+        let xs = [1.0f32, 2.0];
+        assert_eq!(as_bytes(&xs).len(), 8);
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal dense f32 tensor — the "low-cost device" native math substrate.
+//!
+//! ColA's worker devices are CPUs; their native update path (surrogate
+//! fit + optimizer, `adapters::`) runs on this type, and it is also the
+//! interchange value between device threads (PJRT `Literal`s are !Send,
+//! so only `Tensor`s cross thread boundaries — which doubles as the
+//! transfer-size ledger the memory accountant charges).
+//!
+//! Row-major, shapes up to rank 4. The matmul is a blocked ikj kernel —
+//! see `matmul` for the hot-path notes (EXPERIMENTS.md §Perf).
+
+pub mod ops;
+
+pub use ops::*;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|i| f(i)).collect(),
+        }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::rng::Rng) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes (the unit of the memory accountant / transfer model).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// (rows, cols) of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "want rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Flatten all leading dims into rows: (.., d) -> (n, d).
+    pub fn to_rows(self) -> Self {
+        let d = *self.shape.last().expect("rank >= 1");
+        let n = self.data.len() / d;
+        self.reshape(&[n, d])
+    }
+
+    /// Select a contiguous row range of a rank-2 tensor.
+    pub fn rows(&self, start: usize, end: usize) -> Tensor {
+        let (n, d) = self.dims2();
+        assert!(start <= end && end <= n);
+        Tensor::new(vec![end - start, d], self.data[start * d..end * d].to_vec())
+    }
+
+    /// Concatenate rank-2 tensors along rows.
+    pub fn cat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let d = parts[0].dims2().1;
+        let mut data = Vec::with_capacity(parts.iter().map(|t| t.len()).sum());
+        let mut n = 0;
+        for p in parts {
+            assert_eq!(p.dims2().1, d);
+            n += p.dims2().0;
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(vec![n, d], data)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// allclose with combined rtol/atol (numpy semantics).
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_bytes() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.bytes(), 48);
+        assert_eq!(t.dims2(), (3, 4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn rows_and_cat() {
+        let a = Tensor::from_fn(&[4, 2], |i| i as f32);
+        let top = a.rows(0, 2);
+        let bot = a.rows(2, 4);
+        assert_eq!(Tensor::cat_rows(&[&top, &bot]), a);
+    }
+
+    #[test]
+    fn reshape_flatten() {
+        let t = Tensor::from_fn(&[2, 3, 4], |i| i as f32);
+        let r = t.clone().to_rows();
+        assert_eq!(r.shape(), &[6, 4]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(vec![2], vec![1.0, 100.0]);
+        let b = Tensor::new(vec![2], vec![1.0 + 1e-6, 100.0 + 1e-4]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::new(vec![2], vec![1.1, 100.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+}

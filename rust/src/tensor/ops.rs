@@ -1,0 +1,228 @@
+//! Linear-algebra ops for the native worker path.
+//!
+//! `matmul` is the worker hot path (the surrogate-fit contractions). It
+//! uses an ikj loop order with a column-blocked inner kernel so the
+//! innermost loop is a contiguous axpy over the output row — this
+//! auto-vectorizes well. Perf iterations are logged in EXPERIMENTS.md
+//! §Perf.
+
+use super::Tensor;
+
+const BLOCK_J: usize = 256;
+
+/// C = A @ B. A: (m, k), B: (k, n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for j0 in (0..n).step_by(BLOCK_J) {
+        let j1 = (j0 + BLOCK_J).min(n);
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in 0..k {
+                let av = ad[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                for j in j0..j1 {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// C = A^T @ B. A: (k, m), B: (k, n) -> (m, n). Avoids materializing A^T.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// C = A @ B^T. A: (m, k), B: (n, k) -> (m, n). Dot-product kernel.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (n, k2) = b.dims2();
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Transpose a rank-2 tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = a.dims2();
+    let ad = a.data();
+    Tensor::from_fn(&[n, m], |i| {
+        let (r, c) = (i / m, i % m);
+        ad[c * n + r]
+    })
+}
+
+/// out = a + b (elementwise).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect();
+    Tensor::new(a.shape().to_vec(), data)
+}
+
+/// out = a - b.
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let data = a.data().iter().zip(b.data()).map(|(x, y)| x - y).collect();
+    Tensor::new(a.shape().to_vec(), data)
+}
+
+/// a += alpha * b, in place.
+pub fn axpy(a: &mut Tensor, alpha: f32, b: &Tensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += alpha * y;
+    }
+}
+
+/// out = alpha * a.
+pub fn scale(a: &Tensor, alpha: f32) -> Tensor {
+    Tensor::new(a.shape().to_vec(), a.data().iter().map(|x| alpha * x).collect())
+}
+
+/// in-place scale.
+pub fn scale_mut(a: &mut Tensor, alpha: f32) {
+    for x in a.data_mut() {
+        *x *= alpha;
+    }
+}
+
+/// relu(a).
+pub fn relu(a: &Tensor) -> Tensor {
+    Tensor::new(a.shape().to_vec(), a.data().iter().map(|x| x.max(0.0)).collect())
+}
+
+/// Column-sum of a rank-2 tensor -> (n,).
+pub fn col_sum(a: &Tensor) -> Tensor {
+    let (m, n) = a.dims2();
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += a.data()[i * n + j];
+        }
+    }
+    Tensor::new(vec![n], out)
+}
+
+/// Add a row vector to every row: a (m,n) + v (n,).
+pub fn add_row(a: &Tensor, v: &Tensor) -> Tensor {
+    let (m, n) = a.dims2();
+    assert_eq!(v.len(), n);
+    let mut data = a.data().to_vec();
+    for i in 0..m {
+        for j in 0..n {
+            data[i * n + j] += v.data()[j];
+        }
+    }
+    Tensor::new(vec![m, n], data)
+}
+
+/// Frobenius norm.
+pub fn norm(a: &Tensor) -> f32 {
+    a.data().iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2();
+        let (_, n) = b.dims2();
+        Tensor::from_fn(&[m, n], |idx| {
+            let (i, j) = (idx / n, idx % n);
+            (0..k).map(|p| a.data()[i * k + p] * b.data()[p * n + j]).sum()
+        })
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 16, 300)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            assert!(matmul(&a, &b).allclose(&naive_matmul(&a, &b), 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn matmul_tn_nt_match_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[7, 9], 1.0, &mut rng);
+        assert!(matmul_tn(&a, &b).allclose(&matmul(&transpose(&a), &b), 1e-4, 1e-4));
+        let c = Tensor::randn(&[9, 5], 1.0, &mut rng);
+        let at = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        assert!(matmul_nt(&at, &c).allclose(&matmul(&at, &transpose(&c)), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(vec![3], vec![1.0, -2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![0.5, 0.5, 0.5]);
+        assert_eq!(add(&a, &b).data(), &[1.5, -1.5, 3.5]);
+        assert_eq!(sub(&a, &b).data(), &[0.5, -2.5, 2.5]);
+        assert_eq!(relu(&a).data(), &[1.0, 0.0, 3.0]);
+        assert_eq!(scale(&a, 2.0).data(), &[2.0, -4.0, 6.0]);
+        let mut c = a.clone();
+        axpy(&mut c, 2.0, &b);
+        assert_eq!(c.data(), &[2.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn col_sum_and_add_row() {
+        let a = Tensor::from_fn(&[2, 3], |i| i as f32); // [[0,1,2],[3,4,5]]
+        assert_eq!(col_sum(&a).data(), &[3.0, 5.0, 7.0]);
+        let v = Tensor::new(vec![3], vec![10.0, 20.0, 30.0]);
+        assert_eq!(add_row(&a, &v).data(), &[10.0, 21.0, 32.0, 13.0, 24.0, 35.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[6, 11], 1.0, &mut rng);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+}

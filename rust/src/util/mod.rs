@@ -1,0 +1,3 @@
+//! Small shared substrates (offline stand-ins for serde etc.).
+
+pub mod json;

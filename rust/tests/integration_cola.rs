@@ -1,0 +1,186 @@
+//! End-to-end coordinator invariants over the real artifacts:
+//!
+//! - Prop. 1 at system level: ColA(LowRank, unmerged) and coupled LoRA
+//!   follow the same loss trajectory step for step.
+//! - Merged == unmerged trajectories (Prop. 2 during training).
+//! - Offload targets (native CPU vs PJRT device) are interchangeable.
+//! - The merged server's resident memory is independent of K.
+
+use cola::config::{AdapterKind, Method, Mode, OffloadTarget, Optimizer, Task,
+                   TrainConfig};
+use cola::coordinator::Trainer;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.task = Task::Clm;
+    cfg.size = "tiny".into();
+    cfg.steps = 6;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    cfg.optimizer = Optimizer::Sgd; // exact comparisons: no moment state
+    cfg.lr = 0.05;
+    cfg.seed = 42;
+    cfg
+}
+
+fn run_losses(cfg: TrainConfig) -> Vec<f64> {
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    r.train_loss.points.iter().map(|(_, v)| *v).collect()
+}
+
+#[test]
+fn prop1_cola_lowrank_tracks_coupled_lora() {
+    let mut cola = base_cfg();
+    cola.method = Method::Cola(AdapterKind::LowRank);
+    cola.mode = Mode::Unmerged;
+    let l_cola = run_losses(cola);
+
+    let mut lora = base_cfg();
+    lora.method = Method::Lora;
+    let l_lora = run_losses(lora);
+
+    // The adapter inits differ between the python-exported LoRA tunables
+    // and the Rust-side ColA init, but both start at zero adapter output,
+    // so step-0 losses are identical and the trajectories must stay close
+    // (same gradient rule by Prop. 1; B starts at 0 so both first updates
+    // move only B... which depends on A's init). Compare with a tolerance
+    // that catches any algorithmic divergence while allowing init noise.
+    assert!((l_cola[0] - l_lora[0]).abs() < 1e-4,
+            "step0: {} vs {}", l_cola[0], l_lora[0]);
+    for (i, (a, b)) in l_cola.iter().zip(&l_lora).enumerate() {
+        assert!((a - b).abs() < 0.05, "step {i}: {a} vs {b}");
+    }
+    // and both must be decreasing overall
+    assert!(l_cola.last().unwrap() < &l_cola[0]);
+    assert!(l_lora.last().unwrap() < &l_lora[0]);
+}
+
+#[test]
+fn merged_equals_unmerged_trajectory() {
+    let mut unm = base_cfg();
+    unm.method = Method::Cola(AdapterKind::LowRank);
+    unm.mode = Mode::Unmerged;
+    let l_u = run_losses(unm);
+
+    let mut mer = base_cfg();
+    mer.method = Method::Cola(AdapterKind::LowRank);
+    mer.mode = Mode::Merged;
+    let l_m = run_losses(mer);
+
+    for (i, (a, b)) in l_u.iter().zip(&l_m).enumerate() {
+        assert!((a - b).abs() < 2e-3, "step {i}: unmerged {a} vs merged {b}");
+    }
+}
+
+#[test]
+fn offload_targets_agree() {
+    // native-CPU fit vs PJRT-artifact fit must produce the same
+    // trajectory (they implement the same Eq. 6 update).
+    let mut native = base_cfg();
+    native.method = Method::Cola(AdapterKind::LowRank);
+    native.offload = OffloadTarget::NativeCpu;
+    let l_n = run_losses(native);
+
+    let mut pjrt = base_cfg();
+    pjrt.method = Method::Cola(AdapterKind::LowRank);
+    pjrt.offload = OffloadTarget::PjrtDevice;
+    let l_p = run_losses(pjrt);
+
+    for (i, (a, b)) in l_n.iter().zip(&l_p).enumerate() {
+        assert!((a - b).abs() < 2e-3, "step {i}: native {a} vs pjrt {b}");
+    }
+}
+
+#[test]
+fn interval_reduces_update_count_but_still_learns() {
+    let mut c1 = base_cfg();
+    c1.method = Method::Cola(AdapterKind::LowRank);
+    c1.steps = 12;
+    c1.interval = 1;
+    let l1 = run_losses(c1);
+
+    let mut c4 = base_cfg();
+    c4.method = Method::Cola(AdapterKind::LowRank);
+    c4.steps = 12;
+    c4.interval = 4;
+    let l4 = run_losses(c4);
+
+    assert!(l1.last().unwrap() < &l1[0]);
+    assert!(l4.last().unwrap() < &l4[0], "interval-4 run failed to learn");
+}
+
+#[test]
+fn merged_server_memory_independent_of_users() {
+    // Tables 16-18's headline: server residency does not grow with K.
+    let mut one = base_cfg();
+    one.method = Method::Cola(AdapterKind::LowRank);
+    one.mode = Mode::Merged;
+    one.users = 1;
+    one.steps = 2;
+    let mut t1 = Trainer::new(one).unwrap();
+    let r1 = t1.run().unwrap();
+
+    let mut four = base_cfg();
+    four.method = Method::Cola(AdapterKind::LowRank);
+    four.mode = Mode::Merged;
+    four.users = 4;
+    four.steps = 2;
+    let mut t4 = Trainer::new(four).unwrap();
+    let r4 = t4.run().unwrap();
+
+    assert_eq!(r1.server_resident_bytes, r4.server_resident_bytes);
+    // while worker state grows with K
+    assert!(r4.worker_state_bytes > r1.worker_state_bytes);
+}
+
+#[test]
+fn unmerged_server_memory_grows_with_adapter_size() {
+    let mut lr = base_cfg();
+    lr.method = Method::Cola(AdapterKind::LowRank);
+    lr.mode = Mode::Unmerged;
+    lr.steps = 1;
+    let r_lr = Trainer::new(lr).unwrap().run().unwrap();
+
+    let mut lin = base_cfg();
+    lin.method = Method::Cola(AdapterKind::Linear);
+    lin.mode = Mode::Unmerged;
+    lin.steps = 1;
+    let r_lin = Trainer::new(lin).unwrap().run().unwrap();
+
+    assert!(r_lin.server_resident_bytes > r_lr.server_resident_bytes);
+    // merged-Linear drops that back to the lowrank-merged level
+    let mut lin_m = base_cfg();
+    lin_m.method = Method::Cola(AdapterKind::Linear);
+    lin_m.mode = Mode::Merged;
+    lin_m.steps = 1;
+    let r_lin_m = Trainer::new(lin_m).unwrap().run().unwrap();
+    assert!(r_lin_m.server_resident_bytes < r_lin.server_resident_bytes);
+}
+
+#[test]
+fn mlp_adapter_trains_unmerged_only() {
+    let mut cfg = base_cfg();
+    cfg.method = Method::Cola(AdapterKind::Mlp);
+    cfg.mode = Mode::Merged;
+    assert!(cfg.validate().is_err());
+
+    cfg.mode = Mode::Unmerged;
+    cfg.steps = 4;
+    let l = run_losses(cfg);
+    assert!(l.last().unwrap() <= &l[0]);
+}
+
+#[test]
+fn adapter_snapshot_roundtrip() {
+    let mut cfg = base_cfg();
+    cfg.method = Method::Cola(AdapterKind::LowRank);
+    cfg.steps = 3;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    let p = t.adapter_snapshot(0, "l0.q").unwrap();
+    assert_eq!(p.kind(), AdapterKind::LowRank);
+    // after training, B must have moved off zero
+    let b_norm = cola::tensor::norm(p.tensors()[1]);
+    assert!(b_norm > 0.0, "adapter B still zero after training");
+}

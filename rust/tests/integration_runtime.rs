@@ -1,0 +1,173 @@
+//! Runtime integration: PJRT device threads, artifact execution, and
+//! native-vs-artifact equivalence of the optimizer and fit paths.
+
+use cola::adapters::{AdapterParams, OptState, OptimizerCfg};
+use cola::rng::Rng;
+use cola::runtime::{Input, OutputPlan, Runtime, Value};
+use cola::tensor::Tensor;
+
+fn runtime() -> Runtime {
+    Runtime::load("artifacts").expect("run `make artifacts` first")
+}
+
+#[test]
+fn device_upload_read_roundtrip() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let t = Tensor::randn(&[17, 5], 1.0, &mut rng);
+    rt.server.upload("x", Value::F32(t.clone())).unwrap();
+    let back = rt.server.read("x").unwrap().into_f32().unwrap();
+    assert_eq!(back, t);
+    assert_eq!(rt.server.resident_bytes().unwrap(), t.bytes());
+    rt.server.free("x").unwrap();
+    assert_eq!(rt.server.resident_bytes().unwrap(), 0);
+    assert!(rt.server.read("x").is_err());
+}
+
+#[test]
+fn adamw_artifact_matches_native_optimizer() {
+    // The lowered adamw_n64 reference and the Rust-native AdamW must
+    // produce identical trajectories (workers can use either path).
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let n = 64;
+    let mut w_native = Tensor::randn(&[n], 1.0, &mut rng);
+    let mut w_art = w_native.clone();
+    let mut m = Tensor::zeros(&[n]);
+    let mut v = Tensor::zeros(&[n]);
+    let cfg = OptimizerCfg::adamw(0.01, 0.001);
+    let mut opt = OptState::new(&cfg, &[n]);
+
+    for t in 1..=5 {
+        let g = Tensor::randn(&[n], 1.0, &mut rng);
+        // native
+        opt.apply(&mut [&mut w_native], std::slice::from_ref(&g));
+        // artifact
+        let inputs = vec![
+            Input::Val(Value::F32(w_art.clone())),
+            Input::Val(Value::F32(g.clone())),
+            Input::Val(Value::F32(m.clone())),
+            Input::Val(Value::F32(v.clone())),
+            Input::Val(Value::F32(Tensor::scalar(t as f32))),
+            Input::Val(Value::F32(Tensor::scalar(cfg.lr))),
+            Input::Val(Value::F32(Tensor::scalar(cfg.beta1))),
+            Input::Val(Value::F32(Tensor::scalar(cfg.beta2))),
+            Input::Val(Value::F32(Tensor::scalar(cfg.eps))),
+            Input::Val(Value::F32(Tensor::scalar(cfg.weight_decay))),
+        ];
+        let plan = OutputPlan { keep: vec![], fetch: vec![0, 1, 2] };
+        let res = rt.server.execute("adamw_n64", inputs, plan).unwrap();
+        w_art = res.fetched[0].1.clone().into_f32().unwrap();
+        m = res.fetched[1].1.clone().into_f32().unwrap();
+        v = res.fetched[2].1.clone().into_f32().unwrap();
+        assert!(
+            w_native.allclose(&w_art, 1e-5, 1e-6),
+            "step {t}: max diff {}",
+            w_native.max_abs_diff(&w_art)
+        );
+    }
+}
+
+#[test]
+fn sgd_artifact_matches_native() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    let n = 64;
+    let w0 = Tensor::randn(&[n], 1.0, &mut rng);
+    let g = Tensor::randn(&[n], 1.0, &mut rng);
+    let cfg = OptimizerCfg::sgd(0.05, 0.01);
+    let mut w_native = w0.clone();
+    let mut opt = OptState::new(&cfg, &[n]);
+    opt.apply(&mut [&mut w_native], std::slice::from_ref(&g));
+
+    let inputs = vec![
+        Input::Val(Value::F32(w0)),
+        Input::Val(Value::F32(g)),
+        Input::Val(Value::F32(Tensor::scalar(cfg.lr))),
+        Input::Val(Value::F32(Tensor::scalar(cfg.weight_decay))),
+    ];
+    let plan = OutputPlan { keep: vec![], fetch: vec![0] };
+    let res = rt.server.execute("sgd_n64", inputs, plan).unwrap();
+    let w_art = res.fetched[0].1.clone().into_f32().unwrap();
+    assert!(w_native.allclose(&w_art, 1e-6, 1e-7));
+}
+
+#[test]
+fn fit_artifact_matches_native_fit_grads() {
+    // Property-style sweep: the Pallas fit artifact and the native Rust
+    // contractions agree across random adapters/data (the two offload
+    // arms are interchangeable).
+    let rt = runtime();
+    for seed in [1u64, 7, 23, 99] {
+        let mut rng = Rng::new(seed);
+        let (d, rows) = (128usize, 512usize);
+        let a = Tensor::randn(&[d, 8], 0.2, &mut rng);
+        let b = Tensor::randn(&[8, d], 0.2, &mut rng);
+        let params = AdapterParams::LowRank { a: a.clone(), b: b.clone() };
+        let x = Tensor::randn(&[rows, d], 1.0, &mut rng);
+        let ghat = Tensor::randn(&[rows, d], 1.0, &mut rng);
+
+        let native = params.fit_grads(&x, &ghat);
+
+        let inputs = vec![
+            Input::Val(Value::F32(x)),
+            Input::Val(Value::F32(ghat)),
+            Input::Val(Value::F32(a)),
+            Input::Val(Value::F32(b)),
+        ];
+        let plan = OutputPlan { keep: vec![], fetch: vec![0, 1] };
+        let res = rt
+            .server
+            .execute("fit_lowrank_128x128_n512", inputs, plan)
+            .unwrap();
+        let da = res.fetched[0].1.clone().into_f32().unwrap();
+        let db = res.fetched[1].1.clone().into_f32().unwrap();
+        assert!(native[0].allclose(&da, 1e-3, 1e-3),
+                "seed {seed} dA diff {}", native[0].max_abs_diff(&da));
+        assert!(native[1].allclose(&db, 1e-3, 1e-3),
+                "seed {seed} dB diff {}", native[1].max_abs_diff(&db));
+    }
+}
+
+#[test]
+fn execute_keeps_outputs_resident() {
+    let rt = runtime();
+    let mut rng = Rng::new(5);
+    let n = 64;
+    let inputs = vec![
+        Input::Val(Value::F32(Tensor::randn(&[n], 1.0, &mut rng))),
+        Input::Val(Value::F32(Tensor::randn(&[n], 1.0, &mut rng))),
+        Input::Val(Value::F32(Tensor::scalar(0.1))),
+        Input::Val(Value::F32(Tensor::scalar(0.0))),
+    ];
+    let plan = OutputPlan { keep: vec![(0, "w2".into())], fetch: vec![] };
+    rt.server.execute("sgd_n64", inputs, plan).unwrap();
+    let kept = rt.server.read("w2").unwrap();
+    assert_eq!(kept.shape(), &[n]);
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let rt = runtime();
+    let err = rt
+        .server
+        .execute("no_such_artifact", vec![], OutputPlan::default())
+        .unwrap_err();
+    assert!(format!("{err}").contains("no_such_artifact"));
+}
+
+#[test]
+fn missing_resident_buffer_is_clean_error() {
+    let rt = runtime();
+    let inputs = vec![
+        Input::Ref("nope".into()),
+        Input::Val(Value::F32(Tensor::zeros(&[64]))),
+        Input::Val(Value::F32(Tensor::scalar(0.1))),
+        Input::Val(Value::F32(Tensor::scalar(0.0))),
+    ];
+    let err = rt
+        .server
+        .execute("sgd_n64", inputs, OutputPlan { keep: vec![], fetch: vec![0] })
+        .unwrap_err();
+    assert!(format!("{err}").contains("nope"));
+}

@@ -1,0 +1,146 @@
+//! Task-level integration: every task family trains through the full
+//! stack (artifacts -> server device -> buffers -> workers -> update).
+
+use cola::config::{AdapterKind, Method, Mode, Task, TrainConfig};
+use cola::coordinator::{Driver, FtaasService, Trainer};
+use cola::runtime::Runtime;
+
+fn cfg(task: Task, method: Method) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.task = task;
+    c.size = "tiny".into();
+    c.method = method;
+    c.steps = 8;
+    c.eval_every = 0;
+    c.eval_batches = 2;
+    c.lr = 1e-3;
+    c
+}
+
+#[test]
+fn seqcls_cola_trains_and_evaluates() {
+    let mut c = cfg(Task::SeqCls, Method::Cola(AdapterKind::LowRank));
+    c.dataset = "sst2".into();
+    c.steps = 12;
+    let mut t = Trainer::new(c).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.train_loss.last().unwrap() < r.train_loss.points[0].1,
+            "seqcls loss did not decrease");
+    assert!(r.eval_acc.last().is_some());
+    let acc = r.eval_acc.last().unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn seqcls_coupled_baselines_run() {
+    for m in [Method::Lora, Method::Ia3] {
+        let mut c = cfg(Task::SeqCls, m);
+        c.dataset = "mnli".into();
+        c.steps = 4;
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.train_loss.last().unwrap().is_finite(), "{m}");
+    }
+}
+
+#[test]
+fn s2s_task_trains() {
+    let mut c = cfg(Task::S2s, Method::Cola(AdapterKind::Linear));
+    c.dataset = "fpb".into();
+    c.steps = 10;
+    let mut t = Trainer::new(c).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.train_loss.last().unwrap() < r.train_loss.points[0].1);
+}
+
+#[test]
+fn clm_all_coupled_baselines_step() {
+    for m in [Method::Ft, Method::Lora, Method::Ia3, Method::Prompt,
+              Method::PTuning, Method::Prefix] {
+        let mut c = cfg(Task::Clm, m);
+        c.steps = 2;
+        let mut t = Trainer::new(c).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.train_loss.last().unwrap().is_finite(), "{m}");
+        assert!(r.trainable_params > 0, "{m}");
+    }
+}
+
+#[test]
+fn ic_model_trains_from_scratch() {
+    let rt = Runtime::load("artifacts").unwrap();
+    let driver = Driver::new_ic("mlp", "smnist", 32, 0).unwrap();
+    let mut c = TrainConfig::default();
+    c.method = Method::Cola(AdapterKind::Linear);
+    c.mode = Mode::Unmerged;
+    c.steps = 15;
+    c.batch = 32;
+    c.lr = 0.05;
+    c.optimizer = cola::config::Optimizer::Sgd;
+    c.eval_every = 0;
+    c.eval_batches = 2;
+    let mut t = Trainer::with_driver(c, rt, driver).unwrap();
+    let r = t.run().unwrap();
+    let first = r.train_loss.points[0].1;
+    let last = r.train_loss.last().unwrap();
+    assert!(last < first, "ic loss did not decrease: {first} -> {last}");
+    // accuracy should be meaningfully above chance (10%) after 15 steps
+    assert!(r.eval_acc.last().unwrap() > 0.15,
+            "acc {}", r.eval_acc.last().unwrap());
+}
+
+#[test]
+fn ic_coupled_ft_runs() {
+    let rt = Runtime::load("artifacts").unwrap();
+    let driver = Driver::new_ic("linear", "smnist", 32, 1).unwrap();
+    let mut c = TrainConfig::default();
+    c.method = Method::Ft;
+    c.steps = 10;
+    c.batch = 32;
+    c.lr = 0.05;
+    c.optimizer = cola::config::Optimizer::Sgd;
+    c.eval_every = 0;
+    let mut t = Trainer::with_driver(c, rt, driver).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.train_loss.last().unwrap() < r.train_loss.points[0].1);
+}
+
+#[test]
+fn ftaas_collaboration_service() {
+    let mut c = TrainConfig::default();
+    c.size = "tiny".into();
+    c.users = 4;
+    c.batch = 8;
+    c.workers = 2;
+    c.steps = 1;
+    c.eval_batches = 2;
+    let mut svc = FtaasService::start(c, AdapterKind::LowRank).unwrap();
+    assert_eq!(svc.jobs().len(), 4);
+    svc.run_rounds(4).unwrap();
+    let st = svc.status().unwrap();
+    assert_eq!(st.rounds_completed, 4);
+    assert!(st.last_train_loss.unwrap().is_finite());
+    // every user can download their adapter
+    for u in 0..4 {
+        let p = svc.fetch_adapter(u, "l0.q").unwrap();
+        assert_eq!(p.kind(), AdapterKind::LowRank);
+    }
+    // per-category scoring works
+    let s = svc.category_score(0).unwrap();
+    assert!((0.0..=100.0).contains(&s));
+}
+
+#[test]
+fn multi_user_requires_merged() {
+    let mut c = cfg(Task::Clm, Method::Cola(AdapterKind::LowRank));
+    c.users = 2;
+    c.mode = Mode::Unmerged;
+    assert!(Trainer::new(c).is_err());
+}
+
+#[test]
+fn bad_dataset_is_clean_error() {
+    let mut c = cfg(Task::SeqCls, Method::Lora);
+    c.dataset = "not-a-task".into();
+    assert!(Trainer::new(c).is_err());
+}

@@ -1,0 +1,193 @@
+//! Property-style invariant sweeps (hand-rolled harness; proptest is
+//! unavailable offline). Each property runs across many random seeds
+//! with shrink-free failure reporting (the seed is in the message).
+
+use cola::adapters::{AdapterParams, OptState, OptimizerCfg};
+use cola::config::AdapterKind;
+use cola::coordinator::buffer::SiteBuffer;
+use cola::data::lm::LmTaskGen;
+use cola::data::seqcls::ClsTaskGen;
+use cola::data::Split;
+use cola::merge;
+use cola::rng::Rng;
+use cola::tensor::{self, Tensor};
+
+const SEEDS: u64 = 24;
+
+fn rand_lowrank(rng: &mut Rng, d: usize, r: usize) -> AdapterParams {
+    AdapterParams::LowRank {
+        a: Tensor::randn(&[d, r], 0.3, rng),
+        b: Tensor::randn(&[r, d], 0.3, rng),
+    }
+}
+
+#[test]
+fn prop_merge_unmerge_roundtrip() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed);
+        let d = 4 + rng.below(60);
+        let r = 1 + rng.below(d.min(12));
+        let base = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let p = rand_lowrank(&mut rng, d, r);
+        let mut ws = std::collections::BTreeMap::from(
+            [("s.W".to_string(), base.clone())]);
+        merge::merge_into(&mut ws, "s", &p).unwrap();
+        merge::unmerge_from(&mut ws, "s", &p).unwrap();
+        assert!(ws["s.W"].allclose(&base, 1e-4, 1e-4), "seed {seed} d {d} r {r}");
+    }
+}
+
+#[test]
+fn prop_merged_forward_equals_adapter_forward() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let d = 4 + rng.below(48);
+        let n = 1 + rng.below(32);
+        let base = Tensor::randn(&[d, d], 1.0, &mut rng);
+        for kind in [AdapterKind::LowRank, AdapterKind::Linear] {
+            let mut p = AdapterParams::init(kind, d, d, 4, 8, &mut rng);
+            // randomize so the delta is non-trivial
+            for t in p.tensors_mut() {
+                *t = Tensor::randn(&t.shape().to_vec(), 0.2, &mut rng);
+            }
+            let x = Tensor::randn(&[n, d], 1.0, &mut rng);
+            let live = tensor::add(&tensor::matmul(&x, &base), &p.apply(&x));
+            let mut ws = std::collections::BTreeMap::from(
+                [("s.W".to_string(), base.clone())]);
+            merge::merge_into(&mut ws, "s", &p).unwrap();
+            let merged = tensor::matmul(&x, &ws["s.W"]);
+            assert!(live.allclose(&merged, 2e-3, 2e-3),
+                    "seed {seed} kind {kind:?} max {}",
+                    live.max_abs_diff(&merged));
+        }
+    }
+}
+
+#[test]
+fn prop_delta_diff_telescopes() {
+    // Applying delta_diff(p0,p1) then delta_diff(p1,p2) equals merging
+    // p2 directly — merged-mode updates never drift.
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xD1FF);
+        let d = 4 + rng.below(32);
+        let ps: Vec<_> = (0..3).map(|_| rand_lowrank(&mut rng, d, 4)).collect();
+        let base = Tensor::randn(&[d, d], 1.0, &mut rng);
+        let mut w = base.clone();
+        tensor::axpy(&mut w, 1.0, &ps[0].delta_matrix().unwrap());
+        tensor::axpy(&mut w, 1.0, &merge::delta_diff(&ps[0], &ps[1]).unwrap());
+        tensor::axpy(&mut w, 1.0, &merge::delta_diff(&ps[1], &ps[2]).unwrap());
+        let mut direct = base;
+        tensor::axpy(&mut direct, 1.0, &ps[2].delta_matrix().unwrap());
+        assert!(w.allclose(&direct, 1e-3, 1e-3), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_buffer_concat_grads_equal_summed_grads() {
+    // The interval invariant on the native fit path.
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0xB0FF);
+        let d = 4 + rng.below(24);
+        let p = rand_lowrank(&mut rng, d, 3);
+        let parts: Vec<(Tensor, Tensor)> = (0..3)
+            .map(|_| {
+                let n = 1 + rng.below(16);
+                (Tensor::randn(&[n, d], 1.0, &mut rng),
+                 Tensor::randn(&[n, d], 1.0, &mut rng))
+            })
+            .collect();
+        let mut buf = SiteBuffer::default();
+        for (x, g) in &parts {
+            buf.push(x.clone(), g.clone());
+        }
+        let (xc, gc, scale) = buf.drain().unwrap();
+        assert!((scale - 1.0 / 3.0).abs() < 1e-6);
+        let cat_grads = p.fit_grads(&xc, &gc);
+        let mut sum_grads = p.fit_grads(&parts[0].0, &parts[0].1);
+        for (x, g) in &parts[1..] {
+            for (s, gi) in sum_grads.iter_mut().zip(p.fit_grads(x, g)) {
+                tensor::axpy(s, 1.0, &gi);
+            }
+        }
+        for (c, s) in cat_grads.iter().zip(&sum_grads) {
+            assert!(c.allclose(s, 1e-3, 1e-3), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_optimizer_linear_in_lr_for_sgd() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x56D);
+        let n = 1 + rng.below(64);
+        let w0 = Tensor::randn(&[n], 1.0, &mut rng);
+        let g = Tensor::randn(&[n], 1.0, &mut rng);
+        let mut w1 = w0.clone();
+        let mut o1 = OptState::new(&OptimizerCfg::sgd(0.1, 0.0), &[n]);
+        o1.apply(&mut [&mut w1], std::slice::from_ref(&g));
+        let mut w2 = w0.clone();
+        let mut o2 = OptState::new(&OptimizerCfg::sgd(0.2, 0.0), &[n]);
+        o2.apply(&mut [&mut w2], std::slice::from_ref(&g));
+        // (w0 - w2) == 2 * (w0 - w1)
+        let d1 = tensor::sub(&w0, &w1);
+        let d2 = tensor::sub(&w0, &w2);
+        assert!(tensor::scale(&d1, 2.0).allclose(&d2, 1e-5, 1e-6), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_data_generators_deterministic_and_split_disjoint() {
+    for seed in 0..SEEDS {
+        let g = LmTaskGen::new(512, 64, seed);
+        let a = g.instruct_batch(4, None, Split::Train, seed);
+        let b = g.instruct_batch(4, None, Split::Train, seed);
+        assert_eq!(a.tokens, b.tokens, "seed {seed}");
+        let e = g.instruct_batch(4, None, Split::Eval, seed);
+        assert_ne!(a.tokens, e.tokens, "seed {seed}");
+
+        let c = ClsTaskGen::new(512, 64, seed);
+        let t0 = c.batch(8, (seed % 8) as usize, Split::Train, 0);
+        let t1 = c.batch(8, (seed % 8) as usize, Split::Train, 0);
+        assert_eq!(t0.labels, t1.labels, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_zero_ghat_means_zero_update() {
+    // If grad_hhat is zero the surrogate gradient must vanish (the model
+    // is at a stationary point for that site).
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x0);
+        let d = 4 + rng.below(32);
+        for kind in [AdapterKind::LowRank, AdapterKind::Linear, AdapterKind::Mlp] {
+            let mut p = AdapterParams::init(kind, d, d, 4, 8, &mut rng);
+            for t in p.tensors_mut() {
+                *t = Tensor::randn(&t.shape().to_vec(), 0.3, &mut rng);
+            }
+            let x = Tensor::randn(&[8, d], 1.0, &mut rng);
+            let z = Tensor::zeros(&[8, d]);
+            for g in p.fit_grads(&x, &z) {
+                assert!(tensor::norm(&g) < 1e-5, "seed {seed} kind {kind:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fit_grads_scale_linearly_in_ghat() {
+    // Surrogate gradients are linear in grad_hhat for linear-in-input
+    // adapters (exactness backbone of Prop. 1).
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed ^ 0x11);
+        let d = 4 + rng.below(24);
+        let p = rand_lowrank(&mut rng, d, 4);
+        let x = Tensor::randn(&[8, d], 1.0, &mut rng);
+        let g = Tensor::randn(&[8, d], 1.0, &mut rng);
+        let g2 = tensor::scale(&g, 3.0);
+        let gr1 = p.fit_grads(&x, &g);
+        let gr2 = p.fit_grads(&x, &g2);
+        for (a, b) in gr1.iter().zip(&gr2) {
+            assert!(tensor::scale(a, 3.0).allclose(b, 1e-3, 1e-3), "seed {seed}");
+        }
+    }
+}
