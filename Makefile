@@ -1,0 +1,44 @@
+# ColA build entry points.
+#
+#   make ci        — mirror the CI pipeline locally (fmt, clippy, build, test)
+#   make build     — hermetic release build (native backend, no Python/XLA)
+#   make test      — run the test suite
+#   make bench     — run the paper's table/figure benches (results/ *.md+csv)
+#   make artifacts — OPTIONAL: AOT-lower the JAX graphs to artifacts/
+#                    (requires Python + JAX; only needed for the PJRT
+#                    backend, `cargo build --features xla`)
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: ci build test fmt clippy bench artifacts clean
+
+ci: fmt clippy build test
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+BENCHES = table1_complexity table2_seqcls table3_s2s table4_collab \
+          table6_clm table9_scratch table10_compute fig_interval
+
+bench:
+	@for b in $(BENCHES); do \
+		echo "== bench $$b"; \
+		$(CARGO) bench --bench $$b -- --quick || exit 1; \
+	done
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf results

@@ -10,10 +10,14 @@ use cola::coordinator::{Driver, RunReport, Trainer};
 use cola::runtime::Runtime;
 
 /// One shared server device for all quality arms in a bench process —
-/// the XLA executable cache is reused, so each artifact compiles once.
+/// the backend's caches are reused (XLA executables compile once under
+/// `--features xla`; the native backend shares one buffer store).
 pub fn shared_runtime() -> &'static Runtime {
     static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| Runtime::load("artifacts").expect("make artifacts"))
+    RT.get_or_init(|| {
+        Runtime::load("artifacts").expect("runtime init (stale artifacts/? \
+                                           delete it or re-run `make artifacts`)")
+    })
 }
 
 /// The quality-table method grid (Tables 2/3/6): every coupled baseline

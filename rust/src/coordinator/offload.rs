@@ -295,10 +295,12 @@ fn run_fit(st: &mut WorkerState, id: usize, job: FitJob) -> Result<FitResult> {
     })
 }
 
-/// The "offload to low-end GPU" arm: run the lowered fit artifact on the
-/// worker's own PJRT device. Artifact name encodes (kind, dims, rows);
-/// the buffer is padded with zero rows up to the lowered row count
-/// (zero rows are gradient-neutral — tested in python/tests).
+/// The "offload to low-end GPU" arm: run the fit artifact on the
+/// worker's own execution device (PJRT under `--features xla`, the
+/// native executor otherwise — the two are asserted equivalent in
+/// `rust/tests/`). Artifact name encodes (kind, dims, rows); the buffer
+/// is padded with zero rows up to the lowered row count (zero rows are
+/// gradient-neutral — tested in python/tests).
 fn pjrt_fit_grads(st: &mut WorkerState, params: &AdapterParams, job: &FitJob)
                   -> Result<Vec<Tensor>> {
     if st.pjrt.is_none() {

@@ -1,21 +1,33 @@
 //! # ColA: Collaborative Adaptation with Gradient Learning
 //!
 //! A production-grade reproduction of *ColA: Collaborative Adaptation
-//! with Gradient Learning* (Diao et al., 2024) as a three-layer
-//! Rust + JAX + Pallas system:
+//! with Gradient Learning* (Diao et al., 2024) as a three-layer system:
 //!
 //! - **L3 (this crate)** — the FTaaS coordinator: server device hosting
 //!   the base model, Gradient Offloading to low-cost worker devices,
 //!   adaptation-interval buffering, Prop.-2 parameter merging, a memory
 //!   accountant, synthetic task generators, and the full bench suite
 //!   regenerating every table/figure of the paper.
-//! - **L2 (python/compile, build time)** — JAX graphs AOT-lowered to
-//!   HLO text (`artifacts/`), executed here via PJRT.
+//! - **L2 (`runtime`)** — execution of the artifact contract. Two
+//!   interchangeable backends:
+//!   - [`runtime::native`] (default): a hermetic pure-Rust executor that
+//!     implements every artifact in the manifest — the decoupled fwd/bwd
+//!     transformer graphs, coupled PEFT baselines, IC models, surrogate
+//!     `fit_step`s and optimizer references — directly on
+//!     [`tensor::Tensor`]. No Python, no XLA, no artifacts directory.
+//!   - `runtime::device` (`--features xla`): PJRT execution of JAX
+//!     graphs AOT-lowered to HLO by `make artifacts` (Python + JAX
+//!     build-time only; requires the `xla` bindings crate).
 //! - **L1 (python/compile/kernels, build time)** — Pallas kernels for
-//!   the adapter-apply and surrogate-fit hot spots.
+//!   the adapter-apply and surrogate-fit hot spots, with pure-jnp
+//!   references (`ref.py`) that double as the spec for
+//!   [`runtime::native::kernels`].
 //!
-//! Python never runs at serving/training time: `make artifacts` once,
-//! then the `cola` binary is self-contained.
+//! Backend selection is automatic: `Runtime::load` uses the AOT
+//! artifacts when `artifacts/manifest.json` exists (and the `xla`
+//! feature is on), and synthesizes the built-in native manifest
+//! otherwise — so a clean checkout with only stable Rust installed
+//! builds, tests and trains end to end.
 //!
 //! Start at [`coordinator::Trainer`] (Algorithm 1) and
 //! [`coordinator::FtaasService`] (Figure 1).

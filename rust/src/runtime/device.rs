@@ -1,4 +1,4 @@
-//! Device thread: the unit of "a device" in the FTaaS topology.
+//! PJRT device thread (the `--features xla` backend).
 //!
 //! PJRT types (`PjRtClient`, `Literal`, executables) are !Send — each
 //! device thread owns its own client, its executable cache, and a store
@@ -6,52 +6,23 @@
 //! are never re-uploaded per step). The rest of the system talks to it
 //! through a channel protocol with plain `Value`s, which makes every
 //! host<->device transfer explicit and measurable.
+//!
+//! This module only compiles under `--features xla` and additionally
+//! requires the `xla` PJRT bindings as a dependency plus the AOT
+//! artifacts on disk (`make artifacts`). The default build uses
+//! `runtime::native` instead.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::Manifest;
 use super::value::{as_bytes, IntTensor, Value};
+use super::{ExecResult, Input, OutputPlan};
 use crate::tensor::Tensor;
-
-/// One positional input to an execution.
-#[derive(Clone, Debug)]
-pub enum Input {
-    /// a named buffer resident on the device
-    Ref(String),
-    /// an inline value (uploaded for this call)
-    Val(Value),
-}
-
-/// What to do with each output of an execution.
-#[derive(Clone, Debug, Default)]
-pub struct OutputPlan {
-    /// output index -> keep resident on the device under this name
-    pub keep: Vec<(usize, String)>,
-    /// output indices to return to the caller as Values
-    pub fetch: Vec<usize>,
-}
-
-#[derive(Debug)]
-pub struct ExecResult {
-    /// (output index, value) for every fetched index
-    pub fetched: Vec<(usize, Value)>,
-    /// pure execute wall time on the device
-    pub exec_time: Duration,
-    /// one-time XLA compile on first use of the artifact (0 afterwards)
-    pub compile_time: Duration,
-    /// host->device input literal construction time
-    pub upload_time: Duration,
-    /// device->host output conversion time (tuple decompose + to_vec)
-    pub fetch_time: Duration,
-    /// bytes uploaded (inline inputs) and downloaded (fetched outputs)
-    pub bytes_up: usize,
-    pub bytes_down: usize,
-}
 
 enum Cmd {
     Upload(String, Value, Sender<Result<()>>),
@@ -68,50 +39,53 @@ enum Cmd {
     Shutdown,
 }
 
-/// Handle to a device thread. Cloneable and Send.
+/// Handle to a PJRT device thread. Cloneable, Send and Sync (the channel
+/// sender is mutex-wrapped so handles can live in shared statics).
 #[derive(Clone)]
-pub struct Device {
-    tx: Sender<Cmd>,
+pub struct PjrtDevice {
+    tx: Arc<Mutex<Sender<Cmd>>>,
     name: Arc<String>,
 }
 
-impl Device {
+impl PjrtDevice {
     /// Spawn a PJRT CPU device thread serving artifacts from `manifest`.
-    pub fn spawn(name: &str, manifest: Arc<Manifest>) -> Result<Device> {
+    pub fn spawn(name: &str, manifest: Arc<Manifest>) -> Result<PjrtDevice> {
         let (tx, rx) = channel::<Cmd>();
         let thread_name = format!("device-{name}");
         std::thread::Builder::new()
             .name(thread_name)
             .spawn(move || device_main(rx, manifest))
             .context("spawning device thread")?;
-        Ok(Device { tx, name: Arc::new(name.to_string()) })
+        Ok(PjrtDevice {
+            tx: Arc::new(Mutex::new(tx)),
+            name: Arc::new(name.to_string()),
+        })
     }
 
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        tx.send(cmd).map_err(|_| anyhow!("device {} gone", self.name))
+    }
+
     pub fn upload(&self, name: &str, value: Value) -> Result<()> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Cmd::Upload(name.to_string(), value, tx))
-            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        self.send(Cmd::Upload(name.to_string(), value, tx))?;
         rx.recv()?
     }
 
     pub fn read(&self, name: &str) -> Result<Value> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Cmd::Read(name.to_string(), tx))
-            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        self.send(Cmd::Read(name.to_string(), tx))?;
         rx.recv()?
     }
 
     pub fn free(&self, name: &str) -> Result<()> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Cmd::Free(name.to_string(), tx))
-            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        self.send(Cmd::Free(name.to_string(), tx))?;
         rx.recv()?
     }
 
@@ -122,27 +96,23 @@ impl Device {
         plan: OutputPlan,
     ) -> Result<ExecResult> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Cmd::Execute {
-                artifact: artifact.to_string(),
-                inputs,
-                plan,
-                reply: tx,
-            })
-            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        self.send(Cmd::Execute {
+            artifact: artifact.to_string(),
+            inputs,
+            plan,
+            reply: tx,
+        })?;
         rx.recv()?
     }
 
     pub fn resident_bytes(&self) -> Result<usize> {
         let (tx, rx) = channel();
-        self.tx
-            .send(Cmd::ResidentBytes(tx))
-            .map_err(|_| anyhow!("device {} gone", self.name))?;
+        self.send(Cmd::ResidentBytes(tx))?;
         Ok(rx.recv()?)
     }
 
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Cmd::Shutdown);
+        let _ = self.send(Cmd::Shutdown);
     }
 }
 
@@ -157,7 +127,7 @@ fn device_main(rx: Receiver<Cmd>, manifest: Arc<Manifest>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
-            log::error!("device: PJRT client failed: {e}");
+            eprintln!("device: PJRT client failed: {e}");
             return;
         }
     };

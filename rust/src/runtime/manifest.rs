@@ -4,6 +4,11 @@
 //! HLO module, the positional input list (name, dtype, dims) and output
 //! names. The Rust side never guesses shapes — everything is looked up
 //! here, and input assembly is by name.
+//!
+//! When no `artifacts/` directory exists the same contract is synthesized
+//! natively (`runtime::native::builtin`) so the crate is self-contained:
+//! artifact names, input orders and output names are identical between
+//! the two sources, which is what lets `runtime::native` execute them.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -24,6 +29,13 @@ impl DType {
             "float32" => Ok(DType::F32),
             "int32" => Ok(DType::I32),
             other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
         }
     }
 
@@ -93,14 +105,46 @@ pub struct Manifest {
     pub rank: usize,
     pub mlp_hidden: usize,
     pub n_classes_seqcls: usize,
+    /// true when parsed from `artifacts/manifest.json` (AOT build); false
+    /// for the built-in native manifest. Drives backend selection.
+    pub from_disk: bool,
 }
 
 impl Manifest {
+    /// Load the manifest, preferring the on-disk AOT contract: if
+    /// `dir/manifest.json` exists it is parsed (errors are actionable);
+    /// otherwise the built-in native manifest is synthesized — no Python,
+    /// no XLA toolchain required.
+    pub fn load_or_builtin(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(crate::runtime::native::builtin::builtin_manifest(dir))
+        }
+    }
+
+    /// Strict disk load of an AOT-generated manifest.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let src = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
-        let j = Json::parse(&src).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {path:?} — run `make artifacts` (Python + JAX) to \
+                 regenerate it, or delete the {dir:?} directory to fall back \
+                 to the built-in native backend"
+            )
+        })?;
+        Self::parse(&src, dir).with_context(|| {
+            format!(
+                "parsing {path:?} — the artifacts directory looks stale or \
+                 corrupt; re-run `make artifacts`, or delete {dir:?} to fall \
+                 back to the built-in native backend"
+            )
+        })
+    }
+
+    /// Parse a manifest JSON document. `dir` roots the artifact files.
+    pub fn parse(src: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("manifest json: {e}"))?;
 
         let mut artifacts = BTreeMap::new();
         for (name, spec) in j
@@ -119,6 +163,9 @@ impl Manifest {
                 .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
             {
                 let t = entry.as_arr().ok_or_else(|| anyhow!("bad input entry"))?;
+                if t.len() < 3 {
+                    bail!("artifact {name}: malformed input entry");
+                }
                 inputs.push(IoSpec {
                     name: t[0].as_str().unwrap_or_default().to_string(),
                     dtype: DType::parse(t[1].as_str().unwrap_or_default())?,
@@ -181,7 +228,71 @@ impl Manifest {
                 .get("n_classes_seqcls")
                 .and_then(Json::as_usize)
                 .unwrap_or(4),
+            from_disk: true,
         })
+    }
+
+    /// Serialize back to the `manifest.json` document shape (used by the
+    /// round-trip tests; artifact files are recorded by their base name).
+    pub fn to_json_string(&self) -> String {
+        let mut arts = BTreeMap::new();
+        for (name, spec) in &self.artifacts {
+            let mut obj = BTreeMap::new();
+            let file = spec
+                .file
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            obj.insert("file".to_string(), Json::Str(file));
+            obj.insert(
+                "inputs".to_string(),
+                Json::Arr(
+                    spec.inputs
+                        .iter()
+                        .map(|io| {
+                            Json::Arr(vec![
+                                Json::Str(io.name.clone()),
+                                Json::Str(io.dtype.name().to_string()),
+                                Json::Arr(
+                                    io.dims.iter().map(|&d| Json::Num(d as f64)).collect(),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+            obj.insert(
+                "outputs".to_string(),
+                Json::Arr(spec.outputs.iter().map(|o| Json::Str(o.clone())).collect()),
+            );
+            arts.insert(name.clone(), Json::Obj(obj));
+        }
+        let mut cfgs = BTreeMap::new();
+        for (name, c) in &self.configs {
+            let mut obj = BTreeMap::new();
+            for (k, v) in [
+                ("vocab", c.vocab),
+                ("d", c.d),
+                ("layers", c.layers),
+                ("heads", c.heads),
+                ("dff", c.dff),
+                ("seq", c.seq),
+                ("batch", c.batch),
+            ] {
+                obj.insert(k.to_string(), Json::Num(v as f64));
+            }
+            cfgs.insert(name.clone(), Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("artifacts".to_string(), Json::Obj(arts));
+        root.insert("configs".to_string(), Json::Obj(cfgs));
+        root.insert("rank".to_string(), Json::Num(self.rank as f64));
+        root.insert("mlp_hidden".to_string(), Json::Num(self.mlp_hidden as f64));
+        root.insert(
+            "n_classes_seqcls".to_string(),
+            Json::Num(self.n_classes_seqcls as f64),
+        );
+        Json::Obj(root).to_string()
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -197,16 +308,27 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no size config '{name}'"))
     }
 
-    /// Load an initial-value group exported by aot.py
-    /// (`artifacts/init/<group>/`), as name -> Tensor.
+    /// Load an initial-value group, as name -> Tensor. AOT builds read
+    /// `artifacts/init/<group>/` (exported by aot.py); the native
+    /// manifest generates the same groups deterministically in-process.
     pub fn load_init(&self, group: &str) -> Result<BTreeMap<String, crate::tensor::Tensor>> {
+        if !self.from_disk {
+            return crate::runtime::native::init::generate(self, group);
+        }
         let dir = self.dir.join("init").join(group);
-        let idx_src = std::fs::read_to_string(dir.join("index.json"))
-            .with_context(|| format!("init group {group}"))?;
+        let idx_src = std::fs::read_to_string(dir.join("index.json")).with_context(|| {
+            format!(
+                "init group '{group}' missing under {:?} — re-run `make artifacts`",
+                self.dir
+            )
+        })?;
         let idx = Json::parse(&idx_src).map_err(|e| anyhow!("init index: {e}"))?;
         let mut out = BTreeMap::new();
         for (name, entry) in idx.as_obj().ok_or_else(|| anyhow!("bad init index"))? {
-            let file = entry.get("file").and_then(Json::as_str).unwrap();
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("init group {group}: entry '{name}' has no file"))?;
             let shape: Vec<usize> = entry
                 .get("shape")
                 .and_then(Json::as_arr)
@@ -241,5 +363,27 @@ mod tests {
         let s = IoSpec { name: "x".into(), dtype: DType::F32, dims: vec![8, 64] };
         assert_eq!(s.elems(), 512);
         assert_eq!(s.bytes(), 2048);
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let src = r#"{"artifacts": {"a": {"file": "a.hlo.txt",
+            "inputs": [["x", "float32", [8, 64]], ["t", "int32", []]],
+            "outputs": ["loss"]}}, "rank": 4}"#;
+        let m = Manifest::parse(src, Path::new("arts")).unwrap();
+        assert_eq!(m.rank, 4);
+        assert!(m.from_disk);
+        let a = m.artifact("a").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.output_index("loss").unwrap(), 0);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_falls_back_to_builtin() {
+        let m = Manifest::load_or_builtin(Path::new("definitely-not-a-dir")).unwrap();
+        assert!(!m.from_disk);
+        assert!(m.artifacts.contains_key("lm_fwdbwd_tiny_lowrank"));
+        assert!(m.configs.contains_key("tiny"));
     }
 }

@@ -1,30 +1,161 @@
-//! Runtime: PJRT loading/execution of the AOT artifacts (L2 -> L3 bridge).
+//! Runtime: execution of the artifact contract (L2 -> L3 bridge).
 //!
 //! - `manifest` — the artifact interface contract written by `aot.py`
+//!   (or synthesized natively when no `artifacts/` directory exists)
 //! - `value`    — Send-able tensors crossing device threads
-//! - `device`   — a device thread owning a PJRT client + resident buffers
+//! - `native`   — the hermetic pure-Rust executor (default backend)
+//! - `device`   — PJRT device threads (`--features xla` + `make artifacts`)
 //!
-//! `Runtime` wires them together: it owns the manifest and the *server*
-//! device (the paper's GPU hosting the base model); worker devices are
-//! spawned by `coordinator::offload`.
+//! Backend selection: `Runtime::load` parses `artifacts/manifest.json`
+//! when it exists; otherwise it synthesizes the built-in manifest and
+//! every execution runs on the native backend. With the `xla` feature
+//! enabled AND artifacts on disk, devices execute the lowered HLO via
+//! PJRT instead — the two backends implement the same contract and are
+//! asserted equivalent in `rust/tests/`.
+//!
+//! `Runtime` owns the manifest and the *server* device (the paper's GPU
+//! hosting the base model); worker devices are spawned by
+//! `coordinator::offload`.
 
+#[cfg(feature = "xla")]
 pub mod device;
 pub mod manifest;
+pub mod native;
 pub mod value;
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-pub use device::{Device, ExecResult, Input, OutputPlan};
 pub use manifest::{ArtifactSpec, DType, IoSpec, Manifest, SizeConfig};
 pub use value::{IntTensor, Value};
 
-/// Cloning shares the same server device thread (and its executable
-/// cache) — quality benches reuse one device across arms; memory
-/// benches construct fresh `Runtime`s so residency is per-run.
+/// One positional input to an execution.
+#[derive(Clone, Debug)]
+pub enum Input {
+    /// a named buffer resident on the device
+    Ref(String),
+    /// an inline value (uploaded for this call)
+    Val(Value),
+}
+
+/// What to do with each output of an execution.
+#[derive(Clone, Debug, Default)]
+pub struct OutputPlan {
+    /// output index -> keep resident on the device under this name
+    pub keep: Vec<(usize, String)>,
+    /// output indices to return to the caller as Values
+    pub fetch: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct ExecResult {
+    /// (output index, value) for every fetched index
+    pub fetched: Vec<(usize, Value)>,
+    /// pure execute wall time on the device
+    pub exec_time: Duration,
+    /// one-time XLA compile on first use of the artifact (0 afterwards,
+    /// and always 0 on the native backend)
+    pub compile_time: Duration,
+    /// host->device input literal construction time
+    pub upload_time: Duration,
+    /// device->host output conversion time
+    pub fetch_time: Duration,
+    /// bytes uploaded (inline inputs) and downloaded (fetched outputs)
+    pub bytes_up: usize,
+    pub bytes_down: usize,
+}
+
+/// Handle to an execution device — the unit of "a device" in the FTaaS
+/// topology. Cloneable and Send; clones share the same buffer store.
+#[derive(Clone)]
+pub enum Device {
+    /// hermetic pure-Rust executor
+    Native(native::NativeDevice),
+    /// PJRT device thread serving AOT-lowered HLO
+    #[cfg(feature = "xla")]
+    Pjrt(device::PjrtDevice),
+}
+
+impl Device {
+    /// Spawn a device serving artifacts from `manifest`, picking the
+    /// backend the manifest was built for.
+    pub fn spawn(name: &str, manifest: Arc<Manifest>) -> Result<Device> {
+        #[cfg(feature = "xla")]
+        if manifest.from_disk {
+            return Ok(Device::Pjrt(device::PjrtDevice::spawn(name, manifest)?));
+        }
+        Ok(Device::Native(native::NativeDevice::new(name, manifest)))
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Device::Native(d) => d.name(),
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.name(),
+        }
+    }
+
+    pub fn upload(&self, name: &str, value: Value) -> Result<()> {
+        match self {
+            Device::Native(d) => d.upload(name, value),
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.upload(name, value),
+        }
+    }
+
+    pub fn read(&self, name: &str) -> Result<Value> {
+        match self {
+            Device::Native(d) => d.read(name),
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.read(name),
+        }
+    }
+
+    pub fn free(&self, name: &str) -> Result<()> {
+        match self {
+            Device::Native(d) => d.free(name),
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.free(name),
+        }
+    }
+
+    pub fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<Input>,
+        plan: OutputPlan,
+    ) -> Result<ExecResult> {
+        match self {
+            Device::Native(d) => d.execute(artifact, inputs, plan),
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.execute(artifact, inputs, plan),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> Result<usize> {
+        match self {
+            Device::Native(d) => d.resident_bytes(),
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.resident_bytes(),
+        }
+    }
+
+    pub fn shutdown(&self) {
+        match self {
+            Device::Native(_) => {}
+            #[cfg(feature = "xla")]
+            Device::Pjrt(d) => d.shutdown(),
+        }
+    }
+}
+
+/// Cloning shares the same server device (and its executable cache) —
+/// quality benches reuse one device across arms; memory benches construct
+/// fresh `Runtime`s so residency is per-run.
 #[derive(Clone)]
 pub struct Runtime {
     pub manifest: Arc<Manifest>,
@@ -32,8 +163,23 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Load a runtime. When `artifacts_dir` holds a `manifest.json` it is
+    /// parsed from disk (and, under `--features xla`, executed via PJRT);
+    /// otherwise the built-in native manifest is synthesized and every
+    /// execution runs on the hermetic pure-Rust backend.
     pub fn load(artifacts_dir: &str) -> Result<Runtime> {
-        let manifest = Arc::new(Manifest::load(Path::new(artifacts_dir))?);
+        let manifest = Arc::new(Manifest::load_or_builtin(Path::new(artifacts_dir))?);
+        #[cfg(feature = "xla")]
+        if !manifest.from_disk {
+            // once per process: benches construct many Runtimes
+            static FALLBACK_NOTE: std::sync::Once = std::sync::Once::new();
+            FALLBACK_NOTE.call_once(|| {
+                eprintln!(
+                    "runtime: no {artifacts_dir}/manifest.json — falling back to \
+                     the native backend (run `make artifacts` to enable PJRT)"
+                );
+            });
+        }
         let server = Device::spawn("server", manifest.clone())?;
         Ok(Runtime { manifest, server })
     }
@@ -51,9 +197,10 @@ impl Runtime {
         mut lookup: impl FnMut(&IoSpec) -> Result<Input>,
     ) -> Result<Vec<Input>> {
         let spec = self.manifest.artifact(artifact)?;
-        spec.inputs.iter().map(|io| {
-            lookup(io).map_err(|e| anyhow!("{artifact} input '{}': {e}", io.name))
-        }).collect()
+        spec.inputs
+            .iter()
+            .map(|io| lookup(io).map_err(|e| anyhow!("{artifact} input '{}': {e}", io.name)))
+            .collect()
     }
 
     /// Execute with named fetch outputs; returns name -> Value.

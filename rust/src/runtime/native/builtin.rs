@@ -1,0 +1,527 @@
+//! Built-in manifest: the native twin of `python/compile/aot.py`.
+//!
+//! Synthesizes the exact artifact inventory (names, positional input
+//! lists, output names) that `make artifacts` would write to
+//! `artifacts/manifest.json`, so the coordinator runs unchanged on the
+//! hermetic native backend. Any drift between this file and `aot.py` is
+//! a contract bug — the round-trip tests serialize this manifest through
+//! the JSON reader to keep both sides honest.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::super::manifest::{ArtifactSpec, DType, IoSpec, Manifest, SizeConfig};
+
+pub const RANK: usize = 8;
+pub const MLP_HIDDEN: usize = 64;
+pub const N_CLASSES_SEQCLS: usize = 4;
+pub const IMG: usize = 28;
+pub const N_CLASSES_IC: usize = 10;
+pub const PROMPT_LEN: usize = 8;
+pub const PREFIX_LEN: usize = 8;
+pub const PTUNE_HIDDEN: usize = 32;
+
+pub const BASELINE_METHODS: [&str; 6] = ["ft", "lora", "ia3", "prompt", "ptuning", "prefix"];
+pub const ADAPTER_KINDS: [&str; 3] = ["lowrank", "linear", "mlp"];
+pub const IC_MODELS: [&str; 3] = ["linear", "mlp", "cnn"];
+
+/// model.CONFIGS with batch = 8 (what aot.py echoes into the manifest).
+pub fn builtin_configs() -> BTreeMap<String, SizeConfig> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "tiny".to_string(),
+        SizeConfig { vocab: 512, d: 128, layers: 2, heads: 4, dff: 512, seq: 64, batch: 8 },
+    );
+    m.insert(
+        "small".to_string(),
+        SizeConfig { vocab: 2048, d: 256, layers: 4, heads: 8, dff: 1024, seq: 128, batch: 8 },
+    );
+    m.insert(
+        "base".to_string(),
+        SizeConfig { vocab: 4096, d: 384, layers: 8, heads: 8, dff: 1536, seq: 128, batch: 8 },
+    );
+    m
+}
+
+/// Canonical (ordered) base-weight names + shapes (model.lm_param_shapes).
+pub fn lm_param_shapes(cfg: &SizeConfig) -> Vec<(String, Vec<usize>)> {
+    let (v, d, dff, s) = (cfg.vocab, cfg.d, cfg.dff, cfg.seq);
+    let mut out = vec![
+        ("embed".to_string(), vec![v, d]),
+        ("pos".to_string(), vec![s, d]),
+    ];
+    for i in 0..cfg.layers {
+        out.push((format!("l{i}.ln1g"), vec![d]));
+        out.push((format!("l{i}.ln1b"), vec![d]));
+        out.push((format!("l{i}.wq"), vec![d, d]));
+        out.push((format!("l{i}.wk"), vec![d, d]));
+        out.push((format!("l{i}.wv"), vec![d, d]));
+        out.push((format!("l{i}.wo"), vec![d, d]));
+        out.push((format!("l{i}.ln2g"), vec![d]));
+        out.push((format!("l{i}.ln2b"), vec![d]));
+        out.push((format!("l{i}.w1"), vec![d, dff]));
+        out.push((format!("l{i}.b1"), vec![dff]));
+        out.push((format!("l{i}.w2"), vec![dff, d]));
+        out.push((format!("l{i}.b2"), vec![d]));
+    }
+    out.push(("lnfg".to_string(), vec![d]));
+    out.push(("lnfb".to_string(), vec![d]));
+    out
+}
+
+/// Ordered adapter parameter shapes for the LM q/v sites
+/// (model.adapter_param_shapes).
+pub fn lm_adapter_shapes(cfg: &SizeConfig, kind: &str) -> Vec<(String, Vec<usize>)> {
+    let d = cfg.d;
+    let mut out = Vec::new();
+    for i in 0..cfg.layers {
+        for proj in ["q", "v"] {
+            let p = format!("l{i}.{proj}");
+            match kind {
+                "lowrank" => {
+                    out.push((format!("{p}.A"), vec![d, RANK]));
+                    out.push((format!("{p}.B"), vec![RANK, d]));
+                }
+                "linear" => out.push((format!("{p}.W"), vec![d, d])),
+                "mlp" => {
+                    out.push((format!("{p}.W1"), vec![d, MLP_HIDDEN]));
+                    out.push((format!("{p}.b1"), vec![MLP_HIDDEN]));
+                    out.push((format!("{p}.W2"), vec![MLP_HIDDEN, d]));
+                    out.push((format!("{p}.b2"), vec![d]));
+                }
+                _ => {} // "none"
+            }
+        }
+    }
+    out
+}
+
+/// Ordered tunable shapes per coupled-baseline method
+/// (baselines.tunable_shapes).
+pub fn tunable_shapes(
+    cfg: &SizeConfig,
+    method: &str,
+    n_classes: Option<usize>,
+) -> Vec<(String, Vec<usize>)> {
+    let (d, dff) = (cfg.d, cfg.dff);
+    let mut out = Vec::new();
+    match method {
+        "ft" => out.extend(lm_param_shapes(cfg)),
+        "lora" => out.extend(lm_adapter_shapes(cfg, "lowrank")),
+        "ia3" => {
+            for i in 0..cfg.layers {
+                out.push((format!("l{i}.lk"), vec![d]));
+                out.push((format!("l{i}.lv"), vec![d]));
+                out.push((format!("l{i}.lff"), vec![dff]));
+            }
+        }
+        "prompt" => out.push(("prompt".to_string(), vec![PROMPT_LEN, d])),
+        "ptuning" => {
+            out.push(("anchor".to_string(), vec![PROMPT_LEN, d]));
+            out.push(("pt.W1".to_string(), vec![d, PTUNE_HIDDEN]));
+            out.push(("pt.b1".to_string(), vec![PTUNE_HIDDEN]));
+            out.push(("pt.W2".to_string(), vec![PTUNE_HIDDEN, d]));
+            out.push(("pt.b2".to_string(), vec![d]));
+        }
+        "prefix" => {
+            for i in 0..cfg.layers {
+                out.push((format!("l{i}.pk"), vec![PREFIX_LEN, d]));
+                out.push((format!("l{i}.pv"), vec![PREFIX_LEN, d]));
+            }
+        }
+        other => panic!("unknown baseline method '{other}'"),
+    }
+    if let Some(c) = n_classes {
+        out.push(("head.W".to_string(), vec![d, c]));
+    }
+    out
+}
+
+/// Ordered {site: (d_in, d_out, rows_per_image)} (ic_models.ic_site_dims).
+pub fn ic_site_dims(model: &str) -> Vec<(&'static str, (usize, usize, usize))> {
+    match model {
+        "linear" => vec![("fc", (IMG * IMG, N_CLASSES_IC, 1))],
+        "mlp" => vec![
+            ("fc1", (IMG * IMG, 128, 1)),
+            ("fc2", (128, N_CLASSES_IC, 1)),
+        ],
+        "cnn" => vec![
+            ("conv1", (9, 16, IMG * IMG)),
+            ("conv2", (16 * 9, 32, 14 * 14)),
+            ("fc", (32 * 7 * 7, N_CLASSES_IC, 1)),
+        ],
+        other => panic!("unknown ic model '{other}'"),
+    }
+}
+
+/// Ordered IC adapter shapes (ic_models.ic_adapter_shapes).
+pub fn ic_adapter_shapes(model: &str, kind: &str) -> Vec<(String, Vec<usize>)> {
+    let mut out = Vec::new();
+    for (site, (din, dout, _)) in ic_site_dims(model) {
+        match kind {
+            "lowrank" => {
+                let r = RANK.min(din).min(dout);
+                out.push((format!("{site}.A"), vec![din, r]));
+                out.push((format!("{site}.B"), vec![r, dout]));
+            }
+            "linear" => out.push((format!("{site}.W"), vec![din, dout])),
+            "mlp" => {
+                out.push((format!("{site}.W1"), vec![din, MLP_HIDDEN]));
+                out.push((format!("{site}.b1"), vec![MLP_HIDDEN]));
+                out.push((format!("{site}.W2"), vec![MLP_HIDDEN, dout]));
+                out.push((format!("{site}.b2"), vec![dout]));
+            }
+            other => panic!("unknown adapter kind '{other}'"),
+        }
+    }
+    out
+}
+
+fn f32io(name: &str, dims: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), dtype: DType::F32, dims }
+}
+
+fn i32io(name: &str, dims: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.to_string(), dtype: DType::I32, dims }
+}
+
+fn f32ios(shapes: &[(String, Vec<usize>)]) -> Vec<IoSpec> {
+    shapes.iter().map(|(n, s)| f32io(n, s.clone())).collect()
+}
+
+struct Builder {
+    dir: std::path::PathBuf,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Builder {
+    fn emit(&mut self, name: &str, inputs: Vec<IoSpec>, outputs: Vec<String>) {
+        self.artifacts.insert(
+            name.to_string(),
+            ArtifactSpec {
+                name: name.to_string(),
+                file: self.dir.join(format!("{name}.hlo.txt")),
+                inputs,
+                outputs,
+            },
+        );
+    }
+}
+
+fn lm_decoupled_outputs(layers: usize) -> Vec<String> {
+    let mut out = vec!["loss".to_string(), "acc".to_string()];
+    out.extend((0..layers).map(|i| format!("l{i}.x")));
+    out.extend((0..layers).map(|i| format!("l{i}.gq")));
+    out.extend((0..layers).map(|i| format!("l{i}.gv")));
+    out
+}
+
+fn emit_lm_fwdbwd(b: &mut Builder, name: &str, cfg: &SizeConfig, kind: &str, batch: usize) {
+    let mut inputs = f32ios(&lm_param_shapes(cfg));
+    inputs.extend(f32ios(&lm_adapter_shapes(cfg, kind)));
+    inputs.push(i32io("tokens", vec![batch, cfg.seq]));
+    inputs.push(i32io("targets", vec![batch, cfg.seq]));
+    inputs.push(f32io("mask", vec![batch, cfg.seq]));
+    b.emit(name, inputs, lm_decoupled_outputs(cfg.layers));
+}
+
+fn emit_seqcls_fwdbwd(b: &mut Builder, name: &str, cfg: &SizeConfig, kind: &str) {
+    let batch = cfg.batch;
+    let mut inputs = f32ios(&lm_param_shapes(cfg));
+    inputs.extend(f32ios(&lm_adapter_shapes(cfg, kind)));
+    inputs.push(f32io("head.W", vec![cfg.d, N_CLASSES_SEQCLS]));
+    inputs.push(i32io("tokens", vec![batch, cfg.seq]));
+    inputs.push(i32io("labels", vec![batch]));
+    inputs.push(f32io("mask", vec![batch, cfg.seq]));
+    let mut outputs = vec!["loss".to_string(), "acc".to_string()];
+    outputs.extend((0..cfg.layers).map(|i| format!("l{i}.x")));
+    outputs.push("head.x".to_string());
+    outputs.extend((0..cfg.layers).map(|i| format!("l{i}.gq")));
+    outputs.extend((0..cfg.layers).map(|i| format!("l{i}.gv")));
+    outputs.push("head.g".to_string());
+    b.emit(name, inputs, outputs);
+}
+
+fn emit_coupled_clm(b: &mut Builder, name: &str, cfg: &SizeConfig, method: &str, batch: usize) {
+    let tun = tunable_shapes(cfg, method, None);
+    let mut inputs = Vec::new();
+    if method != "ft" {
+        inputs.extend(f32ios(&lm_param_shapes(cfg)));
+    }
+    inputs.extend(f32ios(&tun));
+    inputs.push(i32io("tokens", vec![batch, cfg.seq]));
+    inputs.push(i32io("targets", vec![batch, cfg.seq]));
+    inputs.push(f32io("mask", vec![batch, cfg.seq]));
+    let mut outputs = vec!["loss".to_string(), "acc".to_string()];
+    outputs.extend(tun.iter().map(|(n, _)| format!("d.{n}")));
+    b.emit(name, inputs, outputs);
+}
+
+fn emit_coupled_seqcls(b: &mut Builder, name: &str, cfg: &SizeConfig, method: &str) {
+    let batch = cfg.batch;
+    let tun = tunable_shapes(cfg, method, Some(N_CLASSES_SEQCLS));
+    let mut inputs = Vec::new();
+    if method != "ft" {
+        inputs.extend(f32ios(&lm_param_shapes(cfg)));
+    }
+    inputs.extend(f32ios(&tun));
+    inputs.push(i32io("tokens", vec![batch, cfg.seq]));
+    inputs.push(i32io("labels", vec![batch]));
+    inputs.push(f32io("mask", vec![batch, cfg.seq]));
+    let mut outputs = vec!["loss".to_string(), "acc".to_string()];
+    outputs.extend(tun.iter().map(|(n, _)| format!("d.{n}")));
+    b.emit(name, inputs, outputs);
+}
+
+fn emit_fit(b: &mut Builder, kind: &str, d_in: usize, d_out: usize, rows: usize) {
+    let name = format!("fit_{kind}_{d_in}x{d_out}_n{rows}");
+    let mut inputs = vec![
+        f32io("x", vec![rows, d_in]),
+        f32io("ghat", vec![rows, d_out]),
+    ];
+    let outputs: Vec<String> = match kind {
+        "lowrank" => {
+            inputs.push(f32io("A", vec![d_in, RANK]));
+            inputs.push(f32io("B", vec![RANK, d_out]));
+            vec!["dA".into(), "dB".into()]
+        }
+        "linear" => {
+            inputs.push(f32io("W", vec![d_in, d_out]));
+            vec!["dW".into()]
+        }
+        "mlp" => {
+            inputs.push(f32io("W1", vec![d_in, MLP_HIDDEN]));
+            inputs.push(f32io("b1", vec![MLP_HIDDEN]));
+            inputs.push(f32io("W2", vec![MLP_HIDDEN, d_out]));
+            inputs.push(f32io("b2", vec![d_out]));
+            vec!["dW1".into(), "db1".into(), "dW2".into(), "db2".into()]
+        }
+        other => panic!("unknown fit kind '{other}'"),
+    };
+    b.emit(&name, inputs, outputs);
+}
+
+fn emit_ic(b: &mut Builder, batch: usize) {
+    for model in IC_MODELS {
+        let dims = ic_site_dims(model);
+        let img_in = f32io("images", vec![batch, IMG, IMG, 1]);
+        let lab_in = i32io("labels", vec![batch]);
+        let decoupled_outputs = |dims: &[(&str, (usize, usize, usize))]| {
+            let mut o = vec!["loss".to_string(), "acc".to_string()];
+            o.extend(dims.iter().map(|(s, _)| format!("{s}.x")));
+            o.extend(dims.iter().map(|(s, _)| format!("{s}.g")));
+            o
+        };
+        for kind in ADAPTER_KINDS {
+            let mut inputs: Vec<IoSpec> = dims
+                .iter()
+                .map(|(s, (din, dout, _))| f32io(&format!("{s}.Wbase"), vec![*din, *dout]))
+                .collect();
+            inputs.extend(f32ios(&ic_adapter_shapes(model, kind)));
+            inputs.push(img_in.clone());
+            inputs.push(lab_in.clone());
+            b.emit(&format!("ic_{model}_fwdbwd_{kind}"), inputs, decoupled_outputs(&dims));
+        }
+        let mut inputs: Vec<IoSpec> = dims
+            .iter()
+            .map(|(s, (din, dout, _))| f32io(&format!("{s}.W"), vec![*din, *dout]))
+            .collect();
+        inputs.push(img_in.clone());
+        inputs.push(lab_in.clone());
+        b.emit(&format!("ic_{model}_fwdbwd_merged"), inputs, decoupled_outputs(&dims));
+        // coupled ft / lora
+        {
+            let tun: Vec<(String, Vec<usize>)> = dims
+                .iter()
+                .map(|(s, (din, dout, _))| (format!("{s}.W"), vec![*din, *dout]))
+                .collect();
+            let mut inputs = f32ios(&tun);
+            inputs.push(img_in.clone());
+            inputs.push(lab_in.clone());
+            let mut outputs = vec!["loss".to_string(), "acc".to_string()];
+            outputs.extend(tun.iter().map(|(n, _)| format!("d.{n}")));
+            b.emit(&format!("ic_{model}_coupled_ft"), inputs, outputs);
+        }
+        {
+            let tun = ic_adapter_shapes(model, "lowrank");
+            let mut inputs: Vec<IoSpec> = dims
+                .iter()
+                .map(|(s, (din, dout, _))| f32io(&format!("{s}.Wbase"), vec![*din, *dout]))
+                .collect();
+            inputs.extend(f32ios(&tun));
+            inputs.push(img_in.clone());
+            inputs.push(lab_in.clone());
+            let mut outputs = vec!["loss".to_string(), "acc".to_string()];
+            outputs.extend(tun.iter().map(|(n, _)| format!("d.{n}")));
+            b.emit(&format!("ic_{model}_coupled_lora"), inputs, outputs);
+        }
+        // fit graphs for every site shape of this model
+        for (_, (din, dout, rows)) in &dims {
+            for kind in ADAPTER_KINDS {
+                emit_fit(b, kind, *din, *dout, batch * rows);
+            }
+        }
+    }
+}
+
+fn emit_opt_refs(b: &mut Builder) {
+    for n in [64usize, 1024] {
+        let vecio = |name: &str| f32io(name, vec![n]);
+        let sc = |name: &str| f32io(name, vec![]);
+        b.emit(
+            &format!("adamw_n{n}"),
+            vec![
+                vecio("w"), vecio("g"), vecio("m"), vecio("v"),
+                sc("t"), sc("lr"), sc("beta1"), sc("beta2"), sc("eps"), sc("wd"),
+            ],
+            vec!["w2".into(), "m2".into(), "v2".into()],
+        );
+        b.emit(
+            &format!("sgd_n{n}"),
+            vec![vecio("w"), vecio("g"), sc("lr"), sc("wd")],
+            vec!["w2".into()],
+        );
+    }
+}
+
+/// Synthesize the full built-in manifest (the native twin of
+/// `aot.py main()` with sizes tiny,small,base).
+pub fn builtin_manifest(dir: &Path) -> Manifest {
+    let configs = builtin_configs();
+    let mut b = Builder { dir: dir.to_path_buf(), artifacts: BTreeMap::new() };
+
+    for (size, cfg) in &configs {
+        let full = size != "base";
+        let kinds: &[&str] = if full {
+            &["lowrank", "linear", "mlp", "none"]
+        } else {
+            &["none", "linear"]
+        };
+        for &kind in kinds {
+            emit_lm_fwdbwd(&mut b, &format!("lm_fwdbwd_{size}_{kind}"), cfg, kind, cfg.batch);
+        }
+        {
+            // inference graph: weights + tokens -> logits
+            let mut inputs = f32ios(&lm_param_shapes(cfg));
+            inputs.push(i32io("tokens", vec![cfg.batch, cfg.seq]));
+            b.emit(&format!("lm_fwd_{size}"), inputs, vec!["logits".into()]);
+        }
+        let fit_kinds: &[&str] = if full { &["lowrank", "linear", "mlp"] } else { &["linear"] };
+        for &kind in fit_kinds {
+            emit_fit(&mut b, kind, cfg.d, cfg.d, cfg.batch * cfg.seq);
+        }
+        if size == "tiny" {
+            for kind in ["lowrank", "linear", "mlp", "none"] {
+                emit_seqcls_fwdbwd(&mut b, &format!("seqcls_fwdbwd_{size}_{kind}"), cfg, kind);
+            }
+            for meth in BASELINE_METHODS {
+                emit_coupled_clm(&mut b, &format!("coupled_clm_{size}_{meth}"), cfg, meth,
+                                 cfg.batch);
+                emit_coupled_seqcls(&mut b, &format!("coupled_seqcls_{size}_{meth}"), cfg, meth);
+            }
+            // head-site fit (B rows per batch)
+            emit_fit(&mut b, "linear", cfg.d, N_CLASSES_SEQCLS, cfg.batch);
+            // batch variants for Tables 10-18
+            for bsz in [1usize, 32] {
+                emit_lm_fwdbwd(&mut b, &format!("lm_fwdbwd_{size}_lowrank_b{bsz}"), cfg,
+                               "lowrank", bsz);
+                emit_lm_fwdbwd(&mut b, &format!("lm_fwdbwd_{size}_none_b{bsz}"), cfg,
+                               "none", bsz);
+                emit_coupled_clm(&mut b, &format!("coupled_clm_{size}_lora_b{bsz}"), cfg,
+                                 "lora", bsz);
+                emit_coupled_clm(&mut b, &format!("coupled_clm_{size}_ft_b{bsz}"), cfg,
+                                 "ft", bsz);
+                emit_fit(&mut b, "lowrank", cfg.d, cfg.d, bsz * cfg.seq);
+            }
+        }
+    }
+    emit_ic(&mut b, 32);
+    emit_opt_refs(&mut b);
+
+    Manifest {
+        dir: dir.to_path_buf(),
+        artifacts: b.artifacts,
+        configs,
+        rank: RANK,
+        mlp_hidden: MLP_HIDDEN,
+        n_classes_seqcls: N_CLASSES_SEQCLS,
+        from_disk: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_covers_driver_names() {
+        let m = builtin_manifest(Path::new("artifacts"));
+        for name in [
+            "lm_fwdbwd_tiny_lowrank",
+            "lm_fwdbwd_tiny_none",
+            "lm_fwdbwd_small_mlp",
+            "lm_fwdbwd_base_none",
+            "lm_fwdbwd_base_linear",
+            "lm_fwdbwd_tiny_lowrank_b1",
+            "lm_fwdbwd_tiny_none_b32",
+            "lm_fwd_base",
+            "seqcls_fwdbwd_tiny_linear",
+            "coupled_clm_tiny_ft",
+            "coupled_clm_tiny_prefix",
+            "coupled_clm_tiny_lora_b32",
+            "coupled_seqcls_tiny_ia3",
+            "ic_cnn_fwdbwd_lowrank",
+            "ic_mlp_fwdbwd_merged",
+            "ic_linear_coupled_ft",
+            "fit_lowrank_128x128_n512",
+            "fit_lowrank_128x128_n2048",
+            "fit_linear_128x4_n8",
+            "fit_linear_384x384_n1024",
+            "fit_mlp_9x16_n25088",
+            "adamw_n64",
+            "sgd_n1024",
+        ] {
+            assert!(m.artifacts.contains_key(name), "missing artifact {name}");
+        }
+        // base size is not 'full': no lowrank graph, no mlp fit
+        assert!(!m.artifacts.contains_key("lm_fwdbwd_base_lowrank"));
+        assert!(!m.artifacts.contains_key("fit_mlp_384x384_n1024"));
+    }
+
+    #[test]
+    fn input_orders_match_aot_contract() {
+        let m = builtin_manifest(Path::new("artifacts"));
+        let a = m.artifact("lm_fwdbwd_tiny_lowrank").unwrap();
+        // weights, then adapters, then data
+        assert_eq!(a.inputs[0].name, "embed");
+        assert_eq!(a.inputs[1].name, "pos");
+        let n_w = lm_param_shapes(m.size("tiny").unwrap()).len();
+        assert_eq!(a.inputs[n_w].name, "l0.q.A");
+        let last = a.inputs.len() - 1;
+        assert_eq!(a.inputs[last].name, "mask");
+        assert_eq!(a.inputs[last - 2].name, "tokens");
+        assert_eq!(a.outputs[0], "loss");
+        assert_eq!(a.outputs[2], "l0.x");
+        // ft has no frozen-weight inputs
+        let ft = m.artifact("coupled_clm_tiny_ft").unwrap();
+        assert_eq!(ft.inputs[0].name, "embed");
+        assert_eq!(ft.inputs.len(), n_w + 3);
+        assert!(ft.outputs.iter().any(|o| o == "d.l0.wq"));
+        // seqcls head input precedes data
+        let sc = m.artifact("seqcls_fwdbwd_tiny_none").unwrap();
+        let hw = sc.input_index("head.W").unwrap();
+        assert_eq!(sc.inputs[hw + 1].name, "tokens");
+        assert_eq!(*sc.outputs.last().unwrap(), "head.g");
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let m = builtin_manifest(Path::new("artifacts"));
+        let f = m.artifact("fit_lowrank_128x128_n512").unwrap();
+        assert_eq!(f.inputs[0].dims, vec![512, 128]);
+        assert_eq!(f.inputs[2].dims, vec![128, RANK]);
+        let o = m.artifact("adamw_n1024").unwrap();
+        assert_eq!(o.inputs[0].dims, vec![1024]);
+        assert_eq!(o.inputs[4].dims, Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,381 @@
+//! Native IC graphs: the pure-Rust twin of `python/compile/ic_models.py`.
+//!
+//! Convs are im2col + matmul (feature index = c*9 + ky*3 + kx, SAME 3x3
+//! padding) so every site is a linear site and the shared adapter
+//! apply/backward from `lm.rs` drives them — which is also what makes a
+//! conv adapter mergeable under Prop. 2.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::super::manifest::Manifest;
+use super::super::value::Value;
+use super::builtin::{self, IMG};
+use super::kernels;
+use super::lm::{adapter_apply, adapter_back, f32_in, i32_in, Named};
+use crate::tensor::{self, Tensor};
+
+pub(super) enum Variant {
+    /// frozen random base + live adapters (ic_*_fwdbwd_{kind})
+    Decoupled(String),
+    /// merged site weights (ic_*_fwdbwd_merged)
+    Merged,
+    /// coupled FT: site weights are the tunables
+    CoupledFt,
+    /// coupled LoRA: frozen base + low-rank tunables, autodiff grads
+    CoupledLora,
+}
+
+/// SAME-padded 3x3 patches: (B, H, W, C) -> (B*H*W, C*9).
+fn im2col(x: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
+    let xd = x.data();
+    let fc = c * 9;
+    let mut out = vec![0.0f32; bsz * h * w * fc];
+    for b in 0..bsz {
+        for y in 0..h {
+            for xx in 0..w {
+                let orow = ((b * h + y) * w + xx) * fc;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * c;
+                        for ch in 0..c {
+                            out[orow + ch * 9 + ky * 3 + kx] = xd[src + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![bsz * h * w, fc], out)
+}
+
+/// Backward of [`im2col`]: scatter-add patches back onto the image grid.
+fn col2im(dp: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
+    let fc = c * 9;
+    let dd = dp.data();
+    let mut out = vec![0.0f32; bsz * h * w * c];
+    for b in 0..bsz {
+        for y in 0..h {
+            for xx in 0..w {
+                let prow = ((b * h + y) * w + xx) * fc;
+                for ky in 0..3 {
+                    let sy = y as isize + ky as isize - 1;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let sx = xx as isize + kx as isize - 1;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let dst = ((b * h + sy as usize) * w + sx as usize) * c;
+                        for ch in 0..c {
+                            out[dst + ch] += dd[prow + ch * 9 + ky * 3 + kx];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![bsz * h * w, c], out)
+}
+
+/// 2x2 average pool over rows laid out (B*H*W, C) -> (B*(H/2)*(W/2), C).
+fn avgpool2(x: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
+    let (h2, w2) = (h / 2, w / 2);
+    let xd = x.data();
+    let mut out = vec![0.0f32; bsz * h2 * w2 * c];
+    for b in 0..bsz {
+        for i in 0..h2 {
+            for j in 0..w2 {
+                let orow = ((b * h2 + i) * w2 + j) * c;
+                for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let src = ((b * h + 2 * i + dy) * w + 2 * j + dx) * c;
+                    for ch in 0..c {
+                        out[orow + ch] += xd[src + ch] * 0.25;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![bsz * h2 * w2, c], out)
+}
+
+/// Backward of [`avgpool2`]: spread each pooled gradient over its 2x2.
+fn avgpool2_back(dy: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
+    let (h2, w2) = (h / 2, w / 2);
+    let dd = dy.data();
+    let mut out = vec![0.0f32; bsz * h * w * c];
+    for b in 0..bsz {
+        for i in 0..h2 {
+            for j in 0..w2 {
+                let srow = ((b * h2 + i) * w2 + j) * c;
+                for (dy_, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let dst = ((b * h + 2 * i + dy_) * w + 2 * j + dx) * c;
+                    for ch in 0..c {
+                        out[dst + ch] += dd[srow + ch] * 0.25;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![bsz * h * w, c], out)
+}
+
+struct Sites<'a> {
+    /// merged/FT mode: site -> weight
+    merged: Option<BTreeMap<&'a str, &'a Tensor>>,
+    /// decoupled/LoRA mode: site -> frozen base
+    base: Option<BTreeMap<&'a str, &'a Tensor>>,
+    a: BTreeMap<&'a str, &'a Tensor>,
+    kind: String,
+    want_grads: bool,
+}
+
+impl<'a> Sites<'a> {
+    fn fwd(&self, site: &str, x: &Tensor) -> Result<Tensor> {
+        if let Some(ws) = &self.merged {
+            let w = ws
+                .get(site)
+                .ok_or_else(|| anyhow!("missing site weight '{site}'"))?;
+            return Ok(tensor::matmul(x, w));
+        }
+        let base = self.base.as_ref().unwrap();
+        let w = base
+            .get(site)
+            .ok_or_else(|| anyhow!("missing base weight '{site}.Wbase'"))?;
+        let mut out = tensor::matmul(x, w);
+        if let Some(delta) = adapter_apply(&self.kind, &self.a, site, x)? {
+            tensor::axpy(&mut out, 1.0, &delta);
+        }
+        Ok(out)
+    }
+
+    fn back(
+        &self,
+        site: &str,
+        x: &Tensor,
+        dout: &Tensor,
+        grads: &mut BTreeMap<String, Tensor>,
+    ) -> Result<Tensor> {
+        if let Some(ws) = &self.merged {
+            let w = ws.get(site).unwrap();
+            if self.want_grads {
+                grads.insert(format!("{site}.W"), tensor::matmul_tn(x, dout));
+            }
+            return Ok(tensor::matmul_nt(dout, w));
+        }
+        let base = self.base.as_ref().unwrap();
+        let w = base.get(site).unwrap();
+        let mut dx = tensor::matmul_nt(dout, w);
+        let g = if self.want_grads { Some(&mut *grads) } else { None };
+        if let Some(dxa) = adapter_back(&self.kind, &self.a, site, x, dout, g)? {
+            tensor::axpy(&mut dx, 1.0, &dxa);
+        }
+        Ok(dx)
+    }
+}
+
+pub(super) fn run(
+    _m: &Manifest,
+    model: &str,
+    variant: Variant,
+    named: &Named,
+    need_back: bool,
+) -> Result<BTreeMap<String, Value>> {
+    let dims = builtin::ic_site_dims(model);
+    let images = f32_in(named, "images")?;
+    let labels = i32_in(named, "labels")?;
+    let bsz = images.shape()[0];
+
+    // Route inputs into site weights / adapters. In merged/FT artifacts
+    // "{site}.W" is the site weight; in decoupled/LoRA artifacts the same
+    // name is the *linear adapter* tensor, so classify by variant.
+    let w_is_site_weight = matches!(variant, Variant::Merged | Variant::CoupledFt);
+    let site_names: Vec<&str> = dims.iter().map(|(s, _)| *s).collect();
+    let mut merged: BTreeMap<&str, &Tensor> = BTreeMap::new();
+    let mut base: BTreeMap<&str, &Tensor> = BTreeMap::new();
+    let mut a: BTreeMap<&str, &Tensor> = BTreeMap::new();
+    for (k, v) in named.iter() {
+        let k: &str = *k;
+        let v: &Value = *v;
+        if k == "images" || k == "labels" {
+            continue;
+        }
+        let t = match v {
+            Value::F32(t) => t,
+            Value::I32(_) => continue,
+        };
+        if let Some(site) = k.strip_suffix(".Wbase") {
+            if site_names.contains(&site) {
+                base.insert(site, t);
+                continue;
+            }
+        }
+        if w_is_site_weight {
+            if let Some(site) = k.strip_suffix(".W") {
+                if site_names.contains(&site) {
+                    merged.insert(site, t);
+                    continue;
+                }
+            }
+        }
+        a.insert(k, t);
+    }
+
+    let (sites, grad_names): (Sites, Vec<(String, Vec<usize>)>) = match &variant {
+        Variant::Decoupled(kind) => (
+            Sites {
+                merged: None,
+                base: Some(base),
+                a,
+                kind: kind.clone(),
+                want_grads: false,
+            },
+            vec![],
+        ),
+        Variant::Merged => (
+            Sites {
+                merged: Some(merged),
+                base: None,
+                a,
+                kind: "none".into(),
+                want_grads: false,
+            },
+            vec![],
+        ),
+        Variant::CoupledFt => (
+            Sites {
+                merged: Some(merged),
+                base: None,
+                a,
+                kind: "none".into(),
+                want_grads: need_back,
+            },
+            dims.iter()
+                .map(|(s, (din, dout, _))| (format!("{s}.W"), vec![*din, *dout]))
+                .collect(),
+        ),
+        Variant::CoupledLora => (
+            Sites {
+                merged: None,
+                base: Some(base),
+                a,
+                kind: "lowrank".into(),
+                want_grads: need_back,
+            },
+            builtin::ic_adapter_shapes(model, "lowrank"),
+        ),
+    };
+    let coupled = !grad_names.is_empty();
+
+    let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
+    let mut xs: BTreeMap<String, Tensor> = BTreeMap::new();
+    let mut geps: BTreeMap<String, Tensor> = BTreeMap::new();
+
+    let (loss, acc) = match model {
+        "linear" => {
+            let x = images.clone().reshape(&[bsz, IMG * IMG]);
+            let logits = sites.fwd("fc", &x)?;
+            let (loss, acc, dlogits) = kernels::ce_labels(&logits, labels.data());
+            if need_back {
+                if coupled {
+                    sites.back("fc", &x, &dlogits, &mut grads)?;
+                }
+                geps.insert("fc.g".into(), dlogits);
+            }
+            xs.insert("fc.x".into(), x);
+            (loss, acc)
+        }
+        "mlp" => {
+            let x = images.clone().reshape(&[bsz, IMG * IMG]);
+            let s1 = sites.fwd("fc1", &x)?;
+            let hmid = tensor::relu(&s1);
+            let logits = sites.fwd("fc2", &hmid)?;
+            let (loss, acc, dlogits) = kernels::ce_labels(&logits, labels.data());
+            if need_back {
+                let dhmid = sites.back("fc2", &hmid, &dlogits, &mut grads)?;
+                let mut ds1 = dhmid;
+                kernels::relu_mask(&mut ds1, &s1);
+                if coupled {
+                    sites.back("fc1", &x, &ds1, &mut grads)?;
+                }
+                geps.insert("fc2.g".into(), dlogits);
+                geps.insert("fc1.g".into(), ds1);
+            }
+            xs.insert("fc1.x".into(), x);
+            xs.insert("fc2.x".into(), hmid);
+            (loss, acc)
+        }
+        "cnn" => {
+            let p1 = im2col(images, bsz, IMG, IMG, 1); // (B*784, 9)
+            let c1raw = sites.fwd("conv1", &p1)?; // (B*784, 16)
+            let c1 = avgpool2(&tensor::relu(&c1raw), bsz, IMG, IMG, 16); // (B*196, 16)
+            let p2 = im2col(&c1, bsz, IMG / 2, IMG / 2, 16); // (B*196, 144)
+            let c2raw = sites.fwd("conv2", &p2)?; // (B*196, 32)
+            let c2 = avgpool2(&tensor::relu(&c2raw), bsz, IMG / 2, IMG / 2, 32); // (B*49, 32)
+            let flat = c2.reshape(&[bsz, 32 * 7 * 7]);
+            let logits = sites.fwd("fc", &flat)?;
+            let (loss, acc, dlogits) = kernels::ce_labels(&logits, labels.data());
+            if need_back {
+                let dflat = sites.back("fc", &flat, &dlogits, &mut grads)?;
+                let dc2 = dflat.reshape(&[bsz * 7 * 7, 32]);
+                let mut dc2raw = avgpool2_back(&dc2, bsz, IMG / 2, IMG / 2, 32);
+                kernels::relu_mask(&mut dc2raw, &c2raw);
+                let dp2 = sites.back("conv2", &p2, &dc2raw, &mut grads)?;
+                let dc1 = col2im(&dp2, bsz, IMG / 2, IMG / 2, 16);
+                let mut dc1raw = avgpool2_back(&dc1, bsz, IMG, IMG, 16);
+                kernels::relu_mask(&mut dc1raw, &c1raw);
+                if coupled {
+                    sites.back("conv1", &p1, &dc1raw, &mut grads)?;
+                }
+                geps.insert("fc.g".into(), dlogits);
+                geps.insert("conv2.g".into(), dc2raw);
+                geps.insert("conv1.g".into(), dc1raw);
+            }
+            xs.insert("conv1.x".into(), p1);
+            xs.insert("conv2.x".into(), p2);
+            xs.insert("fc.x".into(), flat);
+            (loss, acc)
+        }
+        other => bail!("unknown ic model '{other}'"),
+    };
+
+    let mut res = BTreeMap::new();
+    res.insert("loss".to_string(), Value::F32(Tensor::scalar(loss)));
+    res.insert("acc".to_string(), Value::F32(Tensor::scalar(acc)));
+    if coupled {
+        for (name, shape) in &grad_names {
+            let g = match grads.remove(name) {
+                Some(g) => g,
+                None if !need_back => Tensor::zeros(shape),
+                None => bail!("ic coupled: backward produced no gradient for '{name}'"),
+            };
+            res.insert(format!("d.{name}"), Value::F32(g));
+        }
+    } else {
+        for (site, _) in &dims {
+            let x = xs
+                .remove(&format!("{site}.x"))
+                .ok_or_else(|| anyhow!("ic: missing x for site {site}"))?;
+            res.insert(format!("{site}.x"), Value::F32(x));
+            let g = match geps.remove(&format!("{site}.g")) {
+                Some(g) => g,
+                // eval: grad_hhat not computed and not fetched
+                None if !need_back => Tensor::zeros(&[1]),
+                None => bail!("ic: backward produced no grad_hhat for '{site}'"),
+            };
+            res.insert(format!("{site}.g"), Value::F32(g));
+        }
+    }
+    Ok(res)
+}

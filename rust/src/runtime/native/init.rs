@@ -1,0 +1,224 @@
+//! Native initial-value groups: the in-process twin of the
+//! `artifacts/init/<group>/` export from `aot.py`.
+//!
+//! Same distributions as the python exporters (zero-output adapter init,
+//! LN gains at one, fan-in-scaled normals), deterministically seeded from
+//! the group name so repeated loads return identical values. Exact bit
+//! patterns differ from the JAX export (different PRNG) — nothing in the
+//! coordinator depends on them, only on the init *structure* (e.g. B = 0
+//! so every adapter starts at zero output).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::super::manifest::Manifest;
+use super::builtin;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+fn group_seed(group: &str) -> u64 {
+    // FNV-1a over the group name: stable, well-spread seeds.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in group.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+    Tensor::randn(shape, std, rng)
+}
+
+/// LM base weights (model.init_lm_params): LN gains 1, biases 0, matrices
+/// N(0, 1/fan_in).
+fn lm_weights(shapes: &[(String, Vec<usize>)], rng: &mut Rng) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for (name, shp) in shapes {
+        let t = if name.ends_with("ln1g") || name.ends_with("ln2g") || name.ends_with("lnfg") {
+            Tensor::from_fn(shp, |_| 1.0)
+        } else if name.ends_with("ln1b")
+            || name.ends_with("ln2b")
+            || name.ends_with("lnfb")
+            || name.ends_with(".b1")
+            || name.ends_with(".b2")
+        {
+            Tensor::zeros(shp)
+        } else {
+            let std = (1.0 / shp[0] as f32).sqrt();
+            randn(shp, std, rng)
+        };
+        out.insert(name.clone(), t);
+    }
+    out
+}
+
+/// Zero-output adapter init (model.init_adapter_params /
+/// ic_models.init_ic_adapters): A/W1 ~ N(0, 1/fan_in), the rest zero.
+fn adapter_init(shapes: &[(String, Vec<usize>)], rng: &mut Rng) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for (name, shp) in shapes {
+        let t = if name.ends_with(".A") || name.ends_with(".W1") {
+            randn(shp, (1.0 / shp[0] as f32).sqrt(), rng)
+        } else {
+            Tensor::zeros(shp)
+        };
+        out.insert(name.clone(), t);
+    }
+    out
+}
+
+/// Coupled-baseline tunables (baselines.init_tunables).
+fn tunable_init(
+    shapes: &[(String, Vec<usize>)],
+    method: &str,
+    rng: &mut Rng,
+) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    for (name, shp) in shapes {
+        let t = if method == "ft" {
+            // FT starts from the pretrained stand-in; the coordinator
+            // passes those in, this group is a placeholder.
+            Tensor::zeros(shp)
+        } else if name.ends_with(".A")
+            || name.ends_with(".W1")
+            || name == "prompt"
+            || name == "anchor"
+            || name.starts_with("pt.W")
+            || name.contains(".p")
+        {
+            randn(shp, 0.1, rng)
+        } else if name.ends_with(".lk") || name.ends_with(".lv") || name.ends_with(".lff") {
+            Tensor::from_fn(shp, |_| 1.0) // IA3 starts at identity
+        } else {
+            Tensor::zeros(shp)
+        };
+        out.insert(name.clone(), t);
+    }
+    out
+}
+
+/// Generate an init group by name. Mirrors the groups `aot.py` exports.
+pub fn generate(m: &Manifest, group: &str) -> Result<BTreeMap<String, Tensor>> {
+    let mut rng = Rng::new(group_seed(group));
+
+    if let Some(size) = group.strip_prefix("lm_") {
+        let cfg = m.size(size)?;
+        return Ok(lm_weights(&builtin::lm_param_shapes(cfg), &mut rng));
+    }
+    if let Some(rest) = group.strip_prefix("adapters_") {
+        let (size, kind) = rest
+            .split_once('_')
+            .ok_or_else(|| anyhow!("bad adapter group '{group}'"))?;
+        let cfg = m.size(size)?;
+        return Ok(adapter_init(&builtin::lm_adapter_shapes(cfg, kind), &mut rng));
+    }
+    if let Some(rest) = group.strip_prefix("tunables_seqcls_") {
+        let (size, meth) = rest
+            .split_once('_')
+            .ok_or_else(|| anyhow!("bad tunables group '{group}'"))?;
+        let cfg = m.size(size)?;
+        let shapes = builtin::tunable_shapes(cfg, meth, Some(m.n_classes_seqcls));
+        return Ok(tunable_init(&shapes, meth, &mut rng));
+    }
+    if let Some(rest) = group.strip_prefix("tunables_") {
+        let (size, meth) = rest
+            .split_once('_')
+            .ok_or_else(|| anyhow!("bad tunables group '{group}'"))?;
+        let cfg = m.size(size)?;
+        let shapes = builtin::tunable_shapes(cfg, meth, None);
+        return Ok(tunable_init(&shapes, meth, &mut rng));
+    }
+    if let Some(model) = group.strip_prefix("ic_base_") {
+        // He-style random frozen base (ic_models.init_ic_base)
+        let mut out = BTreeMap::new();
+        for (site, (din, dout, _)) in builtin::ic_site_dims(model) {
+            let std = (2.0 / din as f32).sqrt();
+            out.insert(format!("{site}.Wbase"), randn(&[din, dout], std, &mut rng));
+        }
+        return Ok(out);
+    }
+    if let Some(rest) = group.strip_prefix("ic_") {
+        let (model, kind) = rest
+            .split_once('_')
+            .ok_or_else(|| anyhow!("bad ic adapter group '{group}'"))?;
+        return Ok(adapter_init(&builtin::ic_adapter_shapes(model, kind), &mut rng));
+    }
+    bail!("native backend: unknown init group '{group}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        builtin::builtin_manifest(Path::new("artifacts"))
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let m = manifest();
+        let a = generate(&m, "lm_tiny").unwrap();
+        let b = generate(&m, "lm_tiny").unwrap();
+        assert_eq!(a.len(), b.len());
+        for (k, t) in &a {
+            assert_eq!(t, &b[k], "{k}");
+        }
+    }
+
+    #[test]
+    fn lm_group_structure() {
+        let m = manifest();
+        let w = generate(&m, "lm_tiny").unwrap();
+        assert_eq!(w["embed"].shape(), &[512, 128]);
+        assert!(w["l0.ln1g"].data().iter().all(|&x| x == 1.0));
+        assert!(w["l1.b2"].data().iter().all(|&x| x == 0.0));
+        assert!(tensor::norm(&w["l0.wq"]) > 0.0);
+    }
+
+    #[test]
+    fn adapters_start_at_zero_output() {
+        let m = manifest();
+        for kind in ["lowrank", "linear", "mlp"] {
+            let a = generate(&m, &format!("adapters_tiny_{kind}")).unwrap();
+            for (name, t) in &a {
+                if name.ends_with(".A") || name.ends_with(".W1") {
+                    assert!(tensor::norm(t) > 0.0, "{name}");
+                } else {
+                    assert_eq!(tensor::norm(t), 0.0, "{name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tunables_structure() {
+        let m = manifest();
+        let ia3 = generate(&m, "tunables_tiny_ia3").unwrap();
+        assert!(ia3["l0.lk"].data().iter().all(|&x| x == 1.0));
+        let lora = generate(&m, "tunables_seqcls_tiny_lora").unwrap();
+        assert_eq!(lora["head.W"].shape(), &[128, 4]);
+        assert_eq!(tensor::norm(&lora["head.W"]), 0.0);
+        assert_eq!(tensor::norm(&lora["l0.q.B"]), 0.0);
+        assert!(tensor::norm(&lora["l0.q.A"]) > 0.0);
+        let pfx = generate(&m, "tunables_tiny_prefix").unwrap();
+        assert!(tensor::norm(&pfx["l0.pk"]) > 0.0);
+        let pt = generate(&m, "tunables_tiny_ptuning").unwrap();
+        assert_eq!(tensor::norm(&pt["pt.b1"]), 0.0);
+        assert!(tensor::norm(&pt["pt.W2"]) > 0.0);
+    }
+
+    #[test]
+    fn ic_groups() {
+        let m = manifest();
+        let base = generate(&m, "ic_base_cnn").unwrap();
+        assert_eq!(base["conv2.Wbase"].shape(), &[144, 32]);
+        let a = generate(&m, "ic_mlp_lowrank").unwrap();
+        assert_eq!(a["fc1.A"].shape(), &[784, 8]);
+        assert_eq!(tensor::norm(&a["fc1.B"]), 0.0);
+        assert!(generate(&m, "no_such_group").is_err());
+    }
+}

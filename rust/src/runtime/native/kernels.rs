@@ -1,0 +1,411 @@
+//! Native twins of the Pallas kernels (`python/compile/kernels/ref.py`)
+//! plus their backward passes. These are the primitives the native
+//! executor composes into full artifact graphs; the parity tests in
+//! `rust/tests/native_backend.rs` pin them against independent naive
+//! implementations and hand-computed fixtures.
+//!
+//! Gradient conventions follow the numpy reference derivation (validated
+//! against central finite differences across every composition used by
+//! the artifact graphs).
+
+use crate::tensor::{self, Tensor};
+
+/// Row-wise layer norm, eps = 1e-5 (matches `layernorm_ref`).
+/// Returns `(y, xhat, rstd)` — the caches the backward needs.
+pub fn layernorm(x: &Tensor, g: &Tensor, b: &Tensor) -> (Tensor, Tensor, Vec<f32>) {
+    let (n, d) = x.dims2();
+    let gd = g.data();
+    let bd = b.data();
+    let mut y = vec![0.0f32; n * d];
+    let mut xhat = vec![0.0f32; n * d];
+    let mut rstd = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &x.data()[i * d..(i + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + 1e-5).sqrt();
+        rstd[i] = rs;
+        for j in 0..d {
+            let xh = (row[j] - mu) * rs;
+            xhat[i * d + j] = xh;
+            y[i * d + j] = xh * gd[j] + bd[j];
+        }
+    }
+    (
+        Tensor::new(vec![n, d], y),
+        Tensor::new(vec![n, d], xhat),
+        rstd,
+    )
+}
+
+/// Backward of [`layernorm`]. Returns `(dx, dg, db)`.
+pub fn layernorm_back(
+    dy: &Tensor,
+    xhat: &Tensor,
+    rstd: &[f32],
+    g: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (n, d) = dy.dims2();
+    let gd = g.data();
+    let mut dx = vec![0.0f32; n * d];
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    for i in 0..n {
+        let dyr = &dy.data()[i * d..(i + 1) * d];
+        let xhr = &xhat.data()[i * d..(i + 1) * d];
+        let mut m1 = 0.0f32; // mean(dxhat)
+        let mut m2 = 0.0f32; // mean(dxhat * xhat)
+        for j in 0..d {
+            dg[j] += dyr[j] * xhr[j];
+            db[j] += dyr[j];
+            let dxh = dyr[j] * gd[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for j in 0..d {
+            let dxh = dyr[j] * gd[j];
+            dx[i * d + j] = rstd[i] * (dxh - m1 - xhr[j] * m2);
+        }
+    }
+    (
+        Tensor::new(vec![n, d], dx),
+        Tensor::new(vec![d], dg),
+        Tensor::new(vec![d], db),
+    )
+}
+
+/// Single-head scaled dot-product attention (matches `attention_ref`).
+/// `q`: (s, dh); `k`/`v`: (skv, dh) with `skv = s + p_prefix`; prefix
+/// positions are always attendable under the causal mask. Returns
+/// `(output, probs)`.
+pub fn attention_head(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    causal: bool,
+    p_prefix: usize,
+) -> (Tensor, Tensor) {
+    let (s, dh) = q.dims2();
+    let (skv, _) = k.dims2();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut logits = tensor::matmul_nt(q, k);
+    tensor::scale_mut(&mut logits, scale);
+    let ld = logits.data_mut();
+    if causal {
+        for i in 0..s {
+            for j in 0..skv {
+                if j > i + p_prefix {
+                    ld[i * skv + j] = f32::MIN;
+                }
+            }
+        }
+    }
+    // numerically stable row softmax
+    for i in 0..s {
+        let row = &mut ld[i * skv..(i + 1) * skv];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    let p = logits;
+    (tensor::matmul(&p, v), p)
+}
+
+/// Backward of [`attention_head`] given cached probs. Masked positions
+/// carry p = 0, so the softmax backward zeroes them automatically.
+/// Returns `(dq, dk, dv)`.
+pub fn attention_head_back(
+    dout: &Tensor,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    p: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (s, dh) = q.dims2();
+    let (skv, _) = k.dims2();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let dv = tensor::matmul_tn(p, dout); // (skv, dh)
+    let dp = tensor::matmul_nt(dout, v); // (s, skv)
+    let mut dlog = vec![0.0f32; s * skv];
+    for i in 0..s {
+        let pr = &p.data()[i * skv..(i + 1) * skv];
+        let dpr = &dp.data()[i * skv..(i + 1) * skv];
+        let dot: f32 = pr.iter().zip(dpr).map(|(a, b)| a * b).sum();
+        for j in 0..skv {
+            dlog[i * skv + j] = pr[j] * (dpr[j] - dot);
+        }
+    }
+    let dlog = Tensor::new(vec![s, skv], dlog);
+    let mut dq = tensor::matmul(&dlog, k);
+    tensor::scale_mut(&mut dq, scale);
+    let mut dk = tensor::matmul_tn(&dlog, q);
+    tensor::scale_mut(&mut dk, scale);
+    (dq, dk, dv)
+}
+
+/// Mean masked cross-entropy + teacher-forced token accuracy over rows.
+/// `logits`: (n, v); `targets`/`mask`: length n. Returns
+/// `(loss, acc, dlogits)` with `dlogits = mask/M * (softmax - onehot)`.
+pub fn masked_ce(logits: &Tensor, targets: &[i32], mask: &[f32]) -> (f32, f32, Tensor) {
+    let (n, v) = logits.dims2();
+    assert_eq!(targets.len(), n);
+    assert_eq!(mask.len(), n);
+    let msum: f32 = mask.iter().sum::<f32>().max(1.0);
+    let mut dlogits = vec![0.0f32; n * v];
+    let mut loss = 0.0f32;
+    let mut hits = 0.0f32;
+    for i in 0..n {
+        let row = &logits.data()[i * v..(i + 1) * v];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row {
+            sum += (x - m).exp();
+        }
+        let lse = m + sum.ln();
+        let t = targets[i] as usize;
+        let w = mask[i] / msum;
+        loss -= (row[t] - lse) * mask[i];
+        let mut argmax = 0usize;
+        let mut best = f32::NEG_INFINITY;
+        for (j, x) in row.iter().enumerate() {
+            let pj = (x - lse).exp();
+            dlogits[i * v + j] = pj * w;
+            if *x > best {
+                best = *x;
+                argmax = j;
+            }
+        }
+        dlogits[i * v + t] -= w;
+        if argmax == t {
+            hits += mask[i];
+        }
+    }
+    (loss / msum, hits / msum, Tensor::new(vec![n, v], dlogits))
+}
+
+/// Mean cross-entropy over class labels + accuracy. `logits`: (b, c).
+/// Returns `(loss, acc, dlogits)` with `dlogits = (softmax - onehot)/b`.
+pub fn ce_labels(logits: &Tensor, labels: &[i32]) -> (f32, f32, Tensor) {
+    let (b, c) = logits.dims2();
+    assert_eq!(labels.len(), b);
+    let mut dlogits = vec![0.0f32; b * c];
+    let mut loss = 0.0f32;
+    let mut hits = 0usize;
+    for i in 0..b {
+        let row = &logits.data()[i * c..(i + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row {
+            sum += (x - m).exp();
+        }
+        let lse = m + sum.ln();
+        let t = labels[i] as usize;
+        loss -= row[t] - lse;
+        let mut argmax = 0usize;
+        let mut best = f32::NEG_INFINITY;
+        for (j, x) in row.iter().enumerate() {
+            dlogits[i * c + j] = (x - lse).exp() / b as f32;
+            if *x > best {
+                best = *x;
+                argmax = j;
+            }
+        }
+        dlogits[i * c + t] -= 1.0 / b as f32;
+        if argmax == t {
+            hits += 1;
+        }
+    }
+    (
+        loss / b as f32,
+        hits as f32 / b as f32,
+        Tensor::new(vec![b, c], dlogits),
+    )
+}
+
+/// Multiply each column j of `a` by `s[j]`, returning a new tensor.
+pub fn scale_cols(a: &Tensor, s: &Tensor) -> Tensor {
+    let (n, d) = a.dims2();
+    assert_eq!(s.len(), d);
+    let sd = s.data();
+    let mut out = a.data().to_vec();
+    for i in 0..n {
+        for j in 0..d {
+            out[i * d + j] *= sd[j];
+        }
+    }
+    Tensor::new(vec![n, d], out)
+}
+
+/// Column-sum of the elementwise product of two (n, d) tensors -> (d,).
+/// (The IA3 scaling-vector gradient contraction.)
+pub fn col_dot(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, d) = a.dims2();
+    assert_eq!(a.shape(), b.shape());
+    let mut out = vec![0.0f32; d];
+    for i in 0..n {
+        for j in 0..d {
+            out[j] += a.data()[i * d + j] * b.data()[i * d + j];
+        }
+    }
+    Tensor::new(vec![d], out)
+}
+
+/// Zero `d` wherever the matching `gate` entry is <= 0 (ReLU backward).
+pub fn relu_mask(d: &mut Tensor, gate: &Tensor) {
+    assert_eq!(d.shape(), gate.shape());
+    for (x, g) in d.data_mut().iter_mut().zip(gate.data()) {
+        if *g <= 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn layernorm_matches_naive() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let g = Tensor::randn(&[8], 0.3, &mut rng);
+        let b = Tensor::randn(&[8], 0.3, &mut rng);
+        let (y, _, _) = layernorm(&x, &g, &b);
+        for i in 0..5 {
+            let row = &x.data()[i * 8..(i + 1) * 8];
+            let mu: f32 = row.iter().sum::<f32>() / 8.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 8.0;
+            for j in 0..8 {
+                let want = (row[j] - mu) / (var + 1e-5).sqrt() * g.data()[j] + b.data()[j];
+                assert!((y.data()[i * 8 + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_back_finite_difference() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let g = Tensor::randn(&[6], 0.5, &mut rng);
+        let b = Tensor::randn(&[6], 0.5, &mut rng);
+        let w = Tensor::randn(&[3, 6], 1.0, &mut rng); // loss = <y, w>
+        let (_, xhat, rstd) = layernorm(&x, &g, &b);
+        let (dx, dg, db) = layernorm_back(&w, &xhat, &rstd, &g);
+        let loss = |x: &Tensor, g: &Tensor, b: &Tensor| -> f32 {
+            let (y, _, _) = layernorm(x, g, b);
+            y.data().iter().zip(w.data()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 7, 17] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let fd = (loss(&xp, &g, &b) - loss(&xm, &g, &b)) / (2.0 * eps);
+            assert!((fd - dx.data()[idx]).abs() < 2e-2, "dx[{idx}]: {fd} vs {}", dx.data()[idx]);
+        }
+        for idx in [0usize, 5] {
+            let mut gp = g.clone();
+            gp.data_mut()[idx] += eps;
+            let mut gm = g.clone();
+            gm.data_mut()[idx] -= eps;
+            let fd = (loss(&x, &gp, &b) - loss(&x, &gm, &b)) / (2.0 * eps);
+            assert!((fd - dg.data()[idx]).abs() < 2e-2);
+            let mut bp = b.clone();
+            bp.data_mut()[idx] += eps;
+            let mut bm = b.clone();
+            bm.data_mut()[idx] -= eps;
+            let fd = (loss(&x, &g, &bp) - loss(&x, &g, &bm)) / (2.0 * eps);
+            assert!((fd - db.data()[idx]).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn attention_matches_naive_softmax() {
+        let mut rng = Rng::new(3);
+        let (s, dh) = (5, 4);
+        let q = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let k = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let v = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let (o, p) = attention_head(&q, &k, &v, true, 0);
+        // probs: rows sum to 1, strictly causal zeros above diagonal
+        for i in 0..s {
+            let row = &p.data()[i * s..(i + 1) * s];
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            for j in i + 1..s {
+                assert_eq!(row[j], 0.0);
+            }
+        }
+        // first row attends only to position 0 => o[0] == v[0]
+        for j in 0..dh {
+            assert!((o.data()[j] - v.data()[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_back_finite_difference() {
+        let mut rng = Rng::new(4);
+        let (s, dh) = (4, 3);
+        let q = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let k = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let v = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let w = Tensor::randn(&[s, dh], 1.0, &mut rng);
+        let loss = |q: &Tensor, k: &Tensor, v: &Tensor| -> f32 {
+            let (o, _) = attention_head(q, k, v, true, 0);
+            o.data().iter().zip(w.data()).map(|(a, b)| a * b).sum()
+        };
+        let (_, p) = attention_head(&q, &k, &v, true, 0);
+        let (dq, dk, dv) = attention_head_back(&w, &q, &k, &v, &p);
+        let eps = 1e-3;
+        let bump = |t: &Tensor, idx: usize, e: f32| -> Tensor {
+            let mut t2 = t.clone();
+            t2.data_mut()[idx] += e;
+            t2
+        };
+        for idx in [0usize, 5, 11] {
+            let fd = (loss(&bump(&q, idx, eps), &k, &v)
+                - loss(&bump(&q, idx, -eps), &k, &v)) / (2.0 * eps);
+            assert!((fd - dq.data()[idx]).abs() < 2e-2, "dq fd {fd}");
+            let fd = (loss(&q, &bump(&k, idx, eps), &v)
+                - loss(&q, &bump(&k, idx, -eps), &v)) / (2.0 * eps);
+            assert!((fd - dk.data()[idx]).abs() < 2e-2, "dk fd {fd}");
+            let fd = (loss(&q, &k, &bump(&v, idx, eps))
+                - loss(&q, &k, &bump(&v, idx, -eps))) / (2.0 * eps);
+            assert!((fd - dv.data()[idx]).abs() < 2e-2, "dv fd {fd}");
+        }
+    }
+
+    #[test]
+    fn masked_ce_uniform_logits_is_log_v() {
+        let logits = Tensor::zeros(&[4, 16]);
+        let targets = [1i32, 2, 3, 4];
+        let mask = [1.0f32, 1.0, 0.0, 1.0];
+        let (loss, _, dl) = masked_ce(&logits, &targets, &mask);
+        assert!((loss - (16f32).ln()).abs() < 1e-5);
+        // masked row contributes no gradient
+        assert!(dl.data()[2 * 16..3 * 16].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ce_labels_gradient_sums_to_zero() {
+        let mut rng = Rng::new(5);
+        let logits = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let labels = [0i32, 3, 1];
+        let (loss, acc, dl) = ce_labels(&logits, &labels);
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        for i in 0..3 {
+            let s: f32 = dl.data()[i * 4..(i + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+}

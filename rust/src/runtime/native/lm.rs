@@ -1,0 +1,921 @@
+//! Native LM graphs: the pure-Rust twin of `python/compile/model.py` and
+//! `python/compile/baselines.py`.
+//!
+//! One manual reverse-mode pass covers every LM artifact family:
+//!
+//! - decoupled fwd/bwd (`lm_fwdbwd_*`, `seqcls_fwdbwd_*`): loss, acc,
+//!   per-site hidden inputs x_m and grad_hhat_m (the eps-probe gradients)
+//!   and deliberately NO parameter gradients (Gradient Decoupling);
+//! - coupled baselines (`coupled_clm_*`, `coupled_seqcls_*`): loss, acc
+//!   and the tunable-parameter gradients for ft / lora / ia3 / prompt /
+//!   ptuning / prefix;
+//! - inference (`lm_fwd_*`): logits.
+//!
+//! Every gradient path here was validated against central finite
+//! differences in a numpy reference before porting; the backward order
+//! and caches mirror that derivation exactly.
+
+use std::collections::{BTreeMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::super::manifest::{Manifest, SizeConfig};
+use super::super::value::{IntTensor, Value};
+use super::builtin::{self, PREFIX_LEN};
+use super::kernels;
+use crate::tensor::{self, Tensor};
+
+pub(super) type Named<'a> = BTreeMap<&'a str, &'a Value>;
+
+pub(super) fn f32_in<'a>(named: &Named<'a>, name: &str) -> Result<&'a Tensor> {
+    let v: &'a Value = named
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("missing input '{name}'"))?;
+    match v {
+        Value::F32(t) => Ok(t),
+        Value::I32(_) => bail!("input '{name}' must be f32"),
+    }
+}
+
+pub(super) fn i32_in<'a>(named: &Named<'a>, name: &str) -> Result<&'a IntTensor> {
+    let v: &'a Value = named
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("missing input '{name}'"))?;
+    match v {
+        Value::I32(t) => Ok(t),
+        Value::F32(_) => bail!("input '{name}' must be i32"),
+    }
+}
+
+/// Parameter maps for one run, keyed by canonical names.
+#[derive(Default)]
+struct Params<'a> {
+    w: BTreeMap<&'a str, &'a Tensor>,      // base/merged weights
+    a: BTreeMap<&'a str, &'a Tensor>,      // adapter tensors ("l0.q.A", ...)
+    ia3: BTreeMap<&'a str, &'a Tensor>,    // "l0.lk" / "l0.lv" / "l0.lff"
+    prefix: BTreeMap<&'a str, &'a Tensor>, // "l0.pk" / "l0.pv"
+}
+
+impl<'a> Params<'a> {
+    fn w(&self, name: &str) -> Result<&'a Tensor> {
+        self.w
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("missing weight '{name}'"))
+    }
+
+    fn ia3(&self, name: &str) -> Result<&'a Tensor> {
+        self.ia3
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("missing ia3 tunable '{name}'"))
+    }
+
+    fn prefix(&self, name: &str) -> Result<&'a Tensor> {
+        self.prefix
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("missing prefix tunable '{name}'"))
+    }
+}
+
+enum Task<'a> {
+    Clm { targets: &'a IntTensor, mask: &'a Tensor },
+    SeqCls { labels: &'a IntTensor, mask: &'a Tensor, head_w: &'a Tensor },
+}
+
+struct Opts {
+    kind: String,
+    causal: bool,
+    ia3: bool,
+    prefix: bool,
+    prompt: Option<Tensor>, // materialized (P, d)
+    want_w_grads: bool,
+    want_a_grads: bool,
+    want_logits: bool,
+    /// emit per-site xs and eps-gradients (the decoupled outputs);
+    /// coupled graphs skip the copies
+    want_xs: bool,
+    need_back: bool,
+}
+
+impl Opts {
+    fn new(kind: &str) -> Opts {
+        Opts {
+            kind: kind.to_string(),
+            causal: true,
+            ia3: false,
+            prefix: false,
+            prompt: None,
+            want_w_grads: false,
+            want_a_grads: false,
+            want_logits: false,
+            want_xs: false,
+            need_back: true,
+        }
+    }
+}
+
+#[derive(Default)]
+struct RunOut {
+    loss: f32,
+    acc: f32,
+    xs: Vec<Tensor>,
+    gq: Vec<Tensor>,
+    gv: Vec<Tensor>,
+    head_x: Option<Tensor>,
+    head_g: Option<Tensor>,
+    dhead_w: Option<Tensor>,
+    wgrads: BTreeMap<String, Tensor>,
+    agrads: BTreeMap<String, Tensor>,
+    ia3_grads: BTreeMap<String, Tensor>,
+    dprompt: Option<Tensor>,
+    prefix_grads: BTreeMap<String, Tensor>,
+    logits: Option<Tensor>, // (rows_with_loss, V)
+}
+
+struct LayerCache {
+    xhat1: Tensor,
+    rstd1: Vec<f32>,
+    pre: Tensor, // LN1 output = every site's hidden input (rows, d)
+    k_raw: Option<Tensor>,
+    v2_raw: Option<Tensor>,
+    heads_q: Vec<Tensor>, // B*H of (st, dh)
+    heads_k: Vec<Tensor>, // B*H of (skv, dh)
+    heads_v: Vec<Tensor>,
+    probs: Vec<Tensor>, // B*H of (st, skv)
+    att: Tensor,        // merged attention output (rows, d)
+    xhat2: Tensor,
+    rstd2: Vec<f32>,
+    pre2: Tensor,
+    z: Tensor,            // pre-relu FFN activation (rows, dff)
+    mid: Tensor,          // relu(z), pre-IA3
+    mid2: Option<Tensor>, // IA3-scaled mid (None when no IA3)
+    pp: usize,
+}
+
+fn extract(t: &Tensor, row0: usize, nrows: usize, col0: usize, ncols: usize) -> Tensor {
+    let (_, width) = t.dims2();
+    let mut out = vec![0.0f32; nrows * ncols];
+    for r in 0..nrows {
+        let src = (row0 + r) * width + col0;
+        out[r * ncols..(r + 1) * ncols].copy_from_slice(&t.data()[src..src + ncols]);
+    }
+    Tensor::new(vec![nrows, ncols], out)
+}
+
+fn add_at(dst: &mut Tensor, src: &Tensor, row0: usize, col0: usize) {
+    let (_, width) = dst.dims2();
+    let (nr, nc) = src.dims2();
+    let dd = dst.data_mut();
+    let sd = src.data();
+    for r in 0..nr {
+        let d0 = (row0 + r) * width + col0;
+        for c in 0..nc {
+            dd[d0 + c] += sd[r * nc + c];
+        }
+    }
+}
+
+/// hhat - h = g(x) for one site. None for kind "none".
+pub(super) fn adapter_apply(
+    kind: &str,
+    a: &BTreeMap<&str, &Tensor>,
+    prefix: &str,
+    x: &Tensor,
+) -> Result<Option<Tensor>> {
+    let get = |suffix: &str| -> Result<&Tensor> {
+        let key = format!("{prefix}.{suffix}");
+        a.get(key.as_str())
+            .copied()
+            .ok_or_else(|| anyhow!("missing adapter tensor '{key}'"))
+    };
+    Ok(match kind {
+        "none" => None,
+        "lowrank" => {
+            let (aa, bb) = (get("A")?, get("B")?);
+            Some(tensor::matmul(&tensor::matmul(x, aa), bb))
+        }
+        "linear" => Some(tensor::matmul(x, get("W")?)),
+        "mlp" => {
+            let (w1, b1, w2, b2) = (get("W1")?, get("b1")?, get("W2")?, get("b2")?);
+            let z = tensor::add_row(&tensor::matmul(x, w1), b1);
+            let hmid = tensor::relu(&z);
+            Some(tensor::add_row(&tensor::matmul(&hmid, w2), b2))
+        }
+        other => bail!("unknown adapter kind '{other}'"),
+    })
+}
+
+/// Backward through one site adapter: returns the dx contribution and
+/// (optionally) accumulates parameter gradients keyed `{prefix}.{name}`.
+pub(super) fn adapter_back(
+    kind: &str,
+    a: &BTreeMap<&str, &Tensor>,
+    prefix: &str,
+    x: &Tensor,
+    dout: &Tensor,
+    mut grads: Option<&mut BTreeMap<String, Tensor>>,
+) -> Result<Option<Tensor>> {
+    let get = |suffix: &str| -> Result<&Tensor> {
+        let key = format!("{prefix}.{suffix}");
+        a.get(key.as_str())
+            .copied()
+            .ok_or_else(|| anyhow!("missing adapter tensor '{key}'"))
+    };
+    Ok(match kind {
+        "none" => None,
+        "lowrank" => {
+            let (aa, bb) = (get("A")?, get("B")?);
+            let gbt = tensor::matmul_nt(dout, bb); // (n, r)
+            if let Some(g) = grads.as_deref_mut() {
+                g.insert(format!("{prefix}.A"), tensor::matmul_tn(x, &gbt));
+                g.insert(
+                    format!("{prefix}.B"),
+                    tensor::matmul_tn(&tensor::matmul(x, aa), dout),
+                );
+            }
+            Some(tensor::matmul_nt(&gbt, aa))
+        }
+        "linear" => {
+            let w = get("W")?;
+            if let Some(g) = grads.as_deref_mut() {
+                g.insert(format!("{prefix}.W"), tensor::matmul_tn(x, dout));
+            }
+            Some(tensor::matmul_nt(dout, w))
+        }
+        "mlp" => {
+            let (w1, b1, w2) = (get("W1")?, get("b1")?, get("W2")?);
+            let z = tensor::add_row(&tensor::matmul(x, w1), b1);
+            let hmid = tensor::relu(&z);
+            let mut dz = tensor::matmul_nt(dout, w2);
+            kernels::relu_mask(&mut dz, &z);
+            if let Some(g) = grads.as_deref_mut() {
+                g.insert(format!("{prefix}.W2"), tensor::matmul_tn(&hmid, dout));
+                g.insert(format!("{prefix}.b2"), tensor::col_sum(dout));
+                g.insert(format!("{prefix}.W1"), tensor::matmul_tn(x, &dz));
+                g.insert(format!("{prefix}.b1"), tensor::col_sum(&dz));
+            }
+            Some(tensor::matmul_nt(&dz, w1))
+        }
+        other => bail!("unknown adapter kind '{other}'"),
+    })
+}
+
+/// The unified forward + backward pass.
+fn lm_run(cfg: &SizeConfig, p: &Params, tokens: &IntTensor, task: &Task, opts: &Opts)
+          -> Result<RunOut> {
+    let d = cfg.d;
+    let heads = cfg.heads;
+    let hd = d / heads; // per-head width
+    let layers = cfg.layers;
+    let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
+    let pl = opts.prompt.as_ref().map(|t| t.dims2().0).unwrap_or(0);
+    let st = s + pl;
+    let rows = bsz * st;
+
+    // ---- embedding (+ optional prompt prepend) ----
+    let embed = p.w("embed")?;
+    let pos = p.w("pos")?;
+    let mut hdat = vec![0.0f32; rows * d];
+    for b in 0..bsz {
+        for t in 0..st {
+            let dst = (b * st + t) * d;
+            if t < pl {
+                let pr = opts.prompt.as_ref().unwrap();
+                hdat[dst..dst + d].copy_from_slice(&pr.data()[t * d..(t + 1) * d]);
+            } else {
+                let tok = tokens.data()[b * s + (t - pl)] as usize;
+                for j in 0..d {
+                    hdat[dst + j] = embed.data()[tok * d + j] + pos.data()[(t - pl) * d + j];
+                }
+            }
+        }
+    }
+    let mut h = Tensor::new(vec![rows, d], hdat);
+
+    // ---- forward trunk ----
+    let kind = opts.kind.as_str();
+    let mut caches: Vec<LayerCache> = Vec::with_capacity(layers);
+    for i in 0..layers {
+        let (ln1g, ln1b) = (p.w(&format!("l{i}.ln1g"))?, p.w(&format!("l{i}.ln1b"))?);
+        let (pre, xhat1, rstd1) = kernels::layernorm(&h, ln1g, ln1b);
+        let wq = p.w(&format!("l{i}.wq"))?;
+        let wk = p.w(&format!("l{i}.wk"))?;
+        let wv = p.w(&format!("l{i}.wv"))?;
+        let q = tensor::matmul(&pre, wq);
+        let k0 = tensor::matmul(&pre, wk);
+        let v0 = tensor::matmul(&pre, wv);
+        let q2 = match adapter_apply(kind, &p.a, &format!("l{i}.q"), &pre)? {
+            Some(delta) => tensor::add(&q, &delta),
+            None => q,
+        };
+        let v2 = match adapter_apply(kind, &p.a, &format!("l{i}.v"), &pre)? {
+            Some(delta) => tensor::add(&v0, &delta),
+            None => v0,
+        };
+        let (k_s, v2_s, k_raw, v2_raw) = if opts.ia3 {
+            let lk = p.ia3(&format!("l{i}.lk"))?;
+            let lv = p.ia3(&format!("l{i}.lv"))?;
+            (
+                kernels::scale_cols(&k0, lk),
+                kernels::scale_cols(&v2, lv),
+                Some(k0),
+                Some(v2),
+            )
+        } else {
+            (k0, v2, None, None)
+        };
+
+        let pp = if opts.prefix { PREFIX_LEN } else { 0 };
+        let skv = st + pp;
+        let mut heads_q = Vec::with_capacity(bsz * heads);
+        let mut heads_k = Vec::with_capacity(bsz * heads);
+        let mut heads_v = Vec::with_capacity(bsz * heads);
+        let mut probs = Vec::with_capacity(bsz * heads);
+        let mut att = Tensor::zeros(&[rows, d]);
+        for b in 0..bsz {
+            let (kfull, vfull);
+            let (ksrc, vsrc, row_base) = if pp > 0 {
+                let pk = p.prefix(&format!("l{i}.pk"))?;
+                let pv = p.prefix(&format!("l{i}.pv"))?;
+                let kb = k_s.rows(b * st, (b + 1) * st);
+                let vb = v2_s.rows(b * st, (b + 1) * st);
+                kfull = Tensor::cat_rows(&[pk, &kb]);
+                vfull = Tensor::cat_rows(&[pv, &vb]);
+                (&kfull, &vfull, 0usize)
+            } else {
+                (&k_s, &v2_s, b * st)
+            };
+            for hh in 0..heads {
+                let qh = extract(&q2, b * st, st, hh * hd, hd);
+                let kh = extract(ksrc, row_base, skv, hh * hd, hd);
+                let vh = extract(vsrc, row_base, skv, hh * hd, hd);
+                let (o, pr) = kernels::attention_head(&qh, &kh, &vh, opts.causal, pp);
+                add_at(&mut att, &o, b * st, hh * hd);
+                heads_q.push(qh);
+                heads_k.push(kh);
+                heads_v.push(vh);
+                probs.push(pr);
+            }
+        }
+
+        let wo = p.w(&format!("l{i}.wo"))?;
+        let h_mid = tensor::add(&h, &tensor::matmul(&att, wo));
+        let (ln2g, ln2b) = (p.w(&format!("l{i}.ln2g"))?, p.w(&format!("l{i}.ln2b"))?);
+        let (pre2, xhat2, rstd2) = kernels::layernorm(&h_mid, ln2g, ln2b);
+        let (w1, b1) = (p.w(&format!("l{i}.w1"))?, p.w(&format!("l{i}.b1"))?);
+        let (w2, b2) = (p.w(&format!("l{i}.w2"))?, p.w(&format!("l{i}.b2"))?);
+        let z = tensor::add_row(&tensor::matmul(&pre2, w1), b1);
+        let mid = tensor::relu(&z);
+        let mid2 = if opts.ia3 {
+            Some(kernels::scale_cols(&mid, p.ia3(&format!("l{i}.lff"))?))
+        } else {
+            None
+        };
+        let ffn = tensor::add_row(
+            &tensor::matmul(mid2.as_ref().unwrap_or(&mid), w2),
+            b2,
+        );
+        h = tensor::add(&h_mid, &ffn);
+        caches.push(LayerCache {
+            xhat1, rstd1, pre, k_raw, v2_raw, heads_q, heads_k, heads_v, probs,
+            att, xhat2, rstd2, pre2, z, mid, mid2, pp,
+        });
+    }
+    let (lnfg, lnfb) = (p.w("lnfg")?, p.w("lnfb")?);
+    let (hf, xhatf, rstdf) = kernels::layernorm(&h, lnfg, lnfb);
+
+    // ---- head + loss (+ its backward into dhf) ----
+    let mut out = RunOut::default();
+    let mut dhf = Tensor::zeros(&[rows, d]);
+    let mut embed_head_grad: Option<Tensor> = None;
+    match task {
+        Task::Clm { targets, mask } => {
+            // rows that carry loss: positions pl.. of each example
+            let hf_sl = if pl > 0 {
+                let parts: Vec<Tensor> =
+                    (0..bsz).map(|b| hf.rows(b * st + pl, (b + 1) * st)).collect();
+                let refs: Vec<&Tensor> = parts.iter().collect();
+                Tensor::cat_rows(&refs)
+            } else {
+                hf.clone()
+            };
+            let logits = tensor::matmul_nt(&hf_sl, embed); // (B*S, V)
+            if opts.want_logits && !opts.need_back {
+                // pure inference (lm_fwd): skip the loss entirely
+                out.logits = Some(logits);
+            } else {
+                let (loss, acc, dlogits) =
+                    kernels::masked_ce(&logits, targets.data(), mask.data());
+                out.loss = loss;
+                out.acc = acc;
+                if opts.want_logits {
+                    out.logits = Some(logits);
+                }
+                if opts.need_back {
+                    let dhf_sl = tensor::matmul(&dlogits, embed); // (B*S, d)
+                    for b in 0..bsz {
+                        let part = dhf_sl.rows(b * s, (b + 1) * s);
+                        add_at(&mut dhf, &part, b * st + pl, 0);
+                    }
+                    if opts.want_w_grads {
+                        embed_head_grad = Some(tensor::matmul_tn(&dlogits, &hf_sl));
+                    }
+                }
+            }
+        }
+        Task::SeqCls { labels, mask, head_w } => {
+            let (labels, mask, head_w): (&IntTensor, &Tensor, &Tensor) =
+                (*labels, *mask, *head_w);
+            // pooled = sum(hf * pmask) / denom ; prompt positions count
+            let mut pooled = vec![0.0f32; bsz * d];
+            let mut denom = vec![0.0f32; bsz];
+            let pm = |b: usize, t: usize| -> f32 {
+                if t < pl { 1.0 } else { mask.data()[b * s + (t - pl)] }
+            };
+            for b in 0..bsz {
+                for t in 0..st {
+                    denom[b] += pm(b, t);
+                }
+                denom[b] = denom[b].max(1.0);
+                for t in 0..st {
+                    let w = pm(b, t) / denom[b];
+                    if w != 0.0 {
+                        let src = (b * st + t) * d;
+                        for j in 0..d {
+                            pooled[b * d + j] += hf.data()[src + j] * w;
+                        }
+                    }
+                }
+            }
+            let pooled = Tensor::new(vec![bsz, d], pooled);
+            let logits = tensor::matmul(&pooled, head_w); // (B, C)
+            let (loss, acc, dlogits) = kernels::ce_labels(&logits, labels.data());
+            out.loss = loss;
+            out.acc = acc;
+            if opts.need_back {
+                out.dhead_w = Some(tensor::matmul_tn(&pooled, &dlogits));
+                let dpooled = tensor::matmul_nt(&dlogits, head_w); // (B, d)
+                let dd = dhf.data_mut();
+                for b in 0..bsz {
+                    for t in 0..st {
+                        let w = pm(b, t) / denom[b];
+                        if w != 0.0 {
+                            let dst = (b * st + t) * d;
+                            for j in 0..d {
+                                dd[dst + j] += dpooled.data()[b * d + j] * w;
+                            }
+                        }
+                    }
+                }
+            }
+            out.head_x = Some(pooled);
+            out.head_g = Some(dlogits);
+        }
+    }
+
+    if opts.want_xs {
+        out.xs = caches
+            .iter()
+            .map(|c| c.pre.clone().reshape(&[bsz, st, d]))
+            .collect();
+    }
+
+    if !opts.need_back {
+        return Ok(out);
+    }
+
+    // ---- backward trunk ----
+    let (dh0, dgf, dbf) = kernels::layernorm_back(&dhf, &xhatf, &rstdf, lnfg);
+    if opts.want_w_grads {
+        out.wgrads.insert("lnfg".to_string(), dgf);
+        out.wgrads.insert("lnfb".to_string(), dbf);
+    }
+    let mut dh = dh0;
+    let mut gq: Vec<Option<Tensor>> = (0..layers).map(|_| None).collect();
+    let mut gv: Vec<Option<Tensor>> = (0..layers).map(|_| None).collect();
+    for i in (0..layers).rev() {
+        let c = &caches[i];
+        let (w1, w2) = (p.w(&format!("l{i}.w1"))?, p.w(&format!("l{i}.w2"))?);
+        // FFN block
+        if opts.want_w_grads {
+            out.wgrads.insert(format!("l{i}.b2"), tensor::col_sum(&dh));
+            out.wgrads.insert(
+                format!("l{i}.w2"),
+                tensor::matmul_tn(c.mid2.as_ref().unwrap_or(&c.mid), &dh),
+            );
+        }
+        let dmid2 = tensor::matmul_nt(&dh, w2);
+        let dmid = if opts.ia3 {
+            let lff = p.ia3(&format!("l{i}.lff"))?;
+            out.ia3_grads
+                .insert(format!("l{i}.lff"), kernels::col_dot(&dmid2, &c.mid));
+            kernels::scale_cols(&dmid2, lff)
+        } else {
+            dmid2
+        };
+        let mut dz = dmid;
+        kernels::relu_mask(&mut dz, &c.z);
+        if opts.want_w_grads {
+            out.wgrads
+                .insert(format!("l{i}.w1"), tensor::matmul_tn(&c.pre2, &dz));
+            out.wgrads.insert(format!("l{i}.b1"), tensor::col_sum(&dz));
+        }
+        let dpre2 = tensor::matmul_nt(&dz, w1);
+        let ln2g = p.w(&format!("l{i}.ln2g"))?;
+        let (dx2, dg2, db2) = kernels::layernorm_back(&dpre2, &c.xhat2, &c.rstd2, ln2g);
+        if opts.want_w_grads {
+            out.wgrads.insert(format!("l{i}.ln2g"), dg2);
+            out.wgrads.insert(format!("l{i}.ln2b"), db2);
+        }
+        dh = tensor::add(&dh, &dx2);
+
+        // attention block
+        let wo = p.w(&format!("l{i}.wo"))?;
+        if opts.want_w_grads {
+            out.wgrads
+                .insert(format!("l{i}.wo"), tensor::matmul_tn(&c.att, &dh));
+        }
+        let datt = tensor::matmul_nt(&dh, wo);
+        let pp = c.pp;
+        let skv = st + pp;
+        let mut dq2 = Tensor::zeros(&[rows, d]);
+        let mut dk2 = Tensor::zeros(&[rows, d]);
+        let mut dv2 = Tensor::zeros(&[rows, d]);
+        let mut dpk = Tensor::zeros(&[pp.max(1), d]); // unused when pp == 0
+        let mut dpv = Tensor::zeros(&[pp.max(1), d]);
+        for b in 0..bsz {
+            for hh in 0..heads {
+                let idx = b * heads + hh;
+                let dohead = extract(&datt, b * st, st, hh * hd, hd);
+                let (dqh, dkh, dvh) = kernels::attention_head_back(
+                    &dohead,
+                    &c.heads_q[idx],
+                    &c.heads_k[idx],
+                    &c.heads_v[idx],
+                    &c.probs[idx],
+                );
+                add_at(&mut dq2, &dqh, b * st, hh * hd);
+                if pp > 0 {
+                    add_at(&mut dpk, &extract(&dkh, 0, pp, 0, hd), 0, hh * hd);
+                    add_at(&mut dpv, &extract(&dvh, 0, pp, 0, hd), 0, hh * hd);
+                    add_at(&mut dk2, &extract(&dkh, pp, st, 0, hd), b * st, hh * hd);
+                    add_at(&mut dv2, &extract(&dvh, pp, st, 0, hd), b * st, hh * hd);
+                } else {
+                    debug_assert_eq!(skv, st);
+                    add_at(&mut dk2, &dkh, b * st, hh * hd);
+                    add_at(&mut dv2, &dvh, b * st, hh * hd);
+                }
+            }
+        }
+        if pp > 0 {
+            out.prefix_grads.insert(format!("l{i}.pk"), dpk);
+            out.prefix_grads.insert(format!("l{i}.pv"), dpv);
+        }
+        if opts.want_xs {
+            gq[i] = Some(dq2.clone());
+        }
+        if opts.ia3 {
+            let lk = p.ia3(&format!("l{i}.lk"))?;
+            let lv = p.ia3(&format!("l{i}.lv"))?;
+            out.ia3_grads.insert(
+                format!("l{i}.lk"),
+                kernels::col_dot(&dk2, c.k_raw.as_ref().unwrap()),
+            );
+            dk2 = kernels::scale_cols(&dk2, lk);
+            out.ia3_grads.insert(
+                format!("l{i}.lv"),
+                kernels::col_dot(&dv2, c.v2_raw.as_ref().unwrap()),
+            );
+            dv2 = kernels::scale_cols(&dv2, lv);
+        }
+        if opts.want_xs {
+            gv[i] = Some(dv2.clone());
+        }
+
+        let wq = p.w(&format!("l{i}.wq"))?;
+        let wk = p.w(&format!("l{i}.wk"))?;
+        let wv = p.w(&format!("l{i}.wv"))?;
+        if opts.want_w_grads {
+            out.wgrads
+                .insert(format!("l{i}.wq"), tensor::matmul_tn(&c.pre, &dq2));
+            out.wgrads
+                .insert(format!("l{i}.wk"), tensor::matmul_tn(&c.pre, &dk2));
+            out.wgrads
+                .insert(format!("l{i}.wv"), tensor::matmul_tn(&c.pre, &dv2));
+        }
+        let mut dpre = tensor::matmul_nt(&dq2, wq);
+        tensor::axpy(&mut dpre, 1.0, &tensor::matmul_nt(&dk2, wk));
+        tensor::axpy(&mut dpre, 1.0, &tensor::matmul_nt(&dv2, wv));
+        let mut agrads = if opts.want_a_grads { Some(&mut out.agrads) } else { None };
+        if let Some(dxa) = adapter_back(kind, &p.a, &format!("l{i}.q"), &c.pre, &dq2,
+                                        agrads.as_deref_mut())? {
+            tensor::axpy(&mut dpre, 1.0, &dxa);
+        }
+        if let Some(dxa) = adapter_back(kind, &p.a, &format!("l{i}.v"), &c.pre, &dv2,
+                                        agrads.as_deref_mut())? {
+            tensor::axpy(&mut dpre, 1.0, &dxa);
+        }
+        let ln1g = p.w(&format!("l{i}.ln1g"))?;
+        let (dx1, dg1, db1) = kernels::layernorm_back(&dpre, &c.xhat1, &c.rstd1, ln1g);
+        if opts.want_w_grads {
+            out.wgrads.insert(format!("l{i}.ln1g"), dg1);
+            out.wgrads.insert(format!("l{i}.ln1b"), db1);
+        }
+        dh = tensor::add(&dh, &dx1);
+    }
+    if opts.want_xs {
+        out.gq = gq
+            .into_iter()
+            .map(|t| t.unwrap().reshape(&[bsz, st, d]))
+            .collect();
+        out.gv = gv
+            .into_iter()
+            .map(|t| t.unwrap().reshape(&[bsz, st, d]))
+            .collect();
+    }
+
+    // ---- embedding backward ----
+    if pl > 0 {
+        let mut dprompt = Tensor::zeros(&[pl, d]);
+        for b in 0..bsz {
+            let part = dh.rows(b * st, b * st + pl);
+            add_at(&mut dprompt, &part, 0, 0);
+        }
+        out.dprompt = Some(dprompt);
+    }
+    if opts.want_w_grads {
+        let mut dpos = vec![0.0f32; cfg.seq * d];
+        let mut dembed = embed_head_grad
+            .unwrap_or_else(|| Tensor::zeros(&[cfg.vocab, d]));
+        let de = dembed.data_mut();
+        for b in 0..bsz {
+            for t in 0..s {
+                let src = (b * st + pl + t) * d;
+                let tok = tokens.data()[b * s + t] as usize;
+                for j in 0..d {
+                    dpos[t * d + j] += dh.data()[src + j];
+                    de[tok * d + j] += dh.data()[src + j];
+                }
+            }
+        }
+        out.wgrads
+            .insert("pos".to_string(), Tensor::new(vec![cfg.seq, d], dpos));
+        out.wgrads.insert("embed".to_string(), dembed);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// artifact-level wrappers
+// ---------------------------------------------------------------------------
+
+fn partition<'a>(
+    cfg: &SizeConfig,
+    named: &Named<'a>,
+    data_names: &[&str],
+) -> (Params<'a>, BTreeMap<&'a str, &'a Tensor>) {
+    let wnames: HashSet<String> = builtin::lm_param_shapes(cfg)
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    let mut p = Params::default();
+    let mut rest: BTreeMap<&'a str, &'a Tensor> = BTreeMap::new();
+    for (k, v) in named.iter() {
+        let k: &'a str = *k;
+        let v: &'a Value = *v;
+        if data_names.contains(&k) {
+            continue;
+        }
+        if let Value::F32(t) = v {
+            if wnames.contains(k) {
+                p.w.insert(k, t);
+            } else {
+                rest.insert(k, t);
+            }
+        }
+    }
+    (p, rest)
+}
+
+fn scalar(v: f32) -> Value {
+    Value::F32(Tensor::scalar(v))
+}
+
+/// The decoupled ColA server graph: `lm_fwdbwd_*` / `seqcls_fwdbwd_*`.
+pub(super) fn decoupled(
+    m: &Manifest,
+    size: &str,
+    kind: &str,
+    named: &Named,
+    seqcls: bool,
+    need_back: bool,
+) -> Result<BTreeMap<String, Value>> {
+    let cfg = m.size(size)?;
+    let tokens = i32_in(named, "tokens")?;
+    let mask = f32_in(named, "mask")?;
+    let data_names = ["tokens", "targets", "labels", "mask", "head.W"];
+    let (mut p, rest) = partition(cfg, named, &data_names);
+    p.a = rest;
+    let task = if seqcls {
+        Task::SeqCls {
+            labels: i32_in(named, "labels")?,
+            mask,
+            head_w: f32_in(named, "head.W")?,
+        }
+    } else {
+        Task::Clm { targets: i32_in(named, "targets")?, mask }
+    };
+    let mut opts = Opts::new(kind);
+    opts.causal = !seqcls;
+    opts.need_back = need_back;
+    opts.want_xs = need_back;
+    let out = lm_run(cfg, &p, tokens, &task, &opts)?;
+
+    let mut res = BTreeMap::new();
+    res.insert("loss".to_string(), scalar(out.loss));
+    res.insert("acc".to_string(), scalar(out.acc));
+    if need_back {
+        for (i, x) in out.xs.into_iter().enumerate() {
+            res.insert(format!("l{i}.x"), Value::F32(x));
+        }
+        for (i, g) in out.gq.into_iter().enumerate() {
+            res.insert(format!("l{i}.gq"), Value::F32(g));
+        }
+        for (i, g) in out.gv.into_iter().enumerate() {
+            res.insert(format!("l{i}.gv"), Value::F32(g));
+        }
+    } else {
+        // need_back == "some wanted output index >= 2", so none of the
+        // adaptation outputs are fetched: cheap placeholders, not
+        // full-size zero tensors.
+        for i in 0..cfg.layers {
+            res.insert(format!("l{i}.x"), Value::F32(Tensor::zeros(&[1])));
+            res.insert(format!("l{i}.gq"), Value::F32(Tensor::zeros(&[1])));
+            res.insert(format!("l{i}.gv"), Value::F32(Tensor::zeros(&[1])));
+        }
+    }
+    if seqcls {
+        let bsz = tokens.shape()[0];
+        res.insert(
+            "head.x".to_string(),
+            Value::F32(out.head_x.unwrap_or_else(|| Tensor::zeros(&[bsz, cfg.d]))),
+        );
+        res.insert(
+            "head.g".to_string(),
+            Value::F32(
+                out.head_g
+                    .unwrap_or_else(|| Tensor::zeros(&[bsz, m.n_classes_seqcls])),
+            ),
+        );
+    }
+    Ok(res)
+}
+
+/// Coupled-baseline graphs: `coupled_clm_*` / `coupled_seqcls_*`.
+pub(super) fn coupled(
+    m: &Manifest,
+    size: &str,
+    method: &str,
+    named: &Named,
+    seqcls: bool,
+    need_back: bool,
+) -> Result<BTreeMap<String, Value>> {
+    let cfg = m.size(size)?;
+    let tokens = i32_in(named, "tokens")?;
+    let mask = f32_in(named, "mask")?;
+    let n_classes = if seqcls { Some(m.n_classes_seqcls) } else { None };
+    let tun_shapes = builtin::tunable_shapes(cfg, method, n_classes);
+
+    let data_names = ["tokens", "targets", "labels", "mask", "head.W"];
+    let (mut p, rest) = partition(cfg, named, &data_names);
+    let mut opts = Opts::new("none");
+    opts.causal = !seqcls;
+    opts.need_back = need_back;
+
+    // Per-method wiring of the non-weight inputs.
+    let mut ptune: Option<(Tensor, Tensor)> = None; // (z, mid) caches for chain
+    match method {
+        "ft" => {
+            // FT: the frozen weights are NOT inputs; the tunables (by lm
+            // names) ARE the weights. partition() already routed them
+            // into p.w because the names match.
+            opts.want_w_grads = need_back;
+        }
+        "lora" => {
+            opts.kind = "lowrank".to_string();
+            opts.want_a_grads = need_back;
+            p.a = rest;
+        }
+        "ia3" => {
+            opts.ia3 = true;
+            p.ia3 = rest;
+        }
+        "prompt" => {
+            opts.prompt = Some(f32_in(named, "prompt")?.clone());
+        }
+        "ptuning" => {
+            let anchor = f32_in(named, "anchor")?;
+            let w1 = f32_in(named, "pt.W1")?;
+            let b1 = f32_in(named, "pt.b1")?;
+            let w2 = f32_in(named, "pt.W2")?;
+            let b2 = f32_in(named, "pt.b2")?;
+            let z = tensor::add_row(&tensor::matmul(anchor, w1), b1);
+            let mid = tensor::relu(&z);
+            opts.prompt = Some(tensor::add_row(&tensor::matmul(&mid, w2), b2));
+            ptune = Some((z, mid));
+        }
+        "prefix" => {
+            opts.prefix = true;
+            p.prefix = rest;
+        }
+        other => bail!("unknown coupled method '{other}'"),
+    }
+
+    let task = if seqcls {
+        Task::SeqCls {
+            labels: i32_in(named, "labels")?,
+            mask,
+            head_w: f32_in(named, "head.W")?,
+        }
+    } else {
+        Task::Clm { targets: i32_in(named, "targets")?, mask }
+    };
+    let out = lm_run(cfg, &p, tokens, &task, &opts)?;
+
+    let mut res = BTreeMap::new();
+    res.insert("loss".to_string(), scalar(out.loss));
+    res.insert("acc".to_string(), scalar(out.acc));
+
+    // Collect tunable gradients under their manifest output names.
+    let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
+    match method {
+        "ft" => grads.extend(out.wgrads),
+        "lora" => grads.extend(out.agrads),
+        "ia3" => grads.extend(out.ia3_grads),
+        "prompt" => {
+            if let Some(dp) = out.dprompt {
+                grads.insert("prompt".to_string(), dp);
+            }
+        }
+        "ptuning" => {
+            if let Some(dpr) = out.dprompt {
+                let (z, mid) = ptune.as_ref().unwrap();
+                let anchor = f32_in(named, "anchor")?;
+                let w1 = f32_in(named, "pt.W1")?;
+                let w2 = f32_in(named, "pt.W2")?;
+                grads.insert("pt.W2".to_string(), tensor::matmul_tn(mid, &dpr));
+                grads.insert("pt.b2".to_string(), tensor::col_sum(&dpr));
+                let mut dz = tensor::matmul_nt(&dpr, w2);
+                kernels::relu_mask(&mut dz, z);
+                grads.insert("pt.W1".to_string(), tensor::matmul_tn(anchor, &dz));
+                grads.insert("pt.b1".to_string(), tensor::col_sum(&dz));
+                grads.insert("anchor".to_string(), tensor::matmul_nt(&dz, w1));
+            }
+        }
+        "prefix" => grads.extend(out.prefix_grads),
+        _ => unreachable!(),
+    }
+    if seqcls {
+        if let Some(dw) = out.dhead_w {
+            grads.insert("head.W".to_string(), dw);
+        }
+    }
+    for (name, shape) in &tun_shapes {
+        let g = match grads.remove(name) {
+            Some(g) => g,
+            // eval path: gradients were not computed and are not fetched
+            None if !need_back => Tensor::zeros(shape),
+            // a missing gradient with the backward run is name drift —
+            // zeros here would train silently frozen parameters
+            None => bail!("coupled {method}: backward produced no gradient for '{name}'"),
+        };
+        res.insert(format!("d.{name}"), Value::F32(g));
+    }
+    Ok(res)
+}
+
+/// Inference graph: `lm_fwd_*` — weights + tokens -> logits.
+pub(super) fn lm_fwd(m: &Manifest, size: &str, named: &Named) -> Result<BTreeMap<String, Value>> {
+    let cfg = m.size(size)?;
+    let tokens = i32_in(named, "tokens")?;
+    let (bsz, s) = (tokens.shape()[0], tokens.shape()[1]);
+    let (p, _) = partition(cfg, named, &["tokens"]);
+    let zeros_t = IntTensor::new(vec![bsz, s], vec![0; bsz * s]);
+    let zeros_m = Tensor::zeros(&[bsz, s]);
+    let task = Task::Clm { targets: &zeros_t, mask: &zeros_m };
+    let mut opts = Opts::new("none");
+    opts.need_back = false;
+    opts.want_logits = true;
+    let out = lm_run(cfg, &p, tokens, &task, &opts)?;
+    let logits = out
+        .logits
+        .ok_or_else(|| anyhow!("lm_fwd: logits missing"))?
+        .reshape(&[bsz, s, cfg.vocab]);
+    let mut res = BTreeMap::new();
+    res.insert("logits".to_string(), Value::F32(logits));
+    Ok(res)
+}

@@ -1,0 +1,384 @@
+//! The hermetic pure-Rust execution backend (default).
+//!
+//! `NativeDevice` implements the same device contract as the PJRT device
+//! thread — named resident buffers, positional artifact execution, an
+//! `OutputPlan` of fetches and keeps — but executes every artifact in
+//! the manifest directly on `tensor::Tensor`:
+//!
+//! - `builtin` — synthesizes the manifest (names, input orders, outputs)
+//! - `init`    — generates the initial-value groups
+//! - `kernels` — LN / attention / CE primitives + backwards (ref.py twins)
+//! - `lm`      — decoupled + coupled transformer graphs
+//! - `ic`      — image-classification graphs (im2col convs)
+//!
+//! Surrogate-fit artifacts reuse `adapters::AdapterParams::fit_grads`
+//! (Prop. 1: the residual at w^t collapses to grad_hhat), and the
+//! `adamw_n*`/`sgd_n*` reference steps match `adapters::optimizer`
+//! bit for bit.
+//!
+//! Native tensors are Send, so a "device" is shared state, not a thread:
+//! clones share one buffer store (mirroring how PJRT device handles
+//! share their device thread).
+
+pub mod builtin;
+pub mod init;
+pub mod kernels;
+
+mod ic;
+mod lm;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::value::Value;
+use super::{ExecResult, Input, OutputPlan};
+use crate::adapters::AdapterParams;
+use crate::tensor::Tensor;
+
+use lm::{f32_in, Named};
+
+/// Handle to a native execution device. Cloneable, Send and Sync;
+/// clones share the same buffer store.
+#[derive(Clone)]
+pub struct NativeDevice {
+    name: Arc<String>,
+    manifest: Arc<Manifest>,
+    store: Arc<Mutex<HashMap<String, Value>>>,
+}
+
+impl NativeDevice {
+    pub fn new(name: &str, manifest: Arc<Manifest>) -> NativeDevice {
+        NativeDevice {
+            name: Arc::new(name.to_string()),
+            manifest,
+            store: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn store(&self) -> MutexGuard<'_, HashMap<String, Value>> {
+        self.store.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn upload(&self, name: &str, value: Value) -> Result<()> {
+        self.store().insert(name.to_string(), value);
+        Ok(())
+    }
+
+    pub fn read(&self, name: &str) -> Result<Value> {
+        self.store()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no buffer '{name}'"))
+    }
+
+    pub fn free(&self, name: &str) -> Result<()> {
+        self.store().remove(name);
+        Ok(())
+    }
+
+    pub fn resident_bytes(&self) -> Result<usize> {
+        Ok(self.store().values().map(Value::bytes).sum())
+    }
+
+    pub fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<Input>,
+        plan: OutputPlan,
+    ) -> Result<ExecResult> {
+        let spec = self.manifest.artifact(artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{artifact}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        // Resolve positional values. Inline values are owned; resident
+        // refs are borrowed from the store for the duration of the run
+        // (no per-step copy of the resident base model).
+        let t_up = Instant::now();
+        let mut bytes_up = 0usize;
+        enum Slot {
+            Store(String),
+            Owned(usize),
+        }
+        let mut slots = Vec::with_capacity(inputs.len());
+        let mut owned: Vec<Value> = Vec::new();
+        for inp in inputs {
+            match inp {
+                Input::Ref(name) => slots.push(Slot::Store(name)),
+                Input::Val(v) => {
+                    bytes_up += v.bytes();
+                    slots.push(Slot::Owned(owned.len()));
+                    owned.push(v);
+                }
+            }
+        }
+        let upload_time = t_up.elapsed();
+
+        // Backward outputs (index >= 2 on fwdbwd/coupled graphs) are only
+        // computed when the plan actually wants one — eval fetches just
+        // loss/acc and skips the whole reverse pass.
+        let need_back = plan
+            .fetch
+            .iter()
+            .copied()
+            .chain(plan.keep.iter().map(|(i, _)| *i))
+            .any(|i| i >= 2);
+
+        let t0 = Instant::now();
+        let mut by_name = {
+            let store = self.store();
+            let vals: Vec<&Value> = slots
+                .iter()
+                .map(|s| match s {
+                    Slot::Store(name) => store.get(name).ok_or_else(|| {
+                        anyhow!("{artifact}: no resident buffer '{name}'")
+                    }),
+                    Slot::Owned(i) => Ok(&owned[*i]),
+                })
+                .collect::<Result<_>>()?;
+            // Enforce the manifest contract like the PJRT path would: a
+            // stale or mis-shaped buffer must fail loudly, not index
+            // silently into the wrong layout.
+            for (io, v) in spec.inputs.iter().zip(&vals) {
+                let dtype_ok = match v {
+                    Value::F32(_) => io.dtype == super::manifest::DType::F32,
+                    Value::I32(_) => io.dtype == super::manifest::DType::I32,
+                };
+                if !dtype_ok {
+                    bail!("{artifact}: input '{}' has wrong dtype", io.name);
+                }
+                if v.shape() != io.dims.as_slice() {
+                    bail!(
+                        "{artifact}: input '{}' has shape {:?}, manifest expects {:?}",
+                        io.name,
+                        v.shape(),
+                        io.dims
+                    );
+                }
+            }
+            run_artifact(&self.manifest, artifact, spec, &vals, need_back)?
+        };
+        let ordered: Vec<Value> = spec
+            .outputs
+            .iter()
+            .map(|n| {
+                by_name
+                    .remove(n)
+                    .ok_or_else(|| anyhow!("{artifact}: native executor missing output '{n}'"))
+            })
+            .collect::<Result<_>>()?;
+        let exec_time = t0.elapsed();
+
+        let t_fetch = Instant::now();
+        let mut fetched = Vec::new();
+        let mut bytes_down = 0usize;
+        for idx in &plan.fetch {
+            let v = ordered
+                .get(*idx)
+                .ok_or_else(|| anyhow!("{artifact}: no output index {idx}"))?
+                .clone();
+            bytes_down += v.bytes();
+            fetched.push((*idx, v));
+        }
+        if !plan.keep.is_empty() {
+            let mut slots: Vec<Option<Value>> = ordered.into_iter().map(Some).collect();
+            let mut store = self.store();
+            for (idx, name) in &plan.keep {
+                let v = slots
+                    .get_mut(*idx)
+                    .and_then(Option::take)
+                    .ok_or_else(|| anyhow!("{artifact}: keep index {idx} invalid/duplicate"))?;
+                store.insert(name.clone(), v);
+            }
+        }
+        let fetch_time = t_fetch.elapsed();
+        Ok(ExecResult {
+            fetched,
+            exec_time,
+            compile_time: Duration::ZERO,
+            upload_time,
+            fetch_time,
+            bytes_up,
+            bytes_down,
+        })
+    }
+}
+
+fn two_tokens(rest: &str) -> Result<(&str, &str)> {
+    let mut it = rest.split('_');
+    let a = it.next().ok_or_else(|| anyhow!("bad artifact name '{rest}'"))?;
+    let b = it.next().ok_or_else(|| anyhow!("bad artifact name '{rest}'"))?;
+    Ok((a, b))
+}
+
+fn run_artifact(
+    manifest: &Manifest,
+    name: &str,
+    spec: &ArtifactSpec,
+    vals: &[&Value],
+    need_back: bool,
+) -> Result<BTreeMap<String, Value>> {
+    let named: Named = spec
+        .inputs
+        .iter()
+        .zip(vals.iter())
+        .map(|(io, v)| (io.name.as_str(), *v))
+        .collect();
+
+    if let Some(rest) = name.strip_prefix("lm_fwdbwd_") {
+        let (size, kind) = two_tokens(rest)?;
+        return lm::decoupled(manifest, size, kind, &named, false, need_back);
+    }
+    if let Some(rest) = name.strip_prefix("seqcls_fwdbwd_") {
+        let (size, kind) = two_tokens(rest)?;
+        return lm::decoupled(manifest, size, kind, &named, true, need_back);
+    }
+    if let Some(rest) = name.strip_prefix("coupled_clm_") {
+        let (size, method) = two_tokens(rest)?;
+        return lm::coupled(manifest, size, method, &named, false, need_back);
+    }
+    if let Some(rest) = name.strip_prefix("coupled_seqcls_") {
+        let (size, method) = two_tokens(rest)?;
+        return lm::coupled(manifest, size, method, &named, true, need_back);
+    }
+    if let Some(size) = name.strip_prefix("lm_fwd_") {
+        return lm::lm_fwd(manifest, size, &named);
+    }
+    if let Some(rest) = name.strip_prefix("ic_") {
+        let mut it = rest.splitn(3, '_');
+        let model = it.next().unwrap_or_default();
+        let family = it.next().unwrap_or_default();
+        let tail = it.next().unwrap_or_default();
+        let variant = match (family, tail) {
+            ("fwdbwd", "merged") => ic::Variant::Merged,
+            ("fwdbwd", kind) => ic::Variant::Decoupled(kind.to_string()),
+            ("coupled", "ft") => ic::Variant::CoupledFt,
+            ("coupled", "lora") => ic::Variant::CoupledLora,
+            _ => bail!("native backend: unsupported ic artifact '{name}'"),
+        };
+        return ic::run(manifest, model, variant, &named, need_back);
+    }
+    if let Some(rest) = name.strip_prefix("fit_") {
+        let kind = rest.split('_').next().unwrap_or_default();
+        return run_fit(kind, &named);
+    }
+    if name.starts_with("adamw_n") {
+        return run_adamw(&named);
+    }
+    if name.starts_with("sgd_n") {
+        return run_sgd(&named);
+    }
+    bail!("native backend cannot execute artifact '{name}'")
+}
+
+/// Surrogate-fit artifacts: `target = g_w(x) - ghat`, so the residual at
+/// w^t is exactly ghat and the gradients are `AdapterParams::fit_grads`
+/// (mirrors `adapter_update.make_fit_grad` + `kernels/fit_step.py`).
+fn run_fit(kind: &str, named: &Named) -> Result<BTreeMap<String, Value>> {
+    let x = f32_in(named, "x")?;
+    let ghat = f32_in(named, "ghat")?;
+    let (params, onames): (AdapterParams, Vec<&str>) = match kind {
+        "lowrank" => (
+            AdapterParams::LowRank {
+                a: f32_in(named, "A")?.clone(),
+                b: f32_in(named, "B")?.clone(),
+            },
+            vec!["dA", "dB"],
+        ),
+        "linear" => (
+            AdapterParams::Linear { w: f32_in(named, "W")?.clone() },
+            vec!["dW"],
+        ),
+        "mlp" => (
+            AdapterParams::Mlp {
+                w1: f32_in(named, "W1")?.clone(),
+                b1: f32_in(named, "b1")?.clone(),
+                w2: f32_in(named, "W2")?.clone(),
+                b2: f32_in(named, "b2")?.clone(),
+            },
+            vec!["dW1", "db1", "dW2", "db2"],
+        ),
+        other => bail!("unknown fit kind '{other}'"),
+    };
+    let grads = params.fit_grads(x, ghat);
+    let mut res = BTreeMap::new();
+    for (name, g) in onames.into_iter().zip(grads) {
+        res.insert(name.to_string(), Value::F32(g));
+    }
+    Ok(res)
+}
+
+fn scalar_in(named: &Named, name: &str) -> Result<f32> {
+    let t = f32_in(named, name)?;
+    if t.len() != 1 {
+        bail!("input '{name}' must be a scalar");
+    }
+    Ok(t.data()[0])
+}
+
+/// Reference AdamW step — arithmetic identical to `adapters::OptState`
+/// so the two worker paths produce bit-identical trajectories.
+fn run_adamw(named: &Named) -> Result<BTreeMap<String, Value>> {
+    let w = f32_in(named, "w")?;
+    let g = f32_in(named, "g")?;
+    let m = f32_in(named, "m")?;
+    let v = f32_in(named, "v")?;
+    let t = scalar_in(named, "t")?;
+    let lr = scalar_in(named, "lr")?;
+    let beta1 = scalar_in(named, "beta1")?;
+    let beta2 = scalar_in(named, "beta2")?;
+    let eps = scalar_in(named, "eps")?;
+    let wd = scalar_in(named, "wd")?;
+    let n = w.len();
+    let bc1 = 1.0 - beta1.powi(t as i32);
+    let bc2 = 1.0 - beta2.powi(t as i32);
+    let mut w2 = vec![0.0f32; n];
+    let mut m2 = vec![0.0f32; n];
+    let mut v2 = vec![0.0f32; n];
+    for j in 0..n {
+        let gv = g.data()[j];
+        let mi = beta1 * m.data()[j] + (1.0 - beta1) * gv;
+        let vi = beta2 * v.data()[j] + (1.0 - beta2) * gv * gv;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        w2[j] = w.data()[j] - lr * (mhat / (vhat.sqrt() + eps) + wd * w.data()[j]);
+        m2[j] = mi;
+        v2[j] = vi;
+    }
+    let shape = w.shape().to_vec();
+    let mut res = BTreeMap::new();
+    res.insert("w2".to_string(), Value::F32(Tensor::new(shape.clone(), w2)));
+    res.insert("m2".to_string(), Value::F32(Tensor::new(shape.clone(), m2)));
+    res.insert("v2".to_string(), Value::F32(Tensor::new(shape, v2)));
+    Ok(res)
+}
+
+fn run_sgd(named: &Named) -> Result<BTreeMap<String, Value>> {
+    let w = f32_in(named, "w")?;
+    let g = f32_in(named, "g")?;
+    let lr = scalar_in(named, "lr")?;
+    let wd = scalar_in(named, "wd")?;
+    let data: Vec<f32> = w
+        .data()
+        .iter()
+        .zip(g.data())
+        .map(|(wv, gv)| wv - lr * (gv + wd * wv))
+        .collect();
+    let mut res = BTreeMap::new();
+    res.insert(
+        "w2".to_string(),
+        Value::F32(Tensor::new(w.shape().to_vec(), data)),
+    );
+    Ok(res)
+}

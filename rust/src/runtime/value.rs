@@ -1,7 +1,8 @@
-//! `Value` — the typed array that crosses device-thread boundaries.
+//! `Value` — the typed array that crosses device boundaries.
 //!
 //! PJRT `Literal`s wrap raw pointers and are !Send, so only `Value`s
-//! (plain `Vec`-backed tensors) move between threads. Every crossing is
+//! (plain `Vec`-backed tensors) move between threads; the native backend
+//! uses the same type as its resident-buffer storage. Every crossing is
 //! an explicit host copy — exactly the transfer the paper's offload
 //! model charges for, so the transfer ledger falls out of the type
 //! system.

@@ -1,0 +1,361 @@
+//! Golden-value parity tests for the native backend: pin
+//! `runtime::native` outputs for each artifact family against small
+//! fixtures derived from `python/compile/kernels/ref.py`, plus
+//! manifest.json parse round-trips for the built-in manifest.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use cola::runtime::{Input, Manifest, OutputPlan, Runtime, Value};
+use cola::tensor::{self, Tensor};
+
+fn runtime() -> Runtime {
+    // no artifacts directory in a clean checkout -> built-in native manifest
+    Runtime::load("artifacts").expect("native runtime")
+}
+
+fn exec(
+    rt: &Runtime,
+    artifact: &str,
+    by_name: &BTreeMap<String, Value>,
+    fetch: &[&str],
+) -> BTreeMap<String, Value> {
+    let inputs = rt
+        .assemble(artifact, |io| {
+            by_name
+                .get(&io.name)
+                .cloned()
+                .map(Input::Val)
+                .ok_or_else(|| anyhow::anyhow!("missing {}", io.name))
+        })
+        .unwrap();
+    let (outs, _) = rt.execute_fetch(&rt.server, artifact, inputs, fetch).unwrap();
+    outs
+}
+
+#[test]
+fn manifest_roundtrip_through_json() {
+    let rt = runtime();
+    assert!(!rt.manifest.from_disk);
+    let json = rt.manifest.to_json_string();
+    let parsed = Manifest::parse(&json, Path::new("artifacts")).unwrap();
+    assert_eq!(parsed.artifacts.len(), rt.manifest.artifacts.len());
+    assert_eq!(parsed.rank, rt.manifest.rank);
+    assert_eq!(parsed.mlp_hidden, rt.manifest.mlp_hidden);
+    assert_eq!(parsed.n_classes_seqcls, rt.manifest.n_classes_seqcls);
+    for (name, spec) in &rt.manifest.artifacts {
+        let p = parsed.artifact(name).unwrap();
+        assert_eq!(p.outputs, spec.outputs, "{name}");
+        assert_eq!(p.inputs.len(), spec.inputs.len(), "{name}");
+        for (a, b) in p.inputs.iter().zip(&spec.inputs) {
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.dtype, b.dtype, "{name}");
+            assert_eq!(a.dims, b.dims, "{name}");
+        }
+    }
+    for (name, c) in &rt.manifest.configs {
+        let p = &parsed.configs[name];
+        assert_eq!((p.vocab, p.d, p.layers), (c.vocab, c.d, c.layers));
+        assert_eq!((p.heads, p.dff, p.seq, p.batch), (c.heads, c.dff, c.seq, c.batch));
+    }
+}
+
+#[test]
+fn fit_linear_golden_values() {
+    // ref.py fit_step_linear with target = delta - ghat reduces to
+    // dW = x^T ghat; pin against a one-hot fixture.
+    let rt = runtime();
+    let mut x = Tensor::zeros(&[8, 128]);
+    x.data_mut()[0] = 1.0; // x[0][0] = 1
+    x.data_mut()[128 + 2] = 2.0; // x[1][2] = 2
+    let mut ghat = Tensor::zeros(&[8, 4]);
+    ghat.data_mut()[0..4].copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+    ghat.data_mut()[4] = 5.0; // ghat[1][0] = 5
+    let mut ins = BTreeMap::new();
+    ins.insert("x".to_string(), Value::F32(x));
+    ins.insert("ghat".to_string(), Value::F32(ghat));
+    ins.insert("W".to_string(), Value::F32(Tensor::zeros(&[128, 4])));
+    let outs = exec(&rt, "fit_linear_128x4_n8", &ins, &["dW"]);
+    let dw = outs["dW"].as_f32().unwrap();
+    assert_eq!(dw.shape(), &[128, 4]);
+    // row 0 of dW = x[.,0]^T ghat = [1,2,3,4]
+    assert_eq!(&dw.data()[0..4], &[1.0, 2.0, 3.0, 4.0]);
+    // row 2 of dW = 2 * ghat[1] = [10,0,0,0]
+    assert_eq!(&dw.data()[2 * 4..2 * 4 + 4], &[10.0, 0.0, 0.0, 0.0]);
+    // everything else zero
+    assert_eq!(dw.data()[3 * 4], 0.0);
+}
+
+#[test]
+fn fit_lowrank_matches_native_contractions() {
+    let rt = runtime();
+    let mut rng = cola::rng::Rng::new(9);
+    let x = Tensor::randn(&[512, 128], 1.0, &mut rng);
+    let ghat = Tensor::randn(&[512, 128], 1.0, &mut rng);
+    let a = Tensor::randn(&[128, 8], 0.2, &mut rng);
+    let b = Tensor::randn(&[8, 128], 0.2, &mut rng);
+    let mut ins = BTreeMap::new();
+    ins.insert("x".to_string(), Value::F32(x.clone()));
+    ins.insert("ghat".to_string(), Value::F32(ghat.clone()));
+    ins.insert("A".to_string(), Value::F32(a.clone()));
+    ins.insert("B".to_string(), Value::F32(b.clone()));
+    let outs = exec(&rt, "fit_lowrank_128x128_n512", &ins, &["dA", "dB"]);
+    // ref.py: da = x^T (ghat B^T); db = (xA)^T ghat
+    let da_ref = tensor::matmul_tn(&x, &tensor::matmul_nt(&ghat, &b));
+    let db_ref = tensor::matmul_tn(&tensor::matmul(&x, &a), &ghat);
+    assert!(outs["dA"].as_f32().unwrap().allclose(&da_ref, 1e-4, 1e-4));
+    assert!(outs["dB"].as_f32().unwrap().allclose(&db_ref, 1e-4, 1e-4));
+}
+
+#[test]
+fn adamw_golden_step() {
+    // With eps = 0, wd = 0, t = 1: mhat = g, vhat = g^2 -> w2 = -lr*sign(g).
+    let rt = runtime();
+    let mut ins = BTreeMap::new();
+    ins.insert("w".to_string(), Value::F32(Tensor::zeros(&[64])));
+    ins.insert("g".to_string(), Value::F32(Tensor::from_fn(&[64], |_| 1.0)));
+    ins.insert("m".to_string(), Value::F32(Tensor::zeros(&[64])));
+    ins.insert("v".to_string(), Value::F32(Tensor::zeros(&[64])));
+    ins.insert("t".to_string(), Value::F32(Tensor::scalar(1.0)));
+    ins.insert("lr".to_string(), Value::F32(Tensor::scalar(0.1)));
+    ins.insert("beta1".to_string(), Value::F32(Tensor::scalar(0.9)));
+    ins.insert("beta2".to_string(), Value::F32(Tensor::scalar(0.999)));
+    ins.insert("eps".to_string(), Value::F32(Tensor::scalar(0.0)));
+    ins.insert("wd".to_string(), Value::F32(Tensor::scalar(0.0)));
+    let outs = exec(&rt, "adamw_n64", &ins, &["w2", "m2", "v2"]);
+    let w2 = outs["w2"].as_f32().unwrap();
+    for &v in w2.data() {
+        assert!((v + 0.1).abs() < 1e-5, "w2 {v}");
+    }
+    let m2 = outs["m2"].as_f32().unwrap();
+    assert!((m2.data()[0] - 0.1).abs() < 1e-6);
+}
+
+#[test]
+fn sgd_golden_step() {
+    let rt = runtime();
+    let mut ins = BTreeMap::new();
+    ins.insert("w".to_string(), Value::F32(Tensor::from_fn(&[64], |_| 1.0)));
+    ins.insert("g".to_string(), Value::F32(Tensor::from_fn(&[64], |_| 0.5)));
+    ins.insert("lr".to_string(), Value::F32(Tensor::scalar(0.1)));
+    ins.insert("wd".to_string(), Value::F32(Tensor::scalar(0.01)));
+    let outs = exec(&rt, "sgd_n64", &ins, &["w2"]);
+    // w - lr*(g + wd*w) = 1 - 0.1*(0.5 + 0.01) = 0.949
+    for &v in outs["w2"].as_f32().unwrap().data() {
+        assert!((v - 0.949).abs() < 1e-6);
+    }
+}
+
+fn lm_zero_inputs(rt: &Runtime) -> BTreeMap<String, Value> {
+    let spec = rt.manifest.artifact("lm_fwdbwd_tiny_none").unwrap();
+    let mut ins = BTreeMap::new();
+    for io in &spec.inputs {
+        let v = match io.name.as_str() {
+            "tokens" => Value::I32(cola::runtime::IntTensor::new(
+                vec![8, 64],
+                vec![7; 8 * 64],
+            )),
+            "targets" => Value::I32(cola::runtime::IntTensor::new(
+                vec![8, 64],
+                vec![0; 8 * 64],
+            )),
+            "mask" => Value::F32(Tensor::from_fn(&[8, 64], |_| 1.0)),
+            _ => Value::F32(Tensor::zeros(&io.dims)),
+        };
+        ins.insert(io.name.clone(), v);
+    }
+    ins
+}
+
+#[test]
+fn lm_fwdbwd_uniform_logits_golden() {
+    // All-zero weights => logits identically zero => loss = ln(V) exactly,
+    // argmax = 0 everywhere => acc = 1 with targets = 0, and every
+    // grad_hhat must vanish (nothing reaches the loss through zeros).
+    let rt = runtime();
+    let ins = lm_zero_inputs(&rt);
+    let outs = exec(
+        &rt,
+        "lm_fwdbwd_tiny_none",
+        &ins,
+        &["loss", "acc", "l0.x", "l0.gq", "l1.gv"],
+    );
+    let loss = outs["loss"].scalar_f32().unwrap();
+    assert!((loss - (512f32).ln()).abs() < 1e-4, "loss {loss}");
+    assert!((outs["acc"].scalar_f32().unwrap() - 1.0).abs() < 1e-6);
+    assert_eq!(outs["l0.x"].shape(), &[8, 64, 128]);
+    assert_eq!(tensor::norm(outs["l0.gq"].as_f32().unwrap()), 0.0);
+    assert_eq!(tensor::norm(outs["l1.gv"].as_f32().unwrap()), 0.0);
+}
+
+#[test]
+fn decoupled_lowrank_equals_merged_forward() {
+    // Prop. 2 at artifact level: running the lowrank graph with live
+    // adapters equals the 'none' graph with the deltas folded into wq/wv.
+    let rt = runtime();
+    let mut rng = cola::rng::Rng::new(3);
+    let weights = rt.manifest.load_init("lm_tiny").unwrap();
+    let mut adapters = rt.manifest.load_init("adapters_tiny_lowrank").unwrap();
+    // randomize B so the delta is non-trivial
+    for (name, t) in adapters.iter_mut() {
+        if name.ends_with(".B") {
+            *t = Tensor::randn(&t.shape().to_vec(), 0.2, &mut rng);
+        }
+    }
+    let tokens = Value::I32(cola::runtime::IntTensor::new(
+        vec![8, 64],
+        (0..8 * 64).map(|i| (i % 500) as i32).collect(),
+    ));
+    let targets = Value::I32(cola::runtime::IntTensor::new(
+        vec![8, 64],
+        (0..8 * 64).map(|i| ((i + 1) % 500) as i32).collect(),
+    ));
+    let mask = Value::F32(Tensor::from_fn(&[8, 64], |_| 1.0));
+
+    let mut ins = BTreeMap::new();
+    for (k, v) in &weights {
+        ins.insert(k.clone(), Value::F32(v.clone()));
+    }
+    for (k, v) in &adapters {
+        ins.insert(k.clone(), Value::F32(v.clone()));
+    }
+    ins.insert("tokens".to_string(), tokens.clone());
+    ins.insert("targets".to_string(), targets.clone());
+    ins.insert("mask".to_string(), mask.clone());
+    let live = exec(&rt, "lm_fwdbwd_tiny_lowrank", &ins, &["loss", "l0.gq"]);
+
+    // fold deltas into the q/v projections
+    let mut merged = weights.clone();
+    for i in 0..2 {
+        for proj in ["q", "v"] {
+            let a = &adapters[&format!("l{i}.{proj}.A")];
+            let b = &adapters[&format!("l{i}.{proj}.B")];
+            let delta = tensor::matmul(a, b);
+            let w = merged.get_mut(&format!("l{i}.w{proj}")).unwrap();
+            tensor::axpy(w, 1.0, &delta);
+        }
+    }
+    let mut ins2 = BTreeMap::new();
+    for (k, v) in &merged {
+        ins2.insert(k.clone(), Value::F32(v.clone()));
+    }
+    ins2.insert("tokens".to_string(), tokens);
+    ins2.insert("targets".to_string(), targets);
+    ins2.insert("mask".to_string(), mask);
+    let folded = exec(&rt, "lm_fwdbwd_tiny_none", &ins2, &["loss", "l0.gq"]);
+
+    let l1 = live["loss"].scalar_f32().unwrap();
+    let l2 = folded["loss"].scalar_f32().unwrap();
+    assert!((l1 - l2).abs() < 1e-3, "live {l1} vs folded {l2}");
+    let g1 = live["l0.gq"].as_f32().unwrap();
+    let g2 = folded["l0.gq"].as_f32().unwrap();
+    assert!(g1.allclose(g2, 1e-2, 1e-3), "max {}", g1.max_abs_diff(g2));
+}
+
+#[test]
+fn coupled_lora_grads_satisfy_prop1() {
+    // Prop. 1 at artifact level: the coupled LoRA gradient for site B
+    // equals the surrogate-fit contraction of the decoupled outputs
+    // (x_m, grad_hhat_m) shipped by the lowrank graph on the same batch.
+    let rt = runtime();
+    let weights = rt.manifest.load_init("lm_tiny").unwrap();
+    let tunables = rt.manifest.load_init("tunables_tiny_lora").unwrap();
+    let tokens = Value::I32(cola::runtime::IntTensor::new(
+        vec![8, 64],
+        (0..8 * 64).map(|i| (i * 31 % 500) as i32).collect(),
+    ));
+    let targets = Value::I32(cola::runtime::IntTensor::new(
+        vec![8, 64],
+        (0..8 * 64).map(|i| (i * 17 % 500) as i32).collect(),
+    ));
+    let mask = Value::F32(Tensor::from_fn(&[8, 64], |_| 1.0));
+    let mut ins = BTreeMap::new();
+    for (k, v) in weights.iter().chain(tunables.iter()) {
+        ins.insert(k.clone(), Value::F32(v.clone()));
+    }
+    ins.insert("tokens".to_string(), tokens.clone());
+    ins.insert("targets".to_string(), targets.clone());
+    ins.insert("mask".to_string(), mask.clone());
+    let coupled = exec(&rt, "coupled_clm_tiny_lora", &ins,
+                       &["loss", "d.l0.q.A", "d.l0.q.B"]);
+
+    // same batch through the decoupled graph (adapter inputs == tunables)
+    let dec = exec(&rt, "lm_fwdbwd_tiny_lowrank", &ins, &["loss", "l0.x", "l0.gq"]);
+    assert!(
+        (coupled["loss"].scalar_f32().unwrap() - dec["loss"].scalar_f32().unwrap()).abs()
+            < 1e-5
+    );
+    let x = dec["l0.x"].as_f32().unwrap().clone().to_rows();
+    let gq = dec["l0.gq"].as_f32().unwrap().clone().to_rows();
+    let a = &tunables["l0.q.A"];
+    let b = &tunables["l0.q.B"];
+    let da_fit = tensor::matmul_tn(&x, &tensor::matmul_nt(&gq, b));
+    let db_fit = tensor::matmul_tn(&tensor::matmul(&x, a), &gq);
+    let da = coupled["d.l0.q.A"].as_f32().unwrap();
+    let db = coupled["d.l0.q.B"].as_f32().unwrap();
+    assert!(da.allclose(&da_fit, 1e-3, 1e-4), "dA max {}", da.max_abs_diff(&da_fit));
+    assert!(db.allclose(&db_fit, 1e-3, 1e-4), "dB max {}", db.max_abs_diff(&db_fit));
+}
+
+#[test]
+fn seqcls_zero_head_golden() {
+    let rt = runtime();
+    let spec = rt.manifest.artifact("seqcls_fwdbwd_tiny_none").unwrap();
+    let mut ins = BTreeMap::new();
+    for io in &spec.inputs {
+        let v = match io.name.as_str() {
+            "tokens" => Value::I32(cola::runtime::IntTensor::new(
+                vec![8, 64],
+                vec![20; 8 * 64],
+            )),
+            "labels" => Value::I32(cola::runtime::IntTensor::new(vec![8], vec![0; 8])),
+            "mask" => Value::F32(Tensor::from_fn(&[8, 64], |_| 1.0)),
+            _ => Value::F32(Tensor::zeros(&io.dims)),
+        };
+        ins.insert(io.name.clone(), v);
+    }
+    let outs = exec(&rt, "seqcls_fwdbwd_tiny_none", &ins,
+                    &["loss", "acc", "head.x", "head.g"]);
+    let loss = outs["loss"].scalar_f32().unwrap();
+    assert!((loss - (4f32).ln()).abs() < 1e-5, "loss {loss}");
+    // head.g = (softmax - onehot)/B with uniform softmax over 4 classes
+    let hg = outs["head.g"].as_f32().unwrap();
+    assert_eq!(hg.shape(), &[8, 4]);
+    assert!((hg.data()[0] - (0.25 - 1.0) / 8.0).abs() < 1e-6);
+    assert!((hg.data()[1] - 0.25 / 8.0).abs() < 1e-6);
+}
+
+#[test]
+fn ic_merged_zero_weights_golden() {
+    let rt = runtime();
+    let spec = rt.manifest.artifact("ic_linear_fwdbwd_merged").unwrap();
+    let mut ins = BTreeMap::new();
+    for io in &spec.inputs {
+        let v = match io.name.as_str() {
+            "images" => Value::F32(Tensor::from_fn(&[32, 28, 28, 1], |i| {
+                (i % 7) as f32 * 0.1
+            })),
+            "labels" => Value::I32(cola::runtime::IntTensor::new(vec![32], vec![0; 32])),
+            _ => Value::F32(Tensor::zeros(&io.dims)),
+        };
+        ins.insert(io.name.clone(), v);
+    }
+    let outs = exec(&rt, "ic_linear_fwdbwd_merged", &ins,
+                    &["loss", "acc", "fc.x", "fc.g"]);
+    let loss = outs["loss"].scalar_f32().unwrap();
+    assert!((loss - (10f32).ln()).abs() < 1e-5, "loss {loss}");
+    assert!((outs["acc"].scalar_f32().unwrap() - 1.0).abs() < 1e-6);
+    assert_eq!(outs["fc.x"].shape(), &[32, 784]);
+    let g = outs["fc.g"].as_f32().unwrap();
+    assert!((g.data()[0] - (0.1 - 1.0) / 32.0).abs() < 1e-6);
+}
+
+#[test]
+fn native_refuses_unknown_artifact_with_clear_error() {
+    let rt = runtime();
+    let err = rt
+        .server
+        .execute("bogus_artifact", vec![], OutputPlan::default())
+        .unwrap_err();
+    assert!(format!("{err}").contains("bogus_artifact"));
+}
