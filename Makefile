@@ -27,8 +27,9 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
-BENCHES = table1_complexity table2_seqcls table3_s2s table4_collab \
-          table6_clm table9_scratch table10_compute fig_interval
+BENCHES = throughput table1_complexity table2_seqcls table3_s2s \
+          table4_collab table6_clm table9_scratch table10_compute \
+          fig_interval
 
 bench:
 	@for b in $(BENCHES); do \

@@ -1,0 +1,197 @@
+//! Native tensor-engine throughput baseline (EXPERIMENTS.md §Perf).
+//!
+//! Measures GFLOP/s for the matmul family at bench sizes — single-thread
+//! vs the full scoped-thread pool — plus end-to-end decoupled-step
+//! throughput (steps/sec) on the tiny/small LM graphs, and emits a
+//! machine-readable baseline to `BENCH_throughput.json` (override with
+//! `COLA_BENCH_OUT`). CI runs `--quick` and gates on
+//! `COLA_BENCH_MIN_SPEEDUP` so engine regressions fail loudly.
+//!
+//! Target (acceptance): >= 3x single-thread matmul throughput on >= 4
+//! cores at the non-quick bench sizes.
+
+#[path = "common.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+
+use cola::bench_harness::{bench, BenchReport, BenchStats};
+use cola::config::{AdapterKind, Method, Mode, Task, TrainConfig};
+use cola::coordinator::Trainer;
+use cola::metrics::markdown_table;
+use cola::rng::Rng;
+use cola::tensor::{self, pool, Tensor};
+use cola::util::json::Json;
+
+fn gflops(flops: f64, s: &BenchStats) -> f64 {
+    flops / s.median.as_secs_f64().max(1e-12) / 1e9
+}
+
+/// (single-thread GFLOP/s, full-pool GFLOP/s) for one kernel closure.
+fn measure(iters: usize, flops: f64, f: impl Fn() -> Tensor) -> (f64, f64) {
+    pool::set_threads(1);
+    let s1 = bench("single", 1, iters, &f);
+    pool::set_threads(0); // back to COLA_THREADS/auto
+    let sn = bench("multi", 1, iters, &f);
+    (gflops(flops, &s1), gflops(flops, &sn))
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (_steps, quick) = common::bench_args();
+    let iters = if quick { 3 } else { 5 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let cases: &[(&str, usize, usize, usize)] = if quick {
+        &[
+            ("square_192", 192, 192, 192),
+            ("adapter_fit_2048x128", 2048, 128, 128),
+        ]
+    } else {
+        &[
+            ("square_256", 256, 256, 256),
+            ("square_384", 384, 384, 384),
+            ("adapter_fit_4096x128", 4096, 128, 128),
+            ("skinny_lora_4096x128x8", 4096, 128, 8),
+        ]
+    };
+
+    let mut report = BenchReport::new("Tensor-engine throughput");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut mm_json = Vec::new();
+    let mut best_speedup = 0.0f64;
+    // the CI gate tracks the *worst* matmul-kernel speedup across cases:
+    // a max over all kernels would stay green while matmul itself
+    // regressed to serial
+    let mut matmul_min_speedup = f64::INFINITY;
+    for &(name, m, k, n) in cases {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let at = tensor::transpose(&a);
+        let bt = tensor::transpose(&b);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+
+        let (s_mm, n_mm) = measure(iters, flops, || tensor::matmul(&a, &b));
+        let (s_tn, n_tn) = measure(iters, flops, || tensor::matmul_tn(&at, &b));
+        let (s_nt, n_nt) = measure(iters, flops, || tensor::matmul_nt(&a, &bt));
+        for (kernel, single, multi) in [
+            ("matmul", s_mm, n_mm),
+            ("matmul_tn", s_tn, n_tn),
+            ("matmul_nt", s_nt, n_nt),
+        ] {
+            let speedup = multi / single.max(1e-12);
+            best_speedup = best_speedup.max(speedup);
+            if kernel == "matmul" {
+                matmul_min_speedup = matmul_min_speedup.min(speedup);
+            }
+            let mut o = BTreeMap::new();
+            o.insert("case".to_string(), Json::Str(name.to_string()));
+            o.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+            o.insert("m".to_string(), num(m as f64));
+            o.insert("k".to_string(), num(k as f64));
+            o.insert("n".to_string(), num(n as f64));
+            o.insert("single_gflops".to_string(), num(single));
+            o.insert("multi_gflops".to_string(), num(multi));
+            o.insert("speedup".to_string(), num(speedup));
+            mm_json.push(Json::Obj(o));
+            rows.push(vec![
+                format!("{name}/{kernel}"),
+                format!("{m}x{k}x{n}"),
+                format!("{single:.2}"),
+                format!("{multi:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+    }
+    report.section(
+        &format!("matmul family, {cores} cores (GFLOP/s)"),
+        markdown_table(
+            &["kernel", "shape", "1-thread", "pool", "speedup"],
+            &rows,
+        ),
+    );
+
+    // end-to-end decoupled steps/sec (server fwd/bwd + offload fit),
+    // native backend, full pool
+    let lm_sizes: &[&str] = if quick { &["tiny"] } else { &["tiny", "small"] };
+    let mut lm_rows: Vec<Vec<String>> = Vec::new();
+    let mut lm_json = BTreeMap::new();
+    for &size in lm_sizes {
+        let mut cfg = TrainConfig::default();
+        cfg.task = Task::Clm;
+        cfg.size = size.into();
+        cfg.method = Method::Cola(AdapterKind::LowRank);
+        cfg.mode = Mode::Unmerged;
+        cfg.eval_every = 0;
+        cfg.eval_batches = 1;
+        cfg.workers = 2;
+        let mut t = Trainer::new(cfg)?;
+        let st = bench(
+            &format!("lm_{size}"),
+            1,
+            if quick { 3 } else { 6 },
+            || t.step(0).unwrap(),
+        );
+        let sps = 1.0 / st.median.as_secs_f64().max(1e-12);
+        lm_json.insert(size.to_string(), num(sps));
+        lm_rows.push(vec![
+            size.to_string(),
+            format!("{:.4}", st.median.as_secs_f64()),
+            format!("{sps:.2}"),
+        ]);
+    }
+    report.section(
+        "decoupled LM step throughput (ColA LowRank unmerged, native)",
+        markdown_table(&["size", "s/step (median)", "steps/sec"], &lm_rows),
+    );
+    report.emit("throughput")?;
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("throughput".to_string()));
+    top.insert("schema".to_string(), num(1.0));
+    top.insert("quick".to_string(), Json::Bool(quick));
+    top.insert("cores".to_string(), num(cores as f64));
+    top.insert("threads".to_string(), num(pool::max_threads() as f64));
+    top.insert("matmul".to_string(), Json::Arr(mm_json));
+    top.insert("lm_steps_per_sec".to_string(), Json::Obj(lm_json));
+    top.insert("best_matmul_speedup".to_string(), num(best_speedup));
+    top.insert("matmul_min_speedup".to_string(), num(matmul_min_speedup));
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // the tracked baseline lives at the workspace root one level up
+    let out = std::env::var("COLA_BENCH_OUT").unwrap_or_else(|_| {
+        match std::env::var("CARGO_MANIFEST_DIR") {
+            Ok(dir) => format!("{dir}/../BENCH_throughput.json"),
+            Err(_) => "BENCH_throughput.json".to_string(),
+        }
+    });
+    std::fs::write(&out, format!("{}\n", Json::Obj(top)))?;
+    println!(
+        "wrote {out} (matmul speedup min {matmul_min_speedup:.2}x / \
+         best overall {best_speedup:.2}x on {cores} cores)"
+    );
+
+    if let Ok(raw) = std::env::var("COLA_BENCH_MIN_SPEEDUP") {
+        // a malformed threshold must not silently disable the gate
+        let minv: f64 = match raw.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("COLA_BENCH_MIN_SPEEDUP={raw:?} is not a number");
+                std::process::exit(1);
+            }
+        };
+        if matmul_min_speedup < minv {
+            eprintln!(
+                "PERF REGRESSION: worst-case matmul speedup \
+                 {matmul_min_speedup:.2}x < required {minv:.2}x ({cores} cores)"
+            );
+            std::process::exit(1);
+        }
+    }
+    Ok(())
+}

@@ -228,6 +228,11 @@ pub struct TrainConfig {
     /// decoupled gradient computations in parallel"). Updates apply one
     /// interval late (bounded staleness).
     pub async_offload: bool,
+    /// tensor-engine width: 0 = auto (COLA_THREADS env, else core
+    /// count). Applied process-globally when the Trainer is constructed
+    /// (last constructed wins). Results are thread-count independent;
+    /// pin for benchmark and CI timing determinism.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -252,6 +257,7 @@ impl Default for TrainConfig {
             eval_batches: 8,
             artifacts_dir: "artifacts".into(),
             async_offload: false,
+            threads: 0,
         }
     }
 }
@@ -288,6 +294,7 @@ impl TrainConfig {
             "eval_batches" => self.eval_batches = val.parse().context("eval_batches")?,
             "artifacts_dir" => self.artifacts_dir = val.into(),
             "async_offload" => self.async_offload = val.parse().context("async_offload")?,
+            "threads" => self.threads = val.parse().context("threads")?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())

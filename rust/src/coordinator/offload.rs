@@ -17,7 +17,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::adapters::{AdapterParams, SiteAdapter};
 use crate::config::OffloadTarget;
@@ -138,6 +138,11 @@ impl Worker {
 
 /// The pool: users are sharded across workers (user k -> worker k % N),
 /// mirroring "multiple low-cost devices ... in parallel" (§3.2).
+///
+/// Each worker's surrogate-fit contractions (`AdapterParams::fit_grads`)
+/// run on the shared `tensor::pool` core budget, so FitJobs for
+/// different users genuinely overlap without oversubscribing the host:
+/// a worker that can't lease extra cores just computes serially.
 pub struct WorkerPool {
     workers: Vec<Worker>,
 }
@@ -149,6 +154,11 @@ impl WorkerPool {
         manifest: Arc<Manifest>,
         transfer: Option<TransferModel>,
     ) -> Result<WorkerPool> {
+        if n == 0 {
+            // for_user shards by `user % n`; n = 0 would panic on the
+            // first dispatch with a bare divide-by-zero
+            bail!("WorkerPool::spawn: need at least one worker (got n = 0)");
+        }
         let mut workers = Vec::with_capacity(n);
         for id in 0..n {
             let (tx, rx) = channel();
@@ -373,5 +383,14 @@ mod tests {
         let bytes = 8 << 20;
         assert!(TransferModel::gpu_link().delay_for(bytes)
                 < TransferModel::cpu_link().delay_for(bytes));
+    }
+
+    #[test]
+    fn spawn_zero_workers_is_error() {
+        let m = Arc::new(crate::runtime::native::builtin::builtin_manifest(
+            std::path::Path::new("artifacts"),
+        ));
+        let err = WorkerPool::spawn(0, OffloadTarget::NativeCpu, m, None).unwrap_err();
+        assert!(format!("{err}").contains("at least one worker"), "{err}");
     }
 }

@@ -81,6 +81,12 @@ impl Trainer {
     /// Build with an explicit driver (the IC study constructs its own).
     pub fn with_driver(cfg: TrainConfig, rt: Runtime, driver: Driver) -> Result<Trainer> {
         cfg.validate()?;
+        // apply this run's tensor-engine width (0 = back to auto).
+        // Uniform semantics: every Trainer construction sets the global
+        // override from its own config, so a pin from an earlier run in
+        // the same process can't silently leak into this one. Results
+        // are thread-count independent; this is a wall-clock knob.
+        tensor::pool::set_threads(cfg.threads);
         if cfg.users > 1 && cfg.mode != Mode::Merged {
             bail!("multi-user training in one server requires mode=merged \
                    (the 'Alone' arm of Table 4 is separate runs)");
@@ -406,12 +412,23 @@ impl Trainer {
     }
 
     /// Drain buffers -> dispatch FitJobs -> apply replies. With
-    /// async_offload the replies of the PREVIOUS interval are collected
-    /// here instead, and this interval's fits overlap the next server
-    /// steps (one-interval bounded staleness).
+    /// async_offload the PREVIOUS interval's in-flight replies are
+    /// collected *before* dispatching, so this interval's fits overlap
+    /// the next server steps and at most one interval of FitJobs is ever
+    /// outstanding (one-interval bounded staleness). The old condition
+    /// checked `pending` *after* dispatch, which let two intervals pile
+    /// up and then drained both synchronously — every other flush
+    /// blocked on work submitted microseconds earlier, erasing the
+    /// overlap async_offload exists for.
     fn flush_adapters(&mut self) -> Result<()> {
         if self.pool.is_none() {
             return Ok(());
+        }
+        if self.cfg.async_offload {
+            // the previous interval's fits ran while we served steps;
+            // apply them now so the in-flight window never exceeds one
+            // interval of jobs
+            self.collect_pending()?;
         }
         if !self.buffers.is_empty() {
             let merged = self.cfg.mode == Mode::Merged;
@@ -424,13 +441,17 @@ impl Trainer {
                 self.pending.push(rx);
             }
         }
-        if self.cfg.async_offload && self.pending.len()
-            <= self.cfg.users * self.driver.sites.len()
-        {
-            // keep at most one interval in flight
+        if self.cfg.async_offload {
+            // leave exactly this interval in flight
             return Ok(());
         }
         self.collect_pending()
+    }
+
+    /// Number of FitJob replies dispatched but not yet applied — the
+    /// async-offload staleness window (<= users * sites by construction).
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
     }
 
     /// Apply all in-flight worker replies to the server state.

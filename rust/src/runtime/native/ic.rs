@@ -14,7 +14,7 @@ use super::super::value::Value;
 use super::builtin::{self, IMG};
 use super::kernels;
 use super::lm::{adapter_apply, adapter_back, f32_in, i32_in, Named};
-use crate::tensor::{self, Tensor};
+use crate::tensor::{self, pool, Tensor};
 
 pub(super) enum Variant {
     /// frozen random base + live adapters (ic_*_fwdbwd_{kind})
@@ -27,15 +27,17 @@ pub(super) enum Variant {
     CoupledLora,
 }
 
-/// SAME-padded 3x3 patches: (B, H, W, C) -> (B*H*W, C*9).
+/// SAME-padded 3x3 patches: (B, H, W, C) -> (B*H*W, C*9). Images are
+/// independent, so the patch extraction fans out per image across the
+/// tensor-engine pool (each image owns a disjoint output chunk).
 fn im2col(x: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
     let xd = x.data();
     let fc = c * 9;
     let mut out = vec![0.0f32; bsz * h * w * fc];
-    for b in 0..bsz {
+    pool::parallel_chunks_mut(&mut out, h * w * fc, |b, img| {
         for y in 0..h {
             for xx in 0..w {
-                let orow = ((b * h + y) * w + xx) * fc;
+                let orow = (y * w + xx) * fc;
                 for ky in 0..3 {
                     let sy = y as isize + ky as isize - 1;
                     if sy < 0 || sy >= h as isize {
@@ -48,22 +50,23 @@ fn im2col(x: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
                         }
                         let src = ((b * h + sy as usize) * w + sx as usize) * c;
                         for ch in 0..c {
-                            out[orow + ch * 9 + ky * 3 + kx] = xd[src + ch];
+                            img[orow + ch * 9 + ky * 3 + kx] = xd[src + ch];
                         }
                     }
                 }
             }
         }
-    }
+    });
     Tensor::new(vec![bsz * h * w, fc], out)
 }
 
-/// Backward of [`im2col`]: scatter-add patches back onto the image grid.
+/// Backward of [`im2col`]: scatter-add patches back onto the image grid,
+/// one image per pool task (scatter targets stay within the image).
 fn col2im(dp: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
     let fc = c * 9;
     let dd = dp.data();
     let mut out = vec![0.0f32; bsz * h * w * c];
-    for b in 0..bsz {
+    pool::parallel_chunks_mut(&mut out, h * w * c, |b, img| {
         for y in 0..h {
             for xx in 0..w {
                 let prow = ((b * h + y) * w + xx) * fc;
@@ -77,15 +80,15 @@ fn col2im(dp: &Tensor, bsz: usize, h: usize, w: usize, c: usize) -> Tensor {
                         if sx < 0 || sx >= w as isize {
                             continue;
                         }
-                        let dst = ((b * h + sy as usize) * w + sx as usize) * c;
+                        let dst = ((sy as usize) * w + sx as usize) * c;
                         for ch in 0..c {
-                            out[dst + ch] += dd[prow + ch * 9 + ky * 3 + kx];
+                            img[dst + ch] += dd[prow + ch * 9 + ky * 3 + kx];
                         }
                     }
                 }
             }
         }
-    }
+    });
     Tensor::new(vec![bsz * h * w, c], out)
 }
 

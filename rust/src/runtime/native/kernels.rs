@@ -97,22 +97,37 @@ pub fn attention_head(
         for i in 0..s {
             for j in 0..skv {
                 if j > i + p_prefix {
-                    ld[i * skv + j] = f32::MIN;
+                    // -inf, not f32::MIN: exp(-inf - m) is exactly 0 for
+                    // any finite m, so masked positions can never leak
+                    // probability mass however the unmasked logits scale.
+                    // (With the old f32::MIN sentinel, a row whose live
+                    // logits underflowed to -inf made the *sentinel* the
+                    // row max and softmax attended the masked future.)
+                    ld[i * skv + j] = f32::NEG_INFINITY;
                 }
             }
         }
     }
-    // numerically stable row softmax
+    // numerically stable row softmax; a row whose every logit is -inf
+    // (all attendable positions underflowed) degrades to all-zero probs
+    // instead of NaN
     for i in 0..s {
         let row = &mut ld[i * skv..(i + 1) * skv];
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let shift = if m.is_finite() { m } else { 0.0 };
         let mut sum = 0.0f32;
         for x in row.iter_mut() {
-            *x = (*x - m).exp();
+            *x = (*x - shift).exp();
             sum += *x;
         }
-        for x in row.iter_mut() {
-            *x /= sum;
+        if sum > 0.0 {
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        } else {
+            for x in row.iter_mut() {
+                *x = 0.0;
+            }
         }
     }
     let p = logits;
@@ -382,6 +397,48 @@ mod tests {
                 - loss(&q, &k, &bump(&v, idx, -eps))) / (2.0 * eps);
             assert!((fd - dv.data()[idx]).abs() < 2e-2, "dv fd {fd}");
         }
+    }
+
+    #[test]
+    fn masked_rows_stay_finite_under_extreme_logits() {
+        // every non-prefix logit overflows to -inf, so each row's only
+        // finite mass is on the prefix columns — probs must stay finite,
+        // split over the prefix, with masked positions exactly zero
+        let (s, pp, dh) = (3usize, 2usize, 1usize);
+        let skv = s + pp;
+        let q = Tensor::from_fn(&[s, dh], |_| 1e20);
+        let k = Tensor::from_fn(&[skv, dh], |i| if i < pp { 0.0 } else { -1e20 });
+        let v = Tensor::from_fn(&[skv, dh], |i| i as f32);
+        let (o, p) = attention_head(&q, &k, &v, true, pp);
+        for i in 0..s {
+            let row = &p.data()[i * skv..(i + 1) * skv];
+            assert!(row.iter().all(|x| x.is_finite()), "row {i}: {row:?}");
+            assert!((row[0] - 0.5).abs() < 1e-6 && (row[1] - 0.5).abs() < 1e-6);
+            for &x in &row[pp..] {
+                assert_eq!(x, 0.0);
+            }
+        }
+        // output = mean of the two prefix values = 0.5
+        for &x in o.data() {
+            assert!((x - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fully_masked_row_softmax_is_zero_not_nan() {
+        // a row whose only attendable logit underflowed to -inf: the old
+        // f32::MIN sentinel made the masked future the row max (probs
+        // leaked there); now the row degrades to zeros, never NaN
+        let (s, dh) = (2usize, 1usize);
+        let q = Tensor::from_fn(&[s, dh], |_| 1e20);
+        let k = Tensor::from_fn(&[s, dh], |_| -1e20);
+        let v = Tensor::from_fn(&[s, dh], |i| (i + 1) as f32);
+        let (o, p) = attention_head(&q, &k, &v, true, 0);
+        assert!(p.data().iter().all(|x| x.is_finite()));
+        assert!(o.data().iter().all(|x| x.is_finite()));
+        // row 0: position 0 underflowed, position 1 masked -> all zero
+        assert_eq!(p.data()[0], 0.0);
+        assert_eq!(p.data()[1], 0.0);
     }
 
     #[test]

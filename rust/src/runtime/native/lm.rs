@@ -23,7 +23,7 @@ use super::super::manifest::{Manifest, SizeConfig};
 use super::super::value::{IntTensor, Value};
 use super::builtin::{self, PREFIX_LEN};
 use super::kernels;
-use crate::tensor::{self, Tensor};
+use crate::tensor::{self, pool, Tensor};
 
 pub(super) type Named<'a> = BTreeMap<&'a str, &'a Value>;
 
@@ -331,35 +331,51 @@ fn lm_run(cfg: &SizeConfig, p: &Params, tokens: &IntTensor, task: &Task, opts: &
 
         let pp = if opts.prefix { PREFIX_LEN } else { 0 };
         let skv = st + pp;
+        // prefix K/V are materialized per example up front so the
+        // per-head tasks below borrow only immutable state
+        let prefix_kv: Option<Vec<(Tensor, Tensor)>> = if pp > 0 {
+            let pk = p.prefix(&format!("l{i}.pk"))?;
+            let pv = p.prefix(&format!("l{i}.pv"))?;
+            Some(
+                (0..bsz)
+                    .map(|b| {
+                        let kb = k_s.rows(b * st, (b + 1) * st);
+                        let vb = v2_s.rows(b * st, (b + 1) * st);
+                        (Tensor::cat_rows(&[pk, &kb]), Tensor::cat_rows(&[pv, &vb]))
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        // heads are independent: fan the (batch, head) grid out across
+        // the tensor-engine pool, then scatter serially (deterministic
+        // accumulation order)
+        let causal = opts.causal;
+        let head_runs = pool::parallel_map(bsz * heads, |idx| {
+            let (b, hh) = (idx / heads, idx % heads);
+            let (ksrc, vsrc, row_base) = match &prefix_kv {
+                Some(kv) => (&kv[b].0, &kv[b].1, 0usize),
+                None => (&k_s, &v2_s, b * st),
+            };
+            let qh = extract(&q2, b * st, st, hh * hd, hd);
+            let kh = extract(ksrc, row_base, skv, hh * hd, hd);
+            let vh = extract(vsrc, row_base, skv, hh * hd, hd);
+            let (o, pr) = kernels::attention_head(&qh, &kh, &vh, causal, pp);
+            (qh, kh, vh, o, pr)
+        });
         let mut heads_q = Vec::with_capacity(bsz * heads);
         let mut heads_k = Vec::with_capacity(bsz * heads);
         let mut heads_v = Vec::with_capacity(bsz * heads);
         let mut probs = Vec::with_capacity(bsz * heads);
         let mut att = Tensor::zeros(&[rows, d]);
-        for b in 0..bsz {
-            let (kfull, vfull);
-            let (ksrc, vsrc, row_base) = if pp > 0 {
-                let pk = p.prefix(&format!("l{i}.pk"))?;
-                let pv = p.prefix(&format!("l{i}.pv"))?;
-                let kb = k_s.rows(b * st, (b + 1) * st);
-                let vb = v2_s.rows(b * st, (b + 1) * st);
-                kfull = Tensor::cat_rows(&[pk, &kb]);
-                vfull = Tensor::cat_rows(&[pv, &vb]);
-                (&kfull, &vfull, 0usize)
-            } else {
-                (&k_s, &v2_s, b * st)
-            };
-            for hh in 0..heads {
-                let qh = extract(&q2, b * st, st, hh * hd, hd);
-                let kh = extract(ksrc, row_base, skv, hh * hd, hd);
-                let vh = extract(vsrc, row_base, skv, hh * hd, hd);
-                let (o, pr) = kernels::attention_head(&qh, &kh, &vh, opts.causal, pp);
-                add_at(&mut att, &o, b * st, hh * hd);
-                heads_q.push(qh);
-                heads_k.push(kh);
-                heads_v.push(vh);
-                probs.push(pr);
-            }
+        for (idx, (qh, kh, vh, o, pr)) in head_runs.into_iter().enumerate() {
+            let (b, hh) = (idx / heads, idx % heads);
+            add_at(&mut att, &o, b * st, hh * hd);
+            heads_q.push(qh);
+            heads_k.push(kh);
+            heads_v.push(vh);
+            probs.push(pr);
         }
 
         let wo = p.w(&format!("l{i}.wo"))?;
@@ -547,28 +563,31 @@ fn lm_run(cfg: &SizeConfig, p: &Params, tokens: &IntTensor, task: &Task, opts: &
         let mut dv2 = Tensor::zeros(&[rows, d]);
         let mut dpk = Tensor::zeros(&[pp.max(1), d]); // unused when pp == 0
         let mut dpv = Tensor::zeros(&[pp.max(1), d]);
-        for b in 0..bsz {
-            for hh in 0..heads {
-                let idx = b * heads + hh;
-                let dohead = extract(&datt, b * st, st, hh * hd, hd);
-                let (dqh, dkh, dvh) = kernels::attention_head_back(
-                    &dohead,
-                    &c.heads_q[idx],
-                    &c.heads_k[idx],
-                    &c.heads_v[idx],
-                    &c.probs[idx],
-                );
-                add_at(&mut dq2, &dqh, b * st, hh * hd);
-                if pp > 0 {
-                    add_at(&mut dpk, &extract(&dkh, 0, pp, 0, hd), 0, hh * hd);
-                    add_at(&mut dpv, &extract(&dvh, 0, pp, 0, hd), 0, hh * hd);
-                    add_at(&mut dk2, &extract(&dkh, pp, st, 0, hd), b * st, hh * hd);
-                    add_at(&mut dv2, &extract(&dvh, pp, st, 0, hd), b * st, hh * hd);
-                } else {
-                    debug_assert_eq!(skv, st);
-                    add_at(&mut dk2, &dkh, b * st, hh * hd);
-                    add_at(&mut dv2, &dvh, b * st, hh * hd);
-                }
+        // backward twin of the forward fan-out: per-head gradients run
+        // across the pool, the scatter stays serial and in-order
+        let head_grads = pool::parallel_map(bsz * heads, |idx| {
+            let (b, hh) = (idx / heads, idx % heads);
+            let dohead = extract(&datt, b * st, st, hh * hd, hd);
+            kernels::attention_head_back(
+                &dohead,
+                &c.heads_q[idx],
+                &c.heads_k[idx],
+                &c.heads_v[idx],
+                &c.probs[idx],
+            )
+        });
+        for (idx, (dqh, dkh, dvh)) in head_grads.into_iter().enumerate() {
+            let (b, hh) = (idx / heads, idx % heads);
+            add_at(&mut dq2, &dqh, b * st, hh * hd);
+            if pp > 0 {
+                add_at(&mut dpk, &extract(&dkh, 0, pp, 0, hd), 0, hh * hd);
+                add_at(&mut dpv, &extract(&dvh, 0, pp, 0, hd), 0, hh * hd);
+                add_at(&mut dk2, &extract(&dkh, pp, st, 0, hd), b * st, hh * hd);
+                add_at(&mut dv2, &extract(&dvh, pp, st, 0, hd), b * st, hh * hd);
+            } else {
+                debug_assert_eq!(skv, st);
+                add_at(&mut dk2, &dkh, b * st, hh * hd);
+                add_at(&mut dv2, &dvh, b * st, hh * hd);
             }
         }
         if pp > 0 {

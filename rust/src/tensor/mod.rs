@@ -6,10 +6,13 @@
 //! so only `Tensor`s cross thread boundaries — which doubles as the
 //! transfer-size ledger the memory accountant charges).
 //!
-//! Row-major, shapes up to rank 4. The matmul is a blocked ikj kernel —
-//! see `matmul` for the hot-path notes (EXPERIMENTS.md §Perf).
+//! Row-major, shapes up to rank 4. The matmul family is a parallel
+//! cache-blocked engine — B-panel packing + row-band fan-out over the
+//! scoped-thread pool in [`pool`]; see `ops::matmul` for the hot-path
+//! notes and EXPERIMENTS.md §Perf for the measured trajectory.
 
 pub mod ops;
+pub mod pool;
 
 pub use ops::*;
 

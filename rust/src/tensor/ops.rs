@@ -1,14 +1,73 @@
-//! Linear-algebra ops for the native worker path.
+//! Linear-algebra ops for the native hot paths.
 //!
-//! `matmul` is the worker hot path (the surrogate-fit contractions). It
-//! uses an ikj loop order with a column-blocked inner kernel so the
-//! innermost loop is a contiguous axpy over the output row — this
-//! auto-vectorizes well. Perf iterations are logged in EXPERIMENTS.md
-//! §Perf.
+//! The matmul family is the engine under everything: the server's
+//! fwd/bwd trunk, per-head attention, and the worker surrogate-fit
+//! contractions. `matmul` packs B into cache-resident column panels and
+//! splits the output into row bands across the scoped-thread pool
+//! (`tensor::pool`); the innermost loop is a contiguous axpy over the
+//! output row, which auto-vectorizes well. Bands and panels never change
+//! per-element accumulation order, so results are bit-identical for
+//! every thread count. Perf iterations are logged in EXPERIMENTS.md
+//! §Perf; the throughput bench (`cargo bench --bench throughput`) emits
+//! the BENCH_throughput.json baseline.
+//!
+//! IEEE note: earlier revisions skipped the inner axpy when the A
+//! element was exactly 0.0, silently rewriting `0 * NaN` and `0 * inf`
+//! to 0 — diverging from the naive reference and the PJRT backend. The
+//! fast path is gone; non-finite inputs now propagate exactly like the
+//! reference (pinned by `matmul_ieee_nonfinite_parity`).
 
+use super::pool;
 use super::Tensor;
 
+/// Column-panel width for B packing (f32 lane-friendly, fits L1 rows).
 const BLOCK_J: usize = 256;
+
+/// Flop count above which packing B into panels pays for its copy.
+const PACK_MIN_WORK: usize = 1 << 20;
+
+/// One row band against one column panel of B. `panel` starts at output
+/// column `j0` and holds `k` rows of width `pw` at stride `pstride`
+/// (`pw` when packed, `n` when reading B in place).
+fn mm_band(
+    arows: &[f32],
+    k: usize,
+    n: usize,
+    panel: &[f32],
+    pstride: usize,
+    j0: usize,
+    pw: usize,
+    oband: &mut [f32],
+) {
+    let rows = oband.len() / n;
+    for i in 0..rows {
+        let arow = &arows[i * k..(i + 1) * k];
+        let orow = &mut oband[i * n + j0..i * n + j0 + pw];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &panel[p * pstride..p * pstride + pw];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Pack B (k x n, row-major) into contiguous column panels of width
+/// <= BLOCK_J: (j0, pw, k x pw buffer). Shared read-only by all bands.
+fn pack_panels(bd: &[f32], k: usize, n: usize) -> Vec<(usize, usize, Vec<f32>)> {
+    let mut panels = Vec::with_capacity(n.div_ceil(BLOCK_J));
+    let mut j0 = 0;
+    while j0 < n {
+        let pw = BLOCK_J.min(n - j0);
+        let mut panel = vec![0.0f32; k * pw];
+        for p in 0..k {
+            panel[p * pw..(p + 1) * pw].copy_from_slice(&bd[p * n + j0..p * n + j0 + pw]);
+        }
+        panels.push((j0, pw, panel));
+        j0 += pw;
+    }
+    panels
+}
 
 /// C = A @ B. A: (m, k), B: (k, n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -16,82 +75,93 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = b.dims2();
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return Tensor::new(vec![m, n], out);
+    }
     let ad = a.data();
     let bd = b.data();
-    for j0 in (0..n).step_by(BLOCK_J) {
-        let j1 = (j0 + BLOCK_J).min(n);
-        for i in 0..m {
-            let orow = &mut out[i * n..(i + 1) * n];
-            for p in 0..k {
-                let av = ad[i * k + p];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &bd[p * n..(p + 1) * n];
-                for j in j0..j1 {
-                    orow[j] += av * brow[j];
-                }
+    let work = 2 * m * k * n;
+    let packed = if n > BLOCK_J && work >= PACK_MIN_WORK {
+        Some(pack_panels(bd, k, n))
+    } else {
+        None
+    };
+    let band_kernel = |arows: &[f32], oband: &mut [f32]| match &packed {
+        Some(panels) => {
+            for (j0, pw, panel) in panels {
+                mm_band(arows, k, n, panel, *pw, *j0, *pw, oband);
             }
         }
-    }
+        None => {
+            let mut j0 = 0;
+            while j0 < n {
+                let pw = BLOCK_J.min(n - j0);
+                mm_band(arows, k, n, &bd[j0..], n, j0, pw, oband);
+                j0 += pw;
+            }
+        }
+    };
+    pool::join_row_bands(ad, k, &mut out, n, work, &band_kernel);
     Tensor::new(vec![m, n], out)
 }
 
-/// C = A^T @ B. A: (k, m), B: (k, n) -> (m, n). Avoids materializing A^T.
+/// C = A^T @ B. A: (k, m), B: (k, n) -> (m, n). The explicit transpose
+/// is O(km) against the O(kmn) contraction and buys the packed banded
+/// kernel (and its thread fan-out) for the backward contractions.
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
-    let (k, m) = a.dims2();
-    let (k2, n) = b.dims2();
-    assert_eq!(k, k2);
-    let mut out = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
-    for p in 0..k {
-        let arow = &ad[p * m..(p + 1) * m];
-        let brow = &bd[p * n..(p + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    Tensor::new(vec![m, n], out)
+    let (k, _m) = a.dims2();
+    let (k2, _n) = b.dims2();
+    assert_eq!(k, k2, "matmul_tn inner dims: {k} vs {k2}");
+    matmul(&transpose(a), b)
 }
 
-/// C = A @ B^T. A: (m, k), B: (n, k) -> (m, n). Dot-product kernel.
+/// C = A @ B^T. A: (m, k), B: (n, k) -> (m, n). Dot-product kernel,
+/// row-band parallel; both operands stream contiguously.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (n, k2) = b.dims2();
-    assert_eq!(k, k2);
+    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return Tensor::new(vec![m, n], out);
+    }
     let ad = a.data();
     let bd = b.data();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
+    let work = 2 * m * k * n;
+    let band_kernel = |arows: &[f32], oband: &mut [f32]| {
+        let rows = oband.len() / n;
+        for i in 0..rows {
+            let arow = &arows[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &bd[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                oband[i * n + j] = acc;
             }
-            out[i * n + j] = acc;
         }
-    }
+    };
+    pool::join_row_bands(ad, k, &mut out, n, work, &band_kernel);
     Tensor::new(vec![m, n], out)
 }
 
-/// Transpose a rank-2 tensor.
+/// Transpose a rank-2 tensor (32x32 tiles so both sides stay in cache).
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = a.dims2();
     let ad = a.data();
-    Tensor::from_fn(&[n, m], |i| {
-        let (r, c) = (i / m, i % m);
-        ad[c * n + r]
-    })
+    let mut out = vec![0.0f32; m * n];
+    const TB: usize = 32;
+    for i0 in (0..m).step_by(TB) {
+        for j0 in (0..n).step_by(TB) {
+            for i in i0..(i0 + TB).min(m) {
+                for j in j0..(j0 + TB).min(n) {
+                    out[j * m + i] = ad[i * n + j];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, m], out)
 }
 
 /// out = a + b (elementwise).
@@ -188,6 +258,16 @@ mod tests {
     }
 
     #[test]
+    fn large_matmul_matches_naive() {
+        // big enough to hit both the packed-panel and the parallel paths
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (61, 47, 300);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        assert!(matmul(&a, &b).allclose(&naive_matmul(&a, &b), 1e-4, 1e-4));
+    }
+
+    #[test]
     fn matmul_tn_nt_match_transpose() {
         let mut rng = Rng::new(2);
         let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
@@ -196,6 +276,59 @@ mod tests {
         let c = Tensor::randn(&[9, 5], 1.0, &mut rng);
         let at = Tensor::randn(&[4, 5], 1.0, &mut rng);
         assert!(matmul_nt(&at, &c).allclose(&matmul(&at, &transpose(&c)), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn matmul_ieee_nonfinite_parity() {
+        // the old zero-skip fast path rewrote 0 * NaN and 0 * inf to 0;
+        // the engine must match the naive reference (and the PJRT
+        // backend) on non-finite inputs instead
+        let a = Tensor::new(vec![2, 2], vec![0.0, 1.0, 2.0, 0.0]);
+        let b = Tensor::new(
+            vec![2, 3],
+            vec![f32::NAN, f32::INFINITY, 1.0, 1.0, 2.0, f32::NEG_INFINITY],
+        );
+        let c = matmul(&a, &b);
+        let r = naive_matmul(&a, &b);
+        for (x, y) in c.data().iter().zip(r.data()) {
+            assert_eq!(x.is_nan(), y.is_nan(), "{x} vs {y}");
+            if !x.is_nan() {
+                assert_eq!(x, y);
+            }
+        }
+        // 0 * NaN must poison the accumulator, not vanish
+        assert!(c.data()[0].is_nan());
+        // matmul_tn sees the same contraction through the transpose
+        let ct = matmul_tn(&transpose(&a), &b);
+        for (x, y) in ct.data().iter().zip(c.data()) {
+            assert_eq!(x.is_nan(), y.is_nan());
+            if !x.is_nan() {
+                assert_eq!(x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_thread_bitwise() {
+        // band splits and panel packing never change accumulation order,
+        // so every thread count must produce identical bits
+        let mut rng = Rng::new(17);
+        let a = Tensor::randn(&[97, 64], 1.0, &mut rng);
+        let b = Tensor::randn(&[64, 300], 1.0, &mut rng);
+        let c = Tensor::randn(&[97, 300], 1.0, &mut rng);
+        let y = Tensor::randn(&[500, 64], 1.0, &mut rng);
+        pool::set_threads(1);
+        let m1 = matmul(&a, &b);
+        let t1 = matmul_tn(&a, &c);
+        let n1 = matmul_nt(&y, &a);
+        pool::set_threads(4);
+        let m4 = matmul(&a, &b);
+        let t4 = matmul_tn(&a, &c);
+        let n4 = matmul_nt(&y, &a);
+        pool::set_threads(0);
+        assert_eq!(m1, m4);
+        assert_eq!(t1, t4);
+        assert_eq!(n1, n4);
     }
 
     #[test]
@@ -224,5 +357,13 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = Tensor::randn(&[6, 11], 1.0, &mut rng);
         assert_eq!(transpose(&transpose(&a)), a);
+        // non-multiple-of-tile shapes
+        let b = Tensor::randn(&[33, 65], 1.0, &mut rng);
+        assert_eq!(transpose(&transpose(&b)), b);
+        let naive = Tensor::from_fn(&[65, 33], |i| {
+            let (r, c) = (i / 33, i % 33);
+            b.data()[c * 65 + r]
+        });
+        assert_eq!(transpose(&b), naive);
     }
 }

@@ -1,0 +1,291 @@
+//! Scoped-thread pool for the native tensor engine.
+//!
+//! There is no persistent thread object: parallel sections spawn scoped
+//! threads (`std::thread::scope`) on demand, and a global *core budget*
+//! — leases taken from one atomic counter — bounds the total number of
+//! *extra* helper threads across every concurrent section in the
+//! process (the server's fwd/bwd, each offload worker's surrogate fit,
+//! nested kernels) to `max_threads() - 1`. Calling threads are not
+//! registered, so K concurrent sections can still run up to
+//! `cap - 1 + K` compute threads — mild, bounded oversubscription in
+//! exchange for never blocking: a section that cannot lease extra cores
+//! simply runs serially.
+//!
+//! Determinism: splits are row/item-contiguous and every output element
+//! is produced by exactly one thread with the same accumulation order as
+//! the serial kernel, so results are **bit-identical for every thread
+//! count** (pinned by `tensor::ops` tests). The knobs below only move
+//! wall-clock time, never numerics:
+//!
+//! - `COLA_THREADS` env var — engine width for the process (CI pins it);
+//! - [`set_threads`] — runtime override (benches sweep 1..N, configs via
+//!   `TrainConfig::threads`); `0` clears back to env/auto;
+//! - default — `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Work (in flops) below which band-parallel kernels stay serial —
+/// thread spawn latency would dominate the compute.
+pub const MIN_PAR_WORK: usize = 1 << 20;
+
+/// Buffer length (elements) below which [`parallel_chunks_mut`] stays
+/// serial.
+pub const MIN_PAR_ELEMS: usize = 1 << 15;
+
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("COLA_THREADS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Current engine width (always >= 1).
+pub fn max_threads() -> usize {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Override the engine width at runtime. `set_threads(0)` clears the
+/// override back to `COLA_THREADS`/auto. Results are thread-count
+/// independent; this only changes how wide parallel sections fan out.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// A lease of extra cores from the global budget. The calling thread
+/// always counts as one; `extra` is how many helper threads were
+/// granted. Dropping the lease returns the cores.
+struct Lease {
+    extra: usize,
+}
+
+impl Lease {
+    fn grab(want: usize) -> Lease {
+        if want <= 1 {
+            return Lease { extra: 0 };
+        }
+        let cap = max_threads();
+        let mut extra = 0;
+        let _ = ACTIVE.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+            let free = cap.saturating_sub(cur + 1);
+            extra = (want - 1).min(free);
+            if extra == 0 {
+                None
+            } else {
+                Some(cur + extra)
+            }
+        });
+        Lease { extra }
+    }
+
+    fn threads(&self) -> usize {
+        self.extra + 1
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.extra > 0 {
+            ACTIVE.fetch_sub(self.extra, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Row-band parallelism over a pair of row-major buffers: `a` is split
+/// into bands of whole `a_cols`-wide rows, `out` into the matching
+/// `o_cols`-wide bands, and `f(a_band, out_band)` runs once per band
+/// across the pool. Serial when `work < MIN_PAR_WORK` or no cores are
+/// free. Preconditions: `a_cols > 0`, `o_cols > 0`,
+/// `a.len() == rows * a_cols`, `out.len() == rows * o_cols`.
+pub fn join_row_bands<F>(
+    a: &[f32],
+    a_cols: usize,
+    out: &mut [f32],
+    o_cols: usize,
+    work: usize,
+    f: &F,
+) where
+    F: Fn(&[f32], &mut [f32]) + Sync,
+{
+    assert!(a_cols > 0 && o_cols > 0, "join_row_bands: zero-width rows");
+    let rows = out.len() / o_cols;
+    debug_assert_eq!(a.len(), rows * a_cols);
+    let lease = Lease::grab(if work >= MIN_PAR_WORK { rows } else { 1 });
+    let threads = lease.threads().min(rows.max(1));
+    if threads <= 1 {
+        f(a, out);
+        return;
+    }
+    let band = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut ai = a.chunks(band * a_cols);
+        let mut oi = out.chunks_mut(band * o_cols);
+        // run the first band on the calling thread, the rest on helpers
+        let (a0, o0) = (ai.next().unwrap(), oi.next().unwrap());
+        for (ab, ob) in ai.zip(oi) {
+            s.spawn(move || f(ab, ob));
+        }
+        f(a0, o0);
+    });
+}
+
+/// Parallel map over `0..n`, preserving order. Each item should be
+/// substantial (an attention head, a conv image) — tiny closures belong
+/// in a serial loop.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let lease = Lease::grab(n);
+    let threads = lease.threads().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut iter = out.chunks_mut(chunk).enumerate();
+        let (i0, c0) = iter.next().unwrap();
+        for (ci, csl) in iter {
+            s.spawn(move || {
+                for (i, slot) in csl.iter_mut().enumerate() {
+                    *slot = Some(f(ci * chunk + i));
+                }
+            });
+        }
+        for (i, slot) in c0.iter_mut().enumerate() {
+            *slot = Some(f(i0 * chunk + i));
+        }
+    });
+    out.into_iter()
+        .map(|o| o.expect("parallel_map: missing slot"))
+        .collect()
+}
+
+/// Split `buf` into `chunk_len`-sized pieces and run `f(chunk_index,
+/// chunk)` for each across the pool (serial below `MIN_PAR_ELEMS`).
+/// `buf.len()` must be a multiple of `chunk_len`.
+pub fn parallel_chunks_mut<F>(buf: &mut [f32], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(chunk_len > 0 && buf.len() % chunk_len == 0);
+    let n_chunks = buf.len() / chunk_len;
+    let lease = Lease::grab(if buf.len() >= MIN_PAR_ELEMS { n_chunks } else { 1 });
+    let threads = lease.threads().min(n_chunks.max(1));
+    if threads <= 1 {
+        for (ci, c) in buf.chunks_mut(chunk_len).enumerate() {
+            f(ci, c);
+        }
+        return;
+    }
+    let group = n_chunks.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut gi = buf.chunks_mut(group * chunk_len).enumerate();
+        let (g0, first) = gi.next().unwrap();
+        for (g, gsl) in gi {
+            s.spawn(move || {
+                for (ci, c) in gsl.chunks_mut(chunk_len).enumerate() {
+                    f(g * group + ci, c);
+                }
+            });
+        }
+        for (ci, c) in first.chunks_mut(chunk_len).enumerate() {
+            f(g0 * group + ci, c);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_threads_at_least_one() {
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v = parallel_map(257, |i| i * 3);
+        assert_eq!(v.len(), 257);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 3);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let v: Vec<usize> = parallel_map(0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn join_row_bands_covers_all_rows() {
+        let rows = 97;
+        let a: Vec<f32> = (0..rows * 4).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; rows * 2];
+        let f = |ar: &[f32], ob: &mut [f32]| {
+            let r = ob.len() / 2;
+            for i in 0..r {
+                let s: f32 = ar[i * 4..(i + 1) * 4].iter().sum();
+                ob[i * 2] = s;
+                ob[i * 2 + 1] = -s;
+            }
+        };
+        // a huge nominal work value forces the parallel path (when cores
+        // are free); the result must equal the serial run either way
+        join_row_bands(&a, 4, &mut out, 2, usize::MAX, &f);
+        let mut expect = vec![0.0f32; rows * 2];
+        f(&a, &mut expect);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_indexes_correctly() {
+        let mut buf = vec![0.0f32; 64 * 1024]; // above MIN_PAR_ELEMS
+        parallel_chunks_mut(&mut buf, 1024, |ci, c| {
+            for x in c.iter_mut() {
+                *x = ci as f32;
+            }
+        });
+        for (i, x) in buf.iter().enumerate() {
+            assert_eq!(*x, (i / 1024) as f32);
+        }
+    }
+
+    #[test]
+    fn lease_grants_and_restores() {
+        // (no global-counter assertions here: other tests hold leases
+        // concurrently and may move the override, so only per-lease
+        // invariants are race-free)
+        let l = Lease::grab(1000);
+        assert!(l.threads() >= 1);
+        assert!(l.extra < 1000);
+        drop(l);
+        let l2 = Lease::grab(2);
+        assert!(l2.threads() <= 2);
+    }
+}

@@ -172,6 +172,40 @@ fn mlp_adapter_trains_unmerged_only() {
 }
 
 #[test]
+fn async_offload_keeps_at_most_one_interval_in_flight() {
+    // backpressure pin: with async_offload the staleness window is
+    // exactly one interval of FitJobs — dispatch leaves this interval
+    // outstanding, and the next flush applies it before dispatching more
+    let mut cfg = base_cfg();
+    cfg.method = Method::Cola(AdapterKind::LowRank);
+    cfg.async_offload = true;
+    cfg.interval = 2;
+    let mut t = Trainer::new(cfg).unwrap();
+    let interval_jobs = t.driver.sites.len(); // users = 1
+    assert!(interval_jobs > 0);
+    assert_eq!(t.in_flight(), 0);
+    for step in 0..6u64 {
+        t.step(step).unwrap();
+        if (step + 1) % 2 == 0 {
+            // a flush just ran: exactly one interval outstanding, never two
+            assert_eq!(t.in_flight(), interval_jobs, "step {step}");
+        } else {
+            assert!(t.in_flight() <= interval_jobs, "step {step}");
+        }
+    }
+}
+
+#[test]
+fn async_offload_still_learns() {
+    let mut cfg = base_cfg();
+    cfg.method = Method::Cola(AdapterKind::LowRank);
+    cfg.async_offload = true;
+    cfg.steps = 12;
+    let l = run_losses(cfg);
+    assert!(l.last().unwrap() < &l[0], "async run failed to learn: {l:?}");
+}
+
+#[test]
 fn adapter_snapshot_roundtrip() {
     let mut cfg = base_cfg();
     cfg.method = Method::Cola(AdapterKind::LowRank);
