@@ -1,8 +1,10 @@
 # ColA build entry points.
 #
-#   make ci        — mirror the CI pipeline locally (fmt, clippy, build, test)
+#   make ci        — mirror the CI pipeline locally (fmt, clippy, doc,
+#                    build, test)
 #   make build     — hermetic release build (native backend, no Python/XLA)
 #   make test      — run the test suite
+#   make smoke     — distributed-offload loopback smoke (TCP == local)
 #   make bench     — run the paper's table/figure benches (results/ *.md+csv)
 #   make artifacts — OPTIONAL: AOT-lower the JAX graphs to artifacts/
 #                    (requires Python + JAX; only needed for the PJRT
@@ -11,21 +13,27 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt clippy bench artifacts clean
+.PHONY: ci build test fmt clippy doc smoke bench artifacts clean
 
-ci: fmt clippy build test
+ci: fmt clippy doc build test
 
 build:
-	$(CARGO) build --release
+	$(CARGO) build --release --locked
 
 test:
-	$(CARGO) test -q
+	$(CARGO) test --locked -q
+
+smoke: build
+	bash scripts/distributed_smoke.sh
 
 fmt:
 	$(CARGO) fmt --all --check
 
 clippy:
-	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) clippy --locked --all-targets -- -D warnings
+
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --locked --no-deps
 
 BENCHES = throughput table1_complexity table2_seqcls table3_s2s \
           table4_collab table6_clm table9_scratch table10_compute \
@@ -34,7 +42,7 @@ BENCHES = throughput table1_complexity table2_seqcls table3_s2s \
 bench:
 	@for b in $(BENCHES); do \
 		echo "== bench $$b"; \
-		$(CARGO) bench --bench $$b -- --quick || exit 1; \
+		$(CARGO) bench --locked --bench $$b -- --quick || exit 1; \
 	done
 
 artifacts:

@@ -53,6 +53,19 @@ impl OptState {
         OptState { cfg: *cfg, t: 0, m, v }
     }
 
+    /// The raw (m, v) moment vectors — exposed so `transport::wire` can
+    /// ship optimizer state to a worker daemon byte-exactly.
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Rebuild state from wire parts; the inverse of [`OptState::moments`].
+    /// The caller is responsible for m/v matching the adapter's tensor
+    /// sizes (the fit path indexes them positionally).
+    pub fn from_parts(cfg: OptimizerCfg, t: u32, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) -> OptState {
+        OptState { cfg, t, m, v }
+    }
+
     /// Bytes of optimizer state (memory accountant: lives on the worker).
     pub fn bytes(&self) -> usize {
         (self.m.iter().map(|x| x.len()).sum::<usize>()

@@ -67,6 +67,16 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The option map minus launcher-only keys — what's left must all be
+    /// valid `TrainConfig` keys, so typos still fail loudly downstream.
+    pub fn options_except(&self, skip: &[&str]) -> BTreeMap<String, String> {
+        self.options
+            .iter()
+            .filter(|(k, _)| !skip.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
     pub fn require(&self, key: &str) -> Result<&str> {
         match self.get(key) {
             Some(v) => Ok(v),
@@ -112,5 +122,13 @@ mod tests {
         let a = parse("x --lr -0.5");
         // "-0.5" doesn't start with --, so it is taken as the value
         assert_eq!(a.get("lr"), Some("-0.5"));
+    }
+
+    #[test]
+    fn options_except_filters() {
+        let a = parse("train --config c.toml --steps 5 --loss_out out.json");
+        let ov = a.options_except(&["config", "loss_out"]);
+        assert_eq!(ov.len(), 1);
+        assert_eq!(ov.get("steps").map(String::as_str), Some("5"));
     }
 }

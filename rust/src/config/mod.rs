@@ -161,6 +161,37 @@ impl FromStr for OffloadTarget {
     }
 }
 
+/// How FitJobs reach the worker fleet: in-process channels, or TCP
+/// sockets to `cola worker` daemons (the real offload wire). Both
+/// produce bit-identical loss curves for the same config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// in-process worker threads behind mpsc channels
+    Local,
+    /// remote worker daemons at `worker_addrs`
+    Tcp,
+}
+
+impl FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "local" | "inproc" => TransportKind::Local,
+            "tcp" => TransportKind::Tcp,
+            other => bail!("unknown offload transport '{other}' (local|tcp)"),
+        })
+    }
+}
+
+impl fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportKind::Local => write!(f, "local"),
+            TransportKind::Tcp => write!(f, "tcp"),
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Optimizer {
     Sgd,
@@ -233,6 +264,12 @@ pub struct TrainConfig {
     /// (last constructed wins). Results are thread-count independent;
     /// pin for benchmark and CI timing determinism.
     pub threads: usize,
+    /// how FitJobs reach workers: in-process channels or TCP daemons
+    pub offload_transport: TransportKind,
+    /// `cola worker` daemon addresses (tcp transport only); the CLI/TOML
+    /// form is a comma-separated list, e.g.
+    /// `worker_addrs = "127.0.0.1:7701,127.0.0.1:7702"`
+    pub worker_addrs: Vec<String>,
 }
 
 impl Default for TrainConfig {
@@ -258,6 +295,8 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             async_offload: false,
             threads: 0,
+            offload_transport: TransportKind::Local,
+            worker_addrs: Vec::new(),
         }
     }
 }
@@ -295,6 +334,15 @@ impl TrainConfig {
             "artifacts_dir" => self.artifacts_dir = val.into(),
             "async_offload" => self.async_offload = val.parse().context("async_offload")?,
             "threads" => self.threads = val.parse().context("threads")?,
+            "offload_transport" => self.offload_transport = val.parse()?,
+            "worker_addrs" => {
+                self.worker_addrs = val
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect();
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -316,6 +364,36 @@ impl TrainConfig {
         }
         if self.users == 0 {
             bail!("users must be >= 1");
+        }
+        match self.offload_transport {
+            TransportKind::Tcp => {
+                if self.worker_addrs.is_empty() {
+                    bail!("offload_transport = \"tcp\" requires worker_addrs \
+                           (comma-separated `cola worker` daemon addresses)");
+                }
+                // a daemon serves one connection at a time: listing the
+                // same address twice would deadlock the second link at
+                // registration
+                let mut seen = self.worker_addrs.clone();
+                seen.sort();
+                seen.dedup();
+                if seen.len() != self.worker_addrs.len() {
+                    bail!("worker_addrs contains duplicate addresses — each \
+                           worker daemon serves exactly one server link");
+                }
+                if self.offload == OffloadTarget::PjrtDevice {
+                    bail!("with offload_transport = \"tcp\" the compute target \
+                           is chosen per daemon (`cola worker --offload ...`); \
+                           leave offload = \"cpu\" on the server config");
+                }
+            }
+            TransportKind::Local => {
+                if !self.worker_addrs.is_empty() {
+                    bail!("worker_addrs is set but offload_transport is \
+                           \"local\" — set offload_transport = \"tcp\" or \
+                           drop the addresses (refusing to silently ignore)");
+                }
+            }
         }
         if self.mode == Mode::Merged {
             if let Method::Cola(k) = self.method {
@@ -383,5 +461,48 @@ mod tests {
     fn ft_preset_lowers_lr() {
         let cfg = TrainConfig::default().preset_for_method(Method::Ft);
         assert!(cfg.lr < 1e-4);
+    }
+
+    #[test]
+    fn transport_parse_and_addr_list() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701, 127.0.0.1:7702,").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.offload_transport, TransportKind::Tcp);
+        assert_eq!(cfg.worker_addrs,
+                   vec!["127.0.0.1:7701".to_string(), "127.0.0.1:7702".into()]);
+        assert!("bogus".parse::<TransportKind>().is_err());
+    }
+
+    #[test]
+    fn tcp_without_addrs_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_worker_addrs_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701,127.0.0.1:7701").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn local_with_addrs_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn tcp_with_pjrt_target_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        cfg.set("offload", "gpu").unwrap();
+        assert!(cfg.validate().is_err());
     }
 }

@@ -97,7 +97,7 @@ mod tests {
         let mut b = SiteBuffer::default();
         b.push(t(2, 1.0), t(2, 10.0));
         b.push(t(3, 2.0), t(3, 20.0));
-        let (x, g, scale) = b.drain().unwrap();
+        let (x, g, scale) = b.drain().expect("buffer seeded above is non-empty");
         assert_eq!(x.dims2(), (5, 3));
         assert_eq!(g.dims2(), (5, 3));
         assert_eq!(scale, 0.5);

@@ -2,7 +2,8 @@
 //!
 //! - `driver`  — binds (task, size, dataset) to artifacts/sites/batches
 //! - `buffer`  — adaptation-interval buffering (Algorithm 1 lines 10-16)
-//! - `offload` — Gradient Offloading worker pool ("low-cost devices")
+//! - `offload` — Gradient Offloading worker pool ("low-cost devices");
+//!   dispatches through `crate::transport` (in-process or TCP daemons)
 //! - `server`  — the training loop (Algorithm 1) + coupled baselines
 //! - `api`     — FTaaS service facade (Figure 1)
 

@@ -11,6 +11,12 @@
 //!
 //! An optional `TransferModel` injects link latency/bandwidth so the
 //! CPU-vs-GPU offload gap of Tables 10-18 can be swept on one testbed.
+//!
+//! The pool dispatches through the [`Transport`] trait: [`Worker`] is
+//! the in-process (`Local`) implementation, and
+//! [`TcpWorker`](crate::transport::tcp::TcpWorker) proxies the same
+//! operations to a `cola worker` daemon over a real socket
+//! (`offload_transport = "tcp"`).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -24,6 +30,7 @@ use crate::config::OffloadTarget;
 use crate::merge;
 use crate::runtime::{Device, Input, Manifest, OutputPlan, Value};
 use crate::tensor::{self, Tensor};
+use crate::transport::{tcp::TcpWorker, Transport};
 
 /// Simulated interconnect: delay = latency + bytes / bandwidth.
 #[derive(Clone, Copy, Debug)]
@@ -53,6 +60,7 @@ impl TransferModel {
 }
 
 /// A buffered-interval update job for one (user, site).
+#[derive(Debug)]
 pub struct FitJob {
     pub user: usize,
     pub site: String,
@@ -67,6 +75,7 @@ pub struct FitJob {
 }
 
 /// Worker reply for one job.
+#[derive(Debug)]
 pub struct FitResult {
     pub user: usize,
     pub site: String,
@@ -93,7 +102,9 @@ enum WorkerCmd {
     Shutdown,
 }
 
-/// Handle to one worker thread.
+/// Handle to one worker thread — the in-process (`Local`)
+/// [`Transport`] implementation. The same compute core backs the TCP
+/// daemon: `cola worker` spawns one of these behind its listener.
 #[derive(Clone)]
 pub struct Worker {
     tx: Sender<WorkerCmd>,
@@ -101,6 +112,20 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// Spawn one worker thread owning its own adapter/optimizer state.
+    pub fn spawn_local(
+        id: usize,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+    ) -> Result<Worker> {
+        let (tx, rx) = channel();
+        std::thread::Builder::new()
+            .name(format!("worker-{id}"))
+            .spawn(move || worker_main(id, rx, target, manifest, transfer))?;
+        Ok(Worker { tx, id })
+    }
+
     pub fn register(&self, user: usize, site: &str, adapter: SiteAdapter) -> Result<()> {
         self.tx
             .send(WorkerCmd::Register { user, site: site.to_string(), adapter })
@@ -136,18 +161,55 @@ impl Worker {
     }
 }
 
+impl Transport for Worker {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn describe(&self) -> String {
+        format!("local://worker-{}", self.id)
+    }
+
+    fn register(&self, user: usize, site: &str, adapter: SiteAdapter) -> Result<()> {
+        Worker::register(self, user, site, adapter)
+    }
+
+    fn fit(&self, job: FitJob) -> Result<Receiver<Result<FitResult>>> {
+        Worker::fit(self, job)
+    }
+
+    fn snapshot(&self, user: usize, site: &str) -> Result<AdapterParams> {
+        Worker::snapshot(self, user, site)
+    }
+
+    fn state_bytes(&self) -> Result<usize> {
+        Worker::state_bytes(self)
+    }
+
+    fn shutdown(&self) {
+        Worker::shutdown(self)
+    }
+}
+
 /// The pool: users are sharded across workers (user k -> worker k % N),
 /// mirroring "multiple low-cost devices ... in parallel" (§3.2).
+/// Dispatch goes through [`Transport`], so the fleet can be in-process
+/// threads ([`WorkerPool::spawn`]) or remote `cola worker` daemons
+/// ([`WorkerPool::connect_tcp`]) — the training loop can't tell the
+/// difference, and by the bit-exact wire format + deterministic kernels
+/// it trains to identical loss curves either way.
 ///
-/// Each worker's surrogate-fit contractions (`AdapterParams::fit_grads`)
-/// run on the shared `tensor::pool` core budget, so FitJobs for
-/// different users genuinely overlap without oversubscribing the host:
-/// a worker that can't lease extra cores just computes serially.
+/// Each local worker's surrogate-fit contractions
+/// (`AdapterParams::fit_grads`) run on the shared `tensor::pool` core
+/// budget, so FitJobs for different users genuinely overlap without
+/// oversubscribing the host: a worker that can't lease extra cores just
+/// computes serially.
 pub struct WorkerPool {
-    workers: Vec<Worker>,
+    workers: Vec<Box<dyn Transport>>,
 }
 
 impl WorkerPool {
+    /// Spawn `n` in-process worker threads (`offload_transport = "local"`).
     pub fn spawn(
         n: usize,
         target: OffloadTarget,
@@ -159,30 +221,60 @@ impl WorkerPool {
             // first dispatch with a bare divide-by-zero
             bail!("WorkerPool::spawn: need at least one worker (got n = 0)");
         }
-        let mut workers = Vec::with_capacity(n);
+        let mut workers: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
         for id in 0..n {
-            let (tx, rx) = channel();
-            let m = manifest.clone();
-            std::thread::Builder::new()
-                .name(format!("worker-{id}"))
-                .spawn(move || worker_main(id, rx, target, m, transfer))?;
-            workers.push(Worker { tx, id });
+            workers.push(Box::new(Worker::spawn_local(
+                id,
+                target,
+                manifest.clone(),
+                transfer,
+            )?));
         }
         Ok(WorkerPool { workers })
     }
 
-    pub fn for_user(&self, user: usize) -> &Worker {
-        &self.workers[user % self.workers.len()]
+    /// Connect to remote worker daemons (`offload_transport = "tcp"`) —
+    /// one [`TcpWorker`] per address, with connect backoff so daemons
+    /// may still be binding when the server starts.
+    pub fn connect_tcp(addrs: &[String]) -> Result<WorkerPool> {
+        if addrs.is_empty() {
+            bail!(
+                "offload_transport = \"tcp\" needs at least one worker \
+                 address (set worker_addrs)"
+            );
+        }
+        let mut workers: Vec<Box<dyn Transport>> = Vec::with_capacity(addrs.len());
+        for (id, addr) in addrs.iter().enumerate() {
+            workers.push(Box::new(TcpWorker::connect(id, addr)?));
+        }
+        Ok(WorkerPool { workers })
     }
 
-    pub fn workers(&self) -> &[Worker] {
+    pub fn for_user(&self, user: usize) -> &dyn Transport {
+        self.workers[user % self.workers.len()].as_ref()
+    }
+
+    pub fn workers(&self) -> &[Box<dyn Transport>] {
         &self.workers
     }
 
+    /// Total adapter + optimizer bytes across the fleet. Accounting is
+    /// best-effort: a dead link counts as 0, but loudly — silent
+    /// miscounts would make the Table-1 memory claims look better than
+    /// they are.
     pub fn total_state_bytes(&self) -> usize {
         self.workers
             .iter()
-            .map(|w| w.state_bytes().unwrap_or(0))
+            .map(|w| {
+                w.state_bytes().unwrap_or_else(|e| {
+                    eprintln!(
+                        "warning: state-bytes query to {} failed ({e:#}); \
+                         counting 0 for this worker",
+                        w.describe()
+                    );
+                    0
+                })
+            })
             .sum()
     }
 }
@@ -277,7 +369,11 @@ fn run_fit(st: &mut WorkerState, id: usize, job: FitJob) -> Result<FitResult> {
     let compute = t0.elapsed();
 
     let (new_params, delta_diff, bytes_out) = if job.merged {
-        let diff = merge::delta_diff(old.as_ref().unwrap(), &adapter.params)?;
+        let old = old.as_ref().ok_or_else(|| {
+            anyhow!("worker {id}: merged fit for (user {}, site {}) lost its \
+                     pre-step snapshot", job.user, job.site)
+        })?;
+        let diff = merge::delta_diff(old, &adapter.params)?;
         let b = diff.bytes();
         (None, Some(diff), b)
     } else {
@@ -316,7 +412,10 @@ fn pjrt_fit_grads(st: &mut WorkerState, params: &AdapterParams, job: &FitJob)
     if st.pjrt.is_none() {
         st.pjrt = Some(Device::spawn("worker-pjrt", st.manifest.clone())?);
     }
-    let dev = st.pjrt.as_ref().unwrap();
+    let dev = st.pjrt.as_ref().ok_or_else(|| {
+        anyhow!("worker pjrt device unavailable for (user {}, site {})",
+                job.user, job.site)
+    })?;
     let (n, d_in) = job.x.dims2();
     let d_out = job.ghat.dims2().1;
     let kind = params.kind().name();

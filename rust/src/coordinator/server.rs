@@ -23,14 +23,16 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::buffer::AdaptationBuffers;
 use super::driver::{Driver, TaskData};
-use super::offload::{FitJob, TransferModel, WorkerPool};
+use super::offload::{FitJob, FitResult, TransferModel, WorkerPool};
 use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
-use crate::config::{AdapterKind, Method, Mode, Optimizer, Task, TrainConfig};
+use crate::config::{AdapterKind, Method, Mode, Optimizer, Task, TrainConfig,
+                    TransportKind};
 use crate::data::Split;
 use crate::merge;
 use crate::metrics::{Curve, Timings};
 use crate::runtime::{Input, Runtime, Value};
 use crate::tensor::{self, Tensor};
+use crate::transport::Transport;
 
 /// Summary of a finished run (consumed by benches/examples).
 #[derive(Clone, Debug)]
@@ -53,6 +55,15 @@ impl RunReport {
     }
 }
 
+/// One dispatched-but-unapplied worker fit. Carrying (user, site) next
+/// to the reply channel lets a dead worker link surface as an error
+/// naming exactly whose update was lost — not a bare channel panic.
+struct PendingFit {
+    user: usize,
+    site: String,
+    rx: std::sync::mpsc::Receiver<Result<FitResult>>,
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub rt: Runtime,
@@ -64,7 +75,7 @@ pub struct Trainer {
     coupled_opt: Option<OptState>,
     pool: Option<WorkerPool>,
     /// in-flight worker fits (async offload overlap)
-    pending: Vec<std::sync::mpsc::Receiver<Result<super::offload::FitResult>>>,
+    pending: Vec<PendingFit>,
     buffers: AdaptationBuffers,
     pub timings: Timings,
     opt_cfg: OptimizerCfg,
@@ -159,8 +170,15 @@ impl Trainer {
 
     fn init_cola(&mut self, kind: AdapterKind) -> Result<()> {
         let transfer = None::<TransferModel>;
-        let pool = WorkerPool::spawn(self.cfg.workers, self.cfg.offload,
-                                     self.rt.manifest.clone(), transfer)?;
+        let pool = match self.cfg.offload_transport {
+            TransportKind::Local => WorkerPool::spawn(
+                self.cfg.workers, self.cfg.offload,
+                self.rt.manifest.clone(), transfer)?,
+            // remote daemons pick their own offload target (`cola worker
+            // --offload`); determinism holds either way because both
+            // targets implement the same Eq. 6 update bit-exactly
+            TransportKind::Tcp => WorkerPool::connect_tcp(&self.cfg.worker_addrs)?,
+        };
         let rank = self.rt.manifest.rank;
         let hidden = self.rt.manifest.mlp_hidden;
         let mut rng = crate::rng::Rng::new(self.cfg.seed ^ 0xADA7);
@@ -392,10 +410,16 @@ impl Trainer {
                 .get(&s.x_output)
                 .ok_or_else(|| anyhow!("missing x output {}", s.x_output))?
                 .as_f32()
-                .unwrap()
+                .ok_or_else(|| anyhow!("x output {} is not f32", s.x_output))?
                 .clone()
                 .to_rows();
-            let g = outs[&s.g_output].as_f32().unwrap().clone().to_rows();
+            let g = outs
+                .get(&s.g_output)
+                .ok_or_else(|| anyhow!("missing grad output {}", s.g_output))?
+                .as_f32()
+                .ok_or_else(|| anyhow!("grad output {} is not f32", s.g_output))?
+                .clone()
+                .to_rows();
             let rows = x.dims2().0;
             let rpe = rows / self.cfg.batch; // rows per example
             for u in 0..self.cfg.users {
@@ -433,12 +457,22 @@ impl Trainer {
         if !self.buffers.is_empty() {
             let merged = self.cfg.mode == Mode::Merged;
             let jobs = self.buffers.drain_all();
-            let pool = self.pool.as_ref().unwrap();
+            // re-check instead of unwrap: a worker link error earlier in
+            // this interval must not turn into a server panic here
+            let pool = self.pool.as_ref().ok_or_else(|| {
+                anyhow!("adaptation buffers are non-empty but no worker pool \
+                         exists (coupled methods never buffer)")
+            })?;
             for (user, site, x, ghat, grad_scale) in jobs {
-                let rx = pool
-                    .for_user(user)
-                    .fit(FitJob { user, site, x, ghat, grad_scale, merged })?;
-                self.pending.push(rx);
+                let rx = pool.for_user(user).fit(FitJob {
+                    user,
+                    site: site.clone(),
+                    x,
+                    ghat,
+                    grad_scale,
+                    merged,
+                })?;
+                self.pending.push(PendingFit { user, site, rx });
             }
         }
         if self.cfg.async_offload {
@@ -460,8 +494,20 @@ impl Trainer {
             return Ok(());
         }
         let mut results = Vec::new();
-        for rx in self.pending.drain(..) {
-            results.push(rx.recv().context("worker reply")??);
+        for p in self.pending.drain(..) {
+            // recv fails only when the worker link died before replying
+            // (remote daemon crash / dropped connection mid-interval)
+            let r = p
+                .rx
+                .recv()
+                .map_err(|_| {
+                    anyhow!("worker link dropped mid-interval: no fit reply \
+                             for user {} site {}", p.user, p.site)
+                })?
+                .with_context(|| {
+                    format!("fit failed for user {} site {}", p.user, p.site)
+                })?;
+            results.push(r);
         }
         let t0 = Instant::now();
         let mut touched_weights: Vec<String> = Vec::new();
@@ -556,9 +602,18 @@ impl Trainer {
         let grads: Vec<Tensor> = self
             .tunables
             .keys()
-            .map(|n| outs[&format!("d.{n}")].as_f32().unwrap().clone())
-            .collect();
-        let opt = self.coupled_opt.as_mut().unwrap();
+            .map(|n| {
+                let key = format!("d.{n}");
+                outs.get(&key)
+                    .and_then(|v| v.as_f32())
+                    .cloned()
+                    .ok_or_else(|| anyhow!("missing f32 gradient output {key}"))
+            })
+            .collect::<Result<_>>()?;
+        let opt = self
+            .coupled_opt
+            .as_mut()
+            .ok_or_else(|| anyhow!("coupled optimizer state missing for {method}"))?;
         let mut refs: Vec<&mut Tensor> = self.tunables.values_mut().collect();
         opt.apply(&mut refs, &grads);
         Ok((loss, acc))

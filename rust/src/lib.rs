@@ -4,7 +4,9 @@
 //! with Gradient Learning* (Diao et al., 2024) as a three-layer system:
 //!
 //! - **L3 (this crate)** — the FTaaS coordinator: server device hosting
-//!   the base model, Gradient Offloading to low-cost worker devices,
+//!   the base model, Gradient Offloading to low-cost worker devices
+//!   (in-process threads or remote `cola worker` daemons over the
+//!   [`transport`] wire — same bit-identical loss curves either way),
 //!   adaptation-interval buffering, Prop.-2 parameter merging, a memory
 //!   accountant, synthetic task generators, and the full bench suite
 //!   regenerating every table/figure of the paper.
@@ -44,6 +46,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod tensor;
+pub mod transport;
 pub mod util;
 
 pub use anyhow::Result;

@@ -1,19 +1,27 @@
-//! `cola` CLI — launcher for training runs, the FTaaS demo service,
-//! memory reports, and experiment drivers.
+//! `cola` CLI — launcher for training runs, the worker daemon
+//! (distributed offload), the FTaaS demo service, memory reports, and
+//! experiment drivers.
+
+use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use cola::cli::Args;
-use cola::config::{apply_overrides, Method, TrainConfig};
-use cola::coordinator::{FtaasService, Trainer};
+use cola::config::{apply_overrides, Method, OffloadTarget, TomlDoc, TrainConfig};
+use cola::coordinator::{FtaasService, RunReport, TransferModel, Trainer};
 use cola::memory::{footprint, Arrangement, ModelProfile, GB};
-use cola::metrics::markdown_table;
+use cola::metrics::{markdown_table, Curve};
+use cola::runtime::Manifest;
+use cola::transport::tcp::{request_daemon_shutdown, WorkerDaemon};
+use cola::util::json::Json;
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv)?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
         "serve" => cmd_serve(&args),
         "memory" => cmd_memory(&args),
         "table1" => cmd_table1(),
@@ -31,10 +39,17 @@ fn print_help() {
          USAGE: cola <subcommand> [--key value]...\n\n\
          SUBCOMMANDS\n\
            train    run one fine-tuning job\n\
+                    --config <file.toml> (CLI options override file keys)\n\
                     --task clm|s2s|seqcls --size tiny|small|base\n\
                     --method ft|lora|ia3|prompt|ptuning|prefix|cola-lowrank|cola-linear|cola-mlp\n\
                     --mode merged|unmerged --interval I --steps N --users K\n\
                     --offload cpu|gpu --dataset <name> --seed S\n\
+                    --offload_transport local|tcp --worker_addrs host:port,...\n\
+                    --loss_out <file.json> (write loss/acc curves for diffing)\n\
+           worker   gradient-offload worker daemon (distributed mode)\n\
+                    --listen 127.0.0.1:0 --offload cpu|gpu --threads N\n\
+                    --simulate_link cpu|gpu (add a modeled link delay)\n\
+                    --stop host:port (clean-shutdown a running daemon)\n\
            serve    FTaaS collaboration demo (--users K --rounds N)\n\
            memory   analytic memory report\n\
                     --profile llama2-qv|llama2-all|gpt2|roberta-base|bart-base|tiny|small\n\
@@ -43,13 +58,60 @@ fn print_help() {
     );
 }
 
+/// Keys consumed by the launcher itself, not by `TrainConfig`.
+const LAUNCHER_KEYS: &[&str] = &["config", "loss_out"];
+
+/// Precedence (least to most binding): built-in defaults, then the
+/// CLI `--method` hyperparameter preset, then `--config` file keys,
+/// then explicit CLI overrides. A preset is an implicit default — an
+/// lr written in the config file must beat it, and a CLI `--lr` beats
+/// everything. The same `--method` flag therefore means the same thing
+/// with or without `--config`.
 fn config_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
     if let Some(m) = args.get("method") {
         cfg = cfg.preset_for_method(m.parse()?);
     }
-    apply_overrides(&mut cfg, &args.options)?;
+    if let Some(path) = args.get("config") {
+        let doc = TomlDoc::load(path).with_context(|| format!("loading config {path}"))?;
+        for (k, v) in doc.flat() {
+            let key = k.strip_prefix("train.").unwrap_or(&k);
+            cfg.set(key, &v)
+                .with_context(|| format!("config {path}: key {k}"))?;
+        }
+    }
+    apply_overrides(&mut cfg, &args.options_except(LAUNCHER_KEYS))?;
     Ok(cfg)
+}
+
+/// Loss/accuracy curves as stable JSON. f64 values print in Rust's
+/// shortest round-trip form, so two runs diff byte-equal iff their
+/// curves are bit-identical — the contract the `distributed-smoke` CI
+/// job checks across transports.
+fn curves_json(report: &RunReport) -> String {
+    fn num(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            // JSON has no NaN/inf tokens; a diverged run must still
+            // produce a parseable (and still deterministic) file
+            Json::Str(v.to_string())
+        }
+    }
+    fn curve(c: &Curve) -> Json {
+        Json::Arr(
+            c.points
+                .iter()
+                .map(|(s, v)| Json::Arr(vec![Json::Num(*s as f64), num(*v)]))
+                .collect(),
+        )
+    }
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("train_loss".to_string(), curve(&report.train_loss));
+    obj.insert("train_acc".to_string(), curve(&report.train_acc));
+    obj.insert("eval_loss".to_string(), curve(&report.eval_loss));
+    obj.insert("eval_acc".to_string(), curve(&report.eval_acc));
+    format!("{}\n", Json::Obj(obj))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -68,6 +130,51 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("worker state     : {:.1} MiB",
              report.worker_state_bytes as f64 / (1024.0 * 1024.0));
     println!("timings: {}", report.timings.report());
+    if let Some(path) = args.get("loss_out") {
+        std::fs::write(path, curves_json(&report))
+            .with_context(|| format!("writing {path}"))?;
+        println!("loss curves      -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    // same loud-typo contract as train: an unknown option must not
+    // silently launch a daemon with the wrong topology
+    const WORKER_KEYS: &[&str] =
+        &["stop", "listen", "offload", "threads", "simulate_link", "artifacts_dir"];
+    for k in args.options.keys() {
+        if !WORKER_KEYS.contains(&k.as_str()) {
+            bail!("unknown worker option --{k} \
+                   (listen|offload|threads|simulate_link|artifacts_dir|stop)");
+        }
+    }
+    if let Some(f) = args.flags.first() {
+        bail!("worker options take values: --{f} <value>");
+    }
+    if let Some(addr) = args.get("stop") {
+        request_daemon_shutdown(addr)?;
+        println!("worker at {addr}: shutdown acknowledged");
+        return Ok(());
+    }
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let target: OffloadTarget = args.get_or("offload", "cpu").parse()?;
+    let threads: usize = args.parse_or("threads", 0)?;
+    cola::tensor::pool::set_threads(threads);
+    let simulate = match args.get("simulate_link") {
+        None => None,
+        Some("cpu") => Some(TransferModel::cpu_link()),
+        Some("gpu") => Some(TransferModel::gpu_link()),
+        Some(other) => bail!("unknown --simulate_link '{other}' (cpu|gpu)"),
+    };
+    let artifacts_dir = args.get_or("artifacts_dir", "artifacts");
+    let manifest = Arc::new(Manifest::load_or_builtin(Path::new(&artifacts_dir))?);
+    let daemon = WorkerDaemon::bind(&listen, target, manifest, simulate)?;
+    // launchers (CI, scripts) scrape this line for the resolved port;
+    // stdout is line-buffered so it is visible immediately
+    println!("cola worker listening on {}", daemon.local_addr());
+    daemon.join();
+    println!("cola worker: shutdown handshake complete, exiting");
     Ok(())
 }
 

@@ -6,6 +6,11 @@
 //! an explicit host copy — exactly the transfer the paper's offload
 //! model charges for, so the transfer ledger falls out of the type
 //! system.
+//!
+//! For *process* boundaries (the TCP offload wire), `Value`s serialize
+//! via `crate::transport::wire::{encode_value, decode_value}` — raw
+//! little-endian bit patterns, so f32 payloads (NaN bits included)
+//! round-trip exactly.
 
 use crate::tensor::Tensor;
 

@@ -1,0 +1,66 @@
+//! Transport — how `FitJob`s reach the worker fleet.
+//!
+//! The paper's Gradient Offloading (§3.2) ships `(x, grad_hhat)` to
+//! low-cost devices that fit adapters independently. This module makes
+//! that boundary real: the coordinator's
+//! [`WorkerPool`](crate::coordinator::WorkerPool) dispatches every
+//! worker operation through the [`Transport`] trait, with two
+//! implementations:
+//!
+//! - **Local** — [`coordinator::Worker`](crate::coordinator::Worker):
+//!   the in-process worker thread behind mpsc channels (the simulated
+//!   offload arm; supports the
+//!   [`TransferModel`](crate::coordinator::TransferModel) link sweeps).
+//! - **Tcp** — [`tcp::TcpWorker`]: a proxy to a `cola worker` daemon in
+//!   another process (or on another host), speaking the [`wire`] binary
+//!   format over a socket, with reconnect-with-backoff and a clean
+//!   shutdown handshake.
+//!
+//! Determinism contract: a worker daemon runs the same bit-identical
+//! native kernels as an in-process worker, and [`wire`] round-trips
+//! every f32 by bit pattern — so the same config trains to byte-equal
+//! loss curves regardless of transport. CI enforces this on every PR
+//! (the `distributed-smoke` job), and
+//! `rust/tests/transport_tcp.rs` mirrors it as an integration test.
+
+pub mod tcp;
+pub mod wire;
+
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+
+use crate::adapters::{AdapterParams, SiteAdapter};
+use crate::coordinator::offload::{FitJob, FitResult};
+
+/// One end of a worker link. All operations are request/reply;
+/// [`Transport::fit`] is the asynchronous exception — the reply arrives
+/// on the returned channel so the server can overlap fits with its own
+/// steps (`async_offload`).
+pub trait Transport: Send {
+    /// Worker id (the pool shards users by `user % n` over worker ids).
+    fn id(&self) -> usize;
+
+    /// Human-readable endpoint (for error messages and logs).
+    fn describe(&self) -> String;
+
+    /// Install an adapter (+ optimizer state) for (user, site) on the
+    /// worker. Blocks until the worker acknowledges.
+    fn register(&self, user: usize, site: &str, adapter: SiteAdapter) -> Result<()>;
+
+    /// Dispatch one buffered-interval fit. The returned channel yields
+    /// exactly one reply; a dropped channel means the worker link died.
+    fn fit(&self, job: FitJob) -> Result<Receiver<Result<FitResult>>>;
+
+    /// Fetch a copy of an adapter's parameters.
+    fn snapshot(&self, user: usize, site: &str) -> Result<AdapterParams>;
+
+    /// Bytes of adapter + optimizer state held by the worker.
+    fn state_bytes(&self) -> Result<usize>;
+
+    /// Release this link. For a local worker the thread exits; for a
+    /// TCP worker only the connection closes — the daemon (and its
+    /// adapter state) stays up for reconnects. Use
+    /// [`tcp::request_daemon_shutdown`] to terminate a daemon.
+    fn shutdown(&self);
+}

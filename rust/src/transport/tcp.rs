@@ -1,0 +1,440 @@
+//! TCP offload: the client proxy the server pool holds, and the worker
+//! daemon (`cola worker --listen <addr>`) that owns adapters behind a
+//! socket.
+//!
+//! Topology: each [`TcpWorker`] owns one connection to one daemon and
+//! serializes requests over it (mirroring the one-command-at-a-time
+//! local worker thread). The daemon hosts a single long-lived local
+//! [`Worker`] — adapter and optimizer state live for the daemon's
+//! lifetime, *not* the connection's, so a dropped link is survivable:
+//! the client reconnects with exponential backoff and the registered
+//! state is still there.
+//!
+//! Failure semantics: a request that dies mid-flight is **not**
+//! replayed — a `Fit` may already have stepped the remote optimizer,
+//! and replaying would double-apply it, silently breaking the
+//! determinism guarantee. The error surfaces (naming the worker and,
+//! for fits, the user/site), and the *next* request reconnects.
+//!
+//! Shutdown: closing a connection leaves the daemon running; the clean
+//! shutdown handshake ([`request_daemon_shutdown`], or `cola worker
+//! --stop <addr>`) makes it ack with `ShutdownOk` and exit. The daemon
+//! serves one connection at a time, so finish (or drop) the training
+//! run before requesting shutdown.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::wire::{self, Msg};
+use super::Transport;
+use crate::adapters::{AdapterParams, SiteAdapter};
+use crate::config::OffloadTarget;
+use crate::coordinator::offload::{FitJob, FitResult, TransferModel, Worker};
+use crate::runtime::Manifest;
+
+/// Default connection attempts before giving up (first contact).
+pub const CONNECT_ATTEMPTS: u32 = 8;
+/// Base backoff delay; doubles per attempt, capped at 2 s.
+pub const BASE_BACKOFF: Duration = Duration::from_millis(50);
+/// How long the connect-time liveness probe waits for the daemon to
+/// answer before declaring the link dead-on-arrival.
+pub const PROBE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Connect with exponential backoff — `attempts` tries, sleeping
+/// `base * 2^k` (capped at 2 s) between them. Lets a server start
+/// before its worker daemons finish binding.
+pub fn connect_with_backoff(addr: &str, attempts: u32, base: Duration) -> Result<TcpStream> {
+    let mut delay = base;
+    let mut last_err: Option<std::io::Error> = None;
+    for attempt in 0..attempts.max(1) {
+        if attempt > 0 {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_secs(2));
+        }
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                // small frames dominate the handshake traffic; don't let
+                // Nagle hold them back
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(anyhow!(
+        "connect to worker at {addr} failed after {} attempts: {}",
+        attempts.max(1),
+        last_err.expect("at least one attempt ran")
+    ))
+}
+
+// ---------------------------------------------------------------------
+// client side (held by the server's WorkerPool)
+// ---------------------------------------------------------------------
+
+enum ClientCmd {
+    Register { user: usize, site: String, adapter: SiteAdapter, reply: Sender<Result<()>> },
+    Fit(FitJob, Sender<Result<FitResult>>),
+    Snapshot { user: usize, site: String, reply: Sender<Result<AdapterParams>> },
+    StateBytes(Sender<Result<usize>>),
+    Disconnect,
+}
+
+/// Client proxy for one remote worker daemon — the `Tcp` implementation
+/// of [`Transport`]. A dedicated I/O thread owns the socket; handles
+/// are cheap to use from the coordinator thread.
+pub struct TcpWorker {
+    tx: Sender<ClientCmd>,
+    id: usize,
+    addr: String,
+}
+
+impl TcpWorker {
+    /// Connect with the default backoff schedule.
+    pub fn connect(id: usize, addr: &str) -> Result<TcpWorker> {
+        Self::connect_with_opts(id, addr, CONNECT_ATTEMPTS, BASE_BACKOFF)
+    }
+
+    /// Connect with an explicit backoff schedule (tests use tight
+    /// ones). The same schedule governs mid-run reconnects.
+    ///
+    /// After connecting, a `StateBytes` probe (bounded by
+    /// [`PROBE_TIMEOUT`]) confirms the daemon is actually *serving*
+    /// this link. A daemon serves one connection at a time, and the OS
+    /// accept backlog happily queues a second one — without the probe,
+    /// pointing two links at one daemon (e.g. `localhost:7701` and
+    /// `127.0.0.1:7701` sneaking past the literal-string dedup) would
+    /// hang the first request forever instead of failing loudly here.
+    pub fn connect_with_opts(
+        id: usize,
+        addr: &str,
+        attempts: u32,
+        base: Duration,
+    ) -> Result<TcpWorker> {
+        let mut stream = connect_with_backoff(addr, attempts, base)
+            .with_context(|| format!("worker {id}"))?;
+        stream.set_read_timeout(Some(PROBE_TIMEOUT))?;
+        wire::send(&mut stream, &Msg::StateBytes)
+            .and_then(|()| wire::recv(&mut stream))
+            .and_then(|m| match m {
+                Msg::StateBytesOk(_) => Ok(()),
+                other => unexpected(other),
+            })
+            .with_context(|| {
+                format!(
+                    "worker {id} @ {addr}: connected but the daemon is not \
+                     serving this link (already serving another server, or \
+                     wedged?)"
+                )
+            })?;
+        stream.set_read_timeout(None)?;
+        let (tx, rx) = channel();
+        let link = Link {
+            id,
+            addr: addr.to_string(),
+            conn: Some(stream),
+            attempts,
+            base,
+        };
+        std::thread::Builder::new()
+            .name(format!("tcp-worker-{id}"))
+            .spawn(move || client_main(link, rx))?;
+        Ok(TcpWorker { tx, id, addr: addr.to_string() })
+    }
+
+    fn send_cmd(&self, cmd: ClientCmd) -> Result<()> {
+        self.tx
+            .send(cmd)
+            .map_err(|_| anyhow!("worker {} @ {}: client thread gone", self.id, self.addr))
+    }
+}
+
+impl Transport for TcpWorker {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+
+    fn register(&self, user: usize, site: &str, adapter: SiteAdapter) -> Result<()> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::Register {
+            user,
+            site: site.to_string(),
+            adapter,
+            reply: tx,
+        })?;
+        rx.recv()?
+    }
+
+    fn fit(&self, job: FitJob) -> Result<Receiver<Result<FitResult>>> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::Fit(job, tx))?;
+        Ok(rx)
+    }
+
+    fn snapshot(&self, user: usize, site: &str) -> Result<AdapterParams> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::Snapshot { user, site: site.to_string(), reply: tx })?;
+        rx.recv()?
+    }
+
+    fn state_bytes(&self) -> Result<usize> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::StateBytes(tx))?;
+        rx.recv()?
+    }
+
+    fn shutdown(&self) {
+        // disconnect only — daemon state survives for the next server
+        let _ = self.tx.send(ClientCmd::Disconnect);
+    }
+}
+
+/// Client-thread state: the socket plus the reconnect schedule the
+/// worker was built with.
+struct Link {
+    id: usize,
+    addr: String,
+    conn: Option<TcpStream>,
+    attempts: u32,
+    base: Duration,
+}
+
+impl Link {
+    /// One request/reply exchange. Returns the reply and the wall time
+    /// spent on the wire exchange itself — reconnect backoff is
+    /// excluded, so it never pollutes the measured-transfer ledger. On
+    /// link failure the connection is torn down so the next request
+    /// reconnects; the failed request itself is NOT replayed (see
+    /// module docs).
+    fn request(&mut self, msg: &Msg) -> Result<(Msg, Duration)> {
+        if self.conn.is_none() {
+            self.conn = Some(connect_with_backoff(&self.addr, self.attempts, self.base)?);
+        }
+        let stream = self.conn.as_mut().expect("connected above");
+        let t0 = Instant::now();
+        let r = wire::send(stream, msg).and_then(|()| wire::recv(stream));
+        let wire_time = t0.elapsed();
+        match r {
+            Ok(Msg::Error(e)) => Err(anyhow!("remote error: {e}")),
+            Ok(m) => Ok((m, wire_time)),
+            Err(e) => {
+                self.conn = None;
+                Err(e.context(
+                    "worker link failed mid-request (next dispatch will reconnect)",
+                ))
+            }
+        }
+    }
+}
+
+fn unexpected<T>(m: Msg) -> Result<T> {
+    Err(anyhow!("protocol error: unexpected reply {m:?}"))
+}
+
+fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
+    let (id, addr) = (link.id, link.addr.clone());
+    let wrap = |e: anyhow::Error| anyhow!("worker {id} @ {addr}: {e:#}");
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ClientCmd::Register { user, site, adapter, reply } => {
+                let r = link
+                    .request(&Msg::Register { user, site, adapter })
+                    .and_then(|(m, _)| match m {
+                        Msg::Ack => Ok(()),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::Fit(job, reply) => {
+                let (user, site) = (job.user, job.site.clone());
+                let r = link.request(&Msg::Fit(job)).and_then(|(m, wire_time)| match m {
+                    Msg::FitOk(mut res) => {
+                        // the daemon reports pure compute; the rest of
+                        // the wire exchange is real transfer
+                        res.transfer = wire_time.saturating_sub(res.compute);
+                        Ok(res)
+                    }
+                    other => unexpected(other),
+                });
+                let _ = reply.send(r.map_err(|e| {
+                    anyhow!("worker {id} @ {addr}: fit(user {user}, site {site}): {e:#}")
+                }));
+            }
+            ClientCmd::Snapshot { user, site, reply } => {
+                let r = link
+                    .request(&Msg::Snapshot { user, site })
+                    .and_then(|(m, _)| match m {
+                        Msg::SnapshotOk(p) => Ok(p),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::StateBytes(reply) => {
+                let r = link.request(&Msg::StateBytes).and_then(|(m, _)| match m {
+                    Msg::StateBytesOk(n) => Ok(n as usize),
+                    other => unexpected(other),
+                });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::Disconnect => break,
+        }
+    }
+    // dropping the stream closes the connection; the daemon goes back
+    // to accepting
+}
+
+// ---------------------------------------------------------------------
+// worker side (the daemon behind `cola worker --listen`)
+// ---------------------------------------------------------------------
+
+/// The worker daemon: a TCP listener bridging the wire protocol onto a
+/// long-lived local [`Worker`]. Serves one connection at a time;
+/// adapter + optimizer state persist across connections (reconnect
+/// safety). Exits on the [`Msg::Shutdown`] handshake.
+pub struct WorkerDaemon {
+    addr: SocketAddr,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl WorkerDaemon {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start serving. `transfer` injects a simulated link on top of the
+    /// real wire (for calibration sweeps); pass `None` for honest
+    /// measured-transfer numbers.
+    pub fn bind(
+        listen: &str,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+    ) -> Result<WorkerDaemon> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("worker daemon: binding {listen}"))?;
+        let addr = listener.local_addr()?;
+        let worker = Worker::spawn_local(0, target, manifest, transfer)?;
+        let handle = std::thread::Builder::new()
+            .name("cola-worker-daemon".into())
+            .spawn(move || daemon_main(listener, worker))?;
+        Ok(WorkerDaemon { addr, handle: Some(handle) })
+    }
+
+    /// The actually-bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until a client completes the shutdown handshake.
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+enum ConnEnd {
+    /// peer asked the daemon to exit (handshake acked)
+    Shutdown,
+    /// peer went away; state persists, wait for a reconnect
+    Disconnect,
+}
+
+fn daemon_main(listener: TcpListener, worker: Worker) {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("cola worker: accept failed: {e}");
+                // persistent accept errors (fd exhaustion etc.) must not
+                // become a 100%-CPU spin; retry on a human timescale
+                std::thread::sleep(Duration::from_millis(200));
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        match serve_conn(stream, &worker) {
+            Ok(ConnEnd::Shutdown) => break,
+            Ok(ConnEnd::Disconnect) => {}
+            Err(e) => eprintln!("cola worker: connection from {peer} failed: {e:#}"),
+        }
+    }
+    worker.shutdown();
+}
+
+fn serve_conn(mut stream: TcpStream, worker: &Worker) -> Result<ConnEnd> {
+    loop {
+        let frame = match wire::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(e) if is_disconnect(&e) => return Ok(ConnEnd::Disconnect),
+            Err(e) => return Err(e),
+        };
+        match wire::decode(&frame) {
+            Ok(Msg::Shutdown) => {
+                wire::send(&mut stream, &Msg::ShutdownOk)?;
+                return Ok(ConnEnd::Shutdown);
+            }
+            Ok(msg) => {
+                let reply = dispatch(msg, worker);
+                wire::send(&mut stream, &reply)?;
+            }
+            Err(e) => {
+                // decodable framing but corrupt body: report and keep
+                // the connection — the peer sees exactly what broke
+                wire::send(&mut stream, &Msg::Error(format!("{e:#}")))?;
+            }
+        }
+    }
+}
+
+fn dispatch(msg: Msg, worker: &Worker) -> Msg {
+    let r: Result<Msg> = (|| match msg {
+        Msg::Register { user, site, adapter } => {
+            Worker::register(worker, user, &site, adapter)?;
+            Ok(Msg::Ack)
+        }
+        Msg::Fit(job) => {
+            let rx = Worker::fit(worker, job)?;
+            Ok(Msg::FitOk(rx.recv()??))
+        }
+        Msg::Snapshot { user, site } => {
+            Ok(Msg::SnapshotOk(Worker::snapshot(worker, user, &site)?))
+        }
+        Msg::StateBytes => Ok(Msg::StateBytesOk(Worker::state_bytes(worker)? as u64)),
+        other => bail!("unexpected message on worker side: {other:?}"),
+    })();
+    r.unwrap_or_else(|e| Msg::Error(format!("{e:#}")))
+}
+
+/// True when the error chain bottoms out in a peer-went-away IO error.
+fn is_disconnect(e: &anyhow::Error) -> bool {
+    use std::io::ErrorKind::*;
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>()
+            .map(|io| {
+                matches!(
+                    io.kind(),
+                    UnexpectedEof | ConnectionReset | ConnectionAborted | BrokenPipe
+                )
+            })
+            .unwrap_or(false)
+    })
+}
+
+/// The clean shutdown handshake: connect, send [`Msg::Shutdown`], wait
+/// for the ack. After this returns `Ok`, the daemon process is exiting.
+pub fn request_daemon_shutdown(addr: &str) -> Result<()> {
+    let mut stream = connect_with_backoff(addr, 3, Duration::from_millis(50))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    wire::send(&mut stream, &Msg::Shutdown)?;
+    match wire::recv(&mut stream)? {
+        Msg::ShutdownOk => Ok(()),
+        other => bail!("unexpected reply to shutdown handshake: {other:?}"),
+    }
+}

@@ -1,0 +1,829 @@
+//! The offload wire format — zero-dependency binary framing for every
+//! message that crosses the server/worker boundary.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! frame   := magic(4 = "CoLA") | version(1 = 0x01) | len:u32 | payload[len]
+//! payload := tag:u8 | body
+//! tensor  := dtype:u8 | rank:u8 | dims:u32^rank | data (elements, LE)
+//! string  := len:u32 | utf8 bytes
+//! ```
+//!
+//! f32 elements are shipped as raw IEEE-754 bit patterns
+//! (`f32::to_bits` / `from_bits`), so every value — including NaN
+//! payload bits, `±inf`, and `-0.0` — round-trips exactly. This is what
+//! makes the determinism guarantee of the TCP offload path possible:
+//! a worker daemon receives bit-identical `(x, grad_hhat)` buffers and
+//! returns bit-identical adapter tensors, so loopback-TCP and
+//! in-process runs produce byte-equal loss curves.
+//!
+//! Decoding is defensive: a wrong magic, an oversized length header, a
+//! truncated frame, an unknown tag, or a body shorter than its own
+//! headers claim all surface as errors — never panics or wild
+//! allocations.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
+use crate::config::{AdapterKind, Optimizer};
+use crate::coordinator::offload::{FitJob, FitResult};
+use crate::runtime::{IntTensor, Value};
+use crate::tensor::Tensor;
+
+/// Frame magic: ASCII "CoLA".
+pub const MAGIC: [u8; 4] = *b"CoLA";
+/// Wire protocol version (bump on any layout change).
+pub const VERSION: u8 = 1;
+/// Upper bound on a single frame payload (1 GiB) — anything larger is
+/// treated as a corrupt length header, not an allocation request.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Every message exchanged between the coordinator and a worker daemon.
+///
+/// Requests flow server -> worker; each gets exactly one reply
+/// (`*Ok`, [`Msg::Ack`], or [`Msg::Error`]) worker -> server.
+#[derive(Debug)]
+pub enum Msg {
+    /// Install an adapter (+ optimizer state) for (user, site).
+    Register { user: usize, site: String, adapter: SiteAdapter },
+    /// Fit one buffered adaptation interval.
+    Fit(FitJob),
+    /// Reply to [`Msg::Fit`].
+    FitOk(FitResult),
+    /// Fetch a snapshot of an adapter's parameters.
+    Snapshot { user: usize, site: String },
+    /// Reply to [`Msg::Snapshot`].
+    SnapshotOk(AdapterParams),
+    /// Ask for the bytes of adapter + optimizer state held remotely.
+    StateBytes,
+    /// Reply to [`Msg::StateBytes`].
+    StateBytesOk(u64),
+    /// Clean-shutdown handshake: the daemon acks and exits.
+    Shutdown,
+    /// Reply to [`Msg::Shutdown`] — sent just before the daemon exits.
+    ShutdownOk,
+    /// Generic success reply (e.g. to [`Msg::Register`]).
+    Ack,
+    /// Failure reply carrying the remote error chain.
+    Error(String),
+}
+
+mod tag {
+    pub const REGISTER: u8 = 0x01;
+    pub const FIT: u8 = 0x02;
+    pub const FIT_OK: u8 = 0x03;
+    pub const SNAPSHOT: u8 = 0x04;
+    pub const SNAPSHOT_OK: u8 = 0x05;
+    pub const STATE_BYTES: u8 = 0x06;
+    pub const STATE_BYTES_OK: u8 = 0x07;
+    pub const SHUTDOWN: u8 = 0x08;
+    pub const SHUTDOWN_OK: u8 = 0x09;
+    pub const ACK: u8 = 0x0A;
+    pub const ERROR: u8 = 0x0B;
+}
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("wire: payload of {} bytes exceeds MAX_FRAME", payload.len());
+    }
+    w.write_all(&MAGIC)?;
+    w.write_all(&[VERSION])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, validating magic/version/length before allocating.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; 9];
+    r.read_exact(&mut head)?;
+    if head[0..4] != MAGIC {
+        bail!("wire: bad magic {:02x?} (expected {:02x?})", &head[0..4], MAGIC);
+    }
+    if head[4] != VERSION {
+        bail!("wire: protocol version {} (this build speaks {VERSION})", head[4]);
+    }
+    let len = u32::from_le_bytes([head[5], head[6], head[7], head[8]]) as usize;
+    if len > MAX_FRAME {
+        bail!("wire: frame length {len} exceeds MAX_FRAME (corrupt header?)");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// Encode + frame + send one message.
+pub fn send(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    write_frame(w, &encode(msg))
+}
+
+/// Receive + decode one message.
+pub fn recv(r: &mut impl Read) -> Result<Msg> {
+    decode(&read_frame(r)?)
+}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { buf: vec![tag] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        // bit pattern, not value: NaN payloads and -0.0 survive
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        self.u8(0); // dtype: f32
+        self.u8(t.shape().len() as u8);
+        for &d in t.shape() {
+            self.u32(d as u32);
+        }
+        for &v in t.data() {
+            self.f32(v);
+        }
+    }
+
+    fn int_tensor(&mut self, t: &IntTensor) {
+        self.u8(1); // dtype: i32
+        self.u8(t.shape().len() as u8);
+        for &d in t.shape() {
+            self.u32(d as u32);
+        }
+        for &v in t.data() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn params(&mut self, p: &AdapterParams) {
+        self.u8(kind_tag(p.kind()));
+        let ts = p.tensors();
+        self.u8(ts.len() as u8);
+        for t in ts {
+            self.tensor(t);
+        }
+    }
+
+    fn opt_state(&mut self, o: &OptState) {
+        let c = &o.cfg;
+        self.u8(match c.kind {
+            Optimizer::Sgd => 0,
+            Optimizer::AdamW => 1,
+        });
+        self.f32(c.lr);
+        self.f32(c.weight_decay);
+        self.f32(c.beta1);
+        self.f32(c.beta2);
+        self.f32(c.eps);
+        self.u32(o.t);
+        let (m, v) = o.moments();
+        for vecs in [m, v] {
+            self.u32(vecs.len() as u32);
+            for xs in vecs {
+                self.u32(xs.len() as u32);
+                for &x in xs {
+                    self.f32(x);
+                }
+            }
+        }
+    }
+
+    fn duration(&mut self, d: Duration) {
+        self.u64(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+}
+
+fn kind_tag(k: AdapterKind) -> u8 {
+    match k {
+        AdapterKind::LowRank => 0,
+        AdapterKind::Linear => 1,
+        AdapterKind::Mlp => 2,
+    }
+}
+
+/// Serialize a message payload (framing is separate — see
+/// [`write_frame`]).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    match msg {
+        Msg::Register { user, site, adapter } => {
+            let mut e = Enc::new(tag::REGISTER);
+            e.u64(*user as u64);
+            e.str(site);
+            e.str(&adapter.site);
+            e.params(&adapter.params);
+            e.opt_state(&adapter.opt);
+            e.buf
+        }
+        Msg::Fit(job) => {
+            let mut e = Enc::new(tag::FIT);
+            e.u64(job.user as u64);
+            e.str(&job.site);
+            e.tensor(&job.x);
+            e.tensor(&job.ghat);
+            e.f32(job.grad_scale);
+            e.u8(job.merged as u8);
+            e.buf
+        }
+        Msg::FitOk(r) => {
+            let mut e = Enc::new(tag::FIT_OK);
+            e.u64(r.user as u64);
+            e.str(&r.site);
+            match &r.new_params {
+                Some(ps) => {
+                    e.u8(1);
+                    e.u32(ps.len() as u32);
+                    for t in ps {
+                        e.tensor(t);
+                    }
+                }
+                None => e.u8(0),
+            }
+            match &r.delta_diff {
+                Some(t) => {
+                    e.u8(1);
+                    e.tensor(t);
+                }
+                None => e.u8(0),
+            }
+            e.duration(r.compute);
+            e.duration(r.transfer);
+            e.u64(r.bytes_in as u64);
+            e.u64(r.bytes_out as u64);
+            e.buf
+        }
+        Msg::Snapshot { user, site } => {
+            let mut e = Enc::new(tag::SNAPSHOT);
+            e.u64(*user as u64);
+            e.str(site);
+            e.buf
+        }
+        Msg::SnapshotOk(p) => {
+            let mut e = Enc::new(tag::SNAPSHOT_OK);
+            e.params(p);
+            e.buf
+        }
+        Msg::StateBytes => vec![tag::STATE_BYTES],
+        Msg::StateBytesOk(n) => {
+            let mut e = Enc::new(tag::STATE_BYTES_OK);
+            e.u64(*n);
+            e.buf
+        }
+        Msg::Shutdown => vec![tag::SHUTDOWN],
+        Msg::ShutdownOk => vec![tag::SHUTDOWN_OK],
+        Msg::Ack => vec![tag::ACK],
+        Msg::Error(s) => {
+            let mut e = Enc::new(tag::ERROR);
+            e.str(s);
+            e.buf
+        }
+    }
+}
+
+/// Serialize a runtime [`Value`] (either dtype) with the same tensor
+/// layout the messages use — the interchange format for future
+/// artifact/buffer shipping.
+pub fn encode_value(v: &Value) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    match v {
+        Value::F32(t) => e.tensor(t),
+        Value::I32(t) => e.int_tensor(t),
+    }
+    e.buf
+}
+
+/// Decode a [`Value`] encoded by [`encode_value`].
+pub fn decode_value(buf: &[u8]) -> Result<Value> {
+    let mut d = Dec { buf, pos: 0 };
+    let v = d.value()?;
+    d.finish()?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "wire: truncated payload (need {n} bytes at offset {}, have {})",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        Ok(std::str::from_utf8(b)
+            .map_err(|e| anyhow!("wire: non-utf8 string: {e}"))?
+            .to_string())
+    }
+
+    /// Remaining undecoded bytes — the hard ceiling for any element
+    /// count a header can legitimately claim.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Guard an element count claimed by a header BEFORE allocating for
+    /// it: each element occupies 4 bytes, so anything larger than the
+    /// remaining payload is a corrupt header, not an allocation request
+    /// (a 20-byte frame must not reserve gigabytes).
+    fn guard_elems(&self, len: usize, what: &str) -> Result<()> {
+        if len > self.remaining() / 4 {
+            bail!(
+                "wire: {what} claims {len} elements but only {} payload \
+                 bytes remain (corrupt header?)",
+                self.remaining()
+            );
+        }
+        Ok(())
+    }
+
+    /// Shape header shared by both dtypes; guards rank and element
+    /// count before any allocation.
+    fn shape(&mut self) -> Result<(Vec<usize>, usize)> {
+        let rank = self.u8()? as usize;
+        if rank > 4 {
+            bail!("wire: tensor rank {rank} exceeds the supported maximum of 4");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut len: usize = 1;
+        for _ in 0..rank {
+            let d = self.u32()? as usize;
+            len = len
+                .checked_mul(d)
+                .ok_or_else(|| anyhow!("wire: tensor shape overflows"))?;
+            shape.push(d);
+        }
+        self.guard_elems(len, "tensor")?;
+        Ok((shape, len))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        match self.value()? {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("wire: expected f32 tensor, got i32"),
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        let dtype = self.u8()?;
+        let (shape, len) = self.shape()?;
+        match dtype {
+            0 => {
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(self.f32()?);
+                }
+                Ok(Value::F32(Tensor::new(shape, data)))
+            }
+            1 => {
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    data.push(self.u32()? as i32);
+                }
+                Ok(Value::I32(IntTensor::new(shape, data)))
+            }
+            other => bail!("wire: unknown dtype {other}"),
+        }
+    }
+
+    fn params(&mut self) -> Result<AdapterParams> {
+        let kind = self.u8()?;
+        let n = self.u8()? as usize;
+        let mut ts = Vec::with_capacity(n);
+        for _ in 0..n {
+            ts.push(self.tensor()?);
+        }
+        match (kind, ts.len()) {
+            (0, 2) => {
+                let mut it = ts.into_iter();
+                Ok(AdapterParams::LowRank { a: it.next().unwrap(), b: it.next().unwrap() })
+            }
+            (1, 1) => Ok(AdapterParams::Linear { w: ts.pop().unwrap() }),
+            (2, 4) => {
+                let mut it = ts.into_iter();
+                Ok(AdapterParams::Mlp {
+                    w1: it.next().unwrap(),
+                    b1: it.next().unwrap(),
+                    w2: it.next().unwrap(),
+                    b2: it.next().unwrap(),
+                })
+            }
+            (k, n) => bail!("wire: adapter kind tag {k} with {n} tensors is invalid"),
+        }
+    }
+
+    fn opt_state(&mut self) -> Result<OptState> {
+        let kind = match self.u8()? {
+            0 => Optimizer::Sgd,
+            1 => Optimizer::AdamW,
+            other => bail!("wire: unknown optimizer tag {other}"),
+        };
+        let lr = self.f32()?;
+        let weight_decay = self.f32()?;
+        let beta1 = self.f32()?;
+        let beta2 = self.f32()?;
+        let eps = self.f32()?;
+        let cfg = OptimizerCfg { kind, lr, weight_decay, beta1, beta2, eps };
+        let t = self.u32()?;
+        let mut mv = [Vec::new(), Vec::new()];
+        for slot in &mut mv {
+            let n = self.u32()? as usize;
+            if n > 64 {
+                bail!("wire: {n} moment vectors (corrupt header?)");
+            }
+            for _ in 0..n {
+                let len = self.u32()? as usize;
+                self.guard_elems(len, "moment vector")?;
+                let mut xs = Vec::with_capacity(len);
+                for _ in 0..len {
+                    xs.push(self.f32()?);
+                }
+                slot.push(xs);
+            }
+        }
+        let [m, v] = mv;
+        Ok(OptState::from_parts(cfg, t, m, v))
+    }
+
+    fn duration(&mut self) -> Result<Duration> {
+        Ok(Duration::from_nanos(self.u64()?))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "wire: {} trailing bytes after message body",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Deserialize a message payload produced by [`encode`].
+pub fn decode(payload: &[u8]) -> Result<Msg> {
+    let mut d = Dec { buf: payload, pos: 0 };
+    let t = d.u8()?;
+    let msg = match t {
+        tag::REGISTER => {
+            let user = d.u64()? as usize;
+            let site = d.str()?;
+            let adapter_site = d.str()?;
+            let params = d.params()?;
+            let opt = d.opt_state()?;
+            Msg::Register {
+                user,
+                site,
+                adapter: SiteAdapter { site: adapter_site, params, opt },
+            }
+        }
+        tag::FIT => {
+            let user = d.u64()? as usize;
+            let site = d.str()?;
+            let x = d.tensor()?;
+            let ghat = d.tensor()?;
+            let grad_scale = d.f32()?;
+            let merged = d.u8()? != 0;
+            Msg::Fit(FitJob { user, site, x, ghat, grad_scale, merged })
+        }
+        tag::FIT_OK => {
+            let user = d.u64()? as usize;
+            let site = d.str()?;
+            let new_params = if d.u8()? != 0 {
+                let n = d.u32()? as usize;
+                if n > 16 {
+                    bail!("wire: {n} adapter tensors (corrupt header?)");
+                }
+                let mut ps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ps.push(d.tensor()?);
+                }
+                Some(ps)
+            } else {
+                None
+            };
+            let delta_diff = if d.u8()? != 0 { Some(d.tensor()?) } else { None };
+            let compute = d.duration()?;
+            let transfer = d.duration()?;
+            let bytes_in = d.u64()? as usize;
+            let bytes_out = d.u64()? as usize;
+            Msg::FitOk(FitResult {
+                user,
+                site,
+                new_params,
+                delta_diff,
+                compute,
+                transfer,
+                bytes_in,
+                bytes_out,
+            })
+        }
+        tag::SNAPSHOT => {
+            let user = d.u64()? as usize;
+            let site = d.str()?;
+            Msg::Snapshot { user, site }
+        }
+        tag::SNAPSHOT_OK => Msg::SnapshotOk(d.params()?),
+        tag::STATE_BYTES => Msg::StateBytes,
+        tag::STATE_BYTES_OK => Msg::StateBytesOk(d.u64()?),
+        tag::SHUTDOWN => Msg::Shutdown,
+        tag::SHUTDOWN_OK => Msg::ShutdownOk,
+        tag::ACK => Msg::Ack,
+        tag::ERROR => Msg::Error(d.str()?),
+        other => bail!("wire: unknown message tag 0x{other:02x}"),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &encode(msg)).unwrap();
+        decode(&read_frame(&mut &buf[..]).unwrap()).unwrap()
+    }
+
+    fn sample_adapter(kind: AdapterKind) -> SiteAdapter {
+        let mut rng = Rng::new(9);
+        let params = AdapterParams::init(kind, 6, 4, 3, 5, &mut rng);
+        let mut sa = SiteAdapter::new("l0.q", params, &OptimizerCfg::adamw(1e-3, 1e-4));
+        // advance the optimizer so moments are non-trivial
+        let grads: Vec<Tensor> = sa
+            .params
+            .tensors()
+            .iter()
+            .map(|t| Tensor::from_fn(t.shape(), |i| (i as f32).sin()))
+            .collect();
+        sa.step(&grads);
+        sa
+    }
+
+    fn assert_tensor_bits_eq(a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn register_roundtrips_all_adapter_kinds() {
+        for kind in [AdapterKind::LowRank, AdapterKind::Linear, AdapterKind::Mlp] {
+            let adapter = sample_adapter(kind);
+            let msg = Msg::Register { user: 7, site: "l1.v".into(), adapter };
+            let Msg::Register { user, site, adapter } = roundtrip(&msg) else {
+                panic!("wrong variant");
+            };
+            let Msg::Register { adapter: orig, .. } = msg else { unreachable!() };
+            assert_eq!(user, 7);
+            assert_eq!(site, "l1.v");
+            assert_eq!(adapter.site, orig.site);
+            assert_eq!(adapter.params.kind(), kind);
+            for (a, b) in adapter.params.tensors().iter().zip(orig.params.tensors()) {
+                assert_tensor_bits_eq(a, b);
+            }
+            assert_eq!(adapter.opt.t, orig.opt.t);
+            assert_eq!(adapter.opt.moments(), orig.opt.moments());
+            assert_eq!(adapter.opt.cfg.lr.to_bits(), orig.opt.cfg.lr.to_bits());
+        }
+    }
+
+    #[test]
+    fn fit_roundtrips_nan_inf_payloads() {
+        let special = Tensor::new(
+            vec![2, 3],
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e-42, f32::MAX],
+        );
+        let msg = Msg::Fit(FitJob {
+            user: 3,
+            site: "head".into(),
+            x: special.clone(),
+            ghat: Tensor::new(vec![2, 2], vec![f32::from_bits(0x7fc0_0001); 4]),
+            grad_scale: 0.25,
+            merged: true,
+        });
+        let Msg::Fit(job) = roundtrip(&msg) else { panic!("wrong variant") };
+        assert_eq!(job.user, 3);
+        assert!(job.merged);
+        assert_eq!(job.grad_scale, 0.25);
+        assert_tensor_bits_eq(&job.x, &special);
+        // the quiet-NaN payload bit must survive exactly
+        assert_eq!(job.ghat.data()[0].to_bits(), 0x7fc0_0001);
+    }
+
+    #[test]
+    fn fit_ok_roundtrips_both_reply_shapes() {
+        let unmerged = Msg::FitOk(FitResult {
+            user: 1,
+            site: "l0.q".into(),
+            new_params: Some(vec![Tensor::zeros(&[4, 2]), Tensor::zeros(&[2, 4])]),
+            delta_diff: None,
+            compute: Duration::from_micros(123),
+            transfer: Duration::from_nanos(456),
+            bytes_in: 1024,
+            bytes_out: 2048,
+        });
+        let Msg::FitOk(r) = roundtrip(&unmerged) else { panic!("wrong variant") };
+        assert_eq!(r.new_params.as_ref().map(|p| p.len()), Some(2));
+        assert!(r.delta_diff.is_none());
+        assert_eq!(r.compute, Duration::from_micros(123));
+        assert_eq!((r.bytes_in, r.bytes_out), (1024, 2048));
+
+        let merged = Msg::FitOk(FitResult {
+            user: 2,
+            site: "head".into(),
+            new_params: None,
+            delta_diff: Some(Tensor::from_fn(&[3, 3], |i| i as f32)),
+            compute: Duration::ZERO,
+            transfer: Duration::ZERO,
+            bytes_in: 0,
+            bytes_out: 36,
+        });
+        let Msg::FitOk(r) = roundtrip(&merged) else { panic!("wrong variant") };
+        assert!(r.new_params.is_none());
+        assert_eq!(r.delta_diff.unwrap().shape(), &[3, 3]);
+    }
+
+    #[test]
+    fn empty_tensor_roundtrips() {
+        let msg = Msg::Fit(FitJob {
+            user: 0,
+            site: "s".into(),
+            x: Tensor::zeros(&[0, 8]),
+            ghat: Tensor::zeros(&[0, 8]),
+            grad_scale: 1.0,
+            merged: false,
+        });
+        let Msg::Fit(job) = roundtrip(&msg) else { panic!("wrong variant") };
+        assert_eq!(job.x.shape(), &[0, 8]);
+        assert_eq!(job.x.len(), 0);
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        for msg in [
+            Msg::Snapshot { user: 11, site: "conv1".into() },
+            Msg::StateBytes,
+            Msg::StateBytesOk(987654321),
+            Msg::Shutdown,
+            Msg::ShutdownOk,
+            Msg::Ack,
+            Msg::Error("worker 0: no adapter (1, l0.q)".into()),
+        ] {
+            let back = roundtrip(&msg);
+            assert_eq!(format!("{msg:?}"), format!("{back:?}"));
+        }
+        let snap = Msg::SnapshotOk(sample_adapter(AdapterKind::Mlp).params);
+        let Msg::SnapshotOk(p) = roundtrip(&snap) else { panic!("wrong variant") };
+        assert_eq!(p.kind(), AdapterKind::Mlp);
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &encode(&Msg::StateBytesOk(1))).unwrap();
+        for cut in [1, 5, 8, buf.len() - 1] {
+            assert!(
+                read_frame(&mut &buf[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn garbage_header_rejected() {
+        // wrong magic
+        let mut bad = Vec::new();
+        write_frame(&mut bad, &[tag::ACK]).unwrap();
+        bad[0] = b'X';
+        assert!(read_frame(&mut &bad[..]).is_err());
+        // wrong version
+        let mut bad2 = Vec::new();
+        write_frame(&mut bad2, &[tag::ACK]).unwrap();
+        bad2[4] = 0xFF;
+        assert!(read_frame(&mut &bad2[..]).is_err());
+        // absurd length header must not allocate
+        let mut bad3 = MAGIC.to_vec();
+        bad3.push(VERSION);
+        bad3.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &bad3[..]).is_err());
+    }
+
+    #[test]
+    fn oversized_element_claims_do_not_allocate() {
+        // a tiny Fit body whose tensor header claims ~256M elements:
+        // must be rejected by the remaining-bytes guard, not by an OOM
+        let mut p = vec![super::tag::FIT];
+        p.extend_from_slice(&0u64.to_le_bytes()); // user
+        p.extend_from_slice(&1u32.to_le_bytes()); // site len
+        p.push(b's');
+        p.push(0); // dtype f32
+        p.push(1); // rank 1
+        p.extend_from_slice(&((MAX_FRAME / 4 - 1) as u32).to_le_bytes());
+        let err = decode(&p).unwrap_err();
+        assert!(format!("{err}").contains("corrupt header"), "{err}");
+    }
+
+    #[test]
+    fn garbage_payload_rejected() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[0xEE]).is_err(), "unknown tag");
+        // Fit with a truncated tensor body
+        let good = encode(&Msg::Fit(FitJob {
+            user: 0,
+            site: "s".into(),
+            x: Tensor::zeros(&[2, 2]),
+            ghat: Tensor::zeros(&[2, 2]),
+            grad_scale: 1.0,
+            merged: false,
+        }));
+        assert!(decode(&good[..good.len() - 3]).is_err());
+        // trailing junk after a complete message
+        let mut padded = encode(&Msg::Ack);
+        padded.push(0);
+        assert!(decode(&padded).is_err());
+    }
+
+    #[test]
+    fn value_roundtrips_both_dtypes() {
+        let f = Value::F32(Tensor::new(vec![2], vec![f32::NAN, -0.0]));
+        let Value::F32(t) = decode_value(&encode_value(&f)).unwrap() else {
+            panic!("wrong dtype");
+        };
+        assert!(t.data()[0].is_nan());
+        assert_eq!(t.data()[1].to_bits(), (-0.0f32).to_bits());
+
+        let i = Value::I32(IntTensor::new(vec![2, 2], vec![-1, 2, i32::MIN, i32::MAX]));
+        let back = decode_value(&encode_value(&i)).unwrap();
+        assert_eq!(back, i);
+    }
+}

@@ -1,0 +1,178 @@
+//! Loopback-TCP offload integration — the in-repo mirror of the
+//! `distributed-smoke` CI job.
+//!
+//! The load-bearing invariant: a config trained against a `cola worker`
+//! daemon over a real socket produces **bit-identical** train/eval loss
+//! curves to the same config trained with in-process workers. Workers
+//! run the same native kernels and the wire format round-trips every
+//! f32 by bit pattern, so there is nothing for the transport to change.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cola::adapters::{AdapterParams, OptimizerCfg, SiteAdapter};
+use cola::config::{AdapterKind, Method, Mode, OffloadTarget, Optimizer, Task,
+                   TrainConfig, TransportKind};
+use cola::coordinator::{FitJob, Trainer};
+use cola::rng::Rng;
+use cola::runtime::Manifest;
+use cola::tensor::Tensor;
+use cola::transport::tcp::{connect_with_backoff, request_daemon_shutdown,
+                           TcpWorker, WorkerDaemon};
+use cola::transport::{wire, Transport};
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load_or_builtin(std::path::Path::new("artifacts")).unwrap())
+}
+
+/// Daemon on an ephemeral loopback port; returns (daemon, addr).
+fn daemon() -> (WorkerDaemon, String) {
+    let d = WorkerDaemon::bind("127.0.0.1:0", OffloadTarget::NativeCpu,
+                               manifest(), None)
+        .unwrap();
+    let addr = d.local_addr().to_string();
+    (d, addr)
+}
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.task = Task::Clm;
+    cfg.size = "tiny".into();
+    cfg.method = Method::Cola(AdapterKind::LowRank);
+    cfg.mode = Mode::Unmerged;
+    cfg.optimizer = Optimizer::Sgd;
+    cfg.steps = 6;
+    cfg.interval = 2;
+    cfg.eval_every = 3;
+    cfg.eval_batches = 2;
+    cfg.lr = 0.05;
+    cfg.seed = 42;
+    cfg.workers = 1;
+    cfg
+}
+
+fn tcp_cfg(addr: &str) -> TrainConfig {
+    let mut cfg = base_cfg();
+    cfg.offload_transport = TransportKind::Tcp;
+    cfg.worker_addrs = vec![addr.to_string()];
+    cfg
+}
+
+#[test]
+fn tcp_loopback_run_bit_identical_to_local() {
+    let (d, addr) = daemon();
+
+    let mut local = Trainer::new(base_cfg()).unwrap();
+    let r_local = local.run().unwrap();
+
+    let mut tcp = Trainer::new(tcp_cfg(&addr)).unwrap();
+    let r_tcp = tcp.run().unwrap();
+
+    // f64 == compares bit patterns here: both runs must be EXACTLY equal
+    assert_eq!(r_local.train_loss.points, r_tcp.train_loss.points,
+               "train curves diverged across transports");
+    assert_eq!(r_local.eval_loss.points, r_tcp.eval_loss.points,
+               "eval curves diverged across transports");
+    assert_eq!(r_local.trainable_params, r_tcp.trainable_params);
+    // adapter + optimizer state lives behind the socket, and the
+    // accountant still sees it
+    assert_eq!(r_local.worker_state_bytes, r_tcp.worker_state_bytes);
+    assert!(r_tcp.worker_state_bytes > 0);
+    // the wire actually carried the adaptation payloads
+    assert!(r_tcp.timings.bytes_returned > 0);
+
+    drop(tcp); // close the training connection before the handshake
+    request_daemon_shutdown(&addr).unwrap();
+    d.join();
+}
+
+#[test]
+fn tcp_merged_mode_and_snapshot_roundtrip() {
+    let (d, addr) = daemon();
+
+    let mut cfg = tcp_cfg(&addr);
+    cfg.mode = Mode::Merged;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+
+    // snapshot travels back over the wire
+    let p = t.adapter_snapshot(0, "l0.q").unwrap();
+    assert_eq!(p.kind(), AdapterKind::LowRank);
+    assert!(cola::tensor::norm(p.tensors()[1]) > 0.0,
+            "adapter B still zero after TCP-offloaded training");
+
+    drop(t);
+    request_daemon_shutdown(&addr).unwrap();
+    d.join();
+}
+
+#[test]
+fn daemon_state_survives_reconnect() {
+    let (d, addr) = daemon();
+    let mut rng = Rng::new(5);
+    let params = AdapterParams::init(AdapterKind::LowRank, 8, 8, 4, 4, &mut rng);
+    let adapter = SiteAdapter::new("s", params, &OptimizerCfg::sgd(0.1, 0.0));
+
+    let w1 = TcpWorker::connect(0, &addr).unwrap();
+    w1.register(3, "s", adapter).unwrap();
+    let bytes = w1.state_bytes().unwrap();
+    assert!(bytes > 0);
+    w1.shutdown(); // drops the connection WITHOUT the shutdown handshake
+
+    // a fresh connection sees the same daemon-resident state
+    let w2 = TcpWorker::connect(1, &addr).unwrap();
+    let snap = w2.snapshot(3, "s").unwrap();
+    assert_eq!(snap.kind(), AdapterKind::LowRank);
+    assert_eq!(w2.state_bytes().unwrap(), bytes);
+    // unknown (user, site) surfaces the remote error, not a hang
+    let err = w2.snapshot(9, "nope").unwrap_err();
+    assert!(format!("{err:#}").contains("no adapter"), "{err:#}");
+    w2.shutdown();
+
+    request_daemon_shutdown(&addr).unwrap();
+    d.join();
+}
+
+#[test]
+fn connect_backoff_gives_up_with_context() {
+    // port 1 on loopback: connection refused immediately, so this only
+    // exercises the retry loop, not a timeout
+    let err = TcpWorker::connect_with_opts(0, "127.0.0.1:1", 2,
+                                           Duration::from_millis(5))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("127.0.0.1:1"), "{msg}");
+    assert!(msg.contains("2 attempts"), "{msg}");
+    assert!(connect_with_backoff("127.0.0.1:1", 1, Duration::from_millis(1)).is_err());
+}
+
+#[test]
+fn fit_against_dead_peer_names_user_and_site() {
+    // a "daemon" that answers the connect-time liveness probe, then
+    // hangs up — so the link dies between connect and the first fit
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let accepter = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let probe = wire::read_frame(&mut s).unwrap();
+        assert!(matches!(wire::decode(&probe).unwrap(), wire::Msg::StateBytes));
+        wire::send(&mut s, &wire::Msg::StateBytesOk(0)).unwrap();
+        drop(s);
+    });
+    let w = TcpWorker::connect(0, &addr).unwrap();
+    accepter.join().unwrap();
+
+    let job = FitJob {
+        user: 5,
+        site: "l0.q".into(),
+        x: Tensor::zeros(&[2, 4]),
+        ghat: Tensor::zeros(&[2, 4]),
+        grad_scale: 1.0,
+        merged: false,
+    };
+    let rx = w.fit(job).unwrap();
+    let err = rx.recv().unwrap().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("user 5"), "error must name the user: {msg}");
+    assert!(msg.contains("l0.q"), "error must name the site: {msg}");
+}

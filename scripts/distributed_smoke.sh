@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Distributed-offload smoke: launch a `cola worker` daemon on an
+# ephemeral loopback port, train the same tiny config in-process and
+# over TCP, and require byte-identical loss curves. Used by the
+# `distributed-smoke` CI job; runnable locally after
+# `cargo build --release --locked`.
+set -euo pipefail
+
+BIN=${BIN:-./target/release/cola}
+OUT=$(mktemp -d)
+
+cleanup() {
+  # belt and braces: never leave a daemon behind, even on failure paths
+  if [ -n "${WORKER_PID:-}" ] && kill -0 "$WORKER_PID" 2>/dev/null; then
+    kill "$WORKER_PID" 2>/dev/null || true
+  fi
+}
+trap cleanup EXIT
+
+"$BIN" worker --listen 127.0.0.1:0 --threads 2 >"$OUT/worker.log" 2>&1 &
+WORKER_PID=$!
+
+# scrape the resolved port from the daemon's startup line
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$OUT/worker.log" | head -n1)
+  [ -n "$ADDR" ] && break
+  if ! kill -0 "$WORKER_PID" 2>/dev/null; then
+    echo "FAIL: worker daemon died during startup" >&2
+    cat "$OUT/worker.log" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+  echo "FAIL: worker daemon never reported its address" >&2
+  cat "$OUT/worker.log" >&2
+  exit 1
+fi
+echo "worker daemon at $ADDR (pid $WORKER_PID)"
+
+echo "--- in-process run"
+"$BIN" train --config config/distributed_smoke.toml \
+  --loss_out "$OUT/local.json"
+
+echo "--- loopback-TCP run"
+"$BIN" train --config config/distributed_smoke.toml \
+  --offload_transport tcp --worker_addrs "$ADDR" \
+  --loss_out "$OUT/tcp.json"
+
+if ! kill -0 "$WORKER_PID" 2>/dev/null; then
+  echo "FAIL: worker daemon crashed during training" >&2
+  cat "$OUT/worker.log" >&2
+  exit 1
+fi
+
+if ! diff "$OUT/local.json" "$OUT/tcp.json"; then
+  echo "FAIL: TCP loss curves differ from the in-process run" >&2
+  echo "--- worker log:" >&2
+  cat "$OUT/worker.log" >&2
+  exit 1
+fi
+echo "OK: loss curves are byte-identical across transports"
+
+# clean shutdown handshake; the daemon must exit 0
+"$BIN" worker --stop "$ADDR"
+wait "$WORKER_PID"
+echo "OK: worker daemon exited cleanly after the shutdown handshake"
+WORKER_PID=""
