@@ -45,26 +45,40 @@ fn main() -> cola::Result<()> {
     let addr = daemon.local_addr().to_string();
     println!("worker daemon listening on {addr}");
 
-    println!("\n[1/2] in-process offload (local transport)");
+    println!("\n[1/3] in-process offload (local transport)");
     let mut local = Trainer::new(cfg())?;
     let r_local = local.run()?;
     drop(local);
 
-    println!("[2/2] TCP offload to the loopback daemon");
+    println!("[2/3] TCP offload to the loopback daemon (one Fit frame per job)");
     let mut over_tcp = cfg();
     over_tcp.offload_transport = TransportKind::Tcp;
     over_tcp.worker_addrs = vec![addr.clone()];
-    let mut tcp = Trainer::new(over_tcp)?;
+    let mut tcp = Trainer::new(over_tcp.clone())?;
     let r_tcp = tcp.run()?;
     drop(tcp); // release the connection before the shutdown handshake
 
-    assert_eq!(r_local.train_loss.points, r_tcp.train_loss.points,
-               "determinism violation: train curves differ across transports");
-    assert_eq!(r_local.eval_loss.points, r_tcp.eval_loss.points,
-               "determinism violation: eval curves differ across transports");
-    println!("\ndeterminism: train + eval loss curves are bit-identical ✓");
+    println!("[3/3] batched + pipelined TCP (FitBatch frames, window 2)");
+    let mut over_batch = over_tcp;
+    over_batch.offload_batch = true;
+    over_batch.offload_inflight = 2;
+    let mut batched = Trainer::new(over_batch)?;
+    let r_batched = batched.run()?;
+    drop(batched);
+
+    for (name, r) in [("tcp", &r_tcp), ("tcp+batch", &r_batched)] {
+        assert_eq!(r_local.train_loss.points, r.train_loss.points,
+                   "determinism violation: {name} train curves differ");
+        assert_eq!(r_local.eval_loss.points, r.eval_loss.points,
+                   "determinism violation: {name} eval curves differ");
+    }
+    println!("\ndeterminism: train + eval loss curves are bit-identical \
+              across all three dispatch shapes ✓");
     println!("  final train loss: {:.6}",
              r_tcp.train_loss.last().unwrap_or(f64::NAN));
+    println!("\nfit dispatch round-trips (the cost FitBatch collapses):");
+    println!("  per-job Fit frames : {}", r_tcp.timings.round_trips);
+    println!("  FitBatch, window 2 : {}", r_batched.timings.round_trips);
 
     // measured wire vs. the simulated link the sweeps use
     let bytes = r_tcp.timings.bytes_offloaded + r_tcp.timings.bytes_returned;

@@ -83,6 +83,17 @@ impl Args {
             None => bail!("missing required option --{key}"),
         }
     }
+
+    /// Loud-typo guard for subcommands whose options all take values:
+    /// a bare `--offload_batch` (no value) parses as a *flag*, which a
+    /// value-driven consumer would otherwise silently ignore — the
+    /// worst possible failure mode for a boolean config key.
+    pub fn require_no_flags(&self, what: &str) -> Result<()> {
+        if let Some(f) = self.flags.first() {
+            bail!("{what} options take values: --{f} <value> (e.g. --{f} true)");
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +133,14 @@ mod tests {
         let a = parse("x --lr -0.5");
         // "-0.5" doesn't start with --, so it is taken as the value
         assert_eq!(a.get("lr"), Some("-0.5"));
+    }
+
+    #[test]
+    fn require_no_flags_names_the_flag() {
+        let a = parse("train --offload_batch --steps 5");
+        let err = a.require_no_flags("train").unwrap_err();
+        assert!(format!("{err}").contains("offload_batch"), "{err}");
+        assert!(parse("train --steps 5").require_no_flags("train").is_ok());
     }
 
     #[test]

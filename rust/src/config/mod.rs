@@ -268,8 +268,25 @@ pub struct TrainConfig {
     pub offload_transport: TransportKind,
     /// `cola worker` daemon addresses (tcp transport only); the CLI/TOML
     /// form is a comma-separated list, e.g.
-    /// `worker_addrs = "127.0.0.1:7701,127.0.0.1:7702"`
+    /// `worker_addrs = "127.0.0.1:7701,127.0.0.1:7702"`. The same
+    /// address may appear more than once — a daemon serves any number
+    /// of concurrent links, so one low-cost device can back several
+    /// pool slots.
     pub worker_addrs: Vec<String>,
+    /// tenant namespace this run's adapters live under on shared worker
+    /// daemons (tcp transport only). Empty = the v1 default namespace.
+    /// Two trainers sharing a daemon MUST use distinct tenants or they
+    /// will clobber each other's (user, site) keys.
+    pub offload_tenant: String,
+    /// ship each interval's FitJobs as one wire-v2 `FitBatch` frame per
+    /// worker instead of one `Fit` round-trip per job (tcp only).
+    /// Changes framing, never numerics: loss curves stay byte-identical.
+    pub offload_batch: bool,
+    /// max `FitBatch` frames in flight per interval flush (>= 1;
+    /// requires offload_batch). 1 = one frame per interval; 2+ splits
+    /// the flush so a later chunk rides the wire while an earlier one
+    /// computes on the daemon.
+    pub offload_inflight: usize,
 }
 
 impl Default for TrainConfig {
@@ -297,6 +314,9 @@ impl Default for TrainConfig {
             threads: 0,
             offload_transport: TransportKind::Local,
             worker_addrs: Vec::new(),
+            offload_tenant: String::new(),
+            offload_batch: false,
+            offload_inflight: 1,
         }
     }
 }
@@ -343,6 +363,13 @@ impl TrainConfig {
                     .map(String::from)
                     .collect();
             }
+            "offload_tenant" => self.offload_tenant = val.into(),
+            "offload_batch" => {
+                self.offload_batch = val.parse().context("offload_batch")?
+            }
+            "offload_inflight" => {
+                self.offload_inflight = val.parse().context("offload_inflight")?
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -365,22 +392,19 @@ impl TrainConfig {
         if self.users == 0 {
             bail!("users must be >= 1");
         }
+        if self.offload_inflight == 0 {
+            bail!("offload_inflight must be >= 1");
+        }
         match self.offload_transport {
             TransportKind::Tcp => {
                 if self.worker_addrs.is_empty() {
                     bail!("offload_transport = \"tcp\" requires worker_addrs \
                            (comma-separated `cola worker` daemon addresses)");
                 }
-                // a daemon serves one connection at a time: listing the
-                // same address twice would deadlock the second link at
-                // registration
-                let mut seen = self.worker_addrs.clone();
-                seen.sort();
-                seen.dedup();
-                if seen.len() != self.worker_addrs.len() {
-                    bail!("worker_addrs contains duplicate addresses — each \
-                           worker daemon serves exactly one server link");
-                }
+                // duplicate addresses are allowed: a daemon serves any
+                // number of concurrent links, so one low-cost device can
+                // back several pool slots (user shards still land on
+                // distinct (tenant, user, site) keys)
                 if self.offload == OffloadTarget::PjrtDevice {
                     bail!("with offload_transport = \"tcp\" the compute target \
                            is chosen per daemon (`cola worker --offload ...`); \
@@ -393,7 +417,23 @@ impl TrainConfig {
                            \"local\" — set offload_transport = \"tcp\" or \
                            drop the addresses (refusing to silently ignore)");
                 }
+                if !self.offload_tenant.is_empty() {
+                    bail!("offload_tenant is set but offload_transport is \
+                           \"local\" — tenants namespace shared TCP daemons; \
+                           an in-process pool is single-tenant by construction \
+                           (refusing to silently ignore)");
+                }
+                if self.offload_batch {
+                    bail!("offload_batch is set but offload_transport is \
+                           \"local\" — batching is a wire-framing feature; an \
+                           in-process pool already pays no per-job round-trip \
+                           (refusing to silently ignore)");
+                }
             }
+        }
+        if self.offload_inflight > 1 && !self.offload_batch {
+            bail!("offload_inflight > 1 pipelines FitBatch frames and \
+                   requires offload_batch = true");
         }
         if self.mode == Mode::Merged {
             if let Method::Cola(k) = self.method {
@@ -483,10 +523,43 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_worker_addrs_rejected() {
+    fn duplicate_worker_addrs_allowed() {
+        // one daemon may back several pool slots (it serves N links)
         let mut cfg = TrainConfig::default();
         cfg.set("offload_transport", "tcp").unwrap();
         cfg.set("worker_addrs", "127.0.0.1:7701,127.0.0.1:7701").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.worker_addrs.len(), 2);
+    }
+
+    #[test]
+    fn batch_and_pipeline_knobs_validated() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        cfg.set("offload_batch", "true").unwrap();
+        cfg.set("offload_inflight", "2").unwrap();
+        cfg.set("offload_tenant", "u0").unwrap();
+        cfg.validate().unwrap();
+
+        // pipelining rides FitBatch frames
+        cfg.set("offload_batch", "false").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.set("offload_batch", "true").unwrap();
+
+        // zero in-flight frames is meaningless
+        cfg.set("offload_inflight", "0").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn tcp_only_knobs_rejected_on_local_transport() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_tenant", "u0").unwrap();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_batch", "true").unwrap();
         assert!(cfg.validate().is_err());
     }
 

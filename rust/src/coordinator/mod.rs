@@ -16,5 +16,5 @@ pub mod server;
 pub use api::FtaasService;
 pub use buffer::AdaptationBuffers;
 pub use driver::{Driver, LmVariant, SiteSpec, TaskData};
-pub use offload::{FitJob, FitResult, TransferModel, Worker, WorkerPool};
+pub use offload::{FitJob, FitResult, TransferModel, Worker, WorkerCore, WorkerPool};
 pub use server::{RunReport, Trainer};

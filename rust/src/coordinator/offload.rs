@@ -17,10 +17,18 @@
 //! [`TcpWorker`](crate::transport::tcp::TcpWorker) proxies the same
 //! operations to a `cola worker` daemon over a real socket
 //! (`offload_transport = "tcp"`).
+//!
+//! Both implementations share one compute core: [`WorkerCore`], a
+//! mutex-protected adapter table plus the fit/step math. The local
+//! worker thread drives a core through its command channel; the TCP
+//! daemon shares ONE core across every live connection (multi-tenant
+//! FTaaS: adapters are keyed by `(tenant, user, site)`, so several
+//! `cola train` processes can lease the same low-cost device without
+//! clobbering each other's optimizer state).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -30,7 +38,8 @@ use crate::config::OffloadTarget;
 use crate::merge;
 use crate::runtime::{Device, Input, Manifest, OutputPlan, Value};
 use crate::tensor::{self, Tensor};
-use crate::transport::{tcp::TcpWorker, Transport};
+use crate::transport::tcp::{TcpLinkOpts, TcpWorker};
+use crate::transport::Transport;
 
 /// Simulated interconnect: delay = latency + bytes / bandwidth.
 #[derive(Clone, Copy, Debug)]
@@ -191,13 +200,28 @@ impl Transport for Worker {
     }
 }
 
-/// The pool: users are sharded across workers (user k -> worker k % N),
-/// mirroring "multiple low-cost devices ... in parallel" (§3.2).
-/// Dispatch goes through [`Transport`], so the fleet can be in-process
-/// threads ([`WorkerPool::spawn`]) or remote `cola worker` daemons
+/// The pool: users are sharded across workers, mirroring "multiple
+/// low-cost devices ... in parallel" (§3.2). Dispatch goes through
+/// [`Transport`], so the fleet can be in-process threads
+/// ([`WorkerPool::spawn`]) or remote `cola worker` daemons
 /// ([`WorkerPool::connect_tcp`]) — the training loop can't tell the
 /// difference, and by the bit-exact wire format + deterministic kernels
 /// it trains to identical loss curves either way.
+///
+/// # Sharding contract
+///
+/// User `u` is permanently assigned worker `u % len` ([`Self::shard_of`]),
+/// and that worker *owns* the user's adapters and optimizer moments for
+/// the life of the state. The worker count is therefore part of a run's
+/// identity: growing or shrinking the pool remaps users onto workers
+/// that never saw their moments, which would silently restart every
+/// optimizer mid-run. Today every `Trainer` run registers fresh
+/// adapters at init, so the contract holds by construction; any future
+/// resume/checkpoint path that attaches to existing worker state (e.g.
+/// TCP daemons, whose state outlives connections) must gate on
+/// [`Self::verify_shard_count`] with the pool size the state was
+/// registered under, and treat a mismatch as fatal (pinned by the
+/// `pool_size_change_rejected_against_existing_state` test).
 ///
 /// Each local worker's surrogate-fit contractions
 /// (`AdapterParams::fit_grads`) run on the shared `tensor::pool` core
@@ -235,8 +259,12 @@ impl WorkerPool {
 
     /// Connect to remote worker daemons (`offload_transport = "tcp"`) —
     /// one [`TcpWorker`] per address, with connect backoff so daemons
-    /// may still be binding when the server starts.
-    pub fn connect_tcp(addrs: &[String]) -> Result<WorkerPool> {
+    /// may still be binding when the server starts. The same address may
+    /// appear more than once: a daemon serves any number of concurrent
+    /// links, so one low-cost device can back several pool slots.
+    /// `link` carries the tenant namespace and the FitBatch/pipelining
+    /// knobs every link is built with.
+    pub fn connect_tcp(addrs: &[String], link: &TcpLinkOpts) -> Result<WorkerPool> {
         if addrs.is_empty() {
             bail!(
                 "offload_transport = \"tcp\" needs at least one worker \
@@ -245,26 +273,69 @@ impl WorkerPool {
         }
         let mut workers: Vec<Box<dyn Transport>> = Vec::with_capacity(addrs.len());
         for (id, addr) in addrs.iter().enumerate() {
-            workers.push(Box::new(TcpWorker::connect(id, addr)?));
+            workers.push(Box::new(TcpWorker::connect_with_link_opts(id, addr, link)?));
         }
         Ok(WorkerPool { workers })
     }
 
+    /// The permanent worker index for a user — see the sharding
+    /// contract in the type docs.
+    pub fn shard_of(&self, user: usize) -> usize {
+        user % self.workers.len()
+    }
+
     pub fn for_user(&self, user: usize) -> &dyn Transport {
-        self.workers[user % self.workers.len()].as_ref()
+        self.workers[self.shard_of(user)].as_ref()
+    }
+
+    /// Worker by pool index (callers that already grouped jobs by
+    /// [`Self::shard_of`]).
+    pub fn worker(&self, idx: usize) -> &dyn Transport {
+        self.workers[idx].as_ref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
     }
 
     pub fn workers(&self) -> &[Box<dyn Transport>] {
         &self.workers
     }
 
+    /// Enforce the sharding contract against pre-existing worker state:
+    /// `registered_with` is the pool size the state (adapters, optimizer
+    /// moments, or an on-disk snapshot of either) was created under.
+    /// A mismatch is rejected — `user % len` would silently reshuffle
+    /// every user's moments onto a worker that never saw them.
+    pub fn verify_shard_count(&self, registered_with: usize) -> Result<()> {
+        if registered_with != self.workers.len() {
+            bail!(
+                "worker pool has {} workers but the existing adapter state was \
+                 registered with {}: user -> worker sharding is `user % workers` \
+                 and is part of a run's identity, so changing the pool size \
+                 against live state would silently reshuffle optimizer moments \
+                 — finish the run with the original pool size or start fresh",
+                self.workers.len(),
+                registered_with
+            );
+        }
+        Ok(())
+    }
+
     /// Total adapter + optimizer bytes across the fleet. Accounting is
     /// best-effort: a dead link counts as 0, but loudly — silent
     /// miscounts would make the Table-1 memory claims look better than
-    /// they are.
+    /// they are. Several pool slots may share one daemon (duplicate
+    /// `worker_addrs`), and a daemon reports its whole resident state,
+    /// so each distinct endpoint is queried exactly once — summing per
+    /// link would double-count. On a multi-tenant daemon the figure
+    /// still spans ALL tenants (it is the device's footprint, not this
+    /// run's share).
     pub fn total_state_bytes(&self) -> usize {
+        let mut seen = BTreeSet::new();
         self.workers
             .iter()
+            .filter(|w| seen.insert(w.describe()))
             .map(|w| {
                 w.state_bytes().unwrap_or_else(|e| {
                     eprintln!(
@@ -287,12 +358,352 @@ impl Drop for WorkerPool {
     }
 }
 
-struct WorkerState {
-    adapters: BTreeMap<(usize, String), SiteAdapter>,
+/// Fully-qualified adapter key. The tenant is `""` for in-process pools
+/// and for v1 wire clients; TCP connections that declared a tenant
+/// (wire-v2 `Hello`) get their own namespace, so several trainers can
+/// share one daemon without clobbering each other's adapters.
+pub type TenantKey = (String, usize, String);
+
+fn key_label(key: &TenantKey) -> String {
+    if key.0.is_empty() {
+        format!("({}, {})", key.1, key.2)
+    } else {
+        format!("(tenant {}, user {}, site {})", key.0, key.1, key.2)
+    }
+}
+
+/// Lock that survives a poisoned mutex: a panicking connection thread
+/// must not take the whole daemon down with cascading lock panics.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[derive(Default)]
+struct AdapterTable {
+    map: BTreeMap<TenantKey, SiteAdapter>,
+    /// keys currently checked out by an in-flight fit
+    busy: BTreeSet<TenantKey>,
+}
+
+/// The shared compute core behind every transport: the adapter +
+/// optimizer state of the users assigned to one "low-cost device", and
+/// the fit/step math that serves a `FitJob`.
+///
+/// The table is mutex-protected but fits do NOT hold the lock while
+/// computing: an adapter is *checked out* (removed, marked busy),
+/// fitted lock-free, then checked back in. Fits for different
+/// `(tenant, user, site)` keys therefore run genuinely concurrently —
+/// across daemon connections and inside one [`WorkerCore::fit_batch`]
+/// fan-out — while a concurrent fit for the *same* key surfaces as a
+/// "busy" error instead of a deadlock or a silent double-step.
+pub struct WorkerCore {
+    id: usize,
     target: OffloadTarget,
-    pjrt: Option<Device>,
     manifest: Arc<Manifest>,
     transfer: Option<TransferModel>,
+    adapters: Mutex<AdapterTable>,
+    /// the PJRT "low-end GPU" device, spawned lazily on first use
+    pjrt: Mutex<Option<Device>>,
+}
+
+impl WorkerCore {
+    pub fn new(
+        id: usize,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+    ) -> WorkerCore {
+        WorkerCore {
+            id,
+            target,
+            manifest,
+            transfer,
+            adapters: Mutex::new(AdapterTable::default()),
+            pjrt: Mutex::new(None),
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Install (or replace) the adapter for a key. Rejected while a fit
+    /// for the same key is in flight — the fit's check-in would clobber
+    /// the fresh registration.
+    pub fn register(
+        &self,
+        tenant: &str,
+        user: usize,
+        site: &str,
+        adapter: SiteAdapter,
+    ) -> Result<()> {
+        let key = (tenant.to_string(), user, site.to_string());
+        let mut tab = lock(&self.adapters);
+        if tab.busy.contains(&key) {
+            bail!(
+                "worker {}: cannot register {} while a fit for it is in flight",
+                self.id,
+                key_label(&key)
+            );
+        }
+        tab.map.insert(key, adapter);
+        Ok(())
+    }
+
+    pub fn snapshot(&self, tenant: &str, user: usize, site: &str) -> Result<AdapterParams> {
+        let key = (tenant.to_string(), user, site.to_string());
+        let tab = lock(&self.adapters);
+        if tab.busy.contains(&key) {
+            bail!("worker {}: adapter {} is busy (fit in flight)", self.id, key_label(&key));
+        }
+        tab.map
+            .get(&key)
+            .map(|a| a.params.clone())
+            .ok_or_else(|| anyhow!("worker {}: no adapter {}", self.id, key_label(&key)))
+    }
+
+    /// Bytes of resident adapter + optimizer state, across all tenants.
+    /// Best-effort during concurrent fits: a checked-out adapter is not
+    /// counted until it checks back in.
+    pub fn state_bytes(&self) -> usize {
+        lock(&self.adapters)
+            .map
+            .values()
+            .map(|a| a.params.bytes() + a.opt.bytes())
+            .sum()
+    }
+
+    fn checkout(&self, key: &TenantKey) -> Result<SiteAdapter> {
+        let mut tab = lock(&self.adapters);
+        match tab.map.remove(key) {
+            Some(a) => {
+                tab.busy.insert(key.clone());
+                Ok(a)
+            }
+            None if tab.busy.contains(key) => Err(anyhow!(
+                "worker {}: adapter {} is busy (another fit for the same \
+                 (user, site) is in flight)",
+                self.id,
+                key_label(key)
+            )),
+            None => Err(anyhow!("worker {}: no adapter {}", self.id, key_label(key))),
+        }
+    }
+
+    fn checkin(&self, key: TenantKey, adapter: SiteAdapter) {
+        let mut tab = lock(&self.adapters);
+        tab.busy.remove(&key);
+        tab.map.insert(key, adapter);
+    }
+
+    /// Serve one buffered-interval fit.
+    pub fn fit(&self, tenant: &str, job: FitJob) -> Result<FitResult> {
+        let key = (tenant.to_string(), job.user, job.site.clone());
+        let mut adapter = self.checkout(&key)?;
+        let r = self.fit_checked_out(&mut adapter, &job);
+        // check back in on BOTH paths: an error reply must not eat the
+        // adapter (the old code dropped it, turning one failed fit into
+        // "no adapter" for the rest of the run)
+        self.checkin(key, adapter);
+        r
+    }
+
+    /// Serve a whole batch, fanning independent jobs out across the
+    /// shared tensor-pool core budget. Results come back in job order
+    /// and each job's numerics are identical to a serial [`Self::fit`]
+    /// call, so batching can never move a loss curve. One failing job
+    /// is that job's `Err` — it does not poison the rest of the batch.
+    pub fn fit_batch(&self, tenant: &str, jobs: Vec<FitJob>) -> Vec<Result<FitResult>> {
+        if jobs.len() <= 1 || self.target == OffloadTarget::PjrtDevice {
+            // one job, or one PJRT device behind every fit: serial
+            return jobs.into_iter().map(|j| self.fit(tenant, j)).collect();
+        }
+        let n = jobs.len();
+        // Check every adapter out up front so a duplicate (user, site)
+        // inside one batch becomes that job's error instead of a
+        // deadlock, then compute lock-free in parallel.
+        let cells: Vec<Mutex<Option<(TenantKey, Result<(FitJob, SiteAdapter)>)>>> = jobs
+            .into_iter()
+            .map(|job| {
+                let key = (tenant.to_string(), job.user, job.site.clone());
+                let r = self.checkout(&key).map(|a| (job, a));
+                Mutex::new(Some((key, r)))
+            })
+            .collect();
+        let fitted = tensor::pool::parallel_map(n, |i| {
+            let (key, taken) = lock(&cells[i]).take().expect("each cell is taken once");
+            match taken {
+                Err(e) => (Err(e), None),
+                Ok((job, mut adapter)) => {
+                    let r = self.fit_checked_out(&mut adapter, &job);
+                    (r, Some((key, adapter)))
+                }
+            }
+        });
+        let mut results = Vec::with_capacity(n);
+        for (r, checked_out) in fitted {
+            if let Some((key, adapter)) = checked_out {
+                self.checkin(key, adapter);
+            }
+            results.push(r);
+        }
+        results
+    }
+
+    /// Everything between checkout and checkin: transfer simulation,
+    /// shape validation, gradient compute, optimizer step, and reply
+    /// assembly.
+    fn fit_checked_out(&self, adapter: &mut SiteAdapter, job: &FitJob) -> Result<FitResult> {
+        let bytes_in = job.x.bytes() + job.ghat.bytes();
+        let t_transfer = Instant::now();
+        if let Some(tm) = &self.transfer {
+            tm.apply(bytes_in);
+        }
+        let transfer_in = t_transfer.elapsed();
+
+        // a malformed job (wire corruption, mismatched registration) must
+        // surface as this job's error, not a kernel assert that kills the
+        // serving thread
+        check_job_shapes(&adapter.params, job)?;
+
+        let old = if job.merged { Some(adapter.params.clone()) } else { None };
+
+        let t0 = Instant::now();
+        let mut grads = match self.target {
+            OffloadTarget::NativeCpu => adapter.params.fit_grads(&job.x, &job.ghat),
+            OffloadTarget::PjrtDevice => self.pjrt_fit_grads(&adapter.params, job)?,
+        };
+        for g in &mut grads {
+            tensor::scale_mut(g, job.grad_scale);
+        }
+        adapter.step(&grads);
+        let compute = t0.elapsed();
+
+        let (new_params, delta_diff, bytes_out) = if job.merged {
+            let old = old.as_ref().ok_or_else(|| {
+                anyhow!("worker {}: merged fit for (user {}, site {}) lost its \
+                         pre-step snapshot", self.id, job.user, job.site)
+            })?;
+            let diff = merge::delta_diff(old, &adapter.params)?;
+            let b = diff.bytes();
+            (None, Some(diff), b)
+        } else {
+            let ps: Vec<Tensor> =
+                adapter.params.tensors().iter().map(|t| (*t).clone()).collect();
+            let b: usize = ps.iter().map(|t| t.bytes()).sum();
+            (Some(ps), None, b)
+        };
+
+        let t1 = Instant::now();
+        if let Some(tm) = &self.transfer {
+            tm.apply(bytes_out);
+        }
+        let transfer = transfer_in + t1.elapsed();
+
+        Ok(FitResult {
+            user: job.user,
+            site: job.site.clone(),
+            new_params,
+            delta_diff,
+            compute,
+            transfer,
+            bytes_in,
+            bytes_out,
+        })
+    }
+
+    /// The "offload to low-end GPU" arm: run the fit artifact on the
+    /// worker's own execution device (PJRT under `--features xla`, the
+    /// native executor otherwise — the two are asserted equivalent in
+    /// `rust/tests/`). Artifact name encodes (kind, dims, rows); the
+    /// buffer is padded with zero rows up to the lowered row count (zero
+    /// rows are gradient-neutral — tested in python/tests).
+    fn pjrt_fit_grads(&self, params: &AdapterParams, job: &FitJob) -> Result<Vec<Tensor>> {
+        let mut dev_guard = lock(&self.pjrt);
+        if dev_guard.is_none() {
+            *dev_guard = Some(Device::spawn("worker-pjrt", self.manifest.clone())?);
+        }
+        let dev = dev_guard.as_ref().ok_or_else(|| {
+            anyhow!("worker pjrt device unavailable for (user {}, site {})",
+                    job.user, job.site)
+        })?;
+        let (n, d_in) = job.x.dims2();
+        let d_out = job.ghat.dims2().1;
+        let kind = params.kind().name();
+        // find a lowered fit artifact with enough rows
+        let best = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|name| {
+                let prefix = format!("fit_{kind}_{d_in}x{d_out}_n");
+                name.strip_prefix(&prefix)
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .filter(|&rows| rows >= n)
+                    .map(|rows| (rows, name.clone()))
+            })
+            .min()
+            .ok_or_else(|| anyhow!("no fit artifact fit_{kind}_{d_in}x{d_out}_n>={n}"))?;
+        let (rows, artifact) = best;
+
+        let pad = |t: &Tensor| -> Tensor {
+            let (tn, td) = t.dims2();
+            let mut data = t.data().to_vec();
+            data.resize(rows * td, 0.0);
+            let _ = tn;
+            Tensor::new(vec![rows, td], data)
+        };
+        let mut inputs = vec![Input::Val(pad(&job.x).into()), Input::Val(pad(&job.ghat).into())];
+        for t in params.tensors() {
+            inputs.push(Input::Val(t.clone().into()));
+        }
+        let n_out = params.tensors().len();
+        let plan = OutputPlan { keep: vec![], fetch: (0..n_out).collect() };
+        let res = dev.execute(&artifact, inputs, plan)?;
+        let mut grads = Vec::with_capacity(n_out);
+        for (_, v) in res.fetched {
+            let t = match v {
+                Value::F32(t) => t,
+                _ => anyhow::bail!("fit artifact returned non-f32"),
+            };
+            grads.push(t);
+        }
+        // bias grads come back as (1, d) from the kernels; flatten to (d,)
+        for (g, p) in grads.iter_mut().zip(params.tensors()) {
+            if g.shape().len() == 2 && p.shape().len() == 1 {
+                *g = g.clone().reshape(&[p.shape()[0]]);
+            }
+        }
+        Ok(grads)
+    }
+}
+
+/// Reject a job whose buffers cannot feed this adapter's contractions —
+/// the kernels `assert!` on shape mismatch, and a panic on a serving
+/// thread is the one failure mode the multi-connection daemon must not
+/// have.
+fn check_job_shapes(params: &AdapterParams, job: &FitJob) -> Result<()> {
+    if job.x.shape().len() != 2 || job.ghat.shape().len() != 2 {
+        bail!(
+            "fit job for (user {}, site {}): x rank {} / ghat rank {} (want 2)",
+            job.user, job.site, job.x.shape().len(), job.ghat.shape().len()
+        );
+    }
+    let (xn, xd) = job.x.dims2();
+    let (gn, gd) = job.ghat.dims2();
+    let (d_in, d_out) = match params {
+        AdapterParams::LowRank { a, b } => (a.shape()[0], b.shape()[1]),
+        AdapterParams::Linear { w } => (w.shape()[0], w.shape()[1]),
+        AdapterParams::Mlp { w1, w2, .. } => (w1.shape()[0], w2.shape()[1]),
+    };
+    if xn != gn || xd != d_in || gd != d_out {
+        bail!(
+            "fit job for (user {}, site {}): x ({xn}, {xd}) / ghat ({gn}, {gd}) \
+             do not match adapter dims ({d_in} -> {d_out})",
+            job.user, job.site
+        );
+    }
+    Ok(())
 }
 
 fn worker_main(
@@ -302,168 +713,27 @@ fn worker_main(
     manifest: Arc<Manifest>,
     transfer: Option<TransferModel>,
 ) {
-    // the PJRT "low-end GPU" device is spawned lazily on first use
-    let mut st = WorkerState {
-        adapters: BTreeMap::new(),
-        target,
-        pjrt: None,
-        manifest,
-        transfer,
-    };
+    // a local pool is single-tenant: every key lives under tenant ""
+    let core = WorkerCore::new(id, target, manifest, transfer);
     while let Ok(cmd) = rx.recv() {
         match cmd {
             WorkerCmd::Register { user, site, adapter } => {
-                st.adapters.insert((user, site), adapter);
+                // the one-command-at-a-time channel protocol rules out the
+                // only register failure mode (a concurrent fit on the key)
+                let _ = core.register("", user, &site, adapter);
             }
             WorkerCmd::Fit(job, reply) => {
-                let _ = reply.send(run_fit(&mut st, id, job));
+                let _ = reply.send(core.fit("", job));
             }
             WorkerCmd::Snapshot { user, site, reply } => {
-                let r = st
-                    .adapters
-                    .get(&(user, site.clone()))
-                    .map(|a| a.params.clone())
-                    .ok_or_else(|| anyhow!("worker {id}: no adapter ({user}, {site})"));
-                let _ = reply.send(r);
+                let _ = reply.send(core.snapshot("", user, &site));
             }
             WorkerCmd::StateBytes(reply) => {
-                let bytes = st
-                    .adapters
-                    .values()
-                    .map(|a| a.params.bytes() + a.opt.bytes())
-                    .sum();
-                let _ = reply.send(bytes);
+                let _ = reply.send(core.state_bytes());
             }
             WorkerCmd::Shutdown => break,
         }
     }
-}
-
-fn run_fit(st: &mut WorkerState, id: usize, job: FitJob) -> Result<FitResult> {
-    let bytes_in = job.x.bytes() + job.ghat.bytes();
-    let t_transfer = Instant::now();
-    if let Some(tm) = &st.transfer {
-        tm.apply(bytes_in);
-    }
-    let transfer_in = t_transfer.elapsed();
-
-    let key = (job.user, job.site.clone());
-    // take ownership for the duration of the fit (avoids double borrows
-    // of st when the PJRT path needs &mut st.pjrt)
-    let mut adapter = st
-        .adapters
-        .remove(&key)
-        .ok_or_else(|| anyhow!("worker {id}: no adapter for ({}, {})", job.user, job.site))?;
-
-    let old = if job.merged { Some(adapter.params.clone()) } else { None };
-
-    let t0 = Instant::now();
-    let mut grads = match st.target {
-        OffloadTarget::NativeCpu => adapter.params.fit_grads(&job.x, &job.ghat),
-        OffloadTarget::PjrtDevice => pjrt_fit_grads(st, &adapter.params, &job)?,
-    };
-    for g in &mut grads {
-        tensor::scale_mut(g, job.grad_scale);
-    }
-    adapter.step(&grads);
-    let compute = t0.elapsed();
-
-    let (new_params, delta_diff, bytes_out) = if job.merged {
-        let old = old.as_ref().ok_or_else(|| {
-            anyhow!("worker {id}: merged fit for (user {}, site {}) lost its \
-                     pre-step snapshot", job.user, job.site)
-        })?;
-        let diff = merge::delta_diff(old, &adapter.params)?;
-        let b = diff.bytes();
-        (None, Some(diff), b)
-    } else {
-        let ps: Vec<Tensor> = adapter.params.tensors().iter().map(|t| (*t).clone()).collect();
-        let b: usize = ps.iter().map(|t| t.bytes()).sum();
-        (Some(ps), None, b)
-    };
-
-    let t1 = Instant::now();
-    if let Some(tm) = &st.transfer {
-        tm.apply(bytes_out);
-    }
-    let transfer = transfer_in + t1.elapsed();
-
-    st.adapters.insert(key, adapter);
-    Ok(FitResult {
-        user: job.user,
-        site: job.site,
-        new_params,
-        delta_diff,
-        compute,
-        transfer,
-        bytes_in,
-        bytes_out,
-    })
-}
-
-/// The "offload to low-end GPU" arm: run the fit artifact on the
-/// worker's own execution device (PJRT under `--features xla`, the
-/// native executor otherwise — the two are asserted equivalent in
-/// `rust/tests/`). Artifact name encodes (kind, dims, rows); the buffer
-/// is padded with zero rows up to the lowered row count (zero rows are
-/// gradient-neutral — tested in python/tests).
-fn pjrt_fit_grads(st: &mut WorkerState, params: &AdapterParams, job: &FitJob)
-                  -> Result<Vec<Tensor>> {
-    if st.pjrt.is_none() {
-        st.pjrt = Some(Device::spawn("worker-pjrt", st.manifest.clone())?);
-    }
-    let dev = st.pjrt.as_ref().ok_or_else(|| {
-        anyhow!("worker pjrt device unavailable for (user {}, site {})",
-                job.user, job.site)
-    })?;
-    let (n, d_in) = job.x.dims2();
-    let d_out = job.ghat.dims2().1;
-    let kind = params.kind().name();
-    // find a lowered fit artifact with enough rows
-    let best = st
-        .manifest
-        .artifacts
-        .keys()
-        .filter_map(|name| {
-            let prefix = format!("fit_{kind}_{d_in}x{d_out}_n");
-            name.strip_prefix(&prefix)
-                .and_then(|s| s.parse::<usize>().ok())
-                .filter(|&rows| rows >= n)
-                .map(|rows| (rows, name.clone()))
-        })
-        .min()
-        .ok_or_else(|| anyhow!("no fit artifact fit_{kind}_{d_in}x{d_out}_n>={n}"))?;
-    let (rows, artifact) = best;
-
-    let pad = |t: &Tensor| -> Tensor {
-        let (tn, td) = t.dims2();
-        let mut data = t.data().to_vec();
-        data.resize(rows * td, 0.0);
-        let _ = tn;
-        Tensor::new(vec![rows, td], data)
-    };
-    let mut inputs = vec![Input::Val(pad(&job.x).into()), Input::Val(pad(&job.ghat).into())];
-    for t in params.tensors() {
-        inputs.push(Input::Val(t.clone().into()));
-    }
-    let n_out = params.tensors().len();
-    let plan = OutputPlan { keep: vec![], fetch: (0..n_out).collect() };
-    let res = dev.execute(&artifact, inputs, plan)?;
-    let mut grads = Vec::with_capacity(n_out);
-    for (_, v) in res.fetched {
-        let t = match v {
-            Value::F32(t) => t,
-            _ => anyhow::bail!("fit artifact returned non-f32"),
-        };
-        grads.push(t);
-    }
-    // bias grads come back as (1, d) from the kernels; flatten to (d,)
-    for (g, p) in grads.iter_mut().zip(params.tensors()) {
-        if g.shape().len() == 2 && p.shape().len() == 1 {
-            *g = g.clone().reshape(&[p.shape()[0]]);
-        }
-    }
-    Ok(grads)
 }
 
 #[cfg(test)]
@@ -491,5 +761,118 @@ mod tests {
         ));
         let err = WorkerPool::spawn(0, OffloadTarget::NativeCpu, m, None).unwrap_err();
         assert!(format!("{err}").contains("at least one worker"), "{err}");
+    }
+
+    fn manifest() -> Arc<crate::runtime::Manifest> {
+        Arc::new(crate::runtime::native::builtin::builtin_manifest(
+            std::path::Path::new("artifacts"),
+        ))
+    }
+
+    fn lowrank_adapter(seed: u64) -> SiteAdapter {
+        use crate::adapters::OptimizerCfg;
+        let mut rng = crate::rng::Rng::new(seed);
+        let params =
+            AdapterParams::init(crate::config::AdapterKind::LowRank, 6, 4, 3, 5, &mut rng);
+        SiteAdapter::new("s", params, &OptimizerCfg::sgd(0.1, 0.0))
+    }
+
+    fn job_for(user: usize, site: &str, rows: usize) -> FitJob {
+        FitJob {
+            user,
+            site: site.to_string(),
+            x: Tensor::from_fn(&[rows, 6], |i| (i as f32).sin()),
+            ghat: Tensor::from_fn(&[rows, 4], |i| (i as f32).cos()),
+            grad_scale: 1.0,
+            merged: false,
+        }
+    }
+
+    /// Pin the sharding contract: user u maps to worker u % len, and the
+    /// mapping is what `for_user` dispatches on.
+    #[test]
+    fn for_user_sharding_is_user_mod_len() {
+        let pool = WorkerPool::spawn(3, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        assert_eq!(pool.len(), 3);
+        for user in 0..9 {
+            assert_eq!(pool.shard_of(user), user % 3);
+            assert_eq!(pool.for_user(user).id(), user % 3);
+            assert_eq!(pool.worker(user % 3).id(), user % 3);
+        }
+    }
+
+    #[test]
+    fn pool_size_change_rejected_against_existing_state() {
+        let pool = WorkerPool::spawn(2, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        pool.verify_shard_count(2).unwrap();
+        for wrong in [1, 3] {
+            let err = pool.verify_shard_count(wrong).unwrap_err();
+            assert!(format!("{err}").contains("reshuffle"), "{err}");
+        }
+    }
+
+    #[test]
+    fn core_batch_matches_serial_fits_bitwise() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        let serial = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        for user in 0..4 {
+            core.register("", user, "s", lowrank_adapter(7 + user as u64)).unwrap();
+            serial.register("", user, "s", lowrank_adapter(7 + user as u64)).unwrap();
+        }
+        let batch: Vec<FitJob> = (0..4).map(|u| job_for(u, "s", 5)).collect();
+        let rs = core.fit_batch("", batch);
+        for (u, r) in rs.into_iter().enumerate() {
+            let r = r.unwrap();
+            assert_eq!(r.user, u);
+            let s = serial.fit("", job_for(u, "s", 5)).unwrap();
+            let a = r.new_params.unwrap();
+            let b = s.new_params.unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x, y, "batched fit diverged from serial fit for user {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn core_duplicate_key_in_batch_is_per_job_error_not_deadlock() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        core.register("", 0, "s", lowrank_adapter(1)).unwrap();
+        let rs = core.fit_batch("", vec![job_for(0, "s", 3), job_for(0, "s", 3)]);
+        assert_eq!(rs.len(), 2);
+        assert!(rs[0].is_ok());
+        let err = format!("{:#}", rs[1].as_ref().unwrap_err());
+        assert!(err.contains("busy"), "{err}");
+        // the adapter checked back in: a later fit works again
+        core.fit("", job_for(0, "s", 3)).unwrap();
+    }
+
+    #[test]
+    fn core_tenants_are_isolated() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        core.register("a", 0, "s", lowrank_adapter(1)).unwrap();
+        core.register("b", 0, "s", lowrank_adapter(2)).unwrap();
+        // fitting tenant a's adapter must not move tenant b's
+        let before_b = core.snapshot("b", 0, "s").unwrap();
+        core.fit("a", job_for(0, "s", 4)).unwrap();
+        let after_b = core.snapshot("b", 0, "s").unwrap();
+        for (x, y) in before_b.tensors().into_iter().zip(after_b.tensors()) {
+            assert_eq!(x, y, "tenant b's adapter moved when tenant a trained");
+        }
+        // and the default tenant has no such adapter at all
+        let err = core.snapshot("", 0, "s").unwrap_err();
+        assert!(format!("{err}").contains("no adapter"), "{err}");
+    }
+
+    #[test]
+    fn core_shape_mismatch_is_error_not_panic() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        core.register("", 0, "s", lowrank_adapter(1)).unwrap();
+        let mut bad = job_for(0, "s", 3);
+        bad.ghat = Tensor::zeros(&[3, 9]); // adapter d_out is 4
+        let err = core.fit("", bad).unwrap_err();
+        assert!(format!("{err}").contains("do not match adapter dims"), "{err}");
+        // the adapter survived the rejected job
+        core.fit("", job_for(0, "s", 3)).unwrap();
     }
 }

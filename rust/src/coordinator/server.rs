@@ -32,6 +32,7 @@ use crate::merge;
 use crate::metrics::{Curve, Timings};
 use crate::runtime::{Input, Runtime, Value};
 use crate::tensor::{self, Tensor};
+use crate::transport::tcp::TcpLinkOpts;
 use crate::transport::Transport;
 
 /// Summary of a finished run (consumed by benches/examples).
@@ -177,7 +178,15 @@ impl Trainer {
             // remote daemons pick their own offload target (`cola worker
             // --offload`); determinism holds either way because both
             // targets implement the same Eq. 6 update bit-exactly
-            TransportKind::Tcp => WorkerPool::connect_tcp(&self.cfg.worker_addrs)?,
+            TransportKind::Tcp => WorkerPool::connect_tcp(
+                &self.cfg.worker_addrs,
+                &TcpLinkOpts {
+                    tenant: self.cfg.offload_tenant.clone(),
+                    batch: self.cfg.offload_batch,
+                    inflight: self.cfg.offload_inflight,
+                    ..TcpLinkOpts::default()
+                },
+            )?,
         };
         let rank = self.rt.manifest.rank;
         let hidden = self.rt.manifest.mlp_hidden;
@@ -463,14 +472,36 @@ impl Trainer {
                 anyhow!("adaptation buffers are non-empty but no worker pool \
                          exists (coupled methods never buffer)")
             })?;
-            for (user, site, x, ghat, grad_scale) in jobs {
-                let rx = pool.for_user(user).fit(FitJob {
-                    user,
-                    site: site.clone(),
-                    x,
-                    ghat,
-                    grad_scale,
-                    merged,
+            // Group the interval's jobs per worker so batching transports
+            // ship one FitBatch frame per worker instead of one round-trip
+            // per job — but KEEP the buffers' drain order for the pending
+            // list. Replies are applied in pending order, and merged-mode
+            // delta adds are float sums whose order is part of the
+            // determinism contract; grouping must never reorder applies.
+            let n = jobs.len();
+            let mut meta: Vec<(usize, String)> = Vec::with_capacity(n);
+            let mut per_worker: BTreeMap<usize, (Vec<usize>, Vec<FitJob>)> =
+                BTreeMap::new();
+            for (i, (user, site, x, ghat, grad_scale)) in jobs.into_iter().enumerate()
+            {
+                meta.push((user, site.clone()));
+                let slot = per_worker.entry(pool.shard_of(user)).or_default();
+                slot.0.push(i);
+                slot.1.push(FitJob { user, site, x, ghat, grad_scale, merged });
+            }
+            let mut slots: Vec<Option<std::sync::mpsc::Receiver<Result<FitResult>>>> =
+                (0..n).map(|_| None).collect();
+            for (w, (idxs, batch)) in per_worker {
+                self.timings.round_trips += pool.worker(w).fit_frames(batch.len());
+                let rxs = pool.worker(w).fit_many(batch)?;
+                for (i, rx) in idxs.into_iter().zip(rxs) {
+                    slots[i] = Some(rx);
+                }
+            }
+            for ((user, site), rx) in meta.into_iter().zip(slots) {
+                let rx = rx.ok_or_else(|| {
+                    anyhow!("fit dispatch returned no reply channel for user \
+                             {user} site {site}")
                 })?;
                 self.pending.push(PendingFit { user, site, rx });
             }

@@ -45,8 +45,12 @@ fn print_help() {
                     --mode merged|unmerged --interval I --steps N --users K\n\
                     --offload cpu|gpu --dataset <name> --seed S\n\
                     --offload_transport local|tcp --worker_addrs host:port,...\n\
+                    --offload_tenant <name> (namespace on a shared daemon)\n\
+                    --offload_batch true|false (one FitBatch frame per interval)\n\
+                    --offload_inflight N (pipelined FitBatch frames, default 1)\n\
                     --loss_out <file.json> (write loss/acc curves for diffing)\n\
-           worker   gradient-offload worker daemon (distributed mode)\n\
+           worker   gradient-offload worker daemon (distributed mode);\n\
+                    serves any number of concurrent trainer connections\n\
                     --listen 127.0.0.1:0 --offload cpu|gpu --threads N\n\
                     --simulate_link cpu|gpu (add a modeled link delay)\n\
                     --stop host:port (clean-shutdown a running daemon)\n\
@@ -115,6 +119,9 @@ fn curves_json(report: &RunReport) -> String {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // every train option takes a value; a bare `--offload_batch` would
+    // otherwise parse as a flag and be silently dropped
+    args.require_no_flags("train")?;
     let cfg = config_from_args(args)?;
     println!("config: {cfg:?}");
     let mut trainer = Trainer::new(cfg).context("building trainer")?;
@@ -149,9 +156,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
                    (listen|offload|threads|simulate_link|artifacts_dir|stop)");
         }
     }
-    if let Some(f) = args.flags.first() {
-        bail!("worker options take values: --{f} <value>");
-    }
+    args.require_no_flags("worker")?;
     if let Some(addr) = args.get("stop") {
         request_daemon_shutdown(addr)?;
         println!("worker at {addr}: shutdown acknowledged");

@@ -92,6 +92,10 @@ pub struct Timings {
     pub bytes_offloaded: u64,
     /// bytes shipped workers -> server (adapter updates / deltas)
     pub bytes_returned: u64,
+    /// request/reply wire exchanges spent dispatching fits — the
+    /// quantity FitBatch batching collapses (one frame per worker per
+    /// interval instead of one per job); see EXPERIMENTS.md
+    pub round_trips: u64,
 }
 
 impl Timings {
@@ -104,7 +108,7 @@ impl Timings {
 
     pub fn report(&self) -> String {
         format!(
-            "steps {} | compile {:.1}s once | base {:.4}s/step | transfer {:.4}s/step | worker {:.4}s/step | merge {:.4}s/step | offloaded {:.1} MiB | returned {:.1} MiB",
+            "steps {} | compile {:.1}s once | base {:.4}s/step | transfer {:.4}s/step | worker {:.4}s/step | merge {:.4}s/step | offloaded {:.1} MiB | returned {:.1} MiB | fit round-trips {}",
             self.steps,
             self.compile.as_secs_f64(),
             self.per_step(self.fwdbwd),
@@ -113,6 +117,7 @@ impl Timings {
             self.per_step(self.merge),
             self.bytes_offloaded as f64 / (1024.0 * 1024.0),
             self.bytes_returned as f64 / (1024.0 * 1024.0),
+            self.round_trips,
         )
     }
 }

@@ -19,9 +19,12 @@
 //! Determinism contract: a worker daemon runs the same bit-identical
 //! native kernels as an in-process worker, and [`wire`] round-trips
 //! every f32 by bit pattern — so the same config trains to byte-equal
-//! loss curves regardless of transport. CI enforces this on every PR
-//! (the `distributed-smoke` job), and
-//! `rust/tests/transport_tcp.rs` mirrors it as an integration test.
+//! loss curves regardless of transport, including batched + pipelined
+//! TCP (`offload_batch` / `offload_inflight`, which change framing and
+//! scheduling but never numerics or apply order). CI enforces this on
+//! every PR (the `distributed-smoke` job), and
+//! `rust/tests/transport_tcp.rs` + `rust/tests/transport_multi.rs`
+//! mirror it as integration tests.
 
 pub mod tcp;
 pub mod wire;
@@ -51,6 +54,26 @@ pub trait Transport: Send {
     /// Dispatch one buffered-interval fit. The returned channel yields
     /// exactly one reply; a dropped channel means the worker link died.
     fn fit(&self, job: FitJob) -> Result<Receiver<Result<FitResult>>>;
+
+    /// Dispatch a whole interval's jobs for this worker, returning one
+    /// reply channel per job **in job order**. The default is N
+    /// independent [`Transport::fit`] round-trips; transports that can
+    /// batch on the wire ([`tcp::TcpWorker`] with `offload_batch`)
+    /// override it to ship `FitBatch` frames instead. Results are
+    /// bit-identical either way — batching only changes framing, never
+    /// numerics — which is what lets the determinism contract span all
+    /// three dispatch shapes (local, tcp, tcp-batched).
+    fn fit_many(&self, jobs: Vec<FitJob>) -> Result<Vec<Receiver<Result<FitResult>>>> {
+        jobs.into_iter().map(|j| self.fit(j)).collect()
+    }
+
+    /// How many request/reply wire exchanges [`Transport::fit_many`]
+    /// costs for `n_jobs` jobs — the round-trips/interval ledger
+    /// (`Timings::round_trips`, EXPERIMENTS.md). In-process transports
+    /// count one exchange per job.
+    fn fit_frames(&self, n_jobs: usize) -> u64 {
+        n_jobs as u64
+    }
 
     /// Fetch a copy of an adapter's parameters.
     fn snapshot(&self, user: usize, site: &str) -> Result<AdapterParams>;

@@ -3,26 +3,40 @@
 //! socket.
 //!
 //! Topology: each [`TcpWorker`] owns one connection to one daemon and
-//! serializes requests over it (mirroring the one-command-at-a-time
-//! local worker thread). The daemon hosts a single long-lived local
-//! [`Worker`] — adapter and optimizer state live for the daemon's
-//! lifetime, *not* the connection's, so a dropped link is survivable:
-//! the client reconnects with exponential backoff and the registered
-//! state is still there.
+//! serializes requests over it. The daemon is **multi-tenant**: it
+//! accepts any number of concurrent connections (one serving thread
+//! each) over one shared [`WorkerCore`], so several `cola train`
+//! processes — or several pool slots of one process — can lease the
+//! same low-cost device. A connection may declare a tenant namespace
+//! with the wire-v2 `Hello` handshake; adapters are keyed by
+//! `(tenant, user, site)`, so tenants never clobber each other's
+//! optimizer state. v1 clients never send `Hello` and land in the
+//! default `""` namespace.
+//!
+//! Batching + pipelining: with `offload_batch = true` the client ships
+//! a whole interval's jobs as sequence-numbered `FitBatch` frames —
+//! `offload_inflight` frames per flush (default 1 = one frame per
+//! interval; 2+ splits the flush so a later chunk is on the wire while
+//! the earlier one computes). The daemon fans each batch across the
+//! shared tensor-pool budget and replies per job, so one failing job
+//! names its (user, site) without poisoning the batch. Framing and
+//! scheduling change; numerics and apply order do not — loss curves
+//! stay byte-identical to the unbatched run.
 //!
 //! Failure semantics: a request that dies mid-flight is **not**
-//! replayed — a `Fit` may already have stepped the remote optimizer,
-//! and replaying would double-apply it, silently breaking the
-//! determinism guarantee. The error surfaces (naming the worker and,
-//! for fits, the user/site), and the *next* request reconnects.
+//! replayed — a `Fit`/`FitBatch` may already have stepped the remote
+//! optimizer, and replaying would double-apply it, silently breaking
+//! the determinism guarantee. The error surfaces (naming the worker
+//! and, for fits, every lost (user, site)), and the *next* request
+//! reconnects (re-declaring the tenant).
 //!
 //! Shutdown: closing a connection leaves the daemon running; the clean
 //! shutdown handshake ([`request_daemon_shutdown`], or `cola worker
-//! --stop <addr>`) makes it ack with `ShutdownOk` and exit. The daemon
-//! serves one connection at a time, so finish (or drop) the training
-//! run before requesting shutdown.
+//! --stop <addr>`) stops the accept loop and exits. Connections still
+//! open at that point drain until their peers disconnect.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -30,11 +44,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::wire::{self, Msg};
+use super::wire::{self, BatchItem, Msg};
 use super::Transport;
 use crate::adapters::{AdapterParams, SiteAdapter};
 use crate::config::OffloadTarget;
-use crate::coordinator::offload::{FitJob, FitResult, TransferModel, Worker};
+use crate::coordinator::offload::{FitJob, FitResult, TransferModel, WorkerCore};
 use crate::runtime::Manifest;
 
 /// Default connection attempts before giving up (first contact).
@@ -44,6 +58,34 @@ pub const BASE_BACKOFF: Duration = Duration::from_millis(50);
 /// How long the connect-time liveness probe waits for the daemon to
 /// answer before declaring the link dead-on-arrival.
 pub const PROBE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Everything a [`TcpWorker`] link is built with beyond its address:
+/// the reconnect schedule, the tenant namespace, and the FitBatch /
+/// in-flight-window knobs (`offload_batch` / `offload_inflight`).
+#[derive(Clone, Debug)]
+pub struct TcpLinkOpts {
+    pub attempts: u32,
+    pub base: Duration,
+    /// tenant namespace declared on every (re)connect; `""` = the v1
+    /// default namespace, declared by not sending `Hello` at all
+    pub tenant: String,
+    /// ship intervals as `FitBatch` frames instead of per-job `Fit`
+    pub batch: bool,
+    /// max `FitBatch` frames in flight per interval flush (>= 1)
+    pub inflight: usize,
+}
+
+impl Default for TcpLinkOpts {
+    fn default() -> Self {
+        TcpLinkOpts {
+            attempts: CONNECT_ATTEMPTS,
+            base: BASE_BACKOFF,
+            tenant: String::new(),
+            batch: false,
+            inflight: 1,
+        }
+    }
+}
 
 /// Connect with exponential backoff — `attempts` tries, sleeping
 /// `base * 2^k` (capped at 2 s) between them. Lets a server start
@@ -80,6 +122,8 @@ pub fn connect_with_backoff(addr: &str, attempts: u32, base: Duration) -> Result
 enum ClientCmd {
     Register { user: usize, site: String, adapter: SiteAdapter, reply: Sender<Result<()>> },
     Fit(FitJob, Sender<Result<FitResult>>),
+    /// one interval's jobs, shipped as pipelined `FitBatch` frames
+    FitBatch(Vec<(FitJob, Sender<Result<FitResult>>)>),
     Snapshot { user: usize, site: String, reply: Sender<Result<AdapterParams>> },
     StateBytes(Sender<Result<usize>>),
     Disconnect,
@@ -92,31 +136,48 @@ pub struct TcpWorker {
     tx: Sender<ClientCmd>,
     id: usize,
     addr: String,
+    batch: bool,
+    inflight: usize,
 }
 
 impl TcpWorker {
-    /// Connect with the default backoff schedule.
+    /// Connect with the default options (v1-compatible: no tenant, no
+    /// batching).
     pub fn connect(id: usize, addr: &str) -> Result<TcpWorker> {
-        Self::connect_with_opts(id, addr, CONNECT_ATTEMPTS, BASE_BACKOFF)
+        Self::connect_with_link_opts(id, addr, &TcpLinkOpts::default())
     }
 
     /// Connect with an explicit backoff schedule (tests use tight
     /// ones). The same schedule governs mid-run reconnects.
-    ///
-    /// After connecting, a `StateBytes` probe (bounded by
-    /// [`PROBE_TIMEOUT`]) confirms the daemon is actually *serving*
-    /// this link. A daemon serves one connection at a time, and the OS
-    /// accept backlog happily queues a second one — without the probe,
-    /// pointing two links at one daemon (e.g. `localhost:7701` and
-    /// `127.0.0.1:7701` sneaking past the literal-string dedup) would
-    /// hang the first request forever instead of failing loudly here.
     pub fn connect_with_opts(
         id: usize,
         addr: &str,
         attempts: u32,
         base: Duration,
     ) -> Result<TcpWorker> {
-        let mut stream = connect_with_backoff(addr, attempts, base)
+        Self::connect_with_link_opts(
+            id,
+            addr,
+            &TcpLinkOpts { attempts, base, ..TcpLinkOpts::default() },
+        )
+    }
+
+    /// Connect with full link options.
+    ///
+    /// After connecting, a `StateBytes` probe (bounded by
+    /// [`PROBE_TIMEOUT`]) confirms the daemon is actually *serving*
+    /// this link — a wedged daemon fails loudly here instead of hanging
+    /// the first fit. A non-empty tenant is then declared with the
+    /// wire-v2 `Hello` handshake (and re-declared on every reconnect).
+    pub fn connect_with_link_opts(
+        id: usize,
+        addr: &str,
+        opts: &TcpLinkOpts,
+    ) -> Result<TcpWorker> {
+        if opts.inflight == 0 {
+            bail!("worker {id}: offload_inflight must be >= 1");
+        }
+        let mut stream = connect_with_backoff(addr, opts.attempts, opts.base)
             .with_context(|| format!("worker {id}"))?;
         stream.set_read_timeout(Some(PROBE_TIMEOUT))?;
         wire::send(&mut stream, &Msg::StateBytes)
@@ -128,23 +189,35 @@ impl TcpWorker {
             .with_context(|| {
                 format!(
                     "worker {id} @ {addr}: connected but the daemon is not \
-                     serving this link (already serving another server, or \
-                     wedged?)"
+                     serving this link (wedged?)"
                 )
             })?;
+        if !opts.tenant.is_empty() {
+            hello(&mut stream, &opts.tenant)
+                .with_context(|| format!("worker {id} @ {addr}: tenant handshake"))?;
+        }
         stream.set_read_timeout(None)?;
         let (tx, rx) = channel();
         let link = Link {
             id,
             addr: addr.to_string(),
             conn: Some(stream),
-            attempts,
-            base,
+            attempts: opts.attempts,
+            base: opts.base,
+            tenant: opts.tenant.clone(),
+            inflight: opts.inflight,
+            seq: 0,
         };
         std::thread::Builder::new()
             .name(format!("tcp-worker-{id}"))
             .spawn(move || client_main(link, rx))?;
-        Ok(TcpWorker { tx, id, addr: addr.to_string() })
+        Ok(TcpWorker {
+            tx,
+            id,
+            addr: addr.to_string(),
+            batch: opts.batch,
+            inflight: opts.inflight,
+        })
     }
 
     fn send_cmd(&self, cmd: ClientCmd) -> Result<()> {
@@ -180,6 +253,34 @@ impl Transport for TcpWorker {
         Ok(rx)
     }
 
+    fn fit_many(&self, jobs: Vec<FitJob>) -> Result<Vec<Receiver<Result<FitResult>>>> {
+        if !self.batch || jobs.len() <= 1 {
+            // the v1 shape: one Fit frame per job
+            return jobs.into_iter().map(|j| self.fit(j)).collect();
+        }
+        let mut rxs = Vec::with_capacity(jobs.len());
+        let mut pairs = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let (tx, rx) = channel();
+            pairs.push((job, tx));
+            rxs.push(rx);
+        }
+        self.send_cmd(ClientCmd::FitBatch(pairs))?;
+        Ok(rxs)
+    }
+
+    fn fit_frames(&self, n_jobs: usize) -> u64 {
+        if self.batch && n_jobs > 1 {
+            // mirror run_batch's chunking exactly: w windows of per jobs
+            // gives ceil(n / per) frames, which is < w when w does not
+            // divide n (e.g. 4 jobs, window 3 -> 2 frames, not 3)
+            let per = n_jobs.div_ceil(self.inflight.min(n_jobs));
+            n_jobs.div_ceil(per) as u64
+        } else {
+            n_jobs as u64
+        }
+    }
+
     fn snapshot(&self, user: usize, site: &str) -> Result<AdapterParams> {
         let (tx, rx) = channel();
         self.send_cmd(ClientCmd::Snapshot { user, site: site.to_string(), reply: tx })?;
@@ -198,17 +299,45 @@ impl Transport for TcpWorker {
     }
 }
 
-/// Client-thread state: the socket plus the reconnect schedule the
-/// worker was built with.
+/// The tenant handshake on a fresh stream.
+fn hello(stream: &mut TcpStream, tenant: &str) -> Result<()> {
+    wire::send(stream, &Msg::Hello { tenant: tenant.to_string() })?;
+    match wire::recv(stream)? {
+        Msg::Ack => Ok(()),
+        other => unexpected(other),
+    }
+}
+
+/// Client-thread state: the socket plus the reconnect schedule and
+/// batching window the worker was built with.
 struct Link {
     id: usize,
     addr: String,
     conn: Option<TcpStream>,
     attempts: u32,
     base: Duration,
+    tenant: String,
+    inflight: usize,
+    /// FitBatch frame sequence numbers (monotone per link)
+    seq: u64,
 }
 
 impl Link {
+    /// (Re)connect if needed, re-declaring the tenant namespace — daemon
+    /// state is keyed by tenant and a fresh connection starts in the
+    /// default one.
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut stream = connect_with_backoff(&self.addr, self.attempts, self.base)?;
+        if !self.tenant.is_empty() {
+            hello(&mut stream, &self.tenant).context("tenant handshake on reconnect")?;
+        }
+        self.conn = Some(stream);
+        Ok(())
+    }
+
     /// One request/reply exchange. Returns the reply and the wall time
     /// spent on the wire exchange itself — reconnect backoff is
     /// excluded, so it never pollutes the measured-transfer ledger. On
@@ -216,9 +345,7 @@ impl Link {
     /// reconnects; the failed request itself is NOT replayed (see
     /// module docs).
     fn request(&mut self, msg: &Msg) -> Result<(Msg, Duration)> {
-        if self.conn.is_none() {
-            self.conn = Some(connect_with_backoff(&self.addr, self.attempts, self.base)?);
-        }
+        self.ensure_conn()?;
         let stream = self.conn.as_mut().expect("connected above");
         let t0 = Instant::now();
         let r = wire::send(stream, msg).and_then(|()| wire::recv(stream));
@@ -231,6 +358,149 @@ impl Link {
                 Err(e.context(
                     "worker link failed mid-request (next dispatch will reconnect)",
                 ))
+            }
+        }
+    }
+
+    /// One interval's jobs as pipelined `FitBatch` frames: the jobs are
+    /// split into `inflight` chunks, every chunk is written before the
+    /// first reply is read (so a later chunk rides the wire while the
+    /// daemon computes an earlier one), and replies are read back in
+    /// sequence order. If the link dies anywhere in the exchange, every
+    /// job not yet answered gets its own error naming its (user, site),
+    /// and nothing is ever replayed — the daemon may have stepped those
+    /// optimizers already.
+    // while-let keeps the iterators nameable so the failure paths can
+    // drain "everything not yet answered" — a for-loop would consume them
+    #[allow(clippy::while_let_on_iterator)]
+    fn run_batch(&mut self, pairs: Vec<(FitJob, Sender<Result<FitResult>>)>) {
+        let (id, addr) = (self.id, self.addr.clone());
+        let n = pairs.len();
+        if n == 0 {
+            return;
+        }
+        let w = self.inflight.max(1).min(n);
+        let per = n.div_ceil(w);
+
+        type Repliers = Vec<(usize, String, Sender<Result<FitResult>>)>;
+        let fail_all = |chunks: &mut dyn Iterator<Item = Repliers>, e: &anyhow::Error| {
+            for repliers in chunks {
+                for (user, site, sender) in repliers {
+                    let _ = sender.send(Err(anyhow!(
+                        "worker {id} @ {addr}: batched fit (user {user}, site \
+                         {site}) lost in flight (not replayed — the daemon may \
+                         already have stepped it): {e:#}"
+                    )));
+                }
+            }
+        };
+
+        // split into <= inflight contiguous chunks, keeping job order
+        let mut chunks: Vec<(Vec<FitJob>, Repliers)> = Vec::with_capacity(w);
+        for (i, (job, sender)) in pairs.into_iter().enumerate() {
+            if i % per == 0 {
+                chunks.push((Vec::with_capacity(per), Vec::with_capacity(per)));
+            }
+            let (jobs, repliers) = chunks.last_mut().expect("pushed above");
+            repliers.push((job.user, job.site.clone(), sender));
+            jobs.push(job);
+        }
+
+        if let Err(e) = self.ensure_conn() {
+            fail_all(&mut chunks.into_iter().map(|(_, r)| r), &e);
+            return;
+        }
+
+        // send phase: put the whole window on the wire
+        let mut sent: Vec<(u64, Repliers, Instant)> = Vec::with_capacity(chunks.len());
+        let mut chunk_iter = chunks.into_iter();
+        while let Some((jobs, repliers)) = chunk_iter.next() {
+            let seq = self.seq;
+            self.seq += 1;
+            let stream = self.conn.as_mut().expect("connected above");
+            let t_send = Instant::now();
+            if let Err(e) = wire::send(stream, &Msg::FitBatch { seq, jobs }) {
+                self.conn = None;
+                let mut rest = std::iter::once(repliers)
+                    .chain(sent.drain(..).map(|(_, r, _)| r))
+                    .chain(chunk_iter.map(|(_, r)| r));
+                fail_all(&mut rest, &e);
+                return;
+            }
+            sent.push((seq, repliers, t_send));
+        }
+
+        // receive phase: replies come back in sequence order
+        let mut sent_iter = sent.into_iter();
+        // end of the previous chunk's reply — each chunk's wall segment
+        // starts there (or at its own send, for the first chunk), so
+        // summed segments cover the exchange exactly once and an earlier
+        // chunk's compute never double-counts into a later chunk's
+        // transfer when the window is > 1
+        let mut mark: Option<Instant> = None;
+        while let Some((seq, repliers, t_send)) = sent_iter.next() {
+            let stream = self.conn.as_mut().expect("connected above");
+            let reply = wire::recv(stream);
+            let done = Instant::now();
+            let wire_time = done.saturating_duration_since(mark.unwrap_or(t_send));
+            mark = Some(done);
+            match reply {
+                Ok(Msg::FitBatchOk { seq: rseq, results })
+                    if rseq == seq && results.len() == repliers.len() =>
+                {
+                    // the daemon reports pure compute per job; what's left
+                    // of the chunk's wall segment is wire + queueing,
+                    // charged to the chunk's first successful job (split
+                    // finer is guesswork)
+                    let computed: Duration = results
+                        .iter()
+                        .filter_map(|i| match i {
+                            BatchItem::Ok(r) => Some(r.compute),
+                            BatchItem::Err { .. } => None,
+                        })
+                        .sum();
+                    let mut extra = Some(wire_time.saturating_sub(computed));
+                    for (item, (user, site, sender)) in
+                        results.into_iter().zip(repliers)
+                    {
+                        match item {
+                            BatchItem::Ok(mut res) => {
+                                res.transfer = extra.take().unwrap_or(Duration::ZERO);
+                                let _ = sender.send(Ok(res));
+                            }
+                            BatchItem::Err { error, .. } => {
+                                let _ = sender.send(Err(anyhow!(
+                                    "worker {id} @ {addr}: batched fit (user \
+                                     {user}, site {site}): remote error: {error}"
+                                )));
+                            }
+                        }
+                    }
+                }
+                Ok(Msg::Error(e)) => {
+                    // the daemon rejected this frame (e.g. decode error)
+                    // but the connection is intact: fail this chunk only
+                    let e = anyhow!("remote error: {e}");
+                    fail_all(&mut std::iter::once(repliers), &e);
+                }
+                Ok(other) => {
+                    self.conn = None;
+                    let e = anyhow!("protocol error: unexpected reply {other:?}");
+                    let mut rest =
+                        std::iter::once(repliers).chain(sent_iter.map(|(_, r, _)| r));
+                    fail_all(&mut rest, &e);
+                    return;
+                }
+                Err(e) => {
+                    self.conn = None;
+                    let e = e.context(
+                        "worker link failed mid-batch (next dispatch will reconnect)",
+                    );
+                    let mut rest =
+                        std::iter::once(repliers).chain(sent_iter.map(|(_, r, _)| r));
+                    fail_all(&mut rest, &e);
+                    return;
+                }
             }
         }
     }
@@ -269,6 +539,9 @@ fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
                     anyhow!("worker {id} @ {addr}: fit(user {user}, site {site}): {e:#}")
                 }));
             }
+            ClientCmd::FitBatch(pairs) => {
+                link.run_batch(pairs);
+            }
             ClientCmd::Snapshot { user, site, reply } => {
                 let r = link
                     .request(&Msg::Snapshot { user, site })
@@ -297,12 +570,20 @@ fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
 // ---------------------------------------------------------------------
 
 /// The worker daemon: a TCP listener bridging the wire protocol onto a
-/// long-lived local [`Worker`]. Serves one connection at a time;
-/// adapter + optimizer state persist across connections (reconnect
-/// safety). Exits on the [`Msg::Shutdown`] handshake.
+/// shared [`WorkerCore`]. Serves any number of concurrent connections
+/// (one thread each); adapter + optimizer state persist across
+/// connections AND across tenants (reconnect safety, multi-tenant
+/// FTaaS). Exits on the [`Msg::Shutdown`] handshake.
 pub struct WorkerDaemon {
     addr: SocketAddr,
     handle: Option<JoinHandle<()>>,
+}
+
+/// State shared by the accept loop and every connection thread.
+struct DaemonShared {
+    core: WorkerCore,
+    addr: SocketAddr,
+    stop: AtomicBool,
 }
 
 impl WorkerDaemon {
@@ -319,10 +600,14 @@ impl WorkerDaemon {
         let listener = TcpListener::bind(listen)
             .with_context(|| format!("worker daemon: binding {listen}"))?;
         let addr = listener.local_addr()?;
-        let worker = Worker::spawn_local(0, target, manifest, transfer)?;
+        let shared = Arc::new(DaemonShared {
+            core: WorkerCore::new(0, target, manifest, transfer),
+            addr,
+            stop: AtomicBool::new(false),
+        });
         let handle = std::thread::Builder::new()
             .name("cola-worker-daemon".into())
-            .spawn(move || daemon_main(listener, worker))?;
+            .spawn(move || daemon_main(listener, shared))?;
         Ok(WorkerDaemon { addr, handle: Some(handle) })
     }
 
@@ -339,18 +624,15 @@ impl WorkerDaemon {
     }
 }
 
-enum ConnEnd {
-    /// peer asked the daemon to exit (handshake acked)
-    Shutdown,
-    /// peer went away; state persists, wait for a reconnect
-    Disconnect,
-}
-
-fn daemon_main(listener: TcpListener, worker: Worker) {
+fn daemon_main(listener: TcpListener, shared: Arc<DaemonShared>) {
+    let mut conn_id = 0usize;
     loop {
         let (stream, peer) = match listener.accept() {
             Ok(x) => x,
             Err(e) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
                 eprintln!("cola worker: accept failed: {e}");
                 // persistent accept errors (fd exhaustion etc.) must not
                 // become a 100%-CPU spin; retry on a human timescale
@@ -358,30 +640,71 @@ fn daemon_main(listener: TcpListener, worker: Worker) {
                 continue;
             }
         };
+        if shared.stop.load(Ordering::SeqCst) {
+            // the shutdown wake-up connection (or a late client)
+            break;
+        }
         let _ = stream.set_nodelay(true);
-        match serve_conn(stream, &worker) {
-            Ok(ConnEnd::Shutdown) => break,
-            Ok(ConnEnd::Disconnect) => {}
-            Err(e) => eprintln!("cola worker: connection from {peer} failed: {e:#}"),
+        conn_id += 1;
+        let sh = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("cola-conn-{conn_id}"))
+            .spawn(move || {
+                if let Err(e) = serve_conn(stream, &sh) {
+                    eprintln!("cola worker: connection from {peer} failed: {e:#}");
+                }
+            });
+        if let Err(e) = spawned {
+            eprintln!("cola worker: spawning connection thread failed: {e}");
         }
     }
-    worker.shutdown();
+    // connection threads drain on their own as peers disconnect; the
+    // core (and its adapter state) lives until the last Arc drops
 }
 
-fn serve_conn(mut stream: TcpStream, worker: &Worker) -> Result<ConnEnd> {
+/// The loopback address that reaches our own listener — used to wake a
+/// blocking `accept()` after the stop flag is set.
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        let ip = if addr.is_ipv4() {
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+        } else {
+            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+        };
+        SocketAddr::new(ip, addr.port())
+    } else {
+        addr
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, shared: &DaemonShared) -> Result<()> {
+    // per-connection tenant namespace; a wire-v2 Hello rebinds it
+    let mut tenant = String::new();
     loop {
         let frame = match wire::read_frame(&mut stream) {
             Ok(f) => f,
-            Err(e) if is_disconnect(&e) => return Ok(ConnEnd::Disconnect),
+            // peer went away; daemon state persists for a reconnect
+            Err(e) if is_disconnect(&e) => return Ok(()),
             Err(e) => return Err(e),
         };
         match wire::decode(&frame) {
             Ok(Msg::Shutdown) => {
-                wire::send(&mut stream, &Msg::ShutdownOk)?;
-                return Ok(ConnEnd::Shutdown);
+                shared.stop.store(true, Ordering::SeqCst);
+                // ack BEFORE waking the accept loop: the moment accept()
+                // wakes, join() can return and the process exit — the ack
+                // must already be on the wire by then or `--stop` reads
+                // EOF instead of ShutdownOk
+                let acked = wire::send(&mut stream, &Msg::ShutdownOk);
+                // unblock the accept loop so the daemon thread exits
+                let _ = TcpStream::connect(wake_addr(shared.addr));
+                return acked;
+            }
+            Ok(Msg::Hello { tenant: t }) => {
+                tenant = t;
+                wire::send(&mut stream, &Msg::Ack)?;
             }
             Ok(msg) => {
-                let reply = dispatch(msg, worker);
+                let reply = dispatch(msg, &tenant, &shared.core);
                 wire::send(&mut stream, &reply)?;
             }
             Err(e) => {
@@ -393,20 +716,31 @@ fn serve_conn(mut stream: TcpStream, worker: &Worker) -> Result<ConnEnd> {
     }
 }
 
-fn dispatch(msg: Msg, worker: &Worker) -> Msg {
+fn dispatch(msg: Msg, tenant: &str, core: &WorkerCore) -> Msg {
     let r: Result<Msg> = (|| match msg {
         Msg::Register { user, site, adapter } => {
-            Worker::register(worker, user, &site, adapter)?;
+            core.register(tenant, user, &site, adapter)?;
             Ok(Msg::Ack)
         }
-        Msg::Fit(job) => {
-            let rx = Worker::fit(worker, job)?;
-            Ok(Msg::FitOk(rx.recv()??))
+        Msg::Fit(job) => Ok(Msg::FitOk(core.fit(tenant, job)?)),
+        Msg::FitBatch { seq, jobs } => {
+            let meta: Vec<(usize, String)> =
+                jobs.iter().map(|j| (j.user, j.site.clone())).collect();
+            let results = core.fit_batch(tenant, jobs);
+            let items = meta
+                .into_iter()
+                .zip(results)
+                .map(|((user, site), r)| match r {
+                    Ok(res) => BatchItem::Ok(res),
+                    Err(e) => BatchItem::Err { user, site, error: format!("{e:#}") },
+                })
+                .collect();
+            Ok(Msg::FitBatchOk { seq, results: items })
         }
         Msg::Snapshot { user, site } => {
-            Ok(Msg::SnapshotOk(Worker::snapshot(worker, user, &site)?))
+            Ok(Msg::SnapshotOk(core.snapshot(tenant, user, &site)?))
         }
-        Msg::StateBytes => Ok(Msg::StateBytesOk(Worker::state_bytes(worker)? as u64)),
+        Msg::StateBytes => Ok(Msg::StateBytesOk(core.state_bytes() as u64)),
         other => bail!("unexpected message on worker side: {other:?}"),
     })();
     r.unwrap_or_else(|e| Msg::Error(format!("{e:#}")))
@@ -428,7 +762,8 @@ fn is_disconnect(e: &anyhow::Error) -> bool {
 }
 
 /// The clean shutdown handshake: connect, send [`Msg::Shutdown`], wait
-/// for the ack. After this returns `Ok`, the daemon process is exiting.
+/// for the ack. After this returns `Ok`, the daemon has stopped
+/// accepting and its accept thread is exiting.
 pub fn request_daemon_shutdown(addr: &str) -> Result<()> {
     let mut stream = connect_with_backoff(addr, 3, Duration::from_millis(50))?;
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;

@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
-# Distributed-offload smoke: launch a `cola worker` daemon on an
-# ephemeral loopback port, train the same tiny config in-process and
-# over TCP, and require byte-identical loss curves. Used by the
-# `distributed-smoke` CI job; runnable locally after
+# Distributed-offload smoke: launch ONE `cola worker` daemon on an
+# ephemeral loopback port and require byte-identical loss curves across
+# every dispatch shape:
+#
+#   1. in-process workers vs loopback TCP (the original contract);
+#   2. batched + pipelined TCP (--offload_batch true --offload_inflight 2,
+#      wire-v2 FitBatch frames) vs the same baseline;
+#   3. TWO trainers running CONCURRENTLY against the one daemon
+#      (multi-tenant: --offload_tenant u0/u1) vs their dedicated
+#      in-process baselines.
+#
+# Used by the `distributed-smoke` CI job; runnable locally after
 # `cargo build --release --locked`.
 set -euo pipefail
 
@@ -39,28 +47,71 @@ if [ -z "$ADDR" ]; then
 fi
 echo "worker daemon at $ADDR (pid $WORKER_PID)"
 
+require_daemon_alive() {
+  if ! kill -0 "$WORKER_PID" 2>/dev/null; then
+    echo "FAIL: worker daemon crashed ($1)" >&2
+    cat "$OUT/worker.log" >&2
+    exit 1
+  fi
+}
+
+require_identical() {
+  if ! diff "$2" "$3"; then
+    echo "FAIL: $1 loss curves differ" >&2
+    echo "--- worker log:" >&2
+    cat "$OUT/worker.log" >&2
+    exit 1
+  fi
+  echo "OK: $1 loss curves are byte-identical"
+}
+
 echo "--- in-process run"
 "$BIN" train --config config/distributed_smoke.toml \
   --loss_out "$OUT/local.json"
 
-echo "--- loopback-TCP run"
+echo "--- loopback-TCP run (v1 wire: one Fit frame per job)"
 "$BIN" train --config config/distributed_smoke.toml \
   --offload_transport tcp --worker_addrs "$ADDR" \
   --loss_out "$OUT/tcp.json"
+require_daemon_alive "during the unbatched TCP run"
+require_identical "TCP vs in-process" "$OUT/local.json" "$OUT/tcp.json"
 
-if ! kill -0 "$WORKER_PID" 2>/dev/null; then
-  echo "FAIL: worker daemon crashed during training" >&2
-  cat "$OUT/worker.log" >&2
-  exit 1
-fi
+echo "--- batched + pipelined TCP run (wire-v2 FitBatch, window 2)"
+"$BIN" train --config config/distributed_smoke.toml \
+  --offload_transport tcp --worker_addrs "$ADDR" \
+  --offload_batch true --offload_inflight 2 \
+  --loss_out "$OUT/tcp_batched.json"
+require_daemon_alive "during the batched TCP run"
+require_identical "batched TCP vs in-process" "$OUT/local.json" "$OUT/tcp_batched.json"
 
-if ! diff "$OUT/local.json" "$OUT/tcp.json"; then
-  echo "FAIL: TCP loss curves differ from the in-process run" >&2
-  echo "--- worker log:" >&2
-  cat "$OUT/worker.log" >&2
-  exit 1
-fi
-echo "OK: loss curves are byte-identical across transports"
+echo "--- second in-process baseline (seed 43) for the shared-daemon pair"
+"$BIN" train --config config/distributed_smoke.toml --seed 43 \
+  --loss_out "$OUT/local_b.json"
+
+echo "--- TWO concurrent trainers sharing the one daemon (tenants u0/u1)"
+"$BIN" train --config config/distributed_smoke.toml \
+  --offload_transport tcp --worker_addrs "$ADDR" --offload_tenant u0 \
+  --loss_out "$OUT/shared_a.json" >"$OUT/shared_a.log" 2>&1 &
+PID_A=$!
+"$BIN" train --config config/distributed_smoke.toml --seed 43 \
+  --offload_transport tcp --worker_addrs "$ADDR" --offload_tenant u1 \
+  --offload_batch true --offload_inflight 2 \
+  --loss_out "$OUT/shared_b.json" >"$OUT/shared_b.log" 2>&1 &
+PID_B=$!
+for pid in "$PID_A" "$PID_B"; do
+  if ! wait "$pid"; then
+    echo "FAIL: a shared-daemon trainer (pid $pid) exited non-zero" >&2
+    echo "--- trainer A log:" >&2; cat "$OUT/shared_a.log" >&2
+    echo "--- trainer B log:" >&2; cat "$OUT/shared_b.log" >&2
+    echo "--- worker log:" >&2; cat "$OUT/worker.log" >&2
+    exit 1
+  fi
+done
+require_daemon_alive "during the shared-daemon runs"
+require_identical "shared-daemon trainer A vs its baseline" \
+  "$OUT/local.json" "$OUT/shared_a.json"
+require_identical "shared-daemon trainer B vs its baseline" \
+  "$OUT/local_b.json" "$OUT/shared_b.json"
 
 # clean shutdown handshake; the daemon must exit 0
 "$BIN" worker --stop "$ADDR"
