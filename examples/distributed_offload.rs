@@ -11,12 +11,19 @@
 //! same bytes (the Tables 10-18 sweep model) — see EXPERIMENTS.md
 //! §Distributed offload for the recorded numbers.
 //!
+//! Finally it demonstrates the elastic pool: a fourth run under
+//! `failover = "migrate"` has its only daemon KILLED mid-run, a cold
+//! standby is promoted, state restores from shadow checkpoints, the
+//! lost fits re-dispatch — and the loss curves are still bit-identical.
+//! The migration ledger (state bytes moved, stalled intervals, lost
+//! fits by name) is printed for EXPERIMENTS.md §Elastic pools.
+//!
 //! Run: `cargo run --release --example distributed_offload`
 
 use std::sync::Arc;
 
-use cola::config::{AdapterKind, Method, Mode, OffloadTarget, Optimizer, Task,
-                   TrainConfig, TransportKind};
+use cola::config::{AdapterKind, FailoverPolicy, Method, Mode, OffloadTarget,
+                   Optimizer, Task, TrainConfig, TransportKind};
 use cola::coordinator::{TransferModel, Trainer};
 use cola::runtime::Manifest;
 use cola::transport::tcp::{request_daemon_shutdown, WorkerDaemon};
@@ -45,12 +52,12 @@ fn main() -> cola::Result<()> {
     let addr = daemon.local_addr().to_string();
     println!("worker daemon listening on {addr}");
 
-    println!("\n[1/3] in-process offload (local transport)");
+    println!("\n[1/4] in-process offload (local transport)");
     let mut local = Trainer::new(cfg())?;
     let r_local = local.run()?;
     drop(local);
 
-    println!("[2/3] TCP offload to the loopback daemon (one Fit frame per job)");
+    println!("[2/4] TCP offload to the loopback daemon (one Fit frame per job)");
     let mut over_tcp = cfg();
     over_tcp.offload_transport = TransportKind::Tcp;
     over_tcp.worker_addrs = vec![addr.clone()];
@@ -58,22 +65,64 @@ fn main() -> cola::Result<()> {
     let r_tcp = tcp.run()?;
     drop(tcp); // release the connection before the shutdown handshake
 
-    println!("[3/3] batched + pipelined TCP (FitBatch frames, window 2)");
-    let mut over_batch = over_tcp;
+    println!("[3/4] batched + pipelined TCP (FitBatch frames, window 2)");
+    let mut over_batch = over_tcp.clone();
     over_batch.offload_batch = true;
     over_batch.offload_inflight = 2;
     let mut batched = Trainer::new(over_batch)?;
     let r_batched = batched.run()?;
     drop(batched);
 
-    for (name, r) in [("tcp", &r_tcp), ("tcp+batch", &r_batched)] {
+    println!("[4/4] failover = migrate: kill the daemon mid-run, promote a standby");
+    let mut victim = WorkerDaemon::bind("127.0.0.1:0", OffloadTarget::NativeCpu,
+                                        Arc::new(Manifest::load_or_builtin(
+                                            std::path::Path::new("artifacts"))?),
+                                        None)?;
+    let standby = WorkerDaemon::bind("127.0.0.1:0", OffloadTarget::NativeCpu,
+                                     Arc::new(Manifest::load_or_builtin(
+                                         std::path::Path::new("artifacts"))?),
+                                     None)?;
+    let standby_addr = standby.local_addr().to_string();
+    let mut chaos = over_tcp;
+    chaos.worker_addrs = vec![victim.local_addr().to_string()];
+    chaos.standby_addrs = vec![standby_addr.clone()];
+    chaos.failover = FailoverPolicy::Migrate;
+    chaos.heartbeat_interval = 0; // reactive: show the lost fits by name
+    let mut survivor_run = Trainer::new(chaos)?;
+    let r_chaos = survivor_run.run_with_hook(|_, t| {
+        if t == 5 {
+            // between steps, with an interval of fits about to flush:
+            // the harshest spot short of mid-wire
+            victim.kill();
+        }
+        Ok(())
+    })?;
+    let lost: Vec<String> = survivor_run
+        .lost_fits()
+        .iter()
+        .map(|(u, s)| format!("(user {u}, site {s})"))
+        .collect();
+    drop(survivor_run);
+
+    for (name, r) in
+        [("tcp", &r_tcp), ("tcp+batch", &r_batched), ("tcp+failover", &r_chaos)]
+    {
         assert_eq!(r_local.train_loss.points, r.train_loss.points,
                    "determinism violation: {name} train curves differ");
         assert_eq!(r_local.eval_loss.points, r.eval_loss.points,
                    "determinism violation: {name} eval curves differ");
     }
     println!("\ndeterminism: train + eval loss curves are bit-identical \
-              across all three dispatch shapes ✓");
+              across all four dispatch shapes — including the run whose \
+              only daemon was killed mid-training ✓");
+    println!("\nfailover ledger (the migration cost of surviving the kill):");
+    println!("  lost fits (re-dispatched) : {}", lost.len());
+    for l in &lost {
+        println!("    {l}");
+    }
+    println!("  migrations                : {}", r_chaos.timings.migrations);
+    println!("  state bytes moved         : {}", r_chaos.timings.migrated_state_bytes);
+    println!("  stalled intervals         : {}", r_chaos.timings.stall_intervals);
     println!("  final train loss: {:.6}",
              r_tcp.train_loss.last().unwrap_or(f64::NAN));
     println!("\nfit dispatch round-trips (the cost FitBatch collapses):");
@@ -98,6 +147,9 @@ fn main() -> cola::Result<()> {
 
     request_daemon_shutdown(&addr)?;
     daemon.join();
-    println!("\nworker daemon shut down cleanly");
+    request_daemon_shutdown(&standby_addr)?;
+    standby.join();
+    let _ = victim; // killed mid-run; nothing left to stop
+    println!("\nworker daemons shut down cleanly");
     Ok(())
 }

@@ -192,6 +192,39 @@ impl fmt::Display for TransportKind {
     }
 }
 
+/// What the coordinator does when a worker daemon stops answering
+/// (tcp transport only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailoverPolicy {
+    /// fail the run at the first lost fit (the pre-elastic behavior)
+    Fail,
+    /// keep shadow checkpoints of every shard, promote a standby (or
+    /// shrink onto survivors), restore state bit-exactly, and re-run
+    /// the lost interval's fits — loss curves stay byte-identical to an
+    /// uninterrupted run
+    Migrate,
+}
+
+impl FromStr for FailoverPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fail" => FailoverPolicy::Fail,
+            "migrate" => FailoverPolicy::Migrate,
+            other => bail!("unknown failover policy '{other}' (fail|migrate)"),
+        })
+    }
+}
+
+impl fmt::Display for FailoverPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FailoverPolicy::Fail => write!(f, "fail"),
+            FailoverPolicy::Migrate => write!(f, "migrate"),
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Optimizer {
     Sgd,
@@ -287,6 +320,32 @@ pub struct TrainConfig {
     /// the flush so a later chunk rides the wire while an earlier one
     /// computes on the daemon.
     pub offload_inflight: usize,
+    /// liveness-sweep cadence of the elastic pool supervisor, in
+    /// adaptation-interval flushes (tcp + `failover = "migrate"` only):
+    /// every N flushes each daemon gets a `Ping` heartbeat and dead
+    /// ones are failed over BEFORE fits are dispatched to them. 0
+    /// disables proactive sweeps (death is then detected reactively, by
+    /// the lost fits themselves). Under `failover = "fail"` no
+    /// heartbeat is ever sent — the wire carries no v3 control traffic
+    /// at all, preserving exact compatibility with older daemons.
+    /// Deliberately counted in flushes, not seconds — wall-clock sweeps
+    /// would make recovery timing (though never numerics)
+    /// nondeterministic.
+    pub heartbeat_interval: usize,
+    /// what to do when a daemon dies mid-run (tcp only): "fail" aborts
+    /// the run at the first lost fit; "migrate" restores the dead
+    /// daemon's shards from shadow checkpoints onto a promoted standby
+    /// (or the surviving members), re-runs the lost fits, and continues
+    /// with byte-identical loss curves. Migrate pays for its shadow
+    /// copies with one `StateExport` round-trip per (user, site) per
+    /// flush — see EXPERIMENTS.md §Elastic pools.
+    pub failover: FailoverPolicy,
+    /// cold-standby `cola worker` addresses (tcp only), comma-separated
+    /// like worker_addrs. Used twice: at connect time an unreachable
+    /// primary address is substituted by the next standby (the pool
+    /// degrades loudly instead of aborting), and mid-run the supervisor
+    /// promotes one whenever a member dies.
+    pub standby_addrs: Vec<String>,
 }
 
 impl Default for TrainConfig {
@@ -317,6 +376,9 @@ impl Default for TrainConfig {
             offload_tenant: String::new(),
             offload_batch: false,
             offload_inflight: 1,
+            heartbeat_interval: 1,
+            failover: FailoverPolicy::Fail,
+            standby_addrs: Vec::new(),
         }
     }
 }
@@ -370,6 +432,19 @@ impl TrainConfig {
             "offload_inflight" => {
                 self.offload_inflight = val.parse().context("offload_inflight")?
             }
+            "heartbeat_interval" => {
+                self.heartbeat_interval =
+                    val.parse().context("heartbeat_interval")?
+            }
+            "failover" => self.failover = val.parse()?,
+            "standby_addrs" => {
+                self.standby_addrs = val
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect();
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -416,6 +491,18 @@ impl TrainConfig {
                     bail!("worker_addrs is set but offload_transport is \
                            \"local\" — set offload_transport = \"tcp\" or \
                            drop the addresses (refusing to silently ignore)");
+                }
+                if !self.standby_addrs.is_empty() {
+                    bail!("standby_addrs is set but offload_transport is \
+                           \"local\" — standbys are spare TCP daemons; an \
+                           in-process pool cannot lose a member (refusing to \
+                           silently ignore)");
+                }
+                if self.failover == FailoverPolicy::Migrate {
+                    bail!("failover = \"migrate\" is set but offload_transport \
+                           is \"local\" — in-process workers cannot die \
+                           independently of the trainer, so there is nothing \
+                           to migrate (refusing to silently ignore)");
                 }
                 if !self.offload_tenant.is_empty() {
                     bail!("offload_tenant is set but offload_transport is \
@@ -560,6 +647,35 @@ mod tests {
 
         let mut cfg = TrainConfig::default();
         cfg.set("offload_batch", "true").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn elastic_pool_knobs_parse_and_validate() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701,127.0.0.1:7702").unwrap();
+        cfg.set("standby_addrs", "127.0.0.1:7710, 127.0.0.1:7711,").unwrap();
+        cfg.set("failover", "migrate").unwrap();
+        cfg.set("heartbeat_interval", "2").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.standby_addrs.len(), 2);
+        assert_eq!(cfg.failover, FailoverPolicy::Migrate);
+        assert_eq!(cfg.heartbeat_interval, 2);
+        // sweeping can be disabled outright
+        cfg.set("heartbeat_interval", "0").unwrap();
+        cfg.validate().unwrap();
+        assert!("bogus".parse::<FailoverPolicy>().is_err());
+    }
+
+    #[test]
+    fn elastic_knobs_rejected_on_local_transport() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("standby_addrs", "127.0.0.1:7710").unwrap();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = TrainConfig::default();
+        cfg.set("failover", "migrate").unwrap();
         assert!(cfg.validate().is_err());
     }
 

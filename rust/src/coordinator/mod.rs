@@ -16,5 +16,9 @@ pub mod server;
 pub use api::FtaasService;
 pub use buffer::AdaptationBuffers;
 pub use driver::{Driver, LmVariant, SiteSpec, TaskData};
-pub use offload::{FitJob, FitResult, TransferModel, Worker, WorkerCore, WorkerPool};
+pub use offload::{
+    key_addr, member_keys, rebalance_daemons, rendezvous_owner, FitJob, FitResult,
+    MigrationStats, PoolMember, PoolSupervisor, TransferModel, Worker, WorkerCore,
+    WorkerPool,
+};
 pub use server::{RunReport, Trainer};

@@ -68,8 +68,11 @@ impl TransferModel {
     }
 }
 
-/// A buffered-interval update job for one (user, site).
-#[derive(Debug)]
+/// A buffered-interval update job for one (user, site). `Clone` exists
+/// for `failover = "migrate"`: the coordinator keeps a copy of every
+/// dispatched job until its reply is applied, so a job lost to a dying
+/// daemon can be re-dispatched against the restored checkpoint.
+#[derive(Clone, Debug)]
 pub struct FitJob {
     pub user: usize,
     pub site: String,
@@ -108,6 +111,12 @@ enum WorkerCmd {
     Snapshot { user: usize, site: String, reply: Sender<Result<AdapterParams>> },
     /// bytes of adapter + optimizer state held by this worker
     StateBytes(Sender<usize>),
+    /// bit-exact migration blob for one (user, site)
+    Export { user: usize, site: String, reply: Sender<Result<Vec<u8>>> },
+    /// install a migration blob (replacing any existing key state)
+    Import { blob: Vec<u8>, reply: Sender<Result<()>> },
+    /// drop a migrated-away shard
+    Evict { user: usize, site: String, reply: Sender<Result<()>> },
     Shutdown,
 }
 
@@ -195,8 +204,139 @@ impl Transport for Worker {
         Worker::state_bytes(self)
     }
 
+    fn export_state(&self, user: usize, site: &str) -> Result<Vec<u8>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::Export { user, site: site.to_string(), reply: tx })
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        rx.recv()?
+    }
+
+    fn import_state(&self, blob: Vec<u8>) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::Import { blob, reply: tx })
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        rx.recv()?
+    }
+
+    fn evict_state(&self, user: usize, site: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::Evict { user, site: site.to_string(), reply: tx })
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        rx.recv()?
+    }
+
     fn shutdown(&self) {
         Worker::shutdown(self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// deterministic rendezvous sharding
+// ---------------------------------------------------------------------
+
+/// SplitMix64 finisher — a stable, dependency-free bit mixer. The
+/// std `DefaultHasher` is seeded per-process, which would make the
+/// user -> worker mapping differ between the trainer and an offline
+/// `cola pool` invocation; this one is identical everywhere, forever.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over a member key's bytes (stable across platforms).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The one HRW winner-selection loop — every sharding decision (live
+/// pool, offline rebalancer) MUST flow through this single body, or two
+/// copies could drift and silently disagree about ownership.
+fn rendezvous_best<'a>(keys: impl Iterator<Item = &'a str>, user: usize) -> usize {
+    let u = splitmix64(user as u64);
+    let mut best = 0usize;
+    let mut best_w = 0u64;
+    for (i, k) in keys.enumerate() {
+        let w = splitmix64(fnv1a64(k.as_bytes()) ^ u);
+        if i == 0 || w > best_w {
+            best = i;
+            best_w = w;
+        }
+    }
+    best
+}
+
+/// Rendezvous (highest-random-weight) owner of `user` among `keys`:
+/// every (key, user) pair gets a deterministic weight and the max wins.
+/// Adding a member can only steal users *to* the new member, and
+/// removing one only re-homes the users it owned — the minimal-movement
+/// property that makes elastic resizes cheap. Keys must be non-empty
+/// and unique ([`member_keys`] guarantees both).
+pub fn rendezvous_owner(keys: &[String], user: usize) -> usize {
+    assert!(!keys.is_empty(), "rendezvous over an empty member set");
+    rendezvous_best(keys.iter().map(String::as_str), user)
+}
+
+/// A key not yet in `existing`: `base` itself, else `base#2`, `base#3`,
+/// ... (duplicate `worker_addrs` are legal — one daemon backing several
+/// pool slots — but rendezvous needs distinct identities per slot).
+fn unique_key(existing: &[String], base: &str) -> String {
+    if !existing.iter().any(|k| k == base) {
+        return base.to_string();
+    }
+    for n in 2.. {
+        let cand = format!("{base}#{n}");
+        if !existing.iter().any(|k| k == &cand) {
+            return cand;
+        }
+    }
+    unreachable!("unbounded suffix search")
+}
+
+/// The member-key list an address list resolves to — shared by the live
+/// pool and the offline `cola pool` rebalancer so both always compute
+/// the same user -> worker mapping.
+pub fn member_keys(addrs: &[String]) -> Vec<String> {
+    let mut keys: Vec<String> = Vec::with_capacity(addrs.len());
+    for a in addrs {
+        let k = unique_key(&keys, a);
+        keys.push(k);
+    }
+    keys
+}
+
+/// The daemon address behind a member key (strips the `#k` duplicate
+/// suffix, if any).
+pub fn key_addr(key: &str) -> &str {
+    match key.rsplit_once('#') {
+        Some((addr, n)) if n.parse::<usize>().is_ok() => addr,
+        _ => key,
+    }
+}
+
+/// One pool slot: a stable identity for the rendezvous hash plus the
+/// transport that reaches it.
+pub struct PoolMember {
+    /// rendezvous identity — the daemon address (possibly `#k`-suffixed
+    /// for duplicate addresses), or `local-<i>` for in-process workers
+    pub key: String,
+    /// endpoint address (`""` for in-process members)
+    pub addr: String,
+    transport: Box<dyn Transport>,
+}
+
+impl PoolMember {
+    pub fn transport(&self) -> &dyn Transport {
+        self.transport.as_ref()
     }
 }
 
@@ -210,18 +350,19 @@ impl Transport for Worker {
 ///
 /// # Sharding contract
 ///
-/// User `u` is permanently assigned worker `u % len` ([`Self::shard_of`]),
-/// and that worker *owns* the user's adapters and optimizer moments for
-/// the life of the state. The worker count is therefore part of a run's
-/// identity: growing or shrinking the pool remaps users onto workers
-/// that never saw their moments, which would silently restart every
-/// optimizer mid-run. Today every `Trainer` run registers fresh
-/// adapters at init, so the contract holds by construction; any future
-/// resume/checkpoint path that attaches to existing worker state (e.g.
-/// TCP daemons, whose state outlives connections) must gate on
-/// [`Self::verify_shard_count`] with the pool size the state was
-/// registered under, and treat a mismatch as fatal (pinned by the
-/// `pool_size_change_rejected_against_existing_state` test).
+/// User `u` is owned by the member that wins the rendezvous hash over
+/// the current member keys ([`rendezvous_owner`]) — that member holds
+/// the user's adapters and optimizer moments. Unlike the old `u % len`
+/// rule, membership is **elastic**: adding a member moves only the
+/// users it wins, and removing one re-homes only the users it owned.
+/// The invariant that replaces the old pool-size check is *state
+/// follows ownership*: every membership change must migrate the moved
+/// users' state (bit-exact export/import — [`PoolSupervisor`], `cola
+/// pool`) before the next fit dispatch, or those optimizers silently
+/// restart. All workers compute bit-identically and replies apply in
+/// buffer-drain order, so WHERE a user's shard lives never moves a
+/// loss curve — which is exactly what lets the pool change under a
+/// live run with byte-identical results.
 ///
 /// Each local worker's surrogate-fit contractions
 /// (`AdapterParams::fit_grads`) run on the shared `tensor::pool` core
@@ -229,7 +370,10 @@ impl Transport for Worker {
 /// oversubscribing the host: a worker that can't lease extra cores just
 /// computes serially.
 pub struct WorkerPool {
-    workers: Vec<Box<dyn Transport>>,
+    members: Vec<PoolMember>,
+    /// transport ids are labels for logs/errors; monotone so a promoted
+    /// standby never reuses a dead member's id
+    next_id: usize,
 }
 
 impl WorkerPool {
@@ -241,20 +385,24 @@ impl WorkerPool {
         transfer: Option<TransferModel>,
     ) -> Result<WorkerPool> {
         if n == 0 {
-            // for_user shards by `user % n`; n = 0 would panic on the
-            // first dispatch with a bare divide-by-zero
+            // rendezvous over an empty member set has no winner; fail at
+            // construction, not on the first dispatch
             bail!("WorkerPool::spawn: need at least one worker (got n = 0)");
         }
-        let mut workers: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+        let mut members = Vec::with_capacity(n);
         for id in 0..n {
-            workers.push(Box::new(Worker::spawn_local(
-                id,
-                target,
-                manifest.clone(),
-                transfer,
-            )?));
+            members.push(PoolMember {
+                key: format!("local-{id}"),
+                addr: String::new(),
+                transport: Box::new(Worker::spawn_local(
+                    id,
+                    target,
+                    manifest.clone(),
+                    transfer,
+                )?),
+            });
         }
-        Ok(WorkerPool { workers })
+        Ok(WorkerPool { members, next_id: n })
     }
 
     /// Connect to remote worker daemons (`offload_transport = "tcp"`) —
@@ -265,61 +413,134 @@ impl WorkerPool {
     /// `link` carries the tenant namespace and the FitBatch/pipelining
     /// knobs every link is built with.
     pub fn connect_tcp(addrs: &[String], link: &TcpLinkOpts) -> Result<WorkerPool> {
+        Ok(Self::connect_tcp_with_standbys(addrs, &[], link)?.0)
+    }
+
+    /// [`Self::connect_tcp`] with cold-standby substitution: when a
+    /// primary address refuses to connect, the next standby takes its
+    /// slot (loudly) instead of aborting the whole pool — a fleet
+    /// launcher with one dead daemon degrades instead of failing.
+    /// Returns the pool plus the standbys that remain unused (the
+    /// [`PoolSupervisor`]'s mid-run promotion reserve).
+    pub fn connect_tcp_with_standbys(
+        addrs: &[String],
+        standbys: &[String],
+        link: &TcpLinkOpts,
+    ) -> Result<(WorkerPool, Vec<String>)> {
         if addrs.is_empty() {
             bail!(
                 "offload_transport = \"tcp\" needs at least one worker \
                  address (set worker_addrs)"
             );
         }
-        let mut workers: Vec<Box<dyn Transport>> = Vec::with_capacity(addrs.len());
-        for (id, addr) in addrs.iter().enumerate() {
-            workers.push(Box::new(TcpWorker::connect_with_link_opts(id, addr, link)?));
+        let mut remaining: Vec<String> = standbys.to_vec();
+        let mut pool = WorkerPool { members: Vec::with_capacity(addrs.len()), next_id: 0 };
+        for addr in addrs {
+            match pool.add_tcp_member(addr, link) {
+                Ok(_) => {}
+                Err(mut err) => {
+                    // substitute standbys until one connects
+                    let mut placed = false;
+                    while !remaining.is_empty() {
+                        let standby = remaining.remove(0);
+                        eprintln!(
+                            "warning: worker at {addr} is unreachable ({err:#}); \
+                             substituting standby {standby}"
+                        );
+                        match pool.add_tcp_member(&standby, link) {
+                            Ok(_) => {
+                                placed = true;
+                                break;
+                            }
+                            Err(e2) => err = e2,
+                        }
+                    }
+                    if !placed {
+                        return Err(err.context(format!(
+                            "connecting worker pool: {addr} is unreachable and \
+                             no standby could take its slot"
+                        )));
+                    }
+                }
+            }
         }
-        Ok(WorkerPool { workers })
+        Ok((pool, remaining))
     }
 
-    /// The permanent worker index for a user — see the sharding
-    /// contract in the type docs.
+    /// Connect `addr` and add it as a new member (its rendezvous key is
+    /// deduplicated against current members). Returns the member index.
+    pub fn add_tcp_member(&mut self, addr: &str, link: &TcpLinkOpts) -> Result<usize> {
+        let keys: Vec<String> = self.members.iter().map(|m| m.key.clone()).collect();
+        let key = unique_key(&keys, addr);
+        self.add_tcp_member_with_key(addr, key, link)
+    }
+
+    /// [`Self::add_tcp_member`] with an explicit key — the failover path
+    /// uses it to keep a restarted daemon at a dead member's address
+    /// from inheriting the dead identity (and thereby skipping the
+    /// state migration it still needs).
+    pub fn add_tcp_member_with_key(
+        &mut self,
+        addr: &str,
+        key: String,
+        link: &TcpLinkOpts,
+    ) -> Result<usize> {
+        let id = self.next_id;
+        let t = TcpWorker::connect_with_link_opts(id, addr, link)?;
+        self.next_id += 1;
+        self.members.push(PoolMember {
+            key,
+            addr: addr.to_string(),
+            transport: Box::new(t),
+        });
+        Ok(self.members.len() - 1)
+    }
+
+    /// Remove (and return) a member. The caller owns migrating the
+    /// users the member's key was winning — see the sharding contract.
+    pub fn remove_member(&mut self, idx: usize) -> PoolMember {
+        self.members.remove(idx)
+    }
+
+    /// First member whose endpoint is `addr` (drain/remove commands
+    /// address daemons, not slots).
+    pub fn index_of_addr(&self, addr: &str) -> Option<usize> {
+        self.members.iter().position(|m| m.addr == addr)
+    }
+
+    /// Member index holding `key`, if present.
+    pub fn index_of_key(&self, key: &str) -> Option<usize> {
+        self.members.iter().position(|m| m.key == key)
+    }
+
+    /// Current rendezvous keys, in member order.
+    pub fn keys(&self) -> Vec<String> {
+        self.members.iter().map(|m| m.key.clone()).collect()
+    }
+
+    pub fn members(&self) -> &[PoolMember] {
+        &self.members
+    }
+
+    /// The worker index currently owning a user — the rendezvous winner
+    /// over the live member keys (see the sharding contract). Same
+    /// selection body as [`rendezvous_owner`], by construction.
     pub fn shard_of(&self, user: usize) -> usize {
-        user % self.workers.len()
+        rendezvous_best(self.members.iter().map(|m| m.key.as_str()), user)
     }
 
     pub fn for_user(&self, user: usize) -> &dyn Transport {
-        self.workers[self.shard_of(user)].as_ref()
+        self.members[self.shard_of(user)].transport.as_ref()
     }
 
     /// Worker by pool index (callers that already grouped jobs by
     /// [`Self::shard_of`]).
     pub fn worker(&self, idx: usize) -> &dyn Transport {
-        self.workers[idx].as_ref()
+        self.members[idx].transport.as_ref()
     }
 
     pub fn len(&self) -> usize {
-        self.workers.len()
-    }
-
-    pub fn workers(&self) -> &[Box<dyn Transport>] {
-        &self.workers
-    }
-
-    /// Enforce the sharding contract against pre-existing worker state:
-    /// `registered_with` is the pool size the state (adapters, optimizer
-    /// moments, or an on-disk snapshot of either) was created under.
-    /// A mismatch is rejected — `user % len` would silently reshuffle
-    /// every user's moments onto a worker that never saw them.
-    pub fn verify_shard_count(&self, registered_with: usize) -> Result<()> {
-        if registered_with != self.workers.len() {
-            bail!(
-                "worker pool has {} workers but the existing adapter state was \
-                 registered with {}: user -> worker sharding is `user % workers` \
-                 and is part of a run's identity, so changing the pool size \
-                 against live state would silently reshuffle optimizer moments \
-                 — finish the run with the original pool size or start fresh",
-                self.workers.len(),
-                registered_with
-            );
-        }
-        Ok(())
+        self.members.len()
     }
 
     /// Total adapter + optimizer bytes across the fleet. Accounting is
@@ -333,8 +554,9 @@ impl WorkerPool {
     /// run's share).
     pub fn total_state_bytes(&self) -> usize {
         let mut seen = BTreeSet::new();
-        self.workers
+        self.members
             .iter()
+            .map(|m| m.transport.as_ref())
             .filter(|w| seen.insert(w.describe()))
             .map(|w| {
                 w.state_bytes().unwrap_or_else(|e| {
@@ -352,10 +574,401 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        for w in &self.workers {
-            w.shutdown();
+        for m in &self.members {
+            m.transport.shutdown();
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// elastic pool supervision
+// ---------------------------------------------------------------------
+
+/// What one membership change moved.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigrationStats {
+    /// users whose owner changed
+    pub users_moved: usize,
+    /// (user, site) shards whose state was shipped
+    pub shards_moved: usize,
+    /// migration blob bytes shipped (export + checkpoint imports)
+    pub bytes_moved: usize,
+}
+
+/// Health + elasticity for a TCP worker pool: heartbeats at adaptation-
+/// interval boundaries, cold-standby promotion when a daemon dies, and
+/// deterministic state migration for every membership change
+/// (rendezvous remap + bit-exact export/import), so the pool can grow,
+/// shrink, and fail over under a live run without moving a loss curve.
+///
+/// With `failover = "migrate"` the supervisor also keeps a **shadow
+/// checkpoint** per (user, site): the state blob as of the last applied
+/// interval. A daemon that dies WITH unexported state is recovered from
+/// the checkpoint — the lost interval's fits are re-dispatched against
+/// it, which reproduces the exact update the dead daemon would have
+/// made (same inputs, same pre-step state, bit-identical kernels).
+pub struct PoolSupervisor {
+    users: usize,
+    sites: Vec<String>,
+    link: TcpLinkOpts,
+    standbys: Vec<String>,
+    /// checkpoints + dead-member recovery enabled (failover = "migrate")
+    migrate: bool,
+    /// liveness sweeps every N flushes (0 = reactive detection only)
+    heartbeat_interval: usize,
+    flushes: usize,
+    checkpoints: BTreeMap<(usize, String), Vec<u8>>,
+}
+
+impl PoolSupervisor {
+    pub fn new(
+        users: usize,
+        sites: Vec<String>,
+        link: TcpLinkOpts,
+        standbys: Vec<String>,
+        migrate: bool,
+        heartbeat_interval: usize,
+    ) -> PoolSupervisor {
+        PoolSupervisor {
+            users,
+            sites,
+            link,
+            standbys,
+            migrate,
+            heartbeat_interval,
+            flushes: 0,
+            checkpoints: BTreeMap::new(),
+        }
+    }
+
+    /// Checkpoints (and therefore dead-member recovery) are on.
+    pub fn migrate_enabled(&self) -> bool {
+        self.migrate
+    }
+
+    /// Standby addresses not yet promoted.
+    pub fn standbys(&self) -> &[String] {
+        &self.standbys
+    }
+
+    /// Record the post-interval state blob for one shard (the recovery
+    /// point a future failover restores).
+    pub fn checkpoint(&mut self, user: usize, site: &str, blob: Vec<u8>) {
+        self.checkpoints.insert((user, site.to_string()), blob);
+    }
+
+    /// Called once per flush. Returns true when this boundary is due a
+    /// proactive liveness sweep (`heartbeat_interval` flushes since the
+    /// last one; 0 disables sweeping).
+    pub fn sweep_due(&mut self) -> bool {
+        if self.heartbeat_interval == 0 {
+            return false;
+        }
+        self.flushes += 1;
+        self.flushes % self.heartbeat_interval == 0
+    }
+
+    /// Heartbeat every member; indices of the ones that cannot answer.
+    pub fn find_dead(&self, pool: &WorkerPool) -> Vec<usize> {
+        let mut dead = Vec::new();
+        for (i, m) in pool.members().iter().enumerate() {
+            if let Err(e) = m.transport().ping() {
+                eprintln!(
+                    "warning: worker {} ({}) failed its heartbeat: {e:#}",
+                    m.key,
+                    m.transport().describe()
+                );
+                dead.push(i);
+            }
+        }
+        dead
+    }
+
+    /// Fail dead members over: remove them, promote standbys into the
+    /// freed slots, remap every user by rendezvous, and migrate state —
+    /// live export from surviving members, shadow checkpoints for the
+    /// dead ones. With no standby left the pool simply shrinks onto the
+    /// survivors. Errors only when no live member remains or a needed
+    /// checkpoint is missing (`failover = "fail"`).
+    pub fn fail_over(
+        &mut self,
+        pool: &mut WorkerPool,
+        dead: &[usize],
+    ) -> Result<MigrationStats> {
+        if dead.is_empty() {
+            return Ok(MigrationStats::default());
+        }
+        let old_keys = pool.keys();
+        let mut dead_keys: BTreeSet<String> = BTreeSet::new();
+        let mut idxs: Vec<usize> = dead.to_vec();
+        idxs.sort_unstable();
+        for &i in idxs.iter().rev() {
+            let m = pool.remove_member(i);
+            eprintln!(
+                "warning: failing over dead worker {} ({}); its users will be \
+                 re-homed",
+                m.key, m.addr
+            );
+            m.transport().shutdown();
+            dead_keys.insert(m.key);
+        }
+        // promote one standby per dead member (a restarted daemon at a
+        // dead address must NOT inherit the dead key, or the remap would
+        // think nothing moved and skip the state import it needs)
+        for _ in 0..dead_keys.len() {
+            while !self.standbys.is_empty() {
+                let addr = self.standbys.remove(0);
+                let mut avoid = pool.keys();
+                avoid.extend(dead_keys.iter().cloned());
+                let key = unique_key(&avoid, &addr);
+                match pool.add_tcp_member_with_key(&addr, key.clone(), &self.link) {
+                    Ok(_) => {
+                        eprintln!("promoted standby {addr} into the pool as {key}");
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "warning: standby {addr} is unreachable ({e:#}); \
+                             trying the next one"
+                        );
+                    }
+                }
+            }
+        }
+        if pool.len() == 0 {
+            bail!(
+                "every worker is dead and no standby could be promoted — the \
+                 pool cannot serve fits"
+            );
+        }
+        self.remap_and_migrate(pool, &old_keys, &dead_keys)
+    }
+
+    /// Gracefully remove the DAEMON at `addr` from the pool — every
+    /// slot backed by it (duplicate `worker_addrs` give one daemon
+    /// several slots, all drained together): export every shard those
+    /// slots own to the new rendezvous owners (bit-exact), evict the
+    /// source copies, then drop the members. The daemon itself stays up
+    /// (and empty) — stopping it is the operator's call.
+    pub fn drain(&mut self, pool: &mut WorkerPool, addr: &str) -> Result<MigrationStats> {
+        let idxs: Vec<usize> = (0..pool.len())
+            .filter(|&i| pool.members()[i].addr == addr)
+            .collect();
+        if idxs.is_empty() {
+            bail!("no pool member at {addr} to drain");
+        }
+        if idxs.len() == pool.len() {
+            bail!("cannot drain the last worker(s) in the pool");
+        }
+        let old_keys = pool.keys();
+        // remove every slot of the daemon (desc order keeps indices
+        // valid); all slots reach the same state table, so one handle
+        // serves every export/evict
+        let mut removed: Vec<PoolMember> = Vec::with_capacity(idxs.len());
+        for &i in idxs.iter().rev() {
+            removed.push(pool.remove_member(i));
+        }
+        let removed_keys: BTreeSet<&String> = removed.iter().map(|m| &m.key).collect();
+        let daemon = removed[0].transport();
+        let mut stats = MigrationStats::default();
+        let sites = self.sites.clone();
+        for user in 0..self.users {
+            if !removed_keys.contains(&old_keys[rendezvous_owner(&old_keys, user)]) {
+                continue;
+            }
+            let new_idx = pool.shard_of(user);
+            let mut moved = false;
+            for site in &sites {
+                let blob = daemon.export_state(user, site)?;
+                stats.shards_moved += 1;
+                stats.bytes_moved += blob.len();
+                if self.migrate {
+                    // the blob IS the current state — checkpoint it
+                    // without another export round-trip
+                    self.checkpoints.insert((user, site.clone()), blob.clone());
+                }
+                // import BEFORE evict: until the new owner holds the
+                // shard, the source copy is the only live one
+                pool.worker(new_idx).import_state(blob)?;
+                daemon.evict_state(user, site)?;
+                moved = true;
+            }
+            if moved {
+                stats.users_moved += 1;
+            }
+        }
+        for m in &removed {
+            m.transport().shutdown();
+        }
+        Ok(stats)
+    }
+
+    /// Grow the pool by one daemon: connect it, remap, and migrate the
+    /// users the new member wins (live export from their old owners).
+    pub fn add(&mut self, pool: &mut WorkerPool, addr: &str) -> Result<MigrationStats> {
+        let old_keys = pool.keys();
+        pool.add_tcp_member(addr, &self.link)?;
+        self.remap_and_migrate(pool, &old_keys, &BTreeSet::new())
+    }
+
+    /// Move every user whose rendezvous owner changed between `old_keys`
+    /// and the pool's current keys: live export + evict when the old
+    /// owner is still a member, shadow checkpoint when it is dead.
+    fn remap_and_migrate(
+        &mut self,
+        pool: &mut WorkerPool,
+        old_keys: &[String],
+        dead_keys: &BTreeSet<String>,
+    ) -> Result<MigrationStats> {
+        let mut stats = MigrationStats::default();
+        if old_keys.is_empty() {
+            return Ok(stats);
+        }
+        let sites = self.sites.clone();
+        for user in 0..self.users {
+            let old_key = &old_keys[rendezvous_owner(old_keys, user)];
+            let new_idx = pool.shard_of(user);
+            if &pool.members()[new_idx].key == old_key {
+                continue;
+            }
+            let src_idx = pool.index_of_key(old_key);
+            if let Some(si) = src_idx {
+                // same daemon backing both slots (duplicate addresses):
+                // the state table is shared, nothing moves on the wire
+                let (sa, da) = (&pool.members()[si].addr, &pool.members()[new_idx].addr);
+                if !sa.is_empty() && sa == da {
+                    continue;
+                }
+            }
+            let mut moved = false;
+            for site in &sites {
+                let blob = match src_idx {
+                    Some(si) => pool.worker(si).export_state(user, site)?,
+                    None => {
+                        if dead_keys.contains(old_key) && !self.migrate {
+                            bail!(
+                                "worker {old_key} died holding (user {user}, site \
+                                 {site}) and failover = \"fail\" keeps no shadow \
+                                 checkpoints — set failover = \"migrate\" to \
+                                 survive daemon loss"
+                            );
+                        }
+                        self.checkpoints
+                            .get(&(user, site.clone()))
+                            .cloned()
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "worker {old_key} died holding (user {user}, \
+                                     site {site}) and no shadow checkpoint exists \
+                                     for it — state is unrecoverable"
+                                )
+                            })?
+                    }
+                };
+                stats.shards_moved += 1;
+                stats.bytes_moved += blob.len();
+                if self.migrate {
+                    // the blob IS the current state — checkpoint it
+                    // without another export round-trip
+                    self.checkpoints.insert((user, site.clone()), blob.clone());
+                }
+                pool.worker(new_idx).import_state(blob)?;
+                // evict only AFTER the import landed: until then the
+                // source copy is the only live one, and a failed import
+                // must not strand the shard with zero owners
+                if let Some(si) = src_idx {
+                    pool.worker(si).evict_state(user, site)?;
+                }
+                moved = true;
+            }
+            if moved {
+                stats.users_moved += 1;
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Offline pool rebalance for `cola pool --add/--remove/--drain`: given
+/// the old and new address lists, move every re-homed user's state
+/// between daemons directly (export -> import -> evict), with no trainer
+/// in the loop. Both sides must be reachable; daemon state is keyed
+/// under `link.tenant`.
+pub fn rebalance_daemons(
+    old_addrs: &[String],
+    new_addrs: &[String],
+    users: usize,
+    sites: &[String],
+    link: &TcpLinkOpts,
+) -> Result<MigrationStats> {
+    if old_addrs.is_empty() {
+        bail!("the old pool is empty — there is no state to rebalance");
+    }
+    if new_addrs.is_empty() {
+        bail!("the new pool would be empty — refusing to strand every shard");
+    }
+    fn ensure(
+        conns: &mut BTreeMap<String, TcpWorker>,
+        addr: &str,
+        link: &TcpLinkOpts,
+    ) -> Result<()> {
+        if !conns.contains_key(addr) {
+            let id = conns.len();
+            conns.insert(
+                addr.to_string(),
+                TcpWorker::connect_with_link_opts(id, addr, link)?,
+            );
+        }
+        Ok(())
+    }
+    let old_keys = member_keys(old_addrs);
+    let new_keys = member_keys(new_addrs);
+    let mut conns: BTreeMap<String, TcpWorker> = BTreeMap::new();
+    let mut stats = MigrationStats::default();
+    for user in 0..users {
+        let old_key = &old_keys[rendezvous_owner(&old_keys, user)];
+        let new_key = &new_keys[rendezvous_owner(&new_keys, user)];
+        if old_key == new_key {
+            continue;
+        }
+        let (src, dst) = (key_addr(old_key), key_addr(new_key));
+        if src == dst {
+            // different slot, same daemon: shared state table, no move
+            continue;
+        }
+        ensure(&mut conns, src, link)?;
+        ensure(&mut conns, dst, link)?;
+        let mut moved = false;
+        for site in sites {
+            let blob = match conns[src].export_state(user, site) {
+                Ok(b) => b,
+                // Resumability: a previous partially-failed rebalance may
+                // already have moved this shard (export -> import -> evict
+                // is not atomic across users). Absent at the source AND
+                // present at the destination = already done, skip; any
+                // other failure is real.
+                Err(e) => {
+                    if format!("{e:#}").contains("no adapter")
+                        && conns[dst].snapshot(user, site).is_ok()
+                    {
+                        continue;
+                    }
+                    return Err(e.context(format!(
+                        "exporting (user {user}, site {site}) from {src}"
+                    )));
+                }
+            };
+            stats.shards_moved += 1;
+            stats.bytes_moved += blob.len();
+            conns[dst].import_state(blob)?;
+            conns[src].evict_state(user, site)?;
+            moved = true;
+        }
+        if moved {
+            stats.users_moved += 1;
+        }
+    }
+    Ok(stats)
 }
 
 /// Fully-qualified adapter key. The tenant is `""` for in-process pools
@@ -471,6 +1084,68 @@ impl WorkerCore {
             .values()
             .map(|a| a.params.bytes() + a.opt.bytes())
             .sum()
+    }
+
+    /// Current number of in-flight fits (checked-out adapters) — the
+    /// load figure a `Pong` heartbeat reply carries.
+    pub fn load(&self) -> u64 {
+        lock(&self.adapters).busy.len() as u64
+    }
+
+    /// Serialize one shard's full adapter + optimizer state as a
+    /// bit-exact migration blob ([`crate::transport::wire::encode_state`]).
+    /// Rejected while a fit for the key is in flight — a mid-step export
+    /// would capture a torn snapshot.
+    pub fn export_state(&self, tenant: &str, user: usize, site: &str) -> Result<Vec<u8>> {
+        let key = (tenant.to_string(), user, site.to_string());
+        let tab = lock(&self.adapters);
+        if tab.busy.contains(&key) {
+            bail!(
+                "worker {}: cannot export {} while a fit for it is in flight",
+                self.id,
+                key_label(&key)
+            );
+        }
+        let a = tab
+            .map
+            .get(&key)
+            .ok_or_else(|| anyhow!("worker {}: no adapter {}", self.id, key_label(&key)))?;
+        Ok(crate::transport::wire::encode_state(user, site, a))
+    }
+
+    /// Install a migration blob under `tenant`, replacing any existing
+    /// state for the blob's `(user, site)` key. Returns the key so
+    /// callers can log what landed.
+    pub fn import_state(&self, tenant: &str, blob: &[u8]) -> Result<(usize, String)> {
+        let (user, site, adapter) = crate::transport::wire::decode_state(blob)?;
+        let key = (tenant.to_string(), user, site.clone());
+        let mut tab = lock(&self.adapters);
+        if tab.busy.contains(&key) {
+            bail!(
+                "worker {}: cannot import {} while a fit for it is in flight",
+                self.id,
+                key_label(&key)
+            );
+        }
+        tab.map.insert(key, adapter);
+        Ok((user, site))
+    }
+
+    /// Drop a shard's state after it migrated away. Evicting an absent
+    /// key is a no-op; evicting a busy key is an error (the fit's
+    /// check-in would resurrect it).
+    pub fn evict_state(&self, tenant: &str, user: usize, site: &str) -> Result<()> {
+        let key = (tenant.to_string(), user, site.to_string());
+        let mut tab = lock(&self.adapters);
+        if tab.busy.contains(&key) {
+            bail!(
+                "worker {}: cannot evict {} while a fit for it is in flight",
+                self.id,
+                key_label(&key)
+            );
+        }
+        tab.map.remove(&key);
+        Ok(())
     }
 
     fn checkout(&self, key: &TenantKey) -> Result<SiteAdapter> {
@@ -731,6 +1406,15 @@ fn worker_main(
             WorkerCmd::StateBytes(reply) => {
                 let _ = reply.send(core.state_bytes());
             }
+            WorkerCmd::Export { user, site, reply } => {
+                let _ = reply.send(core.export_state("", user, &site));
+            }
+            WorkerCmd::Import { blob, reply } => {
+                let _ = reply.send(core.import_state("", &blob).map(|_| ()));
+            }
+            WorkerCmd::Evict { user, site, reply } => {
+                let _ = reply.send(core.evict_state("", user, &site));
+            }
             WorkerCmd::Shutdown => break,
         }
     }
@@ -788,27 +1472,128 @@ mod tests {
         }
     }
 
-    /// Pin the sharding contract: user u maps to worker u % len, and the
-    /// mapping is what `for_user` dispatches on.
+    /// Pin the sharding contract: `shard_of` is the rendezvous winner
+    /// over the member keys, `for_user` dispatches on it, and the
+    /// mapping matches the standalone [`rendezvous_owner`] (which `cola
+    /// pool` uses offline — the two must never disagree).
     #[test]
-    fn for_user_sharding_is_user_mod_len() {
+    fn for_user_sharding_is_rendezvous_over_member_keys() {
         let pool = WorkerPool::spawn(3, OffloadTarget::NativeCpu, manifest(), None).unwrap();
         assert_eq!(pool.len(), 3);
-        for user in 0..9 {
-            assert_eq!(pool.shard_of(user), user % 3);
-            assert_eq!(pool.for_user(user).id(), user % 3);
-            assert_eq!(pool.worker(user % 3).id(), user % 3);
+        let keys = pool.keys();
+        assert_eq!(keys, vec!["local-0", "local-1", "local-2"]);
+        let mut seen = BTreeSet::new();
+        for user in 0..64 {
+            let shard = pool.shard_of(user);
+            assert_eq!(shard, rendezvous_owner(&keys, user));
+            assert_eq!(pool.for_user(user).id(), pool.worker(shard).id());
+            seen.insert(shard);
+        }
+        // 64 users over 3 members: every member owns someone
+        assert_eq!(seen.len(), 3, "rendezvous left a member idle: {seen:?}");
+    }
+
+    /// The elasticity property the whole migration design leans on:
+    /// adding a member moves users ONLY onto the new member, and
+    /// removing it restores the exact original mapping.
+    #[test]
+    fn rendezvous_add_moves_only_the_minimal_user_set() {
+        let two = member_keys(&["a:1".into(), "b:1".into()]);
+        let three = member_keys(&["a:1".into(), "b:1".into(), "c:1".into()]);
+        let mut moved = 0;
+        for user in 0..500 {
+            let before = &two[rendezvous_owner(&two, user)];
+            let after = &three[rendezvous_owner(&three, user)];
+            if before != after {
+                assert_eq!(after, "c:1", "user {user} moved {before} -> {after}");
+                moved += 1;
+            }
+        }
+        // roughly a third should move; certainly not none, and far from all
+        assert!(moved > 0, "adding a member stole no users");
+        assert!(moved < 400, "adding one member reshuffled {moved}/500 users");
+        // users NOT owned by c under the three-member set are unaffected
+        // by c's removal — removal only re-homes the removed member's own
+        // users (the weights of survivors never change)
+        for user in 0..500 {
+            let o3 = rendezvous_owner(&three, user);
+            if three[o3] != "c:1" {
+                assert_eq!(two[rendezvous_owner(&two, user)], three[o3]);
+            }
         }
     }
 
     #[test]
-    fn pool_size_change_rejected_against_existing_state() {
-        let pool = WorkerPool::spawn(2, OffloadTarget::NativeCpu, manifest(), None).unwrap();
-        pool.verify_shard_count(2).unwrap();
-        for wrong in [1, 3] {
-            let err = pool.verify_shard_count(wrong).unwrap_err();
-            assert!(format!("{err}").contains("reshuffle"), "{err}");
+    fn member_keys_deduplicate_shared_daemons() {
+        let keys = member_keys(&["a:1".into(), "a:1".into(), "b:1".into(), "a:1".into()]);
+        assert_eq!(keys, vec!["a:1", "a:1#2", "b:1", "a:1#3"]);
+        for k in &keys {
+            assert_eq!(key_addr(k), if k.starts_with('a') { "a:1" } else { "b:1" });
         }
+        // a non-suffix '#' (not a number) is part of the address
+        assert_eq!(key_addr("weird#host"), "weird#host");
+    }
+
+    #[test]
+    fn core_state_export_import_round_trips_bitwise() {
+        use crate::adapters::OptimizerCfg;
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        // AdamW so the blob carries non-trivial moments, not just params
+        let mut rng = crate::rng::Rng::new(9);
+        let params =
+            AdapterParams::init(crate::config::AdapterKind::LowRank, 6, 4, 3, 5, &mut rng);
+        let adapter = SiteAdapter::new("s", params, &OptimizerCfg::adamw(1e-3, 1e-4));
+        core.register("", 3, "s", adapter).unwrap();
+        // advance past init so moments are non-trivial
+        core.fit("", job_for(3, "s", 5)).unwrap();
+        let blob = core.export_state("", 3, "s").unwrap();
+
+        let fresh = WorkerCore::new(1, OffloadTarget::NativeCpu, manifest(), None);
+        let (user, site) = fresh.import_state("", &blob).unwrap();
+        assert_eq!((user, site.as_str()), (3, "s"));
+
+        // bitwise-equal snapshot...
+        let a = core.snapshot("", 3, "s").unwrap();
+        let b = fresh.snapshot("", 3, "s").unwrap();
+        for (x, y) in a.tensors().into_iter().zip(b.tensors()) {
+            assert_eq!(x, y, "imported params diverged from the source");
+        }
+        // ...and a bitwise-equal NEXT fit (moments made the trip too)
+        let r1 = core.fit("", job_for(3, "s", 4)).unwrap();
+        let r2 = fresh.fit("", job_for(3, "s", 4)).unwrap();
+        let (p1, p2) = (r1.new_params.unwrap(), r2.new_params.unwrap());
+        assert_eq!(p1.len(), p2.len());
+        for (x, y) in p1.iter().zip(&p2) {
+            assert_eq!(x, y, "post-import fit diverged — moments were not bit-exact");
+        }
+    }
+
+    #[test]
+    fn core_import_rejects_garbage_and_evict_is_idempotent() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        assert!(core.import_state("", &[]).is_err());
+        assert!(core.import_state("", &[1, 2, 3, 4]).is_err());
+        // exporting a missing key names it
+        let err = core.export_state("", 0, "s").unwrap_err();
+        assert!(format!("{err}").contains("no adapter"), "{err}");
+        // evict: absent key is a no-op, present key actually frees state
+        core.evict_state("", 0, "s").unwrap();
+        core.register("", 0, "s", lowrank_adapter(1)).unwrap();
+        assert!(core.state_bytes() > 0);
+        core.evict_state("", 0, "s").unwrap();
+        assert_eq!(core.state_bytes(), 0);
+        core.evict_state("", 0, "s").unwrap();
+    }
+
+    #[test]
+    fn core_export_respects_tenant_namespaces() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        core.register("a", 0, "s", lowrank_adapter(1)).unwrap();
+        assert!(core.export_state("b", 0, "s").is_err());
+        let blob = core.export_state("a", 0, "s").unwrap();
+        // importing under another tenant lands in THAT namespace
+        core.import_state("b", &blob).unwrap();
+        assert!(core.snapshot("b", 0, "s").is_ok());
     }
 
     #[test]

@@ -17,23 +17,25 @@
 //! artifacts with the optimizer on the server — the thing ColA avoids.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::buffer::AdaptationBuffers;
 use super::driver::{Driver, TaskData};
-use super::offload::{FitJob, FitResult, TransferModel, WorkerPool};
+use super::offload::{
+    rendezvous_owner, FitJob, FitResult, PoolSupervisor, TransferModel, WorkerPool,
+};
 use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
-use crate::config::{AdapterKind, Method, Mode, Optimizer, Task, TrainConfig,
-                    TransportKind};
+use crate::config::{AdapterKind, FailoverPolicy, Method, Mode, Optimizer, Task,
+                    TrainConfig, TransportKind};
 use crate::data::Split;
 use crate::merge;
 use crate::metrics::{Curve, Timings};
 use crate::runtime::{Input, Runtime, Value};
 use crate::tensor::{self, Tensor};
 use crate::transport::tcp::TcpLinkOpts;
-use crate::transport::Transport;
+use crate::transport::{wire, Transport};
 
 /// Summary of a finished run (consumed by benches/examples).
 #[derive(Clone, Debug)]
@@ -59,10 +61,41 @@ impl RunReport {
 /// One dispatched-but-unapplied worker fit. Carrying (user, site) next
 /// to the reply channel lets a dead worker link surface as an error
 /// naming exactly whose update was lost — not a bare channel panic.
+/// With `failover = "migrate"` the job itself rides along too, so a
+/// fit lost to a dying daemon can be re-dispatched against the restored
+/// shadow checkpoint.
 struct PendingFit {
     user: usize,
     site: String,
+    job: Option<FitJob>,
     rx: std::sync::mpsc::Receiver<Result<FitResult>>,
+}
+
+/// One fit of the interval being settled: its identity, the retained
+/// job (migrate mode), its current outcome, and whether its shadow
+/// checkpoint already reflects this interval's optimizer step. The
+/// `refreshed` bit is what makes recovery exactly-once: a slot whose
+/// checkpoint is still pre-step must be re-run after a restore (the
+/// step died with the daemon), while a refreshed slot must NOT be (the
+/// restore already carries the step — re-running would double-apply).
+struct IntervalSlot {
+    user: usize,
+    site: String,
+    job: Option<FitJob>,
+    outcome: Result<FitResult>,
+    refreshed: bool,
+}
+
+/// Recovery rounds per interval before giving up: each round can absorb
+/// one more member death (sweep -> fail over -> re-dispatch), so this
+/// bounds cascading failures, not ordinary operation.
+const MAX_RECOVERY_ROUNDS: usize = 4;
+
+/// Move a slot's error out (leaving a tombstone) so it can be returned
+/// by value with context attached.
+fn take_slot_error(s: &mut IntervalSlot) -> anyhow::Error {
+    std::mem::replace(&mut s.outcome, Err(anyhow!("error already reported")))
+        .expect_err("take_slot_error on an Ok slot")
 }
 
 pub struct Trainer {
@@ -75,6 +108,11 @@ pub struct Trainer {
     tunables: BTreeMap<String, Tensor>,
     coupled_opt: Option<OptState>,
     pool: Option<WorkerPool>,
+    /// elastic-pool health + migration (tcp transport only)
+    supervisor: Option<PoolSupervisor>,
+    /// fits transiently lost to dying daemons and recovered by
+    /// re-dispatch, in loss order — each names its (user, site)
+    lost: Vec<(usize, String)>,
     /// in-flight worker fits (async offload overlap)
     pending: Vec<PendingFit>,
     buffers: AdaptationBuffers,
@@ -119,6 +157,8 @@ impl Trainer {
             tunables: BTreeMap::new(),
             coupled_opt: None,
             pool: None,
+            supervisor: None,
+            lost: Vec::new(),
             pending: Vec::new(),
             buffers: AdaptationBuffers::default(),
             timings: Timings::default(),
@@ -171,22 +211,47 @@ impl Trainer {
 
     fn init_cola(&mut self, kind: AdapterKind) -> Result<()> {
         let transfer = None::<TransferModel>;
-        let pool = match self.cfg.offload_transport {
-            TransportKind::Local => WorkerPool::spawn(
-                self.cfg.workers, self.cfg.offload,
-                self.rt.manifest.clone(), transfer)?,
+        let migrate = self.cfg.failover == FailoverPolicy::Migrate;
+        let mut link = TcpLinkOpts {
+            tenant: self.cfg.offload_tenant.clone(),
+            batch: self.cfg.offload_batch,
+            inflight: self.cfg.offload_inflight,
+            ..TcpLinkOpts::default()
+        };
+        if migrate {
+            // recovery owns retries under migrate: a long blind
+            // reconnect backoff against a dead daemon would only delay
+            // the failover that actually fixes things
+            link.attempts = 2;
+            link.base = Duration::from_millis(30);
+        }
+        let (pool, mut supervisor) = match self.cfg.offload_transport {
+            TransportKind::Local => (
+                WorkerPool::spawn(self.cfg.workers, self.cfg.offload,
+                                  self.rt.manifest.clone(), transfer)?,
+                None,
+            ),
             // remote daemons pick their own offload target (`cola worker
             // --offload`); determinism holds either way because both
             // targets implement the same Eq. 6 update bit-exactly
-            TransportKind::Tcp => WorkerPool::connect_tcp(
-                &self.cfg.worker_addrs,
-                &TcpLinkOpts {
-                    tenant: self.cfg.offload_tenant.clone(),
-                    batch: self.cfg.offload_batch,
-                    inflight: self.cfg.offload_inflight,
-                    ..TcpLinkOpts::default()
-                },
-            )?,
+            TransportKind::Tcp => {
+                let (pool, standbys) = WorkerPool::connect_tcp_with_standbys(
+                    &self.cfg.worker_addrs,
+                    &self.cfg.standby_addrs,
+                    &link,
+                )?;
+                let sites: Vec<String> =
+                    self.driver.sites.iter().map(|s| s.site.clone()).collect();
+                let sup = PoolSupervisor::new(
+                    self.cfg.users,
+                    sites,
+                    link.clone(),
+                    standbys,
+                    migrate,
+                    self.cfg.heartbeat_interval,
+                );
+                (pool, Some(sup))
+            }
         };
         let rank = self.rt.manifest.rank;
         let hidden = self.rt.manifest.mlp_hidden;
@@ -207,12 +272,23 @@ impl Trainer {
                         )?;
                     }
                 }
-                pool.for_user(user)
-                    .register(user, &s.site,
-                              SiteAdapter::new(&s.site, params, &self.opt_cfg))?;
+                let adapter = SiteAdapter::new(&s.site, params, &self.opt_cfg);
+                if migrate {
+                    // seed the shadow checkpoint from the state we are
+                    // about to install — no extra round-trip needed
+                    if let Some(sup) = supervisor.as_mut() {
+                        sup.checkpoint(
+                            user,
+                            &s.site,
+                            wire::encode_state(user, &s.site, &adapter),
+                        );
+                    }
+                }
+                pool.for_user(user).register(user, &s.site, adapter)?;
             }
         }
         self.pool = Some(pool);
+        self.supervisor = supervisor;
         Ok(())
     }
 
@@ -277,6 +353,18 @@ impl Trainer {
     // ------------------------------------------------------------------
 
     pub fn run(&mut self) -> Result<RunReport> {
+        self.run_with_hook(|_, _| Ok(()))
+    }
+
+    /// [`Self::run`] with a callback invoked after every training step
+    /// (and its interval flush, when the step sits on a boundary). The
+    /// chaos/soak harnesses use it to kill, drain, and add pool members
+    /// at deterministic points mid-run; operational tooling can use it
+    /// for progress reporting.
+    pub fn run_with_hook<F>(&mut self, mut hook: F) -> Result<RunReport>
+    where
+        F: FnMut(&mut Trainer, u64) -> Result<()>,
+    {
         let mut train_loss = Curve::new("train_loss");
         let mut train_acc = Curve::new("train_acc");
         let mut eval_loss = Curve::new("eval_loss");
@@ -297,6 +385,7 @@ impl Trainer {
                     eval_acc.push(t + 1, a);
                 }
             }
+            hook(self, t)?;
         }
         // final drain so no adaptation data is dropped
         self.flush_adapters()?;
@@ -463,8 +552,16 @@ impl Trainer {
             // interval of jobs
             self.collect_pending()?;
         }
+        // proactive liveness sweep at the interval boundary — detect a
+        // dead member BEFORE dispatching this interval into its socket
+        self.sweep_pool()?;
         if !self.buffers.is_empty() {
             let merged = self.cfg.mode == Mode::Merged;
+            let keep_jobs = self
+                .supervisor
+                .as_ref()
+                .map(|s| s.migrate_enabled())
+                .unwrap_or(false);
             let jobs = self.buffers.drain_all();
             // re-check instead of unwrap: a worker link error earlier in
             // this interval must not turn into a server panic here
@@ -479,15 +576,19 @@ impl Trainer {
             // delta adds are float sums whose order is part of the
             // determinism contract; grouping must never reorder applies.
             let n = jobs.len();
-            let mut meta: Vec<(usize, String)> = Vec::with_capacity(n);
+            let mut meta: Vec<(usize, String, Option<FitJob>)> = Vec::with_capacity(n);
             let mut per_worker: BTreeMap<usize, (Vec<usize>, Vec<FitJob>)> =
                 BTreeMap::new();
             for (i, (user, site, x, ghat, grad_scale)) in jobs.into_iter().enumerate()
             {
-                meta.push((user, site.clone()));
+                let job = FitJob { user, site: site.clone(), x, ghat, grad_scale, merged };
+                // under failover = "migrate" the job is retained until
+                // its reply applies, so a copy can be re-dispatched
+                // against a restored checkpoint
+                meta.push((user, site, keep_jobs.then(|| job.clone())));
                 let slot = per_worker.entry(pool.shard_of(user)).or_default();
                 slot.0.push(i);
-                slot.1.push(FitJob { user, site, x, ghat, grad_scale, merged });
+                slot.1.push(job);
             }
             let mut slots: Vec<Option<std::sync::mpsc::Receiver<Result<FitResult>>>> =
                 (0..n).map(|_| None).collect();
@@ -498,12 +599,12 @@ impl Trainer {
                     slots[i] = Some(rx);
                 }
             }
-            for ((user, site), rx) in meta.into_iter().zip(slots) {
+            for ((user, site, job), rx) in meta.into_iter().zip(slots) {
                 let rx = rx.ok_or_else(|| {
                     anyhow!("fit dispatch returned no reply channel for user \
                              {user} site {site}")
                 })?;
-                self.pending.push(PendingFit { user, site, rx });
+                self.pending.push(PendingFit { user, site, job, rx });
             }
         }
         if self.cfg.async_offload {
@@ -513,33 +614,290 @@ impl Trainer {
         self.collect_pending()
     }
 
+    /// Heartbeat the pool when a sweep is due and fail dead members
+    /// over (standby promotion + checkpoint restore) BEFORE any
+    /// dispatch. Only active under `failover = "migrate"`: with
+    /// `"fail"` the trainer sends no v3 control traffic at all — the
+    /// wire stays exactly as compatible as before this feature, and a
+    /// death surfaces reactively through the lost fits themselves.
+    fn sweep_pool(&mut self) -> Result<()> {
+        let Trainer { supervisor, pool, timings, .. } = self;
+        let (Some(sup), Some(pool)) = (supervisor.as_mut(), pool.as_mut()) else {
+            return Ok(());
+        };
+        if !sup.migrate_enabled() || !sup.sweep_due() {
+            return Ok(());
+        }
+        let dead = sup.find_dead(pool);
+        if dead.is_empty() {
+            return Ok(());
+        }
+        let stats = sup.fail_over(pool, &dead)?;
+        timings.migrations += 1;
+        timings.migrated_state_bytes += stats.bytes_moved as u64;
+        Ok(())
+    }
+
     /// Number of FitJob replies dispatched but not yet applied — the
     /// async-offload staleness window (<= users * sites by construction).
     pub fn in_flight(&self) -> usize {
         self.pending.len()
     }
 
-    /// Apply all in-flight worker replies to the server state.
+    /// Fits transiently lost to dying workers and recovered by
+    /// re-dispatch, in loss order — each names its (user, site). Empty
+    /// on an undisturbed run.
+    pub fn lost_fits(&self) -> &[(usize, String)] {
+        &self.lost
+    }
+
+    /// Gracefully remove the daemon at `addr` from the pool mid-run:
+    /// pending fits settle first, then every shard it owns migrates
+    /// bit-exactly to its new rendezvous owner. The daemon is left
+    /// running (and empty) — stopping it is the operator's call. Loss
+    /// curves are unaffected by construction.
+    pub fn drain_worker(&mut self, addr: &str) -> Result<()> {
+        self.collect_pending()?;
+        let Trainer { supervisor, pool, timings, .. } = self;
+        let (Some(sup), Some(pool)) = (supervisor.as_mut(), pool.as_mut()) else {
+            bail!("drain_worker needs a supervised tcp worker pool");
+        };
+        let stats = sup.drain(pool, addr)?;
+        timings.migrations += 1;
+        timings.migrated_state_bytes += stats.bytes_moved as u64;
+        println!(
+            "drained worker {addr}: moved {} users / {} shards ({} bytes)",
+            stats.users_moved, stats.shards_moved, stats.bytes_moved
+        );
+        Ok(())
+    }
+
+    /// Grow the pool by one daemon mid-run: pending fits settle first,
+    /// then the users the new member wins migrate onto it (live,
+    /// bit-exact). The old `verify_shard_count` hard error is gone —
+    /// this IS the resize path.
+    pub fn add_worker(&mut self, addr: &str) -> Result<()> {
+        self.collect_pending()?;
+        let Trainer { supervisor, pool, timings, .. } = self;
+        let (Some(sup), Some(pool)) = (supervisor.as_mut(), pool.as_mut()) else {
+            bail!("add_worker needs a supervised tcp worker pool");
+        };
+        let stats = sup.add(pool, addr)?;
+        timings.migrations += 1;
+        timings.migrated_state_bytes += stats.bytes_moved as u64;
+        println!(
+            "added worker {addr}: moved {} users / {} shards ({} bytes)",
+            stats.users_moved, stats.shards_moved, stats.bytes_moved
+        );
+        Ok(())
+    }
+
+    /// Apply all in-flight worker replies to the server state. With
+    /// `failover = "migrate"`, replies lost to a dying daemon trigger a
+    /// recovery round instead of aborting: the pool fails over, the
+    /// affected shards restore from shadow checkpoints, the lost jobs
+    /// re-dispatch, and ONLY THEN does anything apply — in the original
+    /// dispatch order, exactly once, so the loss curve stays
+    /// byte-identical to an undisturbed run.
     fn collect_pending(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
         }
-        let mut results = Vec::new();
+        let mut slots: Vec<IntervalSlot> = Vec::with_capacity(self.pending.len());
         for p in self.pending.drain(..) {
             // recv fails only when the worker link died before replying
             // (remote daemon crash / dropped connection mid-interval)
-            let r = p
-                .rx
-                .recv()
-                .map_err(|_| {
-                    anyhow!("worker link dropped mid-interval: no fit reply \
-                             for user {} site {}", p.user, p.site)
-                })?
-                .with_context(|| {
+            let outcome = match p.rx.recv() {
+                Ok(r) => r.with_context(|| {
                     format!("fit failed for user {} site {}", p.user, p.site)
-                })?;
-            results.push(r);
+                }),
+                Err(_) => Err(anyhow!(
+                    "worker link dropped mid-interval: no fit reply for user \
+                     {} site {}",
+                    p.user,
+                    p.site
+                )),
+            };
+            slots.push(IntervalSlot {
+                user: p.user,
+                site: p.site,
+                job: p.job,
+                outcome,
+                refreshed: false,
+            });
         }
+        self.settle_interval(&mut slots)?;
+        let mut results = Vec::with_capacity(slots.len());
+        for s in slots {
+            results.push(s.outcome?);
+        }
+        self.apply_fit_results(results)
+    }
+
+    /// Drive an interval's slots to all-Ok with fresh checkpoints, or
+    /// fail. Each recovery round can absorb one more member death;
+    /// failures that a dead member does NOT explain (remote shape
+    /// errors, busy keys, ...) propagate untouched — recovery must
+    /// never mask a real bug as a transient.
+    fn settle_interval(&mut self, slots: &mut [IntervalSlot]) -> Result<()> {
+        let mut rounds = 0;
+        loop {
+            if slots.iter().any(|s| s.outcome.is_err()) {
+                rounds += 1;
+                if rounds == 1 {
+                    // one stalled interval, however many recovery rounds
+                    // a cascading failure ends up costing it
+                    self.timings.stall_intervals += 1;
+                }
+                if rounds > MAX_RECOVERY_ROUNDS {
+                    let first = slots.iter_mut().find(|s| s.outcome.is_err());
+                    let e = take_slot_error(first.expect("checked above"));
+                    return Err(e.context(format!(
+                        "interval recovery did not converge after \
+                         {MAX_RECOVERY_ROUNDS} rounds"
+                    )));
+                }
+                self.recover_round(slots)?;
+                continue;
+            }
+            // every fit is in; refresh the shadow checkpoints. A worker
+            // dying DURING refresh re-marks its slots as lost (their
+            // post-step state died unexported) and loops back into
+            // recovery.
+            if !self.refresh_checkpoints(slots)? {
+                continue;
+            }
+            return Ok(());
+        }
+    }
+
+    /// One recovery round: heartbeat the pool, fail dead members over
+    /// (standby promotion + rendezvous remap + checkpoint restore), and
+    /// re-dispatch every slot whose shard's step died with its owner.
+    fn recover_round(&mut self, slots: &mut [IntervalSlot]) -> Result<()> {
+        let Trainer { supervisor, pool, timings, lost, .. } = self;
+        let sup = match supervisor.as_mut() {
+            Some(s) if s.migrate_enabled() => s,
+            _ => {
+                let s = slots.iter_mut().find(|s| s.outcome.is_err());
+                return Err(take_slot_error(s.expect("recover_round needs an error")));
+            }
+        };
+        let pool = pool.as_mut().ok_or_else(|| anyhow!("no worker pool"))?;
+        let old_keys = pool.keys();
+        let dead = sup.find_dead(pool);
+        let dead_keys: std::collections::BTreeSet<&String> =
+            dead.iter().map(|&i| &old_keys[i]).collect();
+        // a failure whose owner is alive is a real error, not a transient
+        for s in slots.iter_mut() {
+            if s.outcome.is_err() {
+                let owner = &old_keys[rendezvous_owner(&old_keys, s.user)];
+                if !dead_keys.contains(owner) {
+                    return Err(take_slot_error(s).context(format!(
+                        "fit for (user {}, site {}) failed but its worker \
+                         {owner} is alive — not a failover case",
+                        s.user, s.site
+                    )));
+                }
+            }
+        }
+        let stats = sup.fail_over(pool, &dead)?;
+        timings.migrations += 1;
+        timings.migrated_state_bytes += stats.bytes_moved as u64;
+        // Re-dispatch everything the dead members owned whose step is
+        // not yet in a checkpoint. That includes fits that SUCCEEDED on
+        // a dead daemon before it died: their reply was real, but the
+        // stepped state burned with the daemon, and the checkpoint
+        // restore rewound the shard to pre-step — re-running the same
+        // job against it reproduces the identical update (same inputs,
+        // same state, bit-identical kernels). Refreshed slots keep
+        // their results: their checkpoints already carry the step.
+        let mut retries: Vec<(usize, std::sync::mpsc::Receiver<Result<FitResult>>)> =
+            Vec::new();
+        for (i, s) in slots.iter_mut().enumerate() {
+            let owner = &old_keys[rendezvous_owner(&old_keys, s.user)];
+            if !dead_keys.contains(owner) || s.refreshed {
+                continue;
+            }
+            if s.outcome.is_err() {
+                eprintln!(
+                    "warning: fit for (user {}, site {}) was lost to dying \
+                     worker {owner}; re-dispatching after failover",
+                    s.user, s.site
+                );
+                lost.push((s.user, s.site.clone()));
+                timings.lost_fits += 1;
+            }
+            let job = s.job.clone().ok_or_else(|| {
+                anyhow!(
+                    "no retained job for (user {}, site {}) — cannot re-dispatch \
+                     (failover bookkeeping bug)",
+                    s.user,
+                    s.site
+                )
+            })?;
+            timings.round_trips += 1;
+            retries.push((i, pool.for_user(s.user).fit(job)?));
+        }
+        for (i, rx) in retries {
+            let s = &mut slots[i];
+            s.outcome = match rx.recv() {
+                Ok(r) => r.with_context(|| {
+                    format!("re-dispatched fit failed for user {} site {}", s.user, s.site)
+                }),
+                Err(_) => Err(anyhow!(
+                    "worker link dropped during recovery: no fit reply for \
+                     user {} site {}",
+                    s.user,
+                    s.site
+                )),
+            };
+        }
+        Ok(())
+    }
+
+    /// Export every slot's post-step state into the shadow checkpoint
+    /// (`failover = "migrate"` only — otherwise a no-op). Returns false
+    /// when an export failed and its slots were re-marked lost.
+    fn refresh_checkpoints(&mut self, slots: &mut [IntervalSlot]) -> Result<bool> {
+        let Trainer { supervisor, pool, .. } = self;
+        let (Some(sup), Some(pool)) = (supervisor.as_mut(), pool.as_ref()) else {
+            return Ok(true);
+        };
+        if !sup.migrate_enabled() {
+            return Ok(true);
+        }
+        let mut clean = true;
+        for s in slots.iter_mut() {
+            if s.refreshed {
+                continue;
+            }
+            match pool.for_user(s.user).export_state(s.user, &s.site) {
+                Ok(blob) => {
+                    sup.checkpoint(s.user, &s.site, blob);
+                    s.refreshed = true;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: post-interval checkpoint export for (user {}, \
+                         site {}) failed ({e:#}); treating the fit as lost",
+                        s.user, s.site
+                    );
+                    s.outcome = Err(e.context(format!(
+                        "checkpoint export failed for user {} site {}",
+                        s.user, s.site
+                    )));
+                    clean = false;
+                }
+            }
+        }
+        Ok(clean)
+    }
+
+    /// Apply a settled interval's results to the server state, in
+    /// dispatch order (merged-mode float adds make this order part of
+    /// the determinism contract).
+    fn apply_fit_results(&mut self, results: Vec<FitResult>) -> Result<()> {
         let t0 = Instant::now();
         let mut touched_weights: Vec<String> = Vec::new();
         for r in results {

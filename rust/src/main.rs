@@ -8,8 +8,11 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use cola::cli::Args;
-use cola::config::{apply_overrides, Method, OffloadTarget, TomlDoc, TrainConfig};
-use cola::coordinator::{FtaasService, RunReport, TransferModel, Trainer};
+use cola::config::{apply_overrides, Method, OffloadTarget, TomlDoc, TrainConfig,
+                   TransportKind};
+use cola::coordinator::{rebalance_daemons, Driver, FtaasService, RunReport,
+                        TransferModel, Trainer};
+use cola::transport::tcp::TcpLinkOpts;
 use cola::memory::{footprint, Arrangement, ModelProfile, GB};
 use cola::metrics::{markdown_table, Curve};
 use cola::runtime::Manifest;
@@ -22,6 +25,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "worker" => cmd_worker(&args),
+        "pool" => cmd_pool(&args),
         "serve" => cmd_serve(&args),
         "memory" => cmd_memory(&args),
         "table1" => cmd_table1(),
@@ -48,12 +52,22 @@ fn print_help() {
                     --offload_tenant <name> (namespace on a shared daemon)\n\
                     --offload_batch true|false (one FitBatch frame per interval)\n\
                     --offload_inflight N (pipelined FitBatch frames, default 1)\n\
+                    --standby_addrs host:port,... (cold spare daemons)\n\
+                    --failover fail|migrate (survive daemon death bit-exactly)\n\
+                    --heartbeat_interval N (liveness sweep every N flushes)\n\
                     --loss_out <file.json> (write loss/acc curves for diffing)\n\
            worker   gradient-offload worker daemon (distributed mode);\n\
                     serves any number of concurrent trainer connections\n\
                     --listen 127.0.0.1:0 --offload cpu|gpu --threads N\n\
                     --simulate_link cpu|gpu (add a modeled link delay)\n\
                     --stop host:port (clean-shutdown a running daemon)\n\
+           pool     elastic-pool resize between runs: migrate shard state\n\
+                    so the same daemons can serve a different topology\n\
+                    --config <file.toml> (names users/sites/worker_addrs)\n\
+                    --add host:port    (grow: state moves TO the new daemon)\n\
+                    --drain host:port  (shrink gracefully: state moves off it)\n\
+                    --remove host:port (drop a DEAD daemon from the list;\n\
+                    its unmigrated state is gone — prefer --drain when alive)\n\
            serve    FTaaS collaboration demo (--users K --rounds N)\n\
            memory   analytic memory report\n\
                     --profile llama2-qv|llama2-all|gpt2|roberta-base|bart-base|tiny|small\n\
@@ -180,6 +194,92 @@ fn cmd_worker(args: &Args) -> Result<()> {
     println!("cola worker listening on {}", daemon.local_addr());
     daemon.join();
     println!("cola worker: shutdown handshake complete, exiting");
+    Ok(())
+}
+
+/// `cola pool --add/--drain/--remove <addr>` — resize a daemon fleet
+/// between runs. The config file names the tenant, users, sites (via
+/// the task driver), and the current `worker_addrs`; the command
+/// computes the rendezvous remap old -> new and migrates every re-homed
+/// shard's state daemon-to-daemon (export -> import -> evict,
+/// bit-exact). It then prints the `worker_addrs` line the next run
+/// should use. This replaces the old hard "pool size is part of the
+/// run's identity" error with an actual resize path.
+fn cmd_pool(args: &Args) -> Result<()> {
+    const POOL_KEYS: &[&str] = &["add", "drain", "remove"];
+    args.require_no_flags("pool")?;
+    let actions: Vec<(&str, &str)> = POOL_KEYS
+        .iter()
+        .filter_map(|k| args.get(k).map(|v| (*k, v)))
+        .collect();
+    let &[(action, addr)] = &actions[..] else {
+        bail!("pool needs exactly one of --add/--drain/--remove <addr>");
+    };
+    let mut launcher: Vec<&str> = LAUNCHER_KEYS.to_vec();
+    launcher.extend_from_slice(POOL_KEYS);
+    let mut cfg = TrainConfig::default();
+    if let Some(m) = args.get("method") {
+        cfg = cfg.preset_for_method(m.parse()?);
+    }
+    let path = args.require("config")?;
+    let doc = TomlDoc::load(path).with_context(|| format!("loading config {path}"))?;
+    for (k, v) in doc.flat() {
+        let key = k.strip_prefix("train.").unwrap_or(&k);
+        cfg.set(key, &v)
+            .with_context(|| format!("config {path}: key {k}"))?;
+    }
+    let mut launcher_plus_method = launcher.clone();
+    launcher_plus_method.push("method");
+    apply_overrides(&mut cfg, &args.options_except(&launcher_plus_method))?;
+    if cfg.offload_transport != TransportKind::Tcp {
+        bail!("cola pool resizes TCP daemon fleets — the config must set \
+               offload_transport = \"tcp\" and worker_addrs");
+    }
+    let manifest = Manifest::load_or_builtin(Path::new(&cfg.artifacts_dir))?;
+    let driver = Driver::new(&cfg, &manifest)?;
+    let sites: Vec<String> = driver.sites.iter().map(|s| s.site.clone()).collect();
+
+    let old = cfg.worker_addrs.clone();
+    let mut new = old.clone();
+    match action {
+        "add" => new.push(addr.to_string()),
+        "drain" | "remove" => {
+            // a daemon may back several slots (duplicate worker_addrs);
+            // draining/removing it takes out ALL of them — leaving one
+            // behind would report success while the daemon still owns
+            // users
+            new.retain(|a| a != addr);
+            if new.len() == old.len() {
+                bail!("{addr} is not in worker_addrs");
+            }
+        }
+        _ => unreachable!("filtered above"),
+    }
+
+    if action == "remove" {
+        // the daemon is presumed dead: change the topology only. Any
+        // state it still held is NOT migrated (a live daemon should be
+        // --drain'ed; a mid-run death is what `failover = "migrate"`
+        // recovers from its shadow checkpoints).
+        println!(
+            "removed {addr} from the pool WITHOUT migrating its state — \
+             shards it owned will re-register fresh on the next run"
+        );
+    } else {
+        let link = TcpLinkOpts {
+            tenant: cfg.offload_tenant.clone(),
+            ..TcpLinkOpts::default()
+        };
+        let stats =
+            rebalance_daemons(&old, &new, cfg.users, &sites, &link).with_context(
+                || format!("rebalancing the pool ({action} {addr})"),
+            )?;
+        println!(
+            "{action} {addr}: migrated {} users / {} shards, {} state bytes moved",
+            stats.users_moved, stats.shards_moved, stats.bytes_moved
+        );
+    }
+    println!("next run: worker_addrs = \"{}\"", new.join(","));
     Ok(())
 }
 

@@ -96,6 +96,19 @@ pub struct Timings {
     /// quantity FitBatch batching collapses (one frame per worker per
     /// interval instead of one per job); see EXPERIMENTS.md
     pub round_trips: u64,
+    /// fits transiently lost to a dying worker and recovered by
+    /// re-dispatch (`failover = "migrate"`); each one was also reported
+    /// with its (user, site) when it happened
+    pub lost_fits: u64,
+    /// pool membership changes that moved state (failovers, drains,
+    /// adds)
+    pub migrations: u64,
+    /// migration-blob bytes shipped between workers (live exports +
+    /// checkpoint restores)
+    pub migrated_state_bytes: u64,
+    /// adaptation intervals that stalled on a recovery round before
+    /// their replies could apply
+    pub stall_intervals: u64,
 }
 
 impl Timings {
@@ -107,7 +120,7 @@ impl Timings {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "steps {} | compile {:.1}s once | base {:.4}s/step | transfer {:.4}s/step | worker {:.4}s/step | merge {:.4}s/step | offloaded {:.1} MiB | returned {:.1} MiB | fit round-trips {}",
             self.steps,
             self.compile.as_secs_f64(),
@@ -118,7 +131,17 @@ impl Timings {
             self.bytes_offloaded as f64 / (1024.0 * 1024.0),
             self.bytes_returned as f64 / (1024.0 * 1024.0),
             self.round_trips,
-        )
+        );
+        if self.migrations > 0 || self.lost_fits > 0 {
+            s.push_str(&format!(
+                " | migrations {} ({:.2} MiB state moved) | lost fits recovered {} | stalled intervals {}",
+                self.migrations,
+                self.migrated_state_bytes as f64 / (1024.0 * 1024.0),
+                self.lost_fits,
+                self.stall_intervals,
+            ));
+        }
+        s
     }
 }
 

@@ -21,9 +21,15 @@
 //! every f32 by bit pattern — so the same config trains to byte-equal
 //! loss curves regardless of transport, including batched + pipelined
 //! TCP (`offload_batch` / `offload_inflight`, which change framing and
-//! scheduling but never numerics or apply order). CI enforces this on
-//! every PR (the `distributed-smoke` job), and
-//! `rust/tests/transport_tcp.rs` + `rust/tests/transport_multi.rs`
+//! scheduling but never numerics or apply order). Since wire v3 the
+//! contract also survives pool **membership churn**: heartbeats
+//! ([`Transport::ping`]) detect dead daemons, and bit-exact state
+//! migration ([`Transport::export_state`] / [`Transport::import_state`])
+//! moves shards between daemons, so elastic resizes and `failover =
+//! "migrate"` recoveries leave loss curves byte-identical too. CI
+//! enforces this on every PR (the `distributed-smoke` job incl. its
+//! chaos shape), and `rust/tests/transport_tcp.rs` +
+//! `rust/tests/transport_multi.rs` + `rust/tests/transport_chaos.rs`
 //! mirror it as integration tests.
 
 pub mod tcp;
@@ -41,7 +47,8 @@ use crate::coordinator::offload::{FitJob, FitResult};
 /// on the returned channel so the server can overlap fits with its own
 /// steps (`async_offload`).
 pub trait Transport: Send {
-    /// Worker id (the pool shards users by `user % n` over worker ids).
+    /// Worker id — a stable label for logs and error messages (the pool
+    /// shards users by rendezvous hashing over member keys, not ids).
     fn id(&self) -> usize;
 
     /// Human-readable endpoint (for error messages and logs).
@@ -80,6 +87,29 @@ pub trait Transport: Send {
 
     /// Bytes of adapter + optimizer state held by the worker.
     fn state_bytes(&self) -> Result<usize>;
+
+    /// Liveness heartbeat. Returns the worker's current load (in-flight
+    /// fits); an `Err` means the worker is unreachable and the pool
+    /// supervisor should fail it over. In-process workers are alive by
+    /// construction.
+    fn ping(&self) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// Export the full adapter + optimizer state of one `(user, site)`
+    /// shard as an opaque, bit-exact migration blob
+    /// ([`wire::encode_state`] layout). Feed it unchanged to
+    /// [`Transport::import_state`] on the new owner.
+    fn export_state(&self, user: usize, site: &str) -> Result<Vec<u8>>;
+
+    /// Install a migration blob exported from another worker, replacing
+    /// any existing state for the blob's `(user, site)` key.
+    fn import_state(&self, blob: Vec<u8>) -> Result<()>;
+
+    /// Drop a shard's state after it has been migrated away (keeps the
+    /// old owner's resident-memory accounting honest). Evicting an
+    /// absent key is a no-op.
+    fn evict_state(&self, user: usize, site: &str) -> Result<()>;
 
     /// Release this link. For a local worker the thread exits; for a
     /// TCP worker only the connection closes — the daemon (and its

@@ -126,6 +126,10 @@ enum ClientCmd {
     FitBatch(Vec<(FitJob, Sender<Result<FitResult>>)>),
     Snapshot { user: usize, site: String, reply: Sender<Result<AdapterParams>> },
     StateBytes(Sender<Result<usize>>),
+    Ping(Sender<Result<u64>>),
+    ExportState { user: usize, site: String, reply: Sender<Result<Vec<u8>>> },
+    ImportState { blob: Vec<u8>, reply: Sender<Result<()>> },
+    EvictState { user: usize, site: String, reply: Sender<Result<()>> },
     Disconnect,
 }
 
@@ -290,6 +294,30 @@ impl Transport for TcpWorker {
     fn state_bytes(&self) -> Result<usize> {
         let (tx, rx) = channel();
         self.send_cmd(ClientCmd::StateBytes(tx))?;
+        rx.recv()?
+    }
+
+    fn ping(&self) -> Result<u64> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::Ping(tx))?;
+        rx.recv()?
+    }
+
+    fn export_state(&self, user: usize, site: &str) -> Result<Vec<u8>> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::ExportState { user, site: site.to_string(), reply: tx })?;
+        rx.recv()?
+    }
+
+    fn import_state(&self, blob: Vec<u8>) -> Result<()> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::ImportState { blob, reply: tx })?;
+        rx.recv()?
+    }
+
+    fn evict_state(&self, user: usize, site: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::EvictState { user, site: site.to_string(), reply: tx })?;
         rx.recv()?
     }
 
@@ -558,6 +586,40 @@ fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
                 });
                 let _ = reply.send(r.map_err(wrap));
             }
+            ClientCmd::Ping(reply) => {
+                let r = link.request(&Msg::Ping).and_then(|(m, _)| match m {
+                    Msg::Pong { load } => Ok(load),
+                    other => unexpected(other),
+                });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::ExportState { user, site, reply } => {
+                let r = link
+                    .request(&Msg::StateExport { user, site })
+                    .and_then(|(m, _)| match m {
+                        Msg::StateExportOk(blob) => Ok(blob),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::ImportState { blob, reply } => {
+                let r = link
+                    .request(&Msg::StateImport(blob))
+                    .and_then(|(m, _)| match m {
+                        Msg::Ack => Ok(()),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::EvictState { user, site, reply } => {
+                let r = link
+                    .request(&Msg::StateEvict { user, site })
+                    .and_then(|(m, _)| match m {
+                        Msg::Ack => Ok(()),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
             ClientCmd::Disconnect => break,
         }
     }
@@ -573,10 +635,12 @@ fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
 /// shared [`WorkerCore`]. Serves any number of concurrent connections
 /// (one thread each); adapter + optimizer state persist across
 /// connections AND across tenants (reconnect safety, multi-tenant
-/// FTaaS). Exits on the [`Msg::Shutdown`] handshake.
+/// FTaaS). Exits on the [`Msg::Shutdown`] handshake — or abruptly via
+/// [`WorkerDaemon::kill`], the chaos-testing stand-in for `kill -9`.
 pub struct WorkerDaemon {
     addr: SocketAddr,
     handle: Option<JoinHandle<()>>,
+    shared: Arc<DaemonShared>,
 }
 
 /// State shared by the accept loop and every connection thread.
@@ -584,6 +648,13 @@ struct DaemonShared {
     core: WorkerCore,
     addr: SocketAddr,
     stop: AtomicBool,
+    /// live connection handles (id, cloned stream) so [`WorkerDaemon::kill`]
+    /// can sever in-flight links, not just stop accepting
+    conns: std::sync::Mutex<Vec<(usize, TcpStream)>>,
+}
+
+fn lock_conns(shared: &DaemonShared) -> std::sync::MutexGuard<'_, Vec<(usize, TcpStream)>> {
+    shared.conns.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 impl WorkerDaemon {
@@ -604,11 +675,13 @@ impl WorkerDaemon {
             core: WorkerCore::new(0, target, manifest, transfer),
             addr,
             stop: AtomicBool::new(false),
+            conns: std::sync::Mutex::new(Vec::new()),
         });
+        let shared2 = shared.clone();
         let handle = std::thread::Builder::new()
             .name("cola-worker-daemon".into())
-            .spawn(move || daemon_main(listener, shared))?;
-        Ok(WorkerDaemon { addr, handle: Some(handle) })
+            .spawn(move || daemon_main(listener, shared2))?;
+        Ok(WorkerDaemon { addr, handle: Some(handle), shared })
     }
 
     /// The actually-bound address (resolves `:0` to the real port).
@@ -620,6 +693,33 @@ impl WorkerDaemon {
     pub fn join(mut self) {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+    }
+
+    /// Abrupt termination — the chaos-testing stand-in for `kill -9`:
+    /// stops accepting, severs every live connection mid-whatever (peers
+    /// see a dead link, not a clean shutdown handshake), and returns
+    /// once the accept thread has exited and the listening port is
+    /// closed. Resident adapter/optimizer state is NOT exported first —
+    /// exactly the failure `failover = "migrate"` exists to survive.
+    pub fn kill(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for (_, conn) in lock_conns(&self.shared).drain(..) {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        // unblock the accept loop; dropping the listener then refuses
+        // further connects on this port
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        // the accept thread is the only registrar, so after the join no
+        // new entries can appear — sever anything it registered between
+        // the first drain and its exit (a connection accepted at the
+        // exact kill moment must not survive as a live link to a
+        // "dead" daemon)
+        for (_, conn) in lock_conns(&self.shared).drain(..) {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
         }
     }
 }
@@ -646,16 +746,24 @@ fn daemon_main(listener: TcpListener, shared: Arc<DaemonShared>) {
         }
         let _ = stream.set_nodelay(true);
         conn_id += 1;
+        let id = conn_id;
+        if let Ok(clone) = stream.try_clone() {
+            lock_conns(&shared).push((id, clone));
+        }
         let sh = shared.clone();
         let spawned = std::thread::Builder::new()
-            .name(format!("cola-conn-{conn_id}"))
+            .name(format!("cola-conn-{id}"))
             .spawn(move || {
                 if let Err(e) = serve_conn(stream, &sh) {
                     eprintln!("cola worker: connection from {peer} failed: {e:#}");
                 }
+                // drop the kill handle so the registry can't grow
+                // unboundedly over a long-lived daemon's lifetime
+                lock_conns(&sh).retain(|(cid, _)| *cid != id);
             });
         if let Err(e) = spawned {
             eprintln!("cola worker: spawning connection thread failed: {e}");
+            lock_conns(&shared).retain(|(cid, _)| *cid != id);
         }
     }
     // connection threads drain on their own as peers disconnect; the
@@ -741,6 +849,18 @@ fn dispatch(msg: Msg, tenant: &str, core: &WorkerCore) -> Msg {
             Ok(Msg::SnapshotOk(core.snapshot(tenant, user, &site)?))
         }
         Msg::StateBytes => Ok(Msg::StateBytesOk(core.state_bytes() as u64)),
+        Msg::Ping => Ok(Msg::Pong { load: core.load() }),
+        Msg::StateExport { user, site } => {
+            Ok(Msg::StateExportOk(core.export_state(tenant, user, &site)?))
+        }
+        Msg::StateImport(blob) => {
+            core.import_state(tenant, &blob)?;
+            Ok(Msg::Ack)
+        }
+        Msg::StateEvict { user, site } => {
+            core.evict_state(tenant, user, &site)?;
+            Ok(Msg::Ack)
+        }
         other => bail!("unexpected message on worker side: {other:?}"),
     })();
     r.unwrap_or_else(|e| Msg::Error(format!("{e:#}")))

@@ -1,0 +1,444 @@
+//! Elastic-pool chaos/soak harness — daemons die, drain, and join under
+//! live multi-tenant traffic, and the determinism contract must not
+//! notice.
+//!
+//! Load-bearing invariants:
+//!
+//! 1. A daemon killed mid-run under `failover = "migrate"` costs
+//!    nothing numerically: shadow checkpoints restore its shards onto a
+//!    promoted standby, the lost interval's fits re-dispatch, and the
+//!    final train AND eval curves are **bit-identical** to an
+//!    uninterrupted baseline. Every transiently lost fit names its
+//!    (user, site).
+//! 2. Proactive heartbeats (`heartbeat_interval >= 1`) catch a death at
+//!    the next interval boundary BEFORE dispatch — same bit-identical
+//!    curves, zero lost fits.
+//! 3. Graceful elasticity: `Trainer::drain_worker` / `add_worker`
+//!    resize the pool mid-run with live bit-exact state migration —
+//!    curves unchanged, the drained daemon left empty.
+//! 4. Concurrent tenants survive chaos independently: one tenant's
+//!    daemon kill never moves the other tenant's curves either.
+//! 5. `WorkerPool::connect_tcp` substitutes a standby for an
+//!    unreachable primary instead of aborting the pool (regression).
+//! 6. Offline resize (`cola pool --add` / `rebalance_daemons`) migrates
+//!    existing daemon state instead of erroring — the replacement for
+//!    the old `verify_shard_count` hard reject.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cola::adapters::{AdapterParams, OptimizerCfg, SiteAdapter};
+use cola::config::{AdapterKind, FailoverPolicy, Method, Mode, Optimizer, Task,
+                   TrainConfig, TransportKind};
+use cola::coordinator::{member_keys, rebalance_daemons, rendezvous_owner, FitJob,
+                        RunReport, Trainer, WorkerPool};
+use cola::rng::Rng;
+use cola::runtime::Manifest;
+use cola::tensor::Tensor;
+use cola::transport::tcp::{request_daemon_shutdown, TcpLinkOpts, TcpWorker,
+                           WorkerDaemon};
+use cola::transport::Transport;
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load_or_builtin(std::path::Path::new("artifacts")).unwrap())
+}
+
+/// Daemon on an ephemeral loopback port; returns (daemon, addr).
+fn daemon() -> (WorkerDaemon, String) {
+    let d = WorkerDaemon::bind("127.0.0.1:0", cola::config::OffloadTarget::NativeCpu,
+                               manifest(), None)
+        .unwrap();
+    let addr = d.local_addr().to_string();
+    (d, addr)
+}
+
+/// Multi-user merged-mode CLM: the hardest determinism shape (merged
+/// delta adds are order-sensitive float sums) with enough users that
+/// every pool member owns someone.
+fn base_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.task = Task::Clm;
+    cfg.size = "tiny".into();
+    cfg.method = Method::Cola(AdapterKind::LowRank);
+    cfg.mode = Mode::Merged;
+    cfg.optimizer = Optimizer::Sgd;
+    cfg.users = 4;
+    cfg.batch = 8;
+    cfg.steps = 12;
+    cfg.interval = 2;
+    cfg.eval_every = 4;
+    cfg.eval_batches = 2;
+    cfg.lr = 0.05;
+    cfg.seed = seed;
+    cfg.workers = 2;
+    cfg
+}
+
+fn chaos_cfg(addrs: &[&str], standbys: &[&str], seed: u64, tenant: &str) -> TrainConfig {
+    let mut cfg = base_cfg(seed);
+    cfg.offload_transport = TransportKind::Tcp;
+    cfg.worker_addrs = addrs.iter().map(|s| s.to_string()).collect();
+    cfg.standby_addrs = standbys.iter().map(|s| s.to_string()).collect();
+    cfg.failover = FailoverPolicy::Migrate;
+    cfg.offload_tenant = tenant.to_string();
+    cfg.offload_batch = true;
+    cfg.offload_inflight = 2;
+    cfg
+}
+
+fn run(cfg: TrainConfig) -> RunReport {
+    Trainer::new(cfg).unwrap().run().unwrap()
+}
+
+fn assert_curves_eq(a: &RunReport, b: &RunReport, what: &str) {
+    // f64 == compares bit patterns here: both runs must be EXACTLY equal
+    assert_eq!(a.train_loss.points, b.train_loss.points,
+               "{what}: train curves diverged");
+    assert_eq!(a.eval_loss.points, b.eval_loss.points,
+               "{what}: eval curves diverged");
+}
+
+/// Which of two daemons owns user 0 under the live rendezvous mapping —
+/// the one worth killing if the test wants guaranteed lost fits.
+fn victim_of(addr_a: &str, addr_b: &str) -> bool {
+    let keys = member_keys(&[addr_a.to_string(), addr_b.to_string()]);
+    keys[rendezvous_owner(&keys, 0)] == addr_a
+}
+
+/// Invariant 1 (the acceptance criterion): the ENTIRE primary fleet is
+/// killed between interval boundaries with reactive detection
+/// (`heartbeat_interval = 0`). The next flush loses every in-flight fit
+/// — each one named — both standbys are promoted, every shard restores
+/// from its shadow checkpoint, the lost fits re-dispatch, and the
+/// recovered run's train + eval curves are bit-identical to the
+/// uninterrupted baseline.
+#[test]
+fn reactive_kill_names_lost_fits_and_keeps_curves_bit_identical() {
+    let r_base = run(base_cfg(42));
+
+    let (mut d_a, addr_a) = daemon();
+    let (mut d_b, addr_b) = daemon();
+    let (d_c, addr_c) = daemon();
+    let (d_d, addr_d) = daemon();
+
+    let mut cfg = chaos_cfg(&[&addr_a, &addr_b], &[&addr_c, &addr_d], 42, "chaos");
+    cfg.heartbeat_interval = 0; // reactive: the lost fits ARE the detector
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr
+        .run_with_hook(|_, t| {
+            // the kill lands between steps; the t=5 flush dispatches
+            // into the dead sockets and must recover everything
+            if t == 4 {
+                d_a.kill();
+                d_b.kill();
+            }
+            Ok(())
+        })
+        .unwrap();
+
+    assert_curves_eq(&r_base, &report, "reactive fleet kill + migrate");
+    let lost = tr.lost_fits();
+    assert!(!lost.is_empty(), "a fleet kill before a dispatching flush must lose fits");
+    for (user, site) in lost {
+        assert!(*user < 4, "lost fit names an unknown user {user}");
+        assert!(!site.is_empty(), "lost fit must name its site");
+    }
+    assert_eq!(report.timings.lost_fits as usize, lost.len());
+    assert!(report.timings.migrations >= 1);
+    assert!(report.timings.migrated_state_bytes > 0);
+    assert!(report.timings.stall_intervals >= 1);
+    drop(tr);
+
+    for (d, addr) in [(d_c, addr_c), (d_d, addr_d)] {
+        request_daemon_shutdown(&addr).unwrap();
+        d.join();
+    }
+}
+
+/// Invariant 2: with proactive heartbeats every flush, a death between
+/// boundaries is caught BEFORE dispatch — the shards migrate from their
+/// shadow checkpoints, no fit is ever lost, and curves still match the
+/// baseline bit-for-bit.
+#[test]
+fn proactive_heartbeat_migrates_before_dispatch_with_zero_lost_fits() {
+    let r_base = run(base_cfg(7));
+
+    let (d_a, addr_a) = daemon();
+    let (d_b, addr_b) = daemon();
+    let (d_c, addr_c) = daemon();
+    let (mut victim, survivor, survivor_addr) = if victim_of(&addr_a, &addr_b) {
+        (d_a, d_b, addr_b.clone())
+    } else {
+        (d_b, d_a, addr_a.clone())
+    };
+
+    let mut cfg = chaos_cfg(&[&addr_a, &addr_b], &[&addr_c], 7, "proactive");
+    cfg.heartbeat_interval = 1;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr
+        .run_with_hook(|_, t| {
+            if t == 4 {
+                victim.kill();
+            }
+            Ok(())
+        })
+        .unwrap();
+
+    assert_curves_eq(&r_base, &report, "proactive heartbeat + migrate");
+    assert!(tr.lost_fits().is_empty(),
+            "heartbeat-first detection must lose nothing: {:?}", tr.lost_fits());
+    assert_eq!(report.timings.lost_fits, 0);
+    assert!(report.timings.migrations >= 1);
+    assert!(report.timings.migrated_state_bytes > 0);
+    drop(tr);
+
+    request_daemon_shutdown(&survivor_addr).unwrap();
+    survivor.join();
+    request_daemon_shutdown(&addr_c).unwrap();
+    d_c.join();
+}
+
+/// Invariant 3: mid-run `--drain` + `--add` (graceful elasticity). The
+/// drained daemon hands every shard off bit-exactly and ends empty; the
+/// added daemon takes over the users it wins; curves never move. Works
+/// under `failover = "fail"` — graceful resizes need no checkpoints.
+#[test]
+fn drain_and_add_mid_run_keep_curves_bit_identical() {
+    let r_base = run(base_cfg(11));
+
+    let (d_a, addr_a) = daemon();
+    let (d_b, addr_b) = daemon();
+    let (d_c, addr_c) = daemon();
+    // drain the member that owns user 0, so the drain provably moves
+    // at least one user's state
+    let drained = if victim_of(&addr_a, &addr_b) { addr_a.clone() } else { addr_b.clone() };
+    let mut cfg = chaos_cfg(&[&addr_a, &addr_b], &[], 11, "elastic");
+    cfg.failover = FailoverPolicy::Fail; // graceful ops only
+    let mut tr = Trainer::new(cfg).unwrap();
+    let (da, dc) = (drained.clone(), addr_c.clone());
+    let report = tr
+        .run_with_hook(move |trainer, t| {
+            if t == 4 {
+                trainer.drain_worker(&da)?;
+            }
+            if t == 8 {
+                trainer.add_worker(&dc)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+
+    assert_curves_eq(&r_base, &report, "drain + add mid-run");
+    assert!(tr.lost_fits().is_empty());
+    assert_eq!(report.timings.migrations, 2);
+    assert!(report.timings.migrated_state_bytes > 0);
+    drop(tr);
+
+    // the drained daemon is still up — and empty for this tenant (and
+    // every other: nothing else registered on it)
+    let probe = TcpWorker::connect(9, &drained).unwrap();
+    assert_eq!(probe.state_bytes().unwrap(), 0,
+               "drain must evict what it exports");
+    probe.shutdown();
+
+    for (d, addr) in [(d_a, addr_a), (d_b, addr_b), (d_c, addr_c)] {
+        request_daemon_shutdown(&addr).unwrap();
+        d.join();
+    }
+}
+
+/// Invariant 4 (the multi-tenant soak): two trainers under distinct
+/// tenants share the same two daemons while one daemon is killed
+/// mid-run. BOTH tenants' supervisors fail over independently (each
+/// promotes the shared standby under its own tenant namespace), and
+/// BOTH final curve sets are bit-identical to their baselines —
+/// membership churn is invisible to every tenant, no matter where in
+/// its interval the death lands.
+#[test]
+fn concurrent_tenants_survive_a_shared_daemon_kill() {
+    let r_base_1 = run(base_cfg(42));
+    let r_base_2 = run(base_cfg(43));
+
+    let (d_a, addr_a) = daemon();
+    let (d_b, addr_b) = daemon();
+    let (d_c, addr_c) = daemon();
+    let (mut victim, survivor, survivor_addr) = if victim_of(&addr_a, &addr_b) {
+        (d_a, d_b, addr_b.clone())
+    } else {
+        (d_b, d_a, addr_a.clone())
+    };
+
+    let cfg1 = chaos_cfg(&[&addr_a, &addr_b], &[&addr_c], 42, "tenant-1");
+    let cfg2 = chaos_cfg(&[&addr_a, &addr_b], &[&addr_c], 43, "tenant-2");
+    // construct (and register) both trainers BEFORE any chaos, so the
+    // kill can only ever land mid-training, never mid-registration
+    let mut tr1 = Trainer::new(cfg1).unwrap();
+    let mut tr2 = Trainer::new(cfg2).unwrap();
+    let (r1, r2) = std::thread::scope(|s| {
+        let h1 = s.spawn(move || {
+            tr1.run_with_hook(|_, t| {
+                if t == 4 {
+                    victim.kill();
+                }
+                Ok(())
+            })
+            .unwrap()
+        });
+        let h2 = s.spawn(move || tr2.run().unwrap());
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+
+    assert_curves_eq(&r_base_1, &r1, "tenant 1 under its own chaos");
+    assert_curves_eq(&r_base_2, &r2, "tenant 2 under a neighbor's chaos");
+
+    request_daemon_shutdown(&survivor_addr).unwrap();
+    survivor.join();
+    request_daemon_shutdown(&addr_c).unwrap();
+    d_c.join();
+}
+
+/// Invariant 5 (regression for the connect-time bug): a dead primary
+/// address used to abort the whole pool; with standbys it must be
+/// substituted, and without them the error must say so.
+#[test]
+fn connect_tcp_substitutes_standby_for_dead_primary() {
+    let (d_live, addr_live) = daemon();
+    let (d_sb, addr_sb) = daemon();
+    // a port that was just free: bind, read it back, release it
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let link = TcpLinkOpts {
+        attempts: 2,
+        base: Duration::from_millis(5),
+        ..TcpLinkOpts::default()
+    };
+
+    // without standbys the pool still aborts — but says why
+    let err = WorkerPool::connect_tcp(
+        &[dead_addr.clone(), addr_live.clone()],
+        &link,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("no standby"), "{err:#}");
+
+    // with a standby the slot is substituted and the pool serves
+    let (pool, rest) = WorkerPool::connect_tcp_with_standbys(
+        &[dead_addr, addr_live.clone()],
+        &[addr_sb.clone()],
+        &link,
+    )
+    .unwrap();
+    assert_eq!(pool.len(), 2);
+    assert!(rest.is_empty(), "the standby was consumed by the substitution");
+    for m in pool.members() {
+        m.transport().ping().unwrap();
+    }
+    drop(pool);
+
+    for (d, addr) in [(d_live, addr_live), (d_sb, addr_sb)] {
+        request_daemon_shutdown(&addr).unwrap();
+        d.join();
+    }
+}
+
+fn lowrank_adapter(seed: u64) -> SiteAdapter {
+    let mut rng = Rng::new(seed);
+    let params = AdapterParams::init(AdapterKind::LowRank, 8, 8, 4, 4, &mut rng);
+    SiteAdapter::new("s", params, &OptimizerCfg::adamw(1e-3, 1e-4))
+}
+
+fn job(user: usize) -> FitJob {
+    FitJob {
+        user,
+        site: "s".into(),
+        x: Tensor::from_fn(&[3, 8], |i| (i as f32).sin()),
+        ghat: Tensor::from_fn(&[3, 8], |i| (i as f32).cos()),
+        grad_scale: 1.0,
+        merged: false,
+    }
+}
+
+/// Invariant 6 (the other acceptance criterion): growing a pool with
+/// live state no longer errors — `rebalance_daemons` (the engine behind
+/// `cola pool --add`) moves exactly the re-homed users' shards,
+/// bit-exactly (optimizer moments included: the post-move fit equals
+/// the never-moved fit), and evicts the source copies.
+#[test]
+fn offline_pool_add_migrates_existing_state_instead_of_erroring() {
+    const USERS: usize = 32;
+    let (d_a, addr_a) = daemon();
+    let (d_b, addr_b) = daemon();
+    let (d_c, addr_c) = daemon();
+    let link = TcpLinkOpts { tenant: "resize".into(), ..TcpLinkOpts::default() };
+
+    let two = vec![addr_a.clone(), addr_b.clone()];
+    let three = vec![addr_a.clone(), addr_b.clone(), addr_c.clone()];
+    let keys2 = member_keys(&two);
+    let keys3 = member_keys(&three);
+
+    // a finished run's worth of live state: adapters with stepped AdamW
+    // moments, placed by the same rendezvous mapping the trainer uses
+    let conn = |addr: &str| TcpWorker::connect_with_link_opts(0, addr, &link).unwrap();
+    let (wa, wb, wc) = (conn(&addr_a), conn(&addr_b), conn(&addr_c));
+    let by_addr: std::collections::BTreeMap<&str, &TcpWorker> = [
+        (addr_a.as_str(), &wa),
+        (addr_b.as_str(), &wb),
+        (addr_c.as_str(), &wc),
+    ]
+    .into_iter()
+    .collect();
+    for user in 0..USERS {
+        let owner = &keys2[rendezvous_owner(&keys2, user)];
+        let w = by_addr[owner.as_str()];
+        w.register(user, "s", lowrank_adapter(100 + user as u64)).unwrap();
+        w.fit(job(user)).unwrap().recv().unwrap().unwrap();
+    }
+    // reference: what each user's NEXT fit returns if nothing ever moves
+    let reference: Vec<Vec<Tensor>> = (0..USERS)
+        .map(|user| {
+            let shadow = cola::coordinator::WorkerCore::new(
+                0, cola::config::OffloadTarget::NativeCpu, manifest(), None);
+            let owner = &keys2[rendezvous_owner(&keys2, user)];
+            let blob = by_addr[owner.as_str()].export_state(user, "s").unwrap();
+            shadow.import_state("", &blob).unwrap();
+            shadow.fit("", job(user)).unwrap().new_params.unwrap()
+        })
+        .collect();
+
+    let stats = rebalance_daemons(&two, &three, USERS, &["s".into()], &link).unwrap();
+    assert!(stats.users_moved > 0, "32 users and nobody moved to the new daemon");
+    assert_eq!(stats.shards_moved, stats.users_moved); // one site each
+    assert!(stats.bytes_moved > 0);
+
+    for user in 0..USERS {
+        let old_owner = &keys2[rendezvous_owner(&keys2, user)];
+        let new_owner = &keys3[rendezvous_owner(&keys3, user)];
+        let w_new = by_addr[cola::coordinator::key_addr(new_owner)];
+        // the (possibly migrated) state serves a fit bit-identical to
+        // the never-migrated reference — moments made the trip intact
+        let r = w_new.fit(job(user)).unwrap().recv().unwrap().unwrap();
+        for (x, y) in r.new_params.unwrap().iter().zip(&reference[user]) {
+            assert_eq!(x, y, "user {user}: post-migration fit diverged");
+        }
+        if old_owner != new_owner {
+            assert_eq!(new_owner, &keys3[2], "adds may only move users TO the new member");
+            // and the source copy was evicted
+            let err = by_addr[cola::coordinator::key_addr(old_owner)]
+                .snapshot(user, "s")
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("no adapter"), "{err:#}");
+        }
+    }
+
+    drop(by_addr); // release the borrows before moving the workers
+    for w in [wa, wb, wc] {
+        w.shutdown();
+    }
+    for (d, addr) in [(d_a, addr_a), (d_b, addr_b), (d_c, addr_c)] {
+        request_daemon_shutdown(&addr).unwrap();
+        d.join();
+    }
+}
