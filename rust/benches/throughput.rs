@@ -16,11 +16,12 @@ mod common;
 use std::collections::BTreeMap;
 
 use cola::bench_harness::{bench, BenchReport, BenchStats};
-use cola::config::{AdapterKind, Method, Mode, Task, TrainConfig};
-use cola::coordinator::Trainer;
+use cola::config::{AdapterKind, Method, Mode, Task, TrainConfig, WireFormat};
+use cola::coordinator::{FitJob, Trainer};
 use cola::metrics::markdown_table;
 use cola::rng::Rng;
-use cola::tensor::{self, pool, Tensor};
+use cola::tensor::{self, pool, simd, Tensor};
+use cola::transport::wire::{self, Msg};
 use cola::util::json::Json;
 
 fn gflops(flops: f64, s: &BenchStats) -> f64 {
@@ -117,6 +118,56 @@ fn main() -> anyhow::Result<()> {
         ),
     );
 
+    // kernel dispatch tiers: the same matmul cases single-threaded,
+    // scalar vs the runtime-detected vector path vs opt-in FMA — the
+    // scalar-vs-SIMD GFLOP/s trajectory in EXPERIMENTS.md. Reported,
+    // not gated: a CI container without AVX2 legitimately shows 1.0x.
+    let detected = {
+        simd::set_policy(Some(simd::Policy::Auto));
+        simd::describe()
+    };
+    let mut simd_rows: Vec<Vec<String>> = Vec::new();
+    let mut simd_json = Vec::new();
+    let mut simd_min_speedup = f64::INFINITY;
+    pool::set_threads(1);
+    for &(name, m, k, n) in cases {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        simd::set_policy(Some(simd::Policy::Off));
+        let sc = gflops(flops, &bench("scalar", 1, iters, || tensor::matmul(&a, &b)));
+        simd::set_policy(Some(simd::Policy::Auto));
+        let vg = gflops(flops, &bench("simd", 1, iters, || tensor::matmul(&a, &b)));
+        simd::set_policy(Some(simd::Policy::Fma));
+        let fg = gflops(flops, &bench("fma", 1, iters, || tensor::matmul(&a, &b)));
+        let speedup = vg / sc.max(1e-12);
+        simd_min_speedup = simd_min_speedup.min(speedup);
+        let mut o = BTreeMap::new();
+        o.insert("case".to_string(), Json::Str(name.to_string()));
+        o.insert("scalar_gflops".to_string(), num(sc));
+        o.insert("simd_gflops".to_string(), num(vg));
+        o.insert("fma_gflops".to_string(), num(fg));
+        o.insert("simd_speedup".to_string(), num(speedup));
+        simd_json.push(Json::Obj(o));
+        simd_rows.push(vec![
+            name.to_string(),
+            format!("{sc:.2}"),
+            format!("{vg:.2}"),
+            format!("{fg:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    simd::set_policy(None); // back to the COLA_SIMD env decision
+    pool::set_threads(0);
+    report.section(
+        &format!("SIMD kernel tiers, 1 thread, detected level `{detected}` (GFLOP/s)"),
+        markdown_table(
+            &["case", "scalar", "simd", "fma", "simd speedup"],
+            &simd_rows,
+        ),
+    );
+
     // end-to-end decoupled steps/sec (server fwd/bwd + offload fit),
     // native backend, full pool
     let lm_sizes: &[&str] = if quick { &["tiny"] } else { &["tiny", "small"] };
@@ -150,6 +201,62 @@ fn main() -> anyhow::Result<()> {
         "decoupled LM step throughput (ColA LowRank unmerged, native)",
         markdown_table(&["size", "s/step (median)", "steps/sec"], &lm_rows),
     );
+
+    // wire bytes/interval: frame the same FitBatch an offloading
+    // interval ships, once per `offload_wire` encoding, and count the
+    // actual bytes (headers included) via the real send path. No
+    // sockets needed — the encoding is a pure function of the message.
+    // Shapes mirror the distributed-smoke config (batch 8, interval 2,
+    // tiny model) plus one base-model-sized shape.
+    let wire_cases: &[(&str, usize, usize, usize)] = &[
+        // (label, jobs per interval, rows = batch * interval, width)
+        ("smoke_tiny_4x16x64", 4, 16, 64),
+        ("base_8x64x512", 8, 64, 512),
+    ];
+    let mut wire_rows: Vec<Vec<String>> = Vec::new();
+    let mut wire_json = Vec::new();
+    let (mut total_f32, mut total_bf16) = (0u64, 0u64);
+    for &(label, jobs, rows_n, width) in wire_cases {
+        let mut rng = Rng::new(0xC01A);
+        let jobs: Vec<FitJob> = (0..jobs)
+            .map(|u| FitJob {
+                user: u,
+                site: format!("blocks.{u}.attn"),
+                x: Tensor::randn(&[rows_n, width], 1.0, &mut rng),
+                ghat: Tensor::randn(&[rows_n, width], 1.0, &mut rng),
+                grad_scale: 0.5,
+                merged: false,
+            })
+            .collect();
+        let msg = Msg::FitBatch { seq: 1, jobs };
+        let mut sink = Vec::new();
+        let f32_bytes = wire::send_with(&mut sink, &msg, WireFormat::F32)? as u64;
+        sink.clear();
+        let bf16_bytes = wire::send_with(&mut sink, &msg, WireFormat::Bf16)? as u64;
+        total_f32 += f32_bytes;
+        total_bf16 += bf16_bytes;
+        let saving = 100.0 * (1.0 - bf16_bytes as f64 / f32_bytes as f64);
+        let mut o = BTreeMap::new();
+        o.insert("case".to_string(), Json::Str(label.to_string()));
+        o.insert("bytes_f32".to_string(), num(f32_bytes as f64));
+        o.insert("bytes_bf16".to_string(), num(bf16_bytes as f64));
+        o.insert("saving_pct".to_string(), num(saving));
+        wire_json.push(Json::Obj(o));
+        wire_rows.push(vec![
+            label.to_string(),
+            format!("{f32_bytes}"),
+            format!("{bf16_bytes}"),
+            format!("{saving:.1}%"),
+        ]);
+    }
+    let wire_saving_pct = 100.0 * (1.0 - total_bf16 as f64 / total_f32 as f64);
+    report.section(
+        "wire bytes per FitBatch interval (f32 vs bf16)",
+        markdown_table(
+            &["case", "f32 bytes", "bf16 bytes", "saving"],
+            &wire_rows,
+        ),
+    );
     report.emit("throughput")?;
 
     let mut top = BTreeMap::new();
@@ -159,6 +266,9 @@ fn main() -> anyhow::Result<()> {
     top.insert("cores".to_string(), num(cores as f64));
     top.insert("threads".to_string(), num(pool::max_threads() as f64));
     top.insert("matmul".to_string(), Json::Arr(mm_json));
+    top.insert("simd_level".to_string(), Json::Str(detected.to_string()));
+    top.insert("simd_matmul".to_string(), Json::Arr(simd_json));
+    top.insert("simd_min_speedup".to_string(), num(simd_min_speedup));
     top.insert("lm_steps_per_sec".to_string(), Json::Obj(lm_json));
     top.insert("best_matmul_speedup".to_string(), num(best_speedup));
     top.insert("matmul_min_speedup".to_string(), num(matmul_min_speedup));
@@ -189,6 +299,46 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "PERF REGRESSION: worst-case matmul speedup \
                  {matmul_min_speedup:.2}x < required {minv:.2}x ({cores} cores)"
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // machine-readable wire baseline, same pattern as the throughput
+    // JSON: CI uploads it as an artifact and gates bf16 on a minimum
+    // bytes/interval saving
+    let mut wt = BTreeMap::new();
+    wt.insert("bench".to_string(), Json::Str("wire".to_string()));
+    wt.insert("schema".to_string(), num(1.0));
+    wt.insert("cases".to_string(), Json::Arr(wire_json));
+    wt.insert("total_bytes_f32".to_string(), num(total_f32 as f64));
+    wt.insert("total_bytes_bf16".to_string(), num(total_bf16 as f64));
+    wt.insert("saving_pct".to_string(), num(wire_saving_pct));
+    let wire_out = std::env::var("COLA_BENCH_WIRE_OUT").unwrap_or_else(|_| {
+        match std::env::var("CARGO_MANIFEST_DIR") {
+            Ok(dir) => format!("{dir}/../BENCH_wire.json"),
+            Err(_) => "BENCH_wire.json".to_string(),
+        }
+    });
+    std::fs::write(&wire_out, format!("{}\n", Json::Obj(wt)))?;
+    println!(
+        "wrote {wire_out} (bf16 saves {wire_saving_pct:.1}% of FitBatch \
+         bytes/interval: {total_f32} -> {total_bf16})"
+    );
+
+    if let Ok(raw) = std::env::var("COLA_BENCH_MIN_WIRE_SAVING") {
+        // same loud-threshold contract as COLA_BENCH_MIN_SPEEDUP
+        let minv: f64 = match raw.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("COLA_BENCH_MIN_WIRE_SAVING={raw:?} is not a number");
+                std::process::exit(1);
+            }
+        };
+        if wire_saving_pct < minv {
+            eprintln!(
+                "WIRE REGRESSION: bf16 saves only {wire_saving_pct:.1}% of \
+                 FitBatch bytes/interval, required >= {minv:.1}%"
             );
             std::process::exit(1);
         }

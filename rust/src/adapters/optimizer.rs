@@ -7,7 +7,7 @@
 //! m/v moments.
 
 use crate::config::Optimizer;
-use crate::tensor::Tensor;
+use crate::tensor::{simd, Tensor};
 
 #[derive(Clone, Copy, Debug)]
 pub struct OptimizerCfg {
@@ -78,31 +78,33 @@ impl OptState {
         assert_eq!(params.len(), grads.len());
         self.t += 1;
         let c = self.cfg;
+        // element updates run through tensor::simd — runtime-dispatched
+        // scalar/AVX2 kernels that are bit-identical to the pinned scalar
+        // loops (the reference-graph twin contract survives SIMD)
         match c.kind {
             Optimizer::Sgd => {
                 for (p, g) in params.iter_mut().zip(grads) {
-                    for (w, gv) in p.data_mut().iter_mut().zip(g.data()) {
-                        *w -= c.lr * (gv + c.weight_decay * *w);
-                    }
+                    simd::sgd_update(p.data_mut(), g.data(), c.lr, c.weight_decay);
                 }
             }
             Optimizer::AdamW => {
-                let bc1 = 1.0 - c.beta1.powi(self.t as i32);
-                let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+                let step = simd::AdamwStep {
+                    lr: c.lr,
+                    beta1: c.beta1,
+                    beta2: c.beta2,
+                    eps: c.eps,
+                    weight_decay: c.weight_decay,
+                    bc1: 1.0 - c.beta1.powi(self.t as i32),
+                    bc2: 1.0 - c.beta2.powi(self.t as i32),
+                };
                 for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-                    let (m, v) = (&mut self.m[i], &mut self.v[i]);
-                    for ((w, gv), (mi, vi)) in p
-                        .data_mut()
-                        .iter_mut()
-                        .zip(g.data())
-                        .zip(m.iter_mut().zip(v.iter_mut()))
-                    {
-                        *mi = c.beta1 * *mi + (1.0 - c.beta1) * gv;
-                        *vi = c.beta2 * *vi + (1.0 - c.beta2) * gv * gv;
-                        let mhat = *mi / bc1;
-                        let vhat = *vi / bc2;
-                        *w -= c.lr * (mhat / (vhat.sqrt() + c.eps) + c.weight_decay * *w);
-                    }
+                    simd::adamw_update(
+                        p.data_mut(),
+                        g.data(),
+                        &mut self.m[i],
+                        &mut self.v[i],
+                        &step,
+                    );
                 }
             }
         }

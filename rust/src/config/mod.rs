@@ -225,6 +225,82 @@ impl fmt::Display for FailoverPolicy {
     }
 }
 
+/// How Fit/FitBatch payload tensors are encoded on the TCP wire.
+/// Negotiated per connection via the `Hello` handshake: a daemon that
+/// does not acknowledge bf16 keeps receiving raw f32 frames.
+///
+/// State blobs (`StateExport`/`StateImport`, `failover = "migrate"`
+/// shadow checkpoints) are NEVER compressed regardless of this knob —
+/// migration must stay bit-exact, so only the Fit/FitBatch `x`/`ghat`
+/// payloads ride as bf16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// every f32 ships by bit pattern (the byte-identical default)
+    F32,
+    /// Fit/FitBatch payload tensors ship as round-to-nearest-even bf16
+    /// (half the payload bytes; loss curves stay within the documented
+    /// tolerance of the f32 run — see README §SIMD & wire compression)
+    Bf16,
+}
+
+impl FromStr for WireFormat {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => WireFormat::F32,
+            "bf16" => WireFormat::Bf16,
+            other => bail!("unknown offload wire format '{other}' (f32|bf16)"),
+        })
+    }
+}
+
+impl fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireFormat::F32 => write!(f, "f32"),
+            WireFormat::Bf16 => write!(f, "bf16"),
+        }
+    }
+}
+
+/// Which kernel tier the tensor engine dispatches (`tensor::simd`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// follow the `COLA_SIMD` env var (default: AVX2 when detected)
+    Auto,
+    /// force the pinned scalar fallbacks
+    Off,
+    /// AVX2 when detected, bit-identical tier only
+    On,
+    /// additionally allow the FMA-contracted panel kernel (documented
+    /// tolerance — `tensor::simd::FMA_CONTRACTION_EPS`)
+    Fma,
+}
+
+impl FromStr for SimdMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => SimdMode::Auto,
+            "off" | "false" | "0" => SimdMode::Off,
+            "on" | "true" | "1" => SimdMode::On,
+            "fma" => SimdMode::Fma,
+            other => bail!("unknown simd mode '{other}' (auto|on|off|fma)"),
+        })
+    }
+}
+
+impl fmt::Display for SimdMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimdMode::Auto => write!(f, "auto"),
+            SimdMode::Off => write!(f, "off"),
+            SimdMode::On => write!(f, "on"),
+            SimdMode::Fma => write!(f, "fma"),
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Optimizer {
     Sgd,
@@ -346,6 +422,19 @@ pub struct TrainConfig {
     /// degrades loudly instead of aborting), and mid-run the supervisor
     /// promotes one whenever a member dies.
     pub standby_addrs: Vec<String>,
+    /// Fit/FitBatch payload encoding on the TCP wire (tcp only).
+    /// "f32" (default) keeps every tensor bit-exact; "bf16" halves the
+    /// payload bytes with round-to-nearest-even truncation (negotiated
+    /// via `Hello` — daemons that don't acknowledge it keep receiving
+    /// f32). State blobs and FitResult replies always stay f32, so
+    /// `failover = "migrate"` checkpoints remain bit-exact under bf16.
+    pub offload_wire: WireFormat,
+    /// kernel tier of the tensor engine (`tensor::simd`):
+    /// auto (follow COLA_SIMD) | on | off | fma. "off"-vs-"on" never
+    /// moves a loss curve (the AVX2 tier is bit-identical to scalar);
+    /// "fma" trades bit-parity of the matmul panel kernel for speed
+    /// within a documented tolerance.
+    pub simd: SimdMode,
 }
 
 impl Default for TrainConfig {
@@ -379,6 +468,8 @@ impl Default for TrainConfig {
             heartbeat_interval: 1,
             failover: FailoverPolicy::Fail,
             standby_addrs: Vec::new(),
+            offload_wire: WireFormat::F32,
+            simd: SimdMode::Auto,
         }
     }
 }
@@ -437,6 +528,8 @@ impl TrainConfig {
                     val.parse().context("heartbeat_interval")?
             }
             "failover" => self.failover = val.parse()?,
+            "offload_wire" => self.offload_wire = val.parse()?,
+            "simd" => self.simd = val.parse()?,
             "standby_addrs" => {
                 self.standby_addrs = val
                     .split(',')
@@ -485,6 +578,15 @@ impl TrainConfig {
                            is chosen per daemon (`cola worker --offload ...`); \
                            leave offload = \"cpu\" on the server config");
                 }
+                // offload_wire = "bf16" + failover = "migrate" is allowed
+                // ONLY because state blobs never compress: wire::encode_state
+                // has no bf16 path, so shadow checkpoints and
+                // StateExport/StateImport migration stay bit-exact f32 and
+                // the byte-identical-recovery contract holds. Anyone wiring
+                // bf16 into state export must make this arm reject the
+                // combination instead (pinned by
+                // `bf16_with_migrate_allowed_because_state_stays_f32` and
+                // wire.rs `state_blob_ignores_wire_format`).
             }
             TransportKind::Local => {
                 if !self.worker_addrs.is_empty() {
@@ -515,6 +617,13 @@ impl TrainConfig {
                            \"local\" — batching is a wire-framing feature; an \
                            in-process pool already pays no per-job round-trip \
                            (refusing to silently ignore)");
+                }
+                if self.offload_wire != WireFormat::F32 {
+                    bail!("offload_wire = \"{}\" is set but offload_transport \
+                           is \"local\" — wire compression only applies to \
+                           frames on a TCP socket; in-process jobs move by \
+                           reference (refusing to silently ignore)",
+                          self.offload_wire);
                 }
             }
         }
@@ -677,6 +786,52 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.set("failover", "migrate").unwrap();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn wire_format_parses_and_rejects_unknown() {
+        assert_eq!("f32".parse::<WireFormat>().unwrap(), WireFormat::F32);
+        assert_eq!("bf16".parse::<WireFormat>().unwrap(), WireFormat::Bf16);
+        assert!("fp8".parse::<WireFormat>().is_err());
+        assert_eq!(WireFormat::Bf16.to_string(), "bf16");
+    }
+
+    #[test]
+    fn bf16_rejected_on_local_transport() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_wire", "bf16").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bf16_with_migrate_allowed_because_state_stays_f32() {
+        // the one combination the bugfix gate watches: bf16 payload
+        // compression + migrate-on-failure checkpoints. It validates ONLY
+        // because encode_state has no bf16 path — state blobs stay
+        // bit-exact f32 (wire.rs `state_blob_ignores_wire_format`). If
+        // state export ever learns to compress, validate() must start
+        // rejecting this combination.
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        cfg.set("offload_wire", "bf16").unwrap();
+        cfg.set("failover", "migrate").unwrap();
+        cfg.set("standby_addrs", "127.0.0.1:7710").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.offload_wire, WireFormat::Bf16);
+    }
+
+    #[test]
+    fn simd_mode_parses_and_rejects_unknown() {
+        assert_eq!("auto".parse::<SimdMode>().unwrap(), SimdMode::Auto);
+        assert_eq!("off".parse::<SimdMode>().unwrap(), SimdMode::Off);
+        assert_eq!("on".parse::<SimdMode>().unwrap(), SimdMode::On);
+        assert_eq!("fma".parse::<SimdMode>().unwrap(), SimdMode::Fma);
+        assert!("avx512".parse::<SimdMode>().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.set("simd", "off").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.simd, SimdMode::Off);
     }
 
     #[test]

@@ -27,8 +27,8 @@ use super::offload::{
     rendezvous_owner, FitJob, FitResult, PoolSupervisor, TransferModel, WorkerPool,
 };
 use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
-use crate::config::{AdapterKind, FailoverPolicy, Method, Mode, Optimizer, Task,
-                    TrainConfig, TransportKind};
+use crate::config::{AdapterKind, FailoverPolicy, Method, Mode, Optimizer, SimdMode,
+                    Task, TrainConfig, TransportKind};
 use crate::data::Split;
 use crate::merge;
 use crate::metrics::{Curve, Timings};
@@ -137,6 +137,15 @@ impl Trainer {
         // the same process can't silently leak into this one. Results
         // are thread-count independent; this is a wall-clock knob.
         tensor::pool::set_threads(cfg.threads);
+        // kernel dispatch tier, same uniform-override semantics: `auto`
+        // leaves the COLA_SIMD env decision in place, anything explicit
+        // pins the process-wide policy for this run
+        tensor::simd::set_policy(match cfg.simd {
+            SimdMode::Auto => None,
+            SimdMode::Off => Some(tensor::simd::Policy::Off),
+            SimdMode::On => Some(tensor::simd::Policy::Auto),
+            SimdMode::Fma => Some(tensor::simd::Policy::Fma),
+        });
         if cfg.users > 1 && cfg.mode != Mode::Merged {
             bail!("multi-user training in one server requires mode=merged \
                    (the 'Alone' arm of Table 4 is separate runs)");
@@ -216,6 +225,7 @@ impl Trainer {
             tenant: self.cfg.offload_tenant.clone(),
             batch: self.cfg.offload_batch,
             inflight: self.cfg.offload_inflight,
+            wire: self.cfg.offload_wire,
             ..TcpLinkOpts::default()
         };
         if migrate {
@@ -395,6 +405,10 @@ impl Trainer {
         if let Some(a) = ea {
             eval_acc.push(self.cfg.steps as u64, a);
         }
+        // pick up bytes from registration/snapshot traffic that never
+        // flowed through a fit interval (collect_pending early-returns
+        // when nothing is pending)
+        self.drain_wire_bytes();
         Ok(RunReport {
             train_loss,
             train_acc,
@@ -731,7 +745,24 @@ impl Trainer {
         for s in slots {
             results.push(s.outcome?);
         }
-        self.apply_fit_results(results)
+        self.apply_fit_results(results)?;
+        // every reply is in, so every request write has completed —
+        // safe point to drain the per-link wire-byte ledgers
+        self.drain_wire_bytes();
+        Ok(())
+    }
+
+    /// Fold each transport's request-byte ledger into the run timings
+    /// (`Timings::wire_bytes`). Ledgers are drained (swap-to-zero), so
+    /// calling this repeatedly never double-counts.
+    fn drain_wire_bytes(&mut self) {
+        if let Some(pool) = self.pool.as_ref() {
+            let mut total = 0u64;
+            for i in 0..pool.len() {
+                total += pool.worker(i).take_wire_bytes();
+            }
+            self.timings.wire_bytes += total;
+        }
     }
 
     /// Drive an interval's slots to all-Ok with fresh checkpoints, or

@@ -8,8 +8,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use cola::cli::Args;
-use cola::config::{apply_overrides, Method, OffloadTarget, TomlDoc, TrainConfig,
-                   TransportKind};
+use cola::config::{apply_overrides, Method, OffloadTarget, SimdMode, TomlDoc,
+                   TrainConfig, TransportKind};
 use cola::coordinator::{rebalance_daemons, Driver, FtaasService, RunReport,
                         TransferModel, Trainer};
 use cola::transport::tcp::TcpLinkOpts;
@@ -27,6 +27,7 @@ fn main() -> Result<()> {
         "worker" => cmd_worker(&args),
         "pool" => cmd_pool(&args),
         "serve" => cmd_serve(&args),
+        "curvediff" => cmd_curvediff(&args),
         "memory" => cmd_memory(&args),
         "table1" => cmd_table1(),
         "" | "help" => {
@@ -55,12 +56,26 @@ fn print_help() {
                     --standby_addrs host:port,... (cold spare daemons)\n\
                     --failover fail|migrate (survive daemon death bit-exactly)\n\
                     --heartbeat_interval N (liveness sweep every N flushes)\n\
+                    --offload_wire f32|bf16 (bf16 halves fit-tensor bytes on\n\
+                    the TCP wire; replies, snapshots, and migration state\n\
+                    blobs always stay f32, so bf16 composes with\n\
+                    --failover migrate)\n\
+                    --simd auto|off|on|fma (kernel dispatch tier; `auto`\n\
+                    defers to the COLA_SIMD env var, `fma` trades bitwise\n\
+                    reproducibility for fused multiply-add speed)\n\
                     --loss_out <file.json> (write loss/acc curves for diffing)\n\
            worker   gradient-offload worker daemon (distributed mode);\n\
-                    serves any number of concurrent trainer connections\n\
+                    serves any number of concurrent trainer connections;\n\
+                    bf16 fit tensors are negotiated per connection (Hello\n\
+                    capability) — daemons always reply and export state\n\
+                    in raw-bit f32\n\
                     --listen 127.0.0.1:0 --offload cpu|gpu --threads N\n\
+                    --simd auto|off|on|fma (kernel dispatch tier)\n\
                     --simulate_link cpu|gpu (add a modeled link delay)\n\
                     --stop host:port (clean-shutdown a running daemon)\n\
+           curvediff  numerically compare two --loss_out curve files\n\
+                    cola curvediff a.json b.json [--tol T]\n\
+                    --tol T (relative tolerance; default 0 = bit-identical)\n\
            pool     elastic-pool resize between runs: migrate shard state\n\
                     so the same daemons can serve a different topology\n\
                     --config <file.toml> (names users/sites/worker_addrs)\n\
@@ -163,11 +178,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // same loud-typo contract as train: an unknown option must not
     // silently launch a daemon with the wrong topology
     const WORKER_KEYS: &[&str] =
-        &["stop", "listen", "offload", "threads", "simulate_link", "artifacts_dir"];
+        &["stop", "listen", "offload", "threads", "simd", "simulate_link",
+          "artifacts_dir"];
     for k in args.options.keys() {
         if !WORKER_KEYS.contains(&k.as_str()) {
             bail!("unknown worker option --{k} \
-                   (listen|offload|threads|simulate_link|artifacts_dir|stop)");
+                   (listen|offload|threads|simd|simulate_link|artifacts_dir|stop)");
         }
     }
     args.require_no_flags("worker")?;
@@ -180,6 +196,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let target: OffloadTarget = args.get_or("offload", "cpu").parse()?;
     let threads: usize = args.parse_or("threads", 0)?;
     cola::tensor::pool::set_threads(threads);
+    // same mapping the trainer applies from its `simd` config key —
+    // daemons must be pinnable too, or a bit-identical cross-process
+    // run could pair a SIMD server with a scalar worker
+    let simd: SimdMode = args.get_or("simd", "auto").parse()?;
+    cola::tensor::simd::set_policy(match simd {
+        SimdMode::Auto => None,
+        SimdMode::Off => Some(cola::tensor::simd::Policy::Off),
+        SimdMode::On => Some(cola::tensor::simd::Policy::Auto),
+        SimdMode::Fma => Some(cola::tensor::simd::Policy::Fma),
+    });
     let simulate = match args.get("simulate_link") {
         None => None,
         Some("cpu") => Some(TransferModel::cpu_link()),
@@ -318,6 +344,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("  {:24} {:.1}", cola::data::lm::CATEGORIES[c],
                  svc.category_score(c)?);
     }
+    Ok(())
+}
+
+/// `cola curvediff a.json b.json --tol T` — numeric comparison of two
+/// `--loss_out` curve files. Pointwise relative criterion:
+/// `|a - b| <= tol * max(1, |a|, |b|)`. With the default `--tol 0` this
+/// is exactly the bit-identical contract the byte-level `diff` in CI
+/// checks; `distributed_smoke.sh wire` uses `--tol 0.05` to bound the
+/// bf16 wire's drift against the f32 baseline.
+fn cmd_curvediff(args: &Args) -> Result<()> {
+    args.require_no_flags("curvediff")?;
+    let [a_path, b_path] = &args.positional[..] else {
+        bail!("usage: cola curvediff <a.json> <b.json> [--tol T]");
+    };
+    let tol: f64 = args.parse_or("tol", 0.0)?;
+    let load = |p: &str| -> Result<Json> {
+        let src = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        Json::parse(&src).map_err(|e| anyhow::anyhow!("{p}: {e}"))
+    };
+    let (a, b) = (load(a_path)?, load(b_path)?);
+    let mut worst: f64 = 0.0;
+    let mut compared = 0usize;
+    for key in ["train_loss", "train_acc", "eval_loss", "eval_acc"] {
+        let (Some(ca), Some(cb)) = (a.get(key), b.get(key)) else {
+            bail!("curve '{key}' missing from one of the files");
+        };
+        let (pa, pb) = (
+            ca.as_arr().unwrap_or_default(),
+            cb.as_arr().unwrap_or_default(),
+        );
+        if pa.len() != pb.len() {
+            bail!(
+                "curve '{key}': {} vs {} points — the runs are not comparable",
+                pa.len(),
+                pb.len()
+            );
+        }
+        for (x, y) in pa.iter().zip(pb) {
+            let (xs, ys) = (
+                x.as_arr().unwrap_or_default(),
+                y.as_arr().unwrap_or_default(),
+            );
+            let ([sx, vx], [sy, vy]) = (xs, ys) else {
+                bail!("curve '{key}': malformed [step, value] point");
+            };
+            if sx.as_f64() != sy.as_f64() {
+                bail!("curve '{key}': step mismatch ({sx} vs {sy})");
+            }
+            compared += 1;
+            match (vx.as_f64(), vy.as_f64()) {
+                (Some(u), Some(v)) => {
+                    let dev = (u - v).abs() / f64::max(1.0, f64::max(u.abs(), v.abs()));
+                    worst = worst.max(dev);
+                    if dev > tol {
+                        bail!(
+                            "curve '{key}' step {sx}: {u} vs {v} \
+                             (relative deviation {dev:.3e} > tol {tol:.3e})"
+                        );
+                    }
+                }
+                // non-finite values serialize as strings ("NaN", "inf");
+                // only an exact match passes — a diverged run never
+                // sneaks through a tolerance
+                _ => {
+                    if format!("{vx}") != format!("{vy}") {
+                        bail!("curve '{key}' step {sx}: {vx} vs {vy} (non-numeric)");
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "curvediff: {compared} points compared, max relative deviation \
+         {worst:.3e} (tol {tol:.3e}) — OK"
+    );
     Ok(())
 }
 

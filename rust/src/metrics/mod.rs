@@ -109,6 +109,12 @@ pub struct Timings {
     /// adaptation intervals that stalled on a recovery round before
     /// their replies could apply
     pub stall_intervals: u64,
+    /// actual request bytes put on the wire by TCP transports (frame
+    /// headers included) — the quantity `offload_wire = "bf16"`
+    /// shrinks; 0 for in-process transports. Unlike `bytes_offloaded`
+    /// (the logical f32 tensor ledger), this reflects the negotiated
+    /// wire encoding.
+    pub wire_bytes: u64,
 }
 
 impl Timings {
@@ -132,6 +138,11 @@ impl Timings {
             self.bytes_returned as f64 / (1024.0 * 1024.0),
             self.round_trips,
         );
+        if self.wire_bytes > 0 {
+            // greppable exact count: distributed_smoke.sh's wire mode
+            // reads this to compute the measured f32 -> bf16 reduction
+            s.push_str(&format!(" | wire bytes {}", self.wire_bytes));
+        }
         if self.migrations > 0 || self.lost_fits > 0 {
             s.push_str(&format!(
                 " | migrations {} ({:.2} MiB state moved) | lost fits recovered {} | stalled intervals {}",

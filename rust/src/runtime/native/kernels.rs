@@ -110,25 +110,12 @@ pub fn attention_head(
     }
     // numerically stable row softmax; a row whose every logit is -inf
     // (all attendable positions underflowed) degrades to all-zero probs
-    // instead of NaN
+    // instead of NaN. Dispatched through tensor::simd — the AVX2 tier
+    // vectorizes the shift-subtract and normalize passes while exp and
+    // the ordered row-sum stay scalar, so it is bit-identical to the
+    // pinned scalar kernel.
     for i in 0..s {
-        let row = &mut ld[i * skv..(i + 1) * skv];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let shift = if m.is_finite() { m } else { 0.0 };
-        let mut sum = 0.0f32;
-        for x in row.iter_mut() {
-            *x = (*x - shift).exp();
-            sum += *x;
-        }
-        if sum > 0.0 {
-            for x in row.iter_mut() {
-                *x /= sum;
-            }
-        } else {
-            for x in row.iter_mut() {
-                *x = 0.0;
-            }
-        }
+        tensor::simd::softmax_row(&mut ld[i * skv..(i + 1) * skv]);
     }
     let p = logits;
     (tensor::matmul(&p, v), p)

@@ -13,6 +13,7 @@
 
 pub mod ops;
 pub mod pool;
+pub mod simd;
 
 pub use ops::*;
 

@@ -5,9 +5,11 @@
 //! contractions. `matmul` packs B into cache-resident column panels and
 //! splits the output into row bands across the scoped-thread pool
 //! (`tensor::pool`); the innermost loop is a contiguous axpy over the
-//! output row, which auto-vectorizes well. Bands and panels never change
-//! per-element accumulation order, so results are bit-identical for
-//! every thread count. Perf iterations are logged in EXPERIMENTS.md
+//! output row, dispatched through the runtime-detected microkernels in
+//! [`tensor::simd`](super::simd) (scalar / AVX2 / opt-in FMA — see the
+//! determinism notes there). Bands and panels never change per-element
+//! accumulation order, so results are bit-identical for every thread
+//! count. Perf iterations are logged in EXPERIMENTS.md
 //! §Perf; the throughput bench (`cargo bench --bench throughput`) emits
 //! the BENCH_throughput.json baseline.
 //!
@@ -18,6 +20,7 @@
 //! reference (pinned by `matmul_ieee_nonfinite_parity`).
 
 use super::pool;
+use super::simd;
 use super::Tensor;
 
 /// Column-panel width for B packing (f32 lane-friendly, fits L1 rows).
@@ -40,14 +43,16 @@ fn mm_band(
     oband: &mut [f32],
 ) {
     let rows = oband.len() / n;
+    // runtime-dispatched axpy (tensor::simd): scalar, AVX2 (bit-identical
+    // to scalar — separate mul+add per lane), or opt-in FMA (documented
+    // tolerance). Hoisted out of the loops so the tier check runs once.
+    let axpy = simd::axpy_kernel();
     for i in 0..rows {
         let arow = &arows[i * k..(i + 1) * k];
         let orow = &mut oband[i * n + j0..i * n + j0 + pw];
         for (p, &av) in arow.iter().enumerate() {
             let brow = &panel[p * pstride..p * pstride + pw];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+            axpy(orow, brow, av);
         }
     }
 }
@@ -329,6 +334,23 @@ mod tests {
         assert_eq!(m1, m4);
         assert_eq!(t1, t4);
         assert_eq!(n1, n4);
+    }
+
+    #[test]
+    fn simd_matmul_matches_scalar_bitwise() {
+        // the AVX2 tier issues a separate mul+add per lane, so forcing
+        // the scalar fallback must not move a single bit (the same
+        // contract the path-parity CI job checks on whole loss curves)
+        let _g = simd::test_policy_lock();
+        let mut rng = Rng::new(29);
+        let a = Tensor::randn(&[33, 64], 1.0, &mut rng);
+        let b = Tensor::randn(&[64, 300], 1.0, &mut rng);
+        simd::set_policy(Some(simd::Policy::Off));
+        let scalar = matmul(&a, &b);
+        simd::set_policy(Some(simd::Policy::Auto));
+        let vector = matmul(&a, &b);
+        simd::set_policy(None);
+        assert_eq!(scalar, vector);
     }
 
     #[test]

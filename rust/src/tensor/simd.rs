@@ -1,0 +1,673 @@
+//! Runtime-detected SIMD microkernels for the native hot paths.
+//!
+//! Zero-dependency AVX2/FMA fast paths (`std::arch` +
+//! `is_x86_feature_detected!`) for the three per-element loops that
+//! dominate a training step: the matmul B-panel axpy
+//! (`tensor::ops::matmul`), the attention-softmax row pass
+//! (`runtime::native::kernels::attention_head`), and the SGD/AdamW
+//! updates (`adapters::optimizer`). Every kernel keeps its original
+//! scalar loop here as the pinned fallback, selected at runtime:
+//!
+//! - `COLA_SIMD=0` (or `off`) — scalar everywhere;
+//! - `COLA_SIMD=1` / unset — AVX2 when the CPU has it (**bit-identical**
+//!   to scalar, see below);
+//! - `COLA_SIMD=fma` — additionally allows the FMA-contracted panel
+//!   kernel (documented tolerance, see [`FMA_CONTRACTION_EPS`]);
+//! - the `simd` config key / [`set_policy`] override the env at runtime.
+//!
+//! **Determinism contract.** The default AVX2 tier vectorizes only
+//! lane-wise IEEE-exact operations: the panel axpy issues a separate
+//! multiply and add per lane (no contraction), the optimizer updates are
+//! purely elementwise (`_mm256_sqrt_ps`/`_mm256_div_ps` are correctly
+//! rounded), and softmax vectorizes the shift-subtract and normalize
+//! passes while `exp` and the row-sum stay scalar — `exp` because libm
+//! is the reference, the sum because it is an ordered reduction and
+//! 8-lane partial sums would reorder adds. No accumulation order
+//! changes anywhere, so scalar and AVX2 runs produce **byte-identical
+//! loss curves** (pinned by the in-module bitwise parity tests and the
+//! `path-parity` CI job). Only the opt-in FMA tier trades that for
+//! speed: one fused multiply-add per accumulation step skips an
+//! intermediate rounding, bounded by [`FMA_CONTRACTION_EPS`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Documented tolerance for the opt-in FMA-contracted panel kernel
+/// (`COLA_SIMD=fma` / `simd = "fma"`). Each fused multiply-add skips
+/// one intermediate f32 rounding (at most one ulp, `2^-23`, relative),
+/// so after `k` accumulation steps the FMA result may drift from the
+/// scalar/AVX2 path by at most `FMA_CONTRACTION_EPS * k` relative to
+/// the accumulated absolute magnitude. Pinned by
+/// `fma_panel_within_documented_tolerance`.
+pub const FMA_CONTRACTION_EPS: f32 = 1.2e-7;
+
+/// What the user asked for (env/config); [`level`] intersects it with
+/// what the CPU offers.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Policy {
+    /// scalar fallbacks everywhere
+    Off,
+    /// AVX2 when detected, bit-identical tier only (the default)
+    Auto,
+    /// additionally allow the FMA-contracted panel kernel
+    Fma,
+}
+
+/// The kernel tier actually dispatched on this process right now.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Level {
+    Scalar,
+    Avx2,
+    Avx2Fma,
+}
+
+const P_UNSET: u8 = 0;
+const P_OFF: u8 = 1;
+const P_AUTO: u8 = 2;
+const P_FMA: u8 = 3;
+
+static OVERRIDE: AtomicU8 = AtomicU8::new(P_UNSET);
+
+fn env_policy() -> Policy {
+    static P: OnceLock<Policy> = OnceLock::new();
+    *P.get_or_init(|| match std::env::var("COLA_SIMD") {
+        Ok(s) => match s.trim().to_ascii_lowercase().as_str() {
+            "0" | "off" | "false" => Policy::Off,
+            "fma" => Policy::Fma,
+            _ => Policy::Auto,
+        },
+        Err(_) => Policy::Auto,
+    })
+}
+
+/// Current policy: the [`set_policy`] override, else `COLA_SIMD`, else
+/// [`Policy::Auto`].
+pub fn policy() -> Policy {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        P_OFF => Policy::Off,
+        P_AUTO => Policy::Auto,
+        P_FMA => Policy::Fma,
+        _ => env_policy(),
+    }
+}
+
+/// Serializes tests that mutate the process-global policy override
+/// ([`OVERRIDE`] is shared state; concurrent set/assert would be flaky).
+#[cfg(test)]
+pub(crate) fn test_policy_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Override the policy at runtime (the `simd` config key routes here);
+/// `None` clears back to `COLA_SIMD`/auto.
+pub fn set_policy(p: Option<Policy>) {
+    let v = match p {
+        None => P_UNSET,
+        Some(Policy::Off) => P_OFF,
+        Some(Policy::Auto) => P_AUTO,
+        Some(Policy::Fma) => P_FMA,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// (avx2, fma) as reported by the CPU, detected once.
+fn detect() -> (bool, bool) {
+    static D: OnceLock<(bool, bool)> = OnceLock::new();
+    *D.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            (
+                std::arch::is_x86_feature_detected!("avx2"),
+                std::arch::is_x86_feature_detected!("fma"),
+            )
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            (false, false)
+        }
+    })
+}
+
+/// The tier actually in effect: policy ∩ detection.
+pub fn level() -> Level {
+    let (avx2, fma) = detect();
+    match policy() {
+        Policy::Off => Level::Scalar,
+        Policy::Auto => {
+            if avx2 {
+                Level::Avx2
+            } else {
+                Level::Scalar
+            }
+        }
+        Policy::Fma => {
+            if avx2 && fma {
+                Level::Avx2Fma
+            } else if avx2 {
+                Level::Avx2
+            } else {
+                Level::Scalar
+            }
+        }
+    }
+}
+
+/// Human-readable tier for logs ("scalar" / "avx2" / "avx2+fma").
+pub fn describe() -> &'static str {
+    match level() {
+        Level::Scalar => "scalar",
+        Level::Avx2 => "avx2",
+        Level::Avx2Fma => "avx2+fma",
+    }
+}
+
+// ---------------------------------------------------------------- axpy
+
+/// The matmul B-panel inner loop: `o[j] += a * b[j]`. This is the
+/// pinned scalar kernel every fast path must match (bitwise for AVX2,
+/// within [`FMA_CONTRACTION_EPS`] for FMA).
+pub fn axpy_accum_scalar(o: &mut [f32], b: &[f32], a: f32) {
+    for (x, &y) in o.iter_mut().zip(b) {
+        *x += a * y;
+    }
+}
+
+/// AVX2 axpy: separate 8-lane multiply and add, so every lane computes
+/// exactly `round(o + round(a * b))` — bit-identical to
+/// [`axpy_accum_scalar`]. Falls back to scalar when AVX2 is absent.
+pub fn axpy_accum_avx2(o: &mut [f32], b: &[f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if detect().0 {
+        // safety: AVX2 presence just checked
+        return unsafe { x86::axpy_accum_avx2(o, b, a) };
+    }
+    axpy_accum_scalar(o, b, a)
+}
+
+/// FMA-contracted axpy (`_mm256_fmadd_ps`; scalar tail uses
+/// `f32::mul_add`): one rounding per step instead of two. NOT
+/// bit-identical to scalar — documented by [`FMA_CONTRACTION_EPS`].
+/// Falls back to scalar when FMA is absent.
+pub fn axpy_accum_fma(o: &mut [f32], b: &[f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let (avx2, fma) = detect();
+        if avx2 && fma {
+            // safety: AVX2+FMA presence just checked
+            return unsafe { x86::axpy_accum_fma(o, b, a) };
+        }
+    }
+    axpy_accum_scalar(o, b, a)
+}
+
+/// Dispatch the panel axpy once per band (hoists the tier check out of
+/// the k-loop). `tensor::ops::matmul` calls this.
+pub fn axpy_kernel() -> fn(&mut [f32], &[f32], f32) {
+    match level() {
+        Level::Scalar => axpy_accum_scalar,
+        Level::Avx2 => axpy_accum_avx2,
+        Level::Avx2Fma => axpy_accum_fma,
+    }
+}
+
+// ------------------------------------------------------------- softmax
+
+/// Numerically stable in-place row softmax — the pinned scalar kernel
+/// from `attention_head`: a row whose every logit is `-inf` degrades to
+/// all-zero probs instead of NaN.
+pub fn softmax_row_scalar(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let shift = if m.is_finite() { m } else { 0.0 };
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - shift).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    } else {
+        for x in row.iter_mut() {
+            *x = 0.0;
+        }
+    }
+}
+
+/// AVX2 row softmax, bit-identical to [`softmax_row_scalar`]: the
+/// shift-subtract and the normalize division vectorize (lane-wise exact
+/// IEEE ops); `exp` stays the scalar libm call and the row-sum keeps
+/// its serial order, because either vectorized would change values the
+/// determinism contract pins. Falls back to scalar when AVX2 is absent.
+pub fn softmax_row_avx2(row: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if detect().0 {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let shift = if m.is_finite() { m } else { 0.0 };
+        // safety: AVX2 presence just checked
+        unsafe { x86::sub_scalar_avx2(row, shift) };
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = x.exp();
+            sum += *x;
+        }
+        if sum > 0.0 {
+            // safety: AVX2 presence just checked
+            unsafe { x86::div_scalar_avx2(row, sum) };
+        } else {
+            for x in row.iter_mut() {
+                *x = 0.0;
+            }
+        }
+        return;
+    }
+    softmax_row_scalar(row)
+}
+
+/// Runtime-dispatched row softmax (`attention_head` calls this). The
+/// FMA tier has no contracted softmax — it shares the AVX2 kernel.
+pub fn softmax_row(row: &mut [f32]) {
+    match level() {
+        Level::Scalar => softmax_row_scalar(row),
+        Level::Avx2 | Level::Avx2Fma => softmax_row_avx2(row),
+    }
+}
+
+// ----------------------------------------------------------- optimizer
+
+/// Per-step AdamW constants ([`adamw_update`]): the config scalars plus
+/// the step's bias corrections `bc1 = 1 - beta1^t`, `bc2 = 1 - beta2^t`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamwStep {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+}
+
+/// The pinned scalar AdamW element update from `adapters::optimizer`.
+pub fn adamw_update_scalar(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], s: &AdamwStep) {
+    for ((w, gv), (mi, vi)) in
+        w.iter_mut().zip(g).zip(m.iter_mut().zip(v.iter_mut()))
+    {
+        *mi = s.beta1 * *mi + (1.0 - s.beta1) * gv;
+        *vi = s.beta2 * *vi + (1.0 - s.beta2) * gv * gv;
+        let mhat = *mi / s.bc1;
+        let vhat = *vi / s.bc2;
+        *w -= s.lr * (mhat / (vhat.sqrt() + s.eps) + s.weight_decay * *w);
+    }
+}
+
+/// AVX2 AdamW: purely elementwise, every lane runs the exact scalar
+/// operation sequence (`_mm256_sqrt_ps` and `_mm256_div_ps` are IEEE
+/// correctly rounded, no contraction) — bit-identical to
+/// [`adamw_update_scalar`]. Falls back to scalar when AVX2 is absent.
+pub fn adamw_update_avx2(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], s: &AdamwStep) {
+    #[cfg(target_arch = "x86_64")]
+    if detect().0 {
+        // safety: AVX2 presence just checked
+        return unsafe { x86::adamw_update_avx2(w, g, m, v, s) };
+    }
+    adamw_update_scalar(w, g, m, v, s)
+}
+
+/// Runtime-dispatched AdamW update. The FMA tier shares the AVX2
+/// kernel: the optimizer trajectory stays bit-exact under every policy
+/// except `off`-vs-rest never differing at all.
+pub fn adamw_update(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], s: &AdamwStep) {
+    match level() {
+        Level::Scalar => adamw_update_scalar(w, g, m, v, s),
+        Level::Avx2 | Level::Avx2Fma => adamw_update_avx2(w, g, m, v, s),
+    }
+}
+
+/// The pinned scalar SGD element update (`w -= lr * (g + wd * w)`).
+pub fn sgd_update_scalar(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
+    for (w, gv) in w.iter_mut().zip(g) {
+        *w -= lr * (gv + weight_decay * *w);
+    }
+}
+
+/// AVX2 SGD, bit-identical to [`sgd_update_scalar`] (lane-wise exact
+/// mul/add/sub). Falls back to scalar when AVX2 is absent.
+pub fn sgd_update_avx2(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if detect().0 {
+        // safety: AVX2 presence just checked
+        return unsafe { x86::sgd_update_avx2(w, g, lr, weight_decay) };
+    }
+    sgd_update_scalar(w, g, lr, weight_decay)
+}
+
+/// Runtime-dispatched SGD update.
+pub fn sgd_update(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
+    match level() {
+        Level::Scalar => sgd_update_scalar(w, g, lr, weight_decay),
+        Level::Avx2 | Level::Avx2Fma => sgd_update_avx2(w, g, lr, weight_decay),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::AdamwStep;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_accum_avx2(o: &mut [f32], b: &[f32], a: f32) {
+        debug_assert_eq!(o.len(), b.len());
+        let n = o.len();
+        let op = o.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            // separate mul + add (no fmadd): per-lane identical to scalar
+            let prod = _mm256_mul_ps(va, _mm256_loadu_ps(bp.add(i)));
+            let sum = _mm256_add_ps(_mm256_loadu_ps(op.add(i)), prod);
+            _mm256_storeu_ps(op.add(i), sum);
+            i += 8;
+        }
+        while i < n {
+            *op.add(i) += a * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 + FMA support.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_accum_fma(o: &mut [f32], b: &[f32], a: f32) {
+        debug_assert_eq!(o.len(), b.len());
+        let n = o.len();
+        let op = o.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let acc = _mm256_fmadd_ps(va, _mm256_loadu_ps(bp.add(i)), _mm256_loadu_ps(op.add(i)));
+            _mm256_storeu_ps(op.add(i), acc);
+            i += 8;
+        }
+        while i < n {
+            // keep the tail contracted too, so the whole row shares one
+            // rounding regime
+            *op.add(i) = a.mul_add(*bp.add(i), *op.add(i));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sub_scalar_avx2(row: &mut [f32], shift: f32) {
+        let n = row.len();
+        let rp = row.as_mut_ptr();
+        let vs = _mm256_set1_ps(shift);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_sub_ps(_mm256_loadu_ps(rp.add(i)), vs);
+            _mm256_storeu_ps(rp.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            *rp.add(i) -= shift;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn div_scalar_avx2(row: &mut [f32], d: f32) {
+        let n = row.len();
+        let rp = row.as_mut_ptr();
+        let vd = _mm256_set1_ps(d);
+        let mut i = 0;
+        while i + 8 <= n {
+            // true division (not reciprocal-multiply): correctly rounded,
+            // so each lane matches the scalar `x / d`
+            let v = _mm256_div_ps(_mm256_loadu_ps(rp.add(i)), vd);
+            _mm256_storeu_ps(rp.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            *rp.add(i) /= d;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn adamw_update_avx2(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        s: &AdamwStep,
+    ) {
+        debug_assert_eq!(w.len(), g.len());
+        debug_assert_eq!(w.len(), m.len());
+        debug_assert_eq!(w.len(), v.len());
+        let n = w.len();
+        let (wp, gp, mp, vp) = (w.as_mut_ptr(), g.as_ptr(), m.as_mut_ptr(), v.as_mut_ptr());
+        let b1 = _mm256_set1_ps(s.beta1);
+        let omb1 = _mm256_set1_ps(1.0 - s.beta1);
+        let b2 = _mm256_set1_ps(s.beta2);
+        let omb2 = _mm256_set1_ps(1.0 - s.beta2);
+        let bc1 = _mm256_set1_ps(s.bc1);
+        let bc2 = _mm256_set1_ps(s.bc2);
+        let eps = _mm256_set1_ps(s.eps);
+        let lr = _mm256_set1_ps(s.lr);
+        let wd = _mm256_set1_ps(s.weight_decay);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vg = _mm256_loadu_ps(gp.add(i));
+            let vw = _mm256_loadu_ps(wp.add(i));
+            // m = b1*m + (1-b1)*g — two rounded muls then a rounded add,
+            // the scalar operation sequence exactly
+            let vm = _mm256_add_ps(
+                _mm256_mul_ps(b1, _mm256_loadu_ps(mp.add(i))),
+                _mm256_mul_ps(omb1, vg),
+            );
+            // v = b2*v + ((1-b2)*g)*g — scalar `(1-b2) * gv * gv` is
+            // left-associated, so square after the (1-b2) mul
+            let vv = _mm256_add_ps(
+                _mm256_mul_ps(b2, _mm256_loadu_ps(vp.add(i))),
+                _mm256_mul_ps(_mm256_mul_ps(omb2, vg), vg),
+            );
+            _mm256_storeu_ps(mp.add(i), vm);
+            _mm256_storeu_ps(vp.add(i), vv);
+            let mhat = _mm256_div_ps(vm, bc1);
+            let vhat = _mm256_div_ps(vv, bc2);
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(vhat), eps);
+            let upd = _mm256_mul_ps(
+                lr,
+                _mm256_add_ps(_mm256_div_ps(mhat, denom), _mm256_mul_ps(wd, vw)),
+            );
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(vw, upd));
+            i += 8;
+        }
+        if i < n {
+            super::adamw_update_scalar(&mut w[i..], &g[i..], &mut m[i..], &mut v[i..], s);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_update_avx2(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
+        debug_assert_eq!(w.len(), g.len());
+        let n = w.len();
+        let (wp, gp) = (w.as_mut_ptr(), g.as_ptr());
+        let vlr = _mm256_set1_ps(lr);
+        let vwd = _mm256_set1_ps(weight_decay);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vw = _mm256_loadu_ps(wp.add(i));
+            let vg = _mm256_loadu_ps(gp.add(i));
+            // w -= lr * (g + wd*w)
+            let upd = _mm256_mul_ps(vlr, _mm256_add_ps(vg, _mm256_mul_ps(vwd, vw)));
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(vw, upd));
+            i += 8;
+        }
+        while i < n {
+            *wp.add(i) -= lr * (*gp.add(i) + weight_decay * *wp.add(i));
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * 2.0).collect()
+    }
+
+    #[test]
+    fn policy_override_and_describe() {
+        let _g = test_policy_lock();
+        // never force a tier on (detection may be absent); only check the
+        // off override and that clearing restores the env default
+        let before = policy();
+        set_policy(Some(Policy::Off));
+        assert_eq!(policy(), Policy::Off);
+        assert_eq!(level(), Level::Scalar);
+        assert_eq!(describe(), "scalar");
+        set_policy(None);
+        assert_eq!(policy(), before);
+    }
+
+    #[test]
+    fn avx2_axpy_matches_scalar_bitwise() {
+        let mut rng = Rng::new(11);
+        // lengths cover the vector body, the scalar tail, and both empty
+        for n in [0, 1, 7, 8, 9, 16, 31, 63, 250, 256] {
+            let b = randvec(&mut rng, n);
+            let base = randvec(&mut rng, n);
+            for a in [0.0f32, -1.5, 0.73, f32::MIN_POSITIVE, -3.0e30] {
+                let mut o_s = base.clone();
+                let mut o_v = base.clone();
+                axpy_accum_scalar(&mut o_s, &b, a);
+                axpy_accum_avx2(&mut o_v, &b, a);
+                for (x, y) in o_s.iter().zip(&o_v) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "axpy n={n} a={a}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_axpy_nonfinite_parity() {
+        // NaN/inf must propagate exactly like the scalar loop (the IEEE
+        // contract `matmul_ieee_nonfinite_parity` pins end to end)
+        let b = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, 0.0, -0.0, 2.0, 3.0, 4.0];
+        let base = vec![1.0f32; 9];
+        let mut o_s = base.clone();
+        let mut o_v = base;
+        axpy_accum_scalar(&mut o_s, &b, 0.0);
+        axpy_accum_avx2(&mut o_v, &b, 0.0);
+        for (x, y) in o_s.iter().zip(&o_v) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn fma_panel_within_documented_tolerance() {
+        // the contracted kernel may drift, but only within the documented
+        // per-step bound relative to the accumulated magnitude
+        let mut rng = Rng::new(23);
+        let k = 64;
+        let n = 250;
+        let mut o_ref = vec![0.0f32; n];
+        let mut o_fma = vec![0.0f32; n];
+        let mut mag = vec![0.0f32; n];
+        for _ in 0..k {
+            let a = rng.normal();
+            let b = randvec(&mut rng, n);
+            axpy_accum_scalar(&mut o_ref, &b, a);
+            axpy_accum_fma(&mut o_fma, &b, a);
+            for (mj, bj) in mag.iter_mut().zip(&b) {
+                *mj += (a * bj).abs();
+            }
+        }
+        for j in 0..n {
+            let bound = FMA_CONTRACTION_EPS * k as f32 * mag[j].max(1.0);
+            let diff = (o_ref[j] - o_fma[j]).abs();
+            assert!(
+                diff <= bound,
+                "fma drift {diff} exceeds documented bound {bound} at {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn avx2_softmax_matches_scalar_bitwise() {
+        let mut rng = Rng::new(37);
+        for n in [1, 3, 8, 9, 17, 40, 250] {
+            let mut r_s = randvec(&mut rng, n);
+            // spread the logits so shift/exp/normalize all do real work
+            for (i, x) in r_s.iter_mut().enumerate() {
+                *x = *x * 4.0 + (i % 5) as f32;
+            }
+            let mut r_v = r_s.clone();
+            softmax_row_scalar(&mut r_s);
+            softmax_row_avx2(&mut r_v);
+            for (x, y) in r_s.iter().zip(&r_v) {
+                assert_eq!(x.to_bits(), y.to_bits(), "softmax n={n}");
+            }
+        }
+        // the degenerate all-masked row (every logit -inf) zeroes on both
+        let mut d_s = vec![f32::NEG_INFINITY; 11];
+        let mut d_v = d_s.clone();
+        softmax_row_scalar(&mut d_s);
+        softmax_row_avx2(&mut d_v);
+        assert_eq!(d_s, vec![0.0; 11]);
+        assert_eq!(d_s, d_v);
+    }
+
+    #[test]
+    fn avx2_optimizers_match_scalar_bitwise() {
+        let mut rng = Rng::new(51);
+        for n in [1, 8, 13, 100, 257] {
+            let w0 = randvec(&mut rng, n);
+            let g = randvec(&mut rng, n);
+            let m0 = randvec(&mut rng, n);
+            let v0: Vec<f32> = randvec(&mut rng, n).iter().map(|x| x * x).collect();
+            let s = AdamwStep {
+                lr: 0.01,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 0.001,
+                bc1: 1.0 - 0.9f32.powi(3),
+                bc2: 1.0 - 0.999f32.powi(3),
+            };
+            let (mut ws, mut ms, mut vs) = (w0.clone(), m0.clone(), v0.clone());
+            let (mut wv, mut mv, mut vv) = (w0.clone(), m0.clone(), v0.clone());
+            adamw_update_scalar(&mut ws, &g, &mut ms, &mut vs, &s);
+            adamw_update_avx2(&mut wv, &g, &mut mv, &mut vv, &s);
+            for i in 0..n {
+                assert_eq!(ws[i].to_bits(), wv[i].to_bits(), "adamw w n={n} i={i}");
+                assert_eq!(ms[i].to_bits(), mv[i].to_bits(), "adamw m n={n} i={i}");
+                assert_eq!(vs[i].to_bits(), vv[i].to_bits(), "adamw v n={n} i={i}");
+            }
+            let (mut ss, mut sv) = (w0.clone(), w0.clone());
+            sgd_update_scalar(&mut ss, &g, 0.05, 0.01);
+            sgd_update_avx2(&mut sv, &g, 0.05, 0.01);
+            for i in 0..n {
+                assert_eq!(ss[i].to_bits(), sv[i].to_bits(), "sgd n={n} i={i}");
+            }
+        }
+    }
+}

@@ -31,6 +31,17 @@
 //! chaos shape), and `rust/tests/transport_tcp.rs` +
 //! `rust/tests/transport_multi.rs` + `rust/tests/transport_chaos.rs`
 //! mirror it as integration tests.
+//!
+//! One opt-out: `offload_wire = "bf16"` trades the bit-exact f32 wire
+//! for 2-byte fit tensors (`Fit` / `FitBatch` requests only — replies,
+//! registration, snapshots, and migration blobs stay raw-bit f32, so
+//! adapter/optimizer state is never quantized and bf16 composes with
+//! `failover = "migrate"`). The truncation itself is deterministic
+//! (round-to-nearest-even, pure function of the source bits), so a
+//! bf16 run is exactly reproducible against its own config; it is just
+//! no longer byte-identical to the f32 run. The
+//! [`Transport::take_wire_bytes`] ledger feeds the bytes/interval
+//! trajectory that CI's wire benchmark gates on.
 
 pub mod tcp;
 pub mod wire;
@@ -110,6 +121,15 @@ pub trait Transport: Send {
     /// old owner's resident-memory accounting honest). Evicting an
     /// absent key is a no-op.
     fn evict_state(&self, user: usize, site: &str) -> Result<()>;
+
+    /// Drain the request-byte ledger: bytes this transport has put on
+    /// the wire (frame headers included) since the last call. Feeds
+    /// `Timings::wire_bytes` — the bytes/interval trajectory that the
+    /// wire benchmark and `distributed_smoke.sh wire` gate on.
+    /// In-process transports ship nothing and report 0.
+    fn take_wire_bytes(&self) -> u64 {
+        0
+    }
 
     /// Release this link. For a local worker the thread exits; for a
     /// TCP worker only the connection closes — the daemon (and its

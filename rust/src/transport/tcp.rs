@@ -36,7 +36,7 @@
 //! open at that point drain until their peers disconnect.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -47,7 +47,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::wire::{self, BatchItem, Msg};
 use super::Transport;
 use crate::adapters::{AdapterParams, SiteAdapter};
-use crate::config::OffloadTarget;
+use crate::config::{OffloadTarget, WireFormat};
 use crate::coordinator::offload::{FitJob, FitResult, TransferModel, WorkerCore};
 use crate::runtime::Manifest;
 
@@ -73,6 +73,10 @@ pub struct TcpLinkOpts {
     pub batch: bool,
     /// max `FitBatch` frames in flight per interval flush (>= 1)
     pub inflight: usize,
+    /// requested fit-tensor wire format (`offload_wire`). bf16 is
+    /// negotiated via the Hello capability byte; a daemon that doesn't
+    /// speak it makes the link fall back to f32 with a warning.
+    pub wire: WireFormat,
 }
 
 impl Default for TcpLinkOpts {
@@ -83,6 +87,7 @@ impl Default for TcpLinkOpts {
             tenant: String::new(),
             batch: false,
             inflight: 1,
+            wire: WireFormat::F32,
         }
     }
 }
@@ -142,6 +147,9 @@ pub struct TcpWorker {
     addr: String,
     batch: bool,
     inflight: usize,
+    /// request bytes this proxy has put on the wire (headers included),
+    /// shared with the I/O thread; drained by [`Transport::take_wire_bytes`]
+    wire_bytes: Arc<AtomicU64>,
 }
 
 impl TcpWorker {
@@ -171,8 +179,9 @@ impl TcpWorker {
     /// After connecting, a `StateBytes` probe (bounded by
     /// [`PROBE_TIMEOUT`]) confirms the daemon is actually *serving*
     /// this link — a wedged daemon fails loudly here instead of hanging
-    /// the first fit. A non-empty tenant is then declared with the
-    /// wire-v2 `Hello` handshake (and re-declared on every reconnect).
+    /// the first fit. A non-empty tenant — or a bf16 wire request — is
+    /// then declared with the `Hello` handshake (and re-declared on
+    /// every reconnect).
     pub fn connect_with_link_opts(
         id: usize,
         addr: &str,
@@ -185,7 +194,7 @@ impl TcpWorker {
             .with_context(|| format!("worker {id}"))?;
         stream.set_read_timeout(Some(PROBE_TIMEOUT))?;
         wire::send(&mut stream, &Msg::StateBytes)
-            .and_then(|()| wire::recv(&mut stream))
+            .and_then(|_| wire::recv(&mut stream))
             .and_then(|m| match m {
                 Msg::StateBytesOk(_) => Ok(()),
                 other => unexpected(other),
@@ -196,12 +205,14 @@ impl TcpWorker {
                      serving this link (wedged?)"
                 )
             })?;
-        if !opts.tenant.is_empty() {
-            hello(&mut stream, &opts.tenant)
+        let mut active = WireFormat::F32;
+        if !opts.tenant.is_empty() || opts.wire == WireFormat::Bf16 {
+            active = hello(&mut stream, &opts.tenant, opts.wire)
                 .with_context(|| format!("worker {id} @ {addr}: tenant handshake"))?;
         }
         stream.set_read_timeout(None)?;
         let (tx, rx) = channel();
+        let wire_bytes = Arc::new(AtomicU64::new(0));
         let link = Link {
             id,
             addr: addr.to_string(),
@@ -211,6 +222,9 @@ impl TcpWorker {
             tenant: opts.tenant.clone(),
             inflight: opts.inflight,
             seq: 0,
+            wire: opts.wire,
+            active,
+            wire_bytes: wire_bytes.clone(),
         };
         std::thread::Builder::new()
             .name(format!("tcp-worker-{id}"))
@@ -221,6 +235,7 @@ impl TcpWorker {
             addr: addr.to_string(),
             batch: opts.batch,
             inflight: opts.inflight,
+            wire_bytes,
         })
     }
 
@@ -325,13 +340,36 @@ impl Transport for TcpWorker {
         // disconnect only — daemon state survives for the next server
         let _ = self.tx.send(ClientCmd::Disconnect);
     }
+
+    fn take_wire_bytes(&self) -> u64 {
+        self.wire_bytes.swap(0, Ordering::Relaxed)
+    }
 }
 
-/// The tenant handshake on a fresh stream.
-fn hello(stream: &mut TcpStream, tenant: &str) -> Result<()> {
-    wire::send(stream, &Msg::Hello { tenant: tenant.to_string() })?;
+/// The tenant + wire-format handshake on a fresh stream. Returns the
+/// format the link actually speaks: `want` when the daemon acks, or
+/// f32 when a pre-bf16 daemon rejects the capability byte (it replies
+/// `Error` for the trailing byte; the legacy Hello is then re-sent so
+/// the tenant still binds). Degradation is loud — the run keeps its
+/// determinism, it just ships uncompressed.
+fn hello(stream: &mut TcpStream, tenant: &str, want: WireFormat) -> Result<WireFormat> {
+    wire::send(stream, &Msg::Hello { tenant: tenant.to_string(), wire: want })?;
     match wire::recv(stream)? {
-        Msg::Ack => Ok(()),
+        Msg::Ack => Ok(want),
+        Msg::Error(e) if want == WireFormat::Bf16 => {
+            eprintln!(
+                "cola: worker at the other end of this link does not speak \
+                 bf16 ({e}); falling back to f32 fit tensors"
+            );
+            wire::send(
+                stream,
+                &Msg::Hello { tenant: tenant.to_string(), wire: WireFormat::F32 },
+            )?;
+            match wire::recv(stream)? {
+                Msg::Ack => Ok(WireFormat::F32),
+                other => unexpected(other),
+            }
+        }
         other => unexpected(other),
     }
 }
@@ -348,19 +386,28 @@ struct Link {
     inflight: usize,
     /// FitBatch frame sequence numbers (monotone per link)
     seq: u64,
+    /// requested fit-tensor format (what every reconnect re-negotiates)
+    wire: WireFormat,
+    /// format the current connection actually speaks (f32 after a
+    /// fallback against a pre-bf16 daemon)
+    active: WireFormat,
+    /// request-byte ledger shared with the owning [`TcpWorker`]
+    wire_bytes: Arc<AtomicU64>,
 }
 
 impl Link {
-    /// (Re)connect if needed, re-declaring the tenant namespace — daemon
-    /// state is keyed by tenant and a fresh connection starts in the
-    /// default one.
+    /// (Re)connect if needed, re-declaring the tenant namespace and
+    /// re-negotiating the wire format — daemon state is keyed by tenant
+    /// and a fresh connection starts in the default namespace at f32.
     fn ensure_conn(&mut self) -> Result<()> {
         if self.conn.is_some() {
             return Ok(());
         }
         let mut stream = connect_with_backoff(&self.addr, self.attempts, self.base)?;
-        if !self.tenant.is_empty() {
-            hello(&mut stream, &self.tenant).context("tenant handshake on reconnect")?;
+        self.active = WireFormat::F32;
+        if !self.tenant.is_empty() || self.wire == WireFormat::Bf16 {
+            self.active = hello(&mut stream, &self.tenant, self.wire)
+                .context("tenant handshake on reconnect")?;
         }
         self.conn = Some(stream);
         Ok(())
@@ -374,9 +421,14 @@ impl Link {
     /// module docs).
     fn request(&mut self, msg: &Msg) -> Result<(Msg, Duration)> {
         self.ensure_conn()?;
+        let fmt = self.active;
+        let ledger = self.wire_bytes.clone();
         let stream = self.conn.as_mut().expect("connected above");
         let t0 = Instant::now();
-        let r = wire::send(stream, msg).and_then(|()| wire::recv(stream));
+        let r = wire::send_with(stream, msg, fmt).and_then(|n| {
+            ledger.fetch_add(n as u64, Ordering::Relaxed);
+            wire::recv(stream)
+        });
         let wire_time = t0.elapsed();
         match r {
             Ok(Msg::Error(e)) => Err(anyhow!("remote error: {e}")),
@@ -442,18 +494,24 @@ impl Link {
         // send phase: put the whole window on the wire
         let mut sent: Vec<(u64, Repliers, Instant)> = Vec::with_capacity(chunks.len());
         let mut chunk_iter = chunks.into_iter();
+        let fmt = self.active;
         while let Some((jobs, repliers)) = chunk_iter.next() {
             let seq = self.seq;
             self.seq += 1;
             let stream = self.conn.as_mut().expect("connected above");
             let t_send = Instant::now();
-            if let Err(e) = wire::send(stream, &Msg::FitBatch { seq, jobs }) {
-                self.conn = None;
-                let mut rest = std::iter::once(repliers)
-                    .chain(sent.drain(..).map(|(_, r, _)| r))
-                    .chain(chunk_iter.map(|(_, r)| r));
-                fail_all(&mut rest, &e);
-                return;
+            match wire::send_with(stream, &Msg::FitBatch { seq, jobs }, fmt) {
+                Ok(n) => {
+                    self.wire_bytes.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    self.conn = None;
+                    let mut rest = std::iter::once(repliers)
+                        .chain(sent.drain(..).map(|(_, r, _)| r))
+                        .chain(chunk_iter.map(|(_, r)| r));
+                    fail_all(&mut rest, &e);
+                    return;
+                }
             }
             sent.push((seq, repliers, t_send));
         }
@@ -805,9 +863,13 @@ fn serve_conn(mut stream: TcpStream, shared: &DaemonShared) -> Result<()> {
                 let acked = wire::send(&mut stream, &Msg::ShutdownOk);
                 // unblock the accept loop so the daemon thread exits
                 let _ = TcpStream::connect(wake_addr(shared.addr));
-                return acked;
+                return acked.map(|_| ());
             }
-            Ok(Msg::Hello { tenant: t }) => {
+            Ok(Msg::Hello { tenant: t, wire: _ }) => {
+                // acking a bf16 Hello IS the capability grant: this build
+                // decodes dtype-2 fit tensors statelessly (each frame
+                // declares its own dtype), and replies are always f32,
+                // so no per-connection format state is needed
                 tenant = t;
                 wire::send(&mut stream, &Msg::Ack)?;
             }

@@ -8,6 +8,7 @@
 //! payload := tag:u8 | body
 //! tensor  := dtype:u8 | rank:u8 | dims:u32^rank | data (elements, LE)
 //! string  := len:u32 | utf8 bytes
+//! dtype   := 0 (f32, 4 bytes/elem) | 1 (i32, 4) | 2 (bf16, 2)
 //! ```
 //!
 //! Versioning: the frame header carries the lowest protocol version
@@ -38,6 +39,21 @@
 //! returns bit-identical adapter tensors, so loopback-TCP and
 //! in-process runs produce byte-equal loss curves.
 //!
+//! Wire compression (`offload_wire = "bf16"`): opt-in, negotiated via
+//! the v3 [`Msg::Hello`] capability byte. When active, ONLY the
+//! `(x, grad_hhat)` activation/gradient tensors inside [`Msg::Fit`] /
+//! [`Msg::FitBatch`] are shipped as bf16 (dtype 2, 2 bytes/element,
+//! round-to-nearest-even — see [`f32_to_bf16`]); every reply, the
+//! registration payload, snapshots, and the migration blobs of
+//! [`encode_state`] / [`decode_state`] stay raw-bit f32 unconditionally,
+//! so adapter state remains bit-exact regardless of the wire format
+//! (this is what makes `offload_wire = "bf16"` safe to combine with
+//! `failover = "migrate"`). The truncation is deterministic — the
+//! decoded value is a pure function of the source bits, and
+//! `encode(decode(h))` is the identity on all 2^16 bf16 patterns — so
+//! a bf16 run is still exactly reproducible, merely against a
+//! quantized gradient stream.
+//!
 //! Decoding is defensive: a wrong magic, an oversized length header, a
 //! truncated frame, an unknown tag, or a body shorter than its own
 //! headers claim all surface as errors — never panics or wild
@@ -49,7 +65,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
-use crate::config::{AdapterKind, Optimizer};
+use crate::config::{AdapterKind, Optimizer, WireFormat};
 use crate::coordinator::offload::{FitJob, FitResult};
 use crate::runtime::{IntTensor, Value};
 use crate::tensor::Tensor;
@@ -97,7 +113,15 @@ pub enum Msg {
     /// `(user, site)` keys on the connection resolve under the tenant,
     /// so several trainers can share one daemon. v1 clients never send
     /// it and land in the default `""` namespace. Reply: [`Msg::Ack`].
-    Hello { tenant: String },
+    ///
+    /// v3 extends the body with a wire-format capability byte when the
+    /// client wants bf16-compressed fit tensors. A plain f32 `Hello`
+    /// encodes byte-identically to its v2 form (no trailing byte), so
+    /// old daemons keep decoding it; a bf16 `Hello` grows one byte and
+    /// ships in a v3 frame — a pre-bf16 daemon rejects the trailing
+    /// byte with [`Msg::Error`], which the client treats as "capability
+    /// absent" and falls back to f32.
+    Hello { tenant: String, wire: WireFormat },
     /// v2: one interval's worth of fits in a single frame. `seq` is the
     /// client's frame sequence number; the reply echoes it so a
     /// pipelined client can pair replies with in-flight windows.
@@ -176,8 +200,20 @@ pub fn frame_version(msg: &Msg) -> u8 {
         | Msg::StateExportOk(_)
         | Msg::StateImport(_)
         | Msg::StateEvict { .. } => 3,
+        // a bf16-capability Hello carries the v3 trailing byte
+        Msg::Hello { wire: WireFormat::Bf16, .. } => 3,
         Msg::Hello { .. } | Msg::FitBatch { .. } | Msg::FitBatchOk { .. } => 2,
         _ => 1,
+    }
+}
+
+/// [`frame_version`], format-aware: fit traffic encoded with bf16
+/// tensors (dtype 2) needs a v3 decoder, so [`send_with`] stamps it v3
+/// even though the same message encodes as a v1/v2 frame under f32.
+pub fn frame_version_with(msg: &Msg, fmt: WireFormat) -> u8 {
+    match (fmt, msg) {
+        (WireFormat::Bf16, Msg::Fit(_) | Msg::FitBatch { .. }) => 3,
+        _ => frame_version(msg),
     }
 }
 
@@ -230,13 +266,68 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
 
 /// Encode + frame + send one message, stamping the lowest frame version
 /// that understands it (v1 messages stay interoperable with v1 peers).
-pub fn send(w: &mut impl Write, msg: &Msg) -> Result<()> {
-    write_frame_v(w, frame_version(msg), &encode(msg))
+/// Returns the total bytes written (header + payload) — the unit of the
+/// `wire_bytes` ledger.
+pub fn send(w: &mut impl Write, msg: &Msg) -> Result<usize> {
+    send_with(w, msg, WireFormat::F32)
+}
+
+/// [`send`] with an explicit wire format for the fit tensors. Under
+/// [`WireFormat::Bf16`] the `(x, grad_hhat)` tensors of [`Msg::Fit`] /
+/// [`Msg::FitBatch`] ship as dtype-2 bf16 in a v3 frame; every other
+/// message (and every reply) is byte-identical to the f32 path.
+pub fn send_with(w: &mut impl Write, msg: &Msg, fmt: WireFormat) -> Result<usize> {
+    let payload = encode_with(msg, fmt);
+    write_frame_v(w, frame_version_with(msg, fmt), &payload)?;
+    // 4 magic + 1 version + 4 length + payload
+    Ok(9 + payload.len())
 }
 
 /// Receive + decode one message.
 pub fn recv(r: &mut impl Read) -> Result<Msg> {
     decode(&read_frame(r)?)
+}
+
+// ---------------------------------------------------------------------
+// bf16
+// ---------------------------------------------------------------------
+
+/// f32 → bf16 with round-to-nearest-even (ties to even), the rounding
+/// every bf16-native accelerator stack uses.
+///
+/// The conversion is a pure function of the source bits, and
+/// [`bf16_to_f32`] followed by `f32_to_bf16` is the identity on all
+/// 2^16 bf16 patterns — together these give the wire's deterministic
+/// round-trip contract: re-encoding a decoded bf16 tensor reproduces
+/// the original bytes exactly.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        let top = (bits >> 16) as u16;
+        // Truncation may zero every kept mantissa bit, turning a NaN
+        // into an infinity — set the quiet bit only in that case, and
+        // leave all other NaN payloads untouched so the round-trip
+        // identity above holds for NaN patterns too.
+        if top & 0x007F == 0 {
+            top | 0x0040
+        } else {
+            top
+        }
+    } else {
+        // Classic RNE via the carry trick: adding 0x7FFF plus the
+        // round-even bit either leaves the top half alone or carries
+        // one ulp into it. Max finite input is 0x7F7F_FFFF, so the u32
+        // addition cannot overflow, and max-finite f32 correctly
+        // rounds up to bf16 infinity.
+        let round = ((bits >> 16) & 1) + 0x7FFF;
+        ((bits + round) >> 16) as u16
+    }
+}
+
+/// bf16 → f32: exact (bf16 is a prefix of f32, so widening just
+/// restores sixteen zero mantissa bits).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
 }
 
 // ---------------------------------------------------------------------
@@ -290,6 +381,28 @@ impl Enc {
         }
     }
 
+    /// bf16-compressed tensor (dtype 2): RNE-truncated to 2 bytes per
+    /// element. Only ever emitted for fit `(x, ghat)` payloads — state,
+    /// snapshots, and replies always go through [`Enc::tensor`].
+    fn tensor_bf16(&mut self, t: &Tensor) {
+        self.u8(2); // dtype: bf16
+        self.u8(t.shape().len() as u8);
+        for &d in t.shape() {
+            self.u32(d as u32);
+        }
+        for &v in t.data() {
+            self.buf.extend_from_slice(&f32_to_bf16(v).to_le_bytes());
+        }
+    }
+
+    /// Fit tensor dispatch on the negotiated wire format.
+    fn fit_tensor(&mut self, t: &Tensor, fmt: WireFormat) {
+        match fmt {
+            WireFormat::F32 => self.tensor(t),
+            WireFormat::Bf16 => self.tensor_bf16(t),
+        }
+    }
+
     fn int_tensor(&mut self, t: &IntTensor) {
         self.u8(1); // dtype: i32
         self.u8(t.shape().len() as u8);
@@ -339,12 +452,14 @@ impl Enc {
     }
 
     /// FitJob body — shared by [`Msg::Fit`] and [`Msg::FitBatch`] so the
-    /// two layouts can never drift apart.
-    fn fit_job(&mut self, job: &FitJob) {
+    /// two layouts can never drift apart. The `(x, ghat)` tensors are
+    /// the ONLY wire payloads that honour the negotiated format;
+    /// `grad_scale` stays a raw-bit f32 either way.
+    fn fit_job(&mut self, job: &FitJob, fmt: WireFormat) {
         self.u64(job.user as u64);
         self.str(&job.site);
-        self.tensor(&job.x);
-        self.tensor(&job.ghat);
+        self.fit_tensor(&job.x, fmt);
+        self.fit_tensor(&job.ghat, fmt);
         self.f32(job.grad_scale);
         self.u8(job.merged as u8);
     }
@@ -386,8 +501,17 @@ fn kind_tag(k: AdapterKind) -> u8 {
 }
 
 /// Serialize a message payload (framing is separate — see
-/// [`write_frame`]).
+/// [`write_frame`]). Always raw-bit f32; equivalent to
+/// [`encode_with`] at [`WireFormat::F32`].
 pub fn encode(msg: &Msg) -> Vec<u8> {
+    encode_with(msg, WireFormat::F32)
+}
+
+/// Serialize a message payload with an explicit wire format for fit
+/// tensors. Every message except [`Msg::Fit`] / [`Msg::FitBatch`]
+/// encodes identically under both formats — state blobs, registration,
+/// snapshots, and all replies are f32 by construction.
+pub fn encode_with(msg: &Msg, fmt: WireFormat) -> Vec<u8> {
     match msg {
         Msg::Register { user, site, adapter } => {
             let mut e = Enc::new(tag::REGISTER);
@@ -400,7 +524,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
         }
         Msg::Fit(job) => {
             let mut e = Enc::new(tag::FIT);
-            e.fit_job(job);
+            e.fit_job(job, fmt);
             e.buf
         }
         Msg::FitOk(r) => {
@@ -413,7 +537,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             e.u64(*seq);
             e.u32(jobs.len() as u32);
             for job in jobs {
-                e.fit_job(job);
+                e.fit_job(job, fmt);
             }
             e.buf
         }
@@ -437,9 +561,15 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             }
             e.buf
         }
-        Msg::Hello { tenant } => {
+        Msg::Hello { tenant, wire } => {
             let mut e = Enc::new(tag::HELLO);
             e.str(tenant);
+            // f32 Hellos encode byte-identically to their pre-bf16 form
+            // (no trailing byte), so old daemons keep decoding them; the
+            // capability byte exists only in the bf16 variant.
+            if *wire == WireFormat::Bf16 {
+                e.u8(1);
+            }
             e.buf
         }
         Msg::Snapshot { user, site } => {
@@ -616,11 +746,12 @@ impl<'a> Dec<'a> {
     }
 
     /// Guard an element count claimed by a header BEFORE allocating for
-    /// it: each element occupies 4 bytes, so anything larger than the
-    /// remaining payload is a corrupt header, not an allocation request
-    /// (a 20-byte frame must not reserve gigabytes).
-    fn guard_elems(&self, len: usize, what: &str) -> Result<()> {
-        if len > self.remaining() / 4 {
+    /// it: each element occupies `size` bytes (4 for f32/i32, 2 for
+    /// bf16), so anything larger than the remaining payload is a
+    /// corrupt header, not an allocation request (a 20-byte frame must
+    /// not reserve gigabytes).
+    fn guard_elems(&self, len: usize, size: usize, what: &str) -> Result<()> {
+        if len > self.remaining() / size {
             bail!(
                 "wire: {what} claims {len} elements but only {} payload \
                  bytes remain (corrupt header?)",
@@ -630,9 +761,9 @@ impl<'a> Dec<'a> {
         Ok(())
     }
 
-    /// Shape header shared by both dtypes; guards rank and element
-    /// count before any allocation.
-    fn shape(&mut self) -> Result<(Vec<usize>, usize)> {
+    /// Shape header shared by all dtypes; guards rank and element
+    /// count (at the dtype's element size) before any allocation.
+    fn shape(&mut self, elem_size: usize) -> Result<(Vec<usize>, usize)> {
         let rank = self.u8()? as usize;
         if rank > 4 {
             bail!("wire: tensor rank {rank} exceeds the supported maximum of 4");
@@ -646,7 +777,7 @@ impl<'a> Dec<'a> {
                 .ok_or_else(|| anyhow!("wire: tensor shape overflows"))?;
             shape.push(d);
         }
-        self.guard_elems(len, "tensor")?;
+        self.guard_elems(len, elem_size, "tensor")?;
         Ok((shape, len))
     }
 
@@ -659,7 +790,8 @@ impl<'a> Dec<'a> {
 
     fn value(&mut self) -> Result<Value> {
         let dtype = self.u8()?;
-        let (shape, len) = self.shape()?;
+        let elem_size = if dtype == 2 { 2 } else { 4 };
+        let (shape, len) = self.shape(elem_size)?;
         match dtype {
             0 => {
                 let mut data = Vec::with_capacity(len);
@@ -674,6 +806,17 @@ impl<'a> Dec<'a> {
                     data.push(self.u32()? as i32);
                 }
                 Ok(Value::I32(IntTensor::new(shape, data)))
+            }
+            2 => {
+                // bf16 widens to f32 on arrival — downstream math is
+                // all-f32 either way, the wire is the only place the
+                // narrow format exists
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let b = self.take(2)?;
+                    data.push(bf16_to_f32(u16::from_le_bytes([b[0], b[1]])));
+                }
+                Ok(Value::F32(Tensor::new(shape, data)))
             }
             other => bail!("wire: unknown dtype {other}"),
         }
@@ -726,7 +869,7 @@ impl<'a> Dec<'a> {
             }
             for _ in 0..n {
                 let len = self.u32()? as usize;
-                self.guard_elems(len, "moment vector")?;
+                self.guard_elems(len, 4, "moment vector")?;
                 let mut xs = Vec::with_capacity(len);
                 for _ in 0..len {
                     xs.push(self.f32()?);
@@ -859,7 +1002,20 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
             }
             Msg::FitBatchOk { seq, results }
         }
-        tag::HELLO => Msg::Hello { tenant: d.str()? },
+        tag::HELLO => {
+            let tenant = d.str()?;
+            // legacy (v2) Hellos end here; the v3 form appends exactly
+            // one capability byte requesting bf16 fit tensors
+            let wire = if d.remaining() > 0 {
+                match d.u8()? {
+                    1 => WireFormat::Bf16,
+                    other => bail!("wire: unknown Hello capability byte {other}"),
+                }
+            } else {
+                WireFormat::F32
+            };
+            Msg::Hello { tenant, wire }
+        }
         tag::SNAPSHOT => {
             let user = d.u64()? as usize;
             let site = d.str()?;
@@ -1154,10 +1310,12 @@ mod tests {
         assert_eq!((*user, site.as_str()), (9, "l0.v"));
         assert!(error.contains("no adapter"));
 
-        let Msg::Hello { tenant } = roundtrip(&Msg::Hello { tenant: "u7".into() }) else {
+        let hello = Msg::Hello { tenant: "u7".into(), wire: WireFormat::F32 };
+        let Msg::Hello { tenant, wire } = roundtrip(&hello) else {
             panic!("wrong variant")
         };
         assert_eq!(tenant, "u7");
+        assert_eq!(wire, WireFormat::F32);
     }
 
     #[test]
@@ -1379,7 +1537,10 @@ mod tests {
             8 => Msg::ShutdownOk,
             9 => Msg::Ack,
             10 => Msg::Error(arb_string(rng)),
-            11 => Msg::Hello { tenant: arb_string(rng) },
+            11 => Msg::Hello {
+                tenant: arb_string(rng),
+                wire: if rng.below(2) == 1 { WireFormat::Bf16 } else { WireFormat::F32 },
+            },
             12 => Msg::Ping,
             13 => Msg::Pong { load: rng.next_u64() },
             14 => Msg::StateExport { user: rng.below(1 << 16), site: arb_string(rng) },
@@ -1436,14 +1597,17 @@ mod tests {
 
     /// Fuzz: >= 10k mutated frames (byte flips, truncations, garbage)
     /// must never panic and never allocate past the guards; truncations
-    /// must always be rejected.
+    /// must always be rejected. Frames are encoded under both wire
+    /// formats, so bf16 (dtype 2) bodies get the same flip/truncation
+    /// coverage as f32 ones.
     #[test]
     fn fuzz_mutated_frames_never_panic() {
         let mut rng = Rng::new(0xF422);
         for i in 0..12_000 {
             let msg = arb_msg(&mut rng);
+            let fmt = if rng.below(2) == 1 { WireFormat::Bf16 } else { WireFormat::F32 };
             let mut buf = Vec::new();
-            send(&mut buf, &msg).unwrap();
+            send_with(&mut buf, &msg, fmt).unwrap();
             match rng.below(3) {
                 0 => {
                     // strict truncation: must error, never panic
@@ -1489,5 +1653,203 @@ mod tests {
         let i = Value::I32(IntTensor::new(vec![2, 2], vec![-1, 2, i32::MIN, i32::MAX]));
         let back = decode_value(&encode_value(&i)).unwrap();
         assert_eq!(back, i);
+    }
+
+    // -----------------------------------------------------------------
+    // bf16 wire compression
+    // -----------------------------------------------------------------
+
+    /// The deterministic round-trip contract, exhaustively: decode
+    /// followed by encode is the identity on every one of the 2^16
+    /// bf16 bit patterns — including every NaN payload, ±inf, ±0, and
+    /// all denormals. This is what lets a re-encoded bf16 frame
+    /// reproduce its original bytes exactly.
+    #[test]
+    fn bf16_roundtrip_identity_on_all_patterns() {
+        for h in 0..=u16::MAX {
+            let back = f32_to_bf16(bf16_to_f32(h));
+            assert_eq!(back, h, "pattern 0x{h:04x} round-tripped to 0x{back:04x}");
+        }
+    }
+
+    #[test]
+    fn bf16_encode_rounds_to_nearest_even() {
+        // exact values pass through
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.0), 0xC000);
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        // tie (low half exactly 0x8000) rounds to the even neighbour
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80, "tie, even stays");
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82, "tie, odd rounds up");
+        // just past the tie rounds up; just below rounds down
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+        // max finite f32 is closer to bf16-inf than to bf16-max: rounds up
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::MIN), 0xFF80);
+        // a NaN whose kept payload bits all truncate away stays a NaN
+        let skinny_nan = f32::from_bits(0x7F80_0001);
+        assert!(bf16_to_f32(f32_to_bf16(skinny_nan)).is_nan());
+        // a NaN with surviving payload bits keeps them untouched
+        assert_eq!(f32_to_bf16(f32::from_bits(0x7FC1_0000)), 0x7FC1);
+    }
+
+    /// Property: bf16 fit frames re-encode to their original bytes
+    /// (the bf16 analogue of the f32 reencode property — follows from
+    /// the all-patterns identity above), ship in v3 frames, and save
+    /// exactly 2 bytes per tensor element over f32.
+    #[test]
+    fn prop_bf16_fit_frames_reencode_identically() {
+        let mut rng = Rng::new(0xBF16);
+        for i in 0..300 {
+            let msg = if rng.below(2) == 1 {
+                Msg::Fit(arb_fit_job(&mut rng))
+            } else {
+                Msg::FitBatch {
+                    seq: rng.next_u64(),
+                    jobs: (0..rng.below(4)).map(|_| arb_fit_job(&mut rng)).collect(),
+                }
+            };
+            let payload = encode_with(&msg, WireFormat::Bf16);
+            let back = decode(&payload).unwrap_or_else(|e| {
+                panic!("iteration {i}: bf16 decode of {msg:?} failed: {e}")
+            });
+            assert_eq!(
+                encode_with(&back, WireFormat::Bf16),
+                payload,
+                "iteration {i}: bf16 re-encode mismatch"
+            );
+            // the decoded (widened) message is itself stable: encoding
+            // it f32 and re-compressing changes nothing (truncation is
+            // idempotent)
+            let widened = decode(&encode(&back)).unwrap();
+            assert_eq!(encode_with(&widened, WireFormat::Bf16), payload);
+            // fit tensors save exactly 2 bytes/element vs the f32 wire
+            let elems: usize = match &msg {
+                Msg::Fit(j) => j.x.len() + j.ghat.len(),
+                Msg::FitBatch { jobs, .. } =>
+                    jobs.iter().map(|j| j.x.len() + j.ghat.len()).sum(),
+                _ => unreachable!(),
+            };
+            assert_eq!(encode(&msg).len() - payload.len(), 2 * elems);
+            // and the framed path stamps v3 (a pre-bf16 decoder must
+            // reject the frame at the version window, not misparse it)
+            let mut framed = Vec::new();
+            let n = send_with(&mut framed, &msg, WireFormat::Bf16).unwrap();
+            assert_eq!(n, framed.len(), "send_with must report the bytes written");
+            assert_eq!(framed[4], 3);
+        }
+    }
+
+    /// One connection may interleave f32 and bf16 fit frames (e.g.
+    /// after a mid-stream reconnect renegotiates the format): each
+    /// frame declares its own dtype, so a decoder needs no per-link
+    /// state.
+    #[test]
+    fn mixed_f32_and_bf16_frames_on_one_link() {
+        let x = Tensor::new(vec![2, 2], vec![1.0, -2.5, 3.25e-3, -0.0]);
+        let job = FitJob {
+            user: 1,
+            site: "l0.q".into(),
+            x: x.clone(),
+            ghat: x.clone(),
+            grad_scale: 1.0,
+            merged: false,
+        };
+        let mut link = Vec::new();
+        send_with(&mut link, &Msg::Fit(job.clone()), WireFormat::Bf16).unwrap();
+        send(&mut link, &Msg::Fit(job.clone())).unwrap();
+        send_with(
+            &mut link,
+            &Msg::FitBatch { seq: 7, jobs: vec![job.clone()] },
+            WireFormat::Bf16,
+        )
+        .unwrap();
+        let mut r = &link[..];
+        let Msg::Fit(a) = recv(&mut r).unwrap() else { panic!("wrong variant") };
+        let Msg::Fit(b) = recv(&mut r).unwrap() else { panic!("wrong variant") };
+        let Msg::FitBatch { seq, jobs } = recv(&mut r).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert!(r.is_empty(), "all frames consumed");
+        assert_eq!(seq, 7);
+        // f32 frame is bit-exact; bf16 frames are the RNE truncation
+        assert_tensor_bits_eq(&b.x, &x);
+        for (got, &orig) in a.x.data().iter().zip(x.data()) {
+            assert_eq!(got.to_bits(), bf16_to_f32(f32_to_bf16(orig)).to_bits());
+        }
+        assert_tensor_bits_eq(&jobs[0].x, &a.x);
+    }
+
+    /// An f32 Hello must encode byte-identically to its pre-bf16 (v2)
+    /// form so old daemons keep decoding it; the bf16 variant appends
+    /// exactly one capability byte and moves to a v3 frame.
+    #[test]
+    fn hello_stays_byte_compatible_with_legacy_peers() {
+        let f32_hello = Msg::Hello { tenant: "u7".into(), wire: WireFormat::F32 };
+        // the legacy layout: tag | len | bytes — nothing else
+        let mut legacy = vec![tag::HELLO];
+        legacy.extend_from_slice(&2u32.to_le_bytes());
+        legacy.extend_from_slice(b"u7");
+        assert_eq!(encode(&f32_hello), legacy);
+        let mut framed = Vec::new();
+        send(&mut framed, &f32_hello).unwrap();
+        assert_eq!(framed[4], 2, "f32 Hello still ships as a v2 frame");
+
+        let bf16_hello = Msg::Hello { tenant: "u7".into(), wire: WireFormat::Bf16 };
+        let enc = encode(&bf16_hello);
+        assert_eq!(enc.len(), legacy.len() + 1);
+        assert_eq!(enc[..legacy.len()], legacy[..]);
+        assert_eq!(*enc.last().unwrap(), 1);
+        let mut framed = Vec::new();
+        send(&mut framed, &bf16_hello).unwrap();
+        assert_eq!(framed[4], 3, "bf16 Hello needs a v3 frame");
+        let Msg::Hello { tenant, wire } = roundtrip(&bf16_hello) else {
+            panic!("wrong variant")
+        };
+        assert_eq!((tenant.as_str(), wire), ("u7", WireFormat::Bf16));
+        // an unknown capability byte is rejected, not guessed at
+        let mut bad = legacy.clone();
+        bad.push(9);
+        assert!(decode(&bad).is_err());
+    }
+
+    /// The bugfix pin: the wire format must never touch adapter or
+    /// optimizer state. Registration, snapshots, fit replies, and the
+    /// migration blob messages encode byte-identically under bf16 —
+    /// only Fit/FitBatch requests compress. This is the property that
+    /// makes `offload_wire = "bf16"` + `failover = "migrate"` a legal
+    /// combination (see `config::validate`).
+    #[test]
+    fn state_blob_ignores_wire_format() {
+        let adapter = sample_adapter(AdapterKind::Mlp);
+        let blob = encode_state(4, "l0.q", &adapter);
+        let msgs = [
+            Msg::Register { user: 4, site: "l0.q".into(), adapter },
+            Msg::SnapshotOk(sample_adapter(AdapterKind::LowRank).params),
+            Msg::FitOk(FitResult {
+                user: 4,
+                site: "l0.q".into(),
+                new_params: Some(vec![Tensor::from_fn(&[3, 2], |i| i as f32 * 0.1)]),
+                delta_diff: None,
+                compute: Duration::from_micros(5),
+                transfer: Duration::ZERO,
+                bytes_in: 8,
+                bytes_out: 8,
+            }),
+            Msg::StateExportOk(blob.clone()),
+            Msg::StateImport(blob),
+        ];
+        for msg in &msgs {
+            assert_eq!(
+                encode_with(msg, WireFormat::Bf16),
+                encode(msg),
+                "{msg:?} must encode identically under both wire formats"
+            );
+            assert_eq!(frame_version_with(msg, WireFormat::Bf16), frame_version(msg));
+        }
     }
 }

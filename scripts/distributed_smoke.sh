@@ -13,9 +13,13 @@
 #      --failover migrate and a --standby_addrs spare — the standby is
 #      promoted, state restores from shadow checkpoints, and the loss
 #      curves STILL byte-diff clean against the uninterrupted run.
+#   5. WIRE: the same TCP run with --offload_wire f32 vs bf16 — bf16
+#      must train within `cola curvediff --tol 0.05` of the f32 curves
+#      AND put >= 40% fewer request bytes on the wire (scraped from the
+#      greppable `wire bytes N` timings field).
 #
-# Usage: distributed_smoke.sh [all|basic|chaos]  (default: all)
-# CI runs `basic` and `chaos` as separate steps with their own
+# Usage: distributed_smoke.sh [all|basic|chaos|wire]  (default: all)
+# CI runs `basic`, `chaos`, and `wire` as separate steps with their own
 # timeout-minutes. Runnable locally after
 # `cargo build --release --locked`.
 set -euo pipefail
@@ -23,8 +27,8 @@ set -euo pipefail
 BIN=${BIN:-./target/release/cola}
 OUT=$(mktemp -d)
 MODE="${1:-all}"
-case "$MODE" in all|basic|chaos) ;; *)
-  echo "usage: $0 [all|basic|chaos]" >&2; exit 2 ;;
+case "$MODE" in all|basic|chaos|wire) ;; *)
+  echo "usage: $0 [all|basic|chaos|wire]" >&2; exit 2 ;;
 esac
 
 cleanup() {
@@ -83,7 +87,7 @@ require_identical() {
   echo "OK: $1 loss curves are byte-identical"
 }
 
-if [ "$MODE" != "chaos" ]; then
+if [ "$MODE" = "all" ] || [ "$MODE" = "basic" ]; then
 
 echo "--- in-process run"
 "$BIN" train --config config/distributed_smoke.toml \
@@ -135,7 +139,54 @@ require_identical "shared-daemon trainer B vs its baseline" \
 
 fi # basic shapes
 
-if [ "$MODE" != "basic" ]; then
+if [ "$MODE" = "all" ] || [ "$MODE" = "wire" ]; then
+
+echo "--- wire shape: f32 vs bf16 fit tensors over the same daemon"
+"$BIN" train --config config/distributed_smoke.toml \
+  --offload_transport tcp --worker_addrs "$ADDR" \
+  --offload_batch true --offload_wire f32 \
+  --loss_out "$OUT/wire_f32.json" | tee "$OUT/wire_f32.log"
+require_daemon_alive "during the f32 wire run"
+"$BIN" train --config config/distributed_smoke.toml \
+  --offload_transport tcp --worker_addrs "$ADDR" \
+  --offload_batch true --offload_wire bf16 \
+  --loss_out "$OUT/wire_bf16.json" | tee "$OUT/wire_bf16.log"
+require_daemon_alive "during the bf16 wire run"
+
+# bf16 truncation is deterministic but not bit-identical to f32 — the
+# contract is a bounded drift (documented tolerance 0.05 relative)
+if ! "$BIN" curvediff "$OUT/wire_f32.json" "$OUT/wire_bf16.json" --tol 0.05; then
+  echo "FAIL: bf16 wire curves drifted past tol 0.05 of the f32 run" >&2
+  echo "--- worker log:" >&2
+  cat "$OUT/worker.log" >&2
+  exit 1
+fi
+echo "OK: bf16 loss curves are within tol 0.05 of f32"
+
+# the timings line prints the drained request-byte ledger exactly:
+# "... | wire bytes N"
+scrape_wire_bytes() {
+  sed -n 's/.*| wire bytes \([0-9][0-9]*\).*/\1/p' "$1" | head -n1
+}
+F32_BYTES=$(scrape_wire_bytes "$OUT/wire_f32.log")
+BF16_BYTES=$(scrape_wire_bytes "$OUT/wire_bf16.log")
+if [ -z "$F32_BYTES" ] || [ -z "$BF16_BYTES" ]; then
+  echo "FAIL: could not scrape 'wire bytes' from the train output" >&2
+  exit 1
+fi
+REDUCTION=$(awk -v a="$F32_BYTES" -v b="$BF16_BYTES" \
+  'BEGIN { printf "%.1f", 100.0 * (1.0 - b / a) }')
+echo "wire bytes: f32 $F32_BYTES -> bf16 $BF16_BYTES (${REDUCTION}% reduction)"
+MIN_SAVING="${COLA_SMOKE_MIN_WIRE_SAVING:-40}"
+if ! awk -v r="$REDUCTION" -v m="$MIN_SAVING" 'BEGIN { exit !(r >= m) }'; then
+  echo "FAIL: bf16 reduced wire bytes by ${REDUCTION}%, need >= ${MIN_SAVING}%" >&2
+  exit 1
+fi
+echo "OK: bf16 cut request wire bytes by ${REDUCTION}% (>= ${MIN_SAVING}%)"
+
+fi # wire shape
+
+if [ "$MODE" = "all" ] || [ "$MODE" = "chaos" ]; then
 
 echo "--- chaos shape: kill one of two daemons mid-run, promote a standby"
 start_worker "$OUT/worker2.log"
