@@ -5,6 +5,8 @@
 #   make build     — hermetic release build (native backend, no Python/XLA)
 #   make test      — run the test suite
 #   make smoke     — distributed-offload loopback smoke (TCP == local)
+#   make lint-invariants — `cola lint --deny-all` + linter test suite
+#   make sanitizers      — nightly TSan/ASan sweep (pool, transport, SIMD)
 #   make bench     — run the paper's table/figure benches (results/ *.md+csv)
 #   make artifacts — OPTIONAL: AOT-lower the JAX graphs to artifacts/
 #                    (requires Python + JAX; only needed for the PJRT
@@ -13,7 +15,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt clippy doc smoke bench artifacts clean
+.PHONY: ci build test fmt clippy doc smoke bench artifacts clean \
+        lint-invariants sanitizers
 
 ci: fmt clippy doc build test
 
@@ -34,6 +37,27 @@ clippy:
 
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --locked --no-deps
+
+# `cola lint` over rust/src (determinism / panic-safety / mutex-poison /
+# wire-coverage / unsafe-audit) plus the linter's own fixture suite.
+# --deny-all: stale pragmas fail too.
+lint-invariants: build
+	./target/release/cola lint --deny-all --fix-report
+	$(CARGO) test --locked -p cola --test lint_invariants
+
+# Nightly-toolchain TSan/ASan sweep (mirrors the CI `sanitizers` job;
+# needs `rustup component add rust-src --toolchain nightly`).
+SAN_TARGET = x86_64-unknown-linux-gnu
+sanitizers:
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" COLA_SIMD=0 \
+		$(CARGO) +nightly test --locked -Zbuild-std --target $(SAN_TARGET) \
+		-p cola --lib tensor::pool
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" COLA_SIMD=0 \
+		$(CARGO) +nightly test --locked -Zbuild-std --target $(SAN_TARGET) \
+		-p cola --test transport_multi
+	RUSTFLAGS="-Zsanitizer=address" RUSTDOCFLAGS="-Zsanitizer=address" \
+		$(CARGO) +nightly test --locked -Zbuild-std --target $(SAN_TARGET) \
+		-p cola --lib tensor::simd
 
 BENCHES = throughput table1_complexity table2_seqcls table3_s2s \
           table4_collab table6_clm table9_scratch table10_compute \

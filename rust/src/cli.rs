@@ -20,19 +20,16 @@ impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
-        if let Some(first) = it.peek() {
-            if !first.starts_with('-') {
-                out.subcommand = it.next().unwrap().clone();
-            }
+        if let Some(first) = it.next_if(|a| !a.starts_with('-')) {
+            out.subcommand = first.clone();
         }
         while let Some(arg) = it.next() {
             if let Some(body) = arg.strip_prefix("--") {
                 if let Some(eq) = body.find('=') {
                     out.options
                         .insert(body[..eq].to_string(), body[eq + 1..].to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.options
-                        .insert(body.to_string(), it.next().unwrap().clone());
+                } else if let Some(val) = it.next_if(|n| !n.starts_with("--")) {
+                    out.options.insert(body.to_string(), val.clone());
                 } else {
                     out.flags.push(body.to_string());
                 }

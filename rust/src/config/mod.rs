@@ -48,6 +48,7 @@ impl Method {
             Method::Prompt => "prompt",
             Method::PTuning => "ptuning",
             Method::Prefix => "prefix",
+            // lint:allow(panic-safety): caller contract — every call site checks `is_cola()` first; a ColA method has no coupled-baseline name
             Method::Cola(_) => panic!("cola is not a coupled baseline"),
         }
     }

@@ -28,7 +28,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -299,6 +299,7 @@ fn unique_key(existing: &[String], base: &str) -> String {
             return cand;
         }
     }
+    // lint:allow(panic-safety): the `2..` suffix loop can only exit by returning
     unreachable!("unbounded suffix search")
 }
 
@@ -987,8 +988,9 @@ fn key_label(key: &TenantKey) -> String {
 
 /// Lock that survives a poisoned mutex: a panicking connection thread
 /// must not take the whole daemon down with cascading lock panics.
+/// Delegates to the audited [`crate::util::lock_recover`].
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
+    crate::util::lock_recover(m)
 }
 
 #[derive(Default)]
@@ -1017,6 +1019,10 @@ pub struct WorkerCore {
     adapters: Mutex<AdapterTable>,
     /// the PJRT "low-end GPU" device, spawned lazily on first use
     pjrt: Mutex<Option<Device>>,
+    /// chaos hook: keys whose next fit panics mid-checkout, while the
+    /// adapter-table lock is held — the regression suite's stand-in for
+    /// a kernel assert, proving poison recovery end to end
+    chaos_panic_keys: Mutex<BTreeSet<TenantKey>>,
 }
 
 impl WorkerCore {
@@ -1033,11 +1039,22 @@ impl WorkerCore {
             transfer,
             adapters: Mutex::new(AdapterTable::default()),
             pjrt: Mutex::new(None),
+            chaos_panic_keys: Mutex::new(BTreeSet::new()),
         }
     }
 
     pub fn id(&self) -> usize {
         self.id
+    }
+
+    /// Arm a one-shot injected panic: the next fit for
+    /// `(tenant, user, site)` panics while the adapter-table lock is
+    /// held, poisoning the shared mutex exactly the way a real kernel
+    /// assert inside a serving thread would. Public for the same reason
+    /// `WorkerDaemon::kill` is — chaos tests drive failure modes
+    /// through the real code paths instead of mocks.
+    pub fn inject_fit_panic(&self, tenant: &str, user: usize, site: &str) {
+        lock(&self.chaos_panic_keys).insert((tenant.to_string(), user, site.to_string()));
     }
 
     /// Install (or replace) the adapter for a key. Rejected while a fit
@@ -1150,6 +1167,10 @@ impl WorkerCore {
 
     fn checkout(&self, key: &TenantKey) -> Result<SiteAdapter> {
         let mut tab = lock(&self.adapters);
+        if lock(&self.chaos_panic_keys).remove(key) {
+            // lint:allow(panic-safety): one-shot chaos hook; panics under the table lock on purpose
+            panic!("injected fit panic for {}", key_label(key));
+        }
         match tab.map.remove(key) {
             Some(a) => {
                 tab.busy.insert(key.clone());
@@ -1172,15 +1193,60 @@ impl WorkerCore {
     }
 
     /// Serve one buffered-interval fit.
+    ///
+    /// A panic anywhere inside the fit — kernel assert, index panic in
+    /// adapter math, injected chaos — is contained here: the key is
+    /// released, state the unwound stack may have torn is discarded,
+    /// and the caller gets an error naming the (user, site). One
+    /// panicking fit therefore degrades to a per-tenant wire `Error`
+    /// instead of killing the serving thread and wedging the key
+    /// busy-forever for every other connection.
     pub fn fit(&self, tenant: &str, job: FitJob) -> Result<FitResult> {
         let key = (tenant.to_string(), job.user, job.site.clone());
-        let mut adapter = self.checkout(&key)?;
-        let r = self.fit_checked_out(&mut adapter, &job);
-        // check back in on BOTH paths: an error reply must not eat the
-        // adapter (the old code dropped it, turning one failed fit into
-        // "no adapter" for the rest of the run)
-        self.checkin(key, adapter);
-        r
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut adapter = self.checkout(&key)?;
+            let r = self.fit_checked_out(&mut adapter, &job);
+            // check back in on BOTH paths: an error reply must not eat the
+            // adapter (the old code dropped it, turning one failed fit into
+            // "no adapter" for the rest of the run)
+            self.checkin(key.clone(), adapter);
+            r
+        }));
+        match outcome {
+            Ok(r) => r,
+            Err(payload) => Err(self.release_after_panic(&key, payload.as_ref())),
+        }
+    }
+
+    /// Contain a panic that unwound out of a fit: un-busy the key (its
+    /// checked-out adapter, if any, died with the unwound stack) and
+    /// build the per-(user, site) error the caller returns. Re-locking
+    /// here goes through [`crate::util::lock_recover`] because the
+    /// panicking thread may have poisoned the table mutex — this pair
+    /// is exactly what keeps a multi-tenant daemon serving after one
+    /// tenant's fit blows up.
+    fn release_after_panic(
+        &self,
+        key: &TenantKey,
+        payload: &(dyn std::any::Any + Send),
+    ) -> anyhow::Error {
+        let discarded = lock(&self.adapters).busy.remove(key);
+        let what = crate::util::panic_message(payload);
+        if discarded {
+            anyhow!(
+                "worker {}: fit for {} panicked mid-step ({what}); its adapter \
+                 state was discarded — re-register before the next fit",
+                self.id,
+                key_label(key)
+            )
+        } else {
+            anyhow!(
+                "worker {}: fit for {} panicked before checkout ({what}); \
+                 registered state is intact",
+                self.id,
+                key_label(key)
+            )
+        }
     }
 
     /// Serve a whole batch, fanning independent jobs out across the
@@ -1201,17 +1267,36 @@ impl WorkerCore {
             .into_iter()
             .map(|job| {
                 let key = (tenant.to_string(), job.user, job.site.clone());
-                let r = self.checkout(&key).map(|a| (job, a));
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.checkout(&key)
+                }))
+                .unwrap_or_else(|p| Err(self.release_after_panic(&key, p.as_ref())))
+                .map(|a| (job, a));
                 Mutex::new(Some((key, r)))
             })
             .collect();
         let fitted = tensor::pool::parallel_map(n, |i| {
-            let (key, taken) = lock(&cells[i]).take().expect("each cell is taken once");
+            let Some((key, taken)) = lock(&cells[i]).take() else {
+                // each cell is taken exactly once by construction; a
+                // repeat take is a pool-dispatch bug, surfaced as this
+                // job's error rather than a panic
+                return (
+                    Err(anyhow!("worker {}: batch cell {i} was consumed twice", self.id)),
+                    None,
+                );
+            };
             match taken {
                 Err(e) => (Err(e), None),
                 Ok((job, mut adapter)) => {
-                    let r = self.fit_checked_out(&mut adapter, &job);
-                    (r, Some((key, adapter)))
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.fit_checked_out(&mut adapter, &job)
+                    }));
+                    match outcome {
+                        Ok(r) => (r, Some((key, adapter))),
+                        // the torn adapter drops here instead of
+                        // checking back in
+                        Err(p) => (Err(self.release_after_panic(&key, p.as_ref())), None),
+                    }
                 }
             }
         });
@@ -1230,6 +1315,7 @@ impl WorkerCore {
     /// assembly.
     fn fit_checked_out(&self, adapter: &mut SiteAdapter, job: &FitJob) -> Result<FitResult> {
         let bytes_in = job.x.bytes() + job.ghat.bytes();
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t_transfer = Instant::now();
         if let Some(tm) = &self.transfer {
             tm.apply(bytes_in);
@@ -1243,6 +1329,7 @@ impl WorkerCore {
 
         let old = if job.merged { Some(adapter.params.clone()) } else { None };
 
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t0 = Instant::now();
         let mut grads = match self.target {
             OffloadTarget::NativeCpu => adapter.params.fit_grads(&job.x, &job.ghat),
@@ -1269,6 +1356,7 @@ impl WorkerCore {
             (Some(ps), None, b)
         };
 
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t1 = Instant::now();
         if let Some(tm) = &self.transfer {
             tm.apply(bytes_out);

@@ -457,7 +457,9 @@ impl Trainer {
             .map(|u| self.driver.data_inputs(per_user, u, split, t))
             .collect();
         let data = if self.cfg.users == 1 {
-            parts.pop().unwrap()
+            parts
+                .pop()
+                .ok_or_else(|| anyhow!("no data batch produced for the single-user run"))?
         } else {
             concat_user_batches(parts)?
         };
@@ -488,6 +490,7 @@ impl Trainer {
             }
         }
         let _ = spec;
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t0 = Instant::now();
         let (outs, res) = self.rt.execute_fetch(&self.rt.server, &artifact,
                                                 inputs, &fetch)?;
@@ -781,8 +784,10 @@ impl Trainer {
                     self.timings.stall_intervals += 1;
                 }
                 if rounds > MAX_RECOVERY_ROUNDS {
-                    let first = slots.iter_mut().find(|s| s.outcome.is_err());
-                    let e = take_slot_error(first.expect("checked above"));
+                    let e = match slots.iter_mut().find(|s| s.outcome.is_err()) {
+                        Some(first) => take_slot_error(first),
+                        None => anyhow!("interval recovery lost track of its failing slot"),
+                    };
                     return Err(e.context(format!(
                         "interval recovery did not converge after \
                          {MAX_RECOVERY_ROUNDS} rounds"
@@ -810,8 +815,10 @@ impl Trainer {
         let sup = match supervisor.as_mut() {
             Some(s) if s.migrate_enabled() => s,
             _ => {
-                let s = slots.iter_mut().find(|s| s.outcome.is_err());
-                return Err(take_slot_error(s.expect("recover_round needs an error")));
+                return Err(match slots.iter_mut().find(|s| s.outcome.is_err()) {
+                    Some(s) => take_slot_error(s),
+                    None => anyhow!("recover_round called with no failed slot"),
+                });
             }
         };
         let pool = pool.as_mut().ok_or_else(|| anyhow!("no worker pool"))?;
@@ -929,6 +936,7 @@ impl Trainer {
     /// dispatch order (merged-mode float adds make this order part of
     /// the determinism contract).
     fn apply_fit_results(&mut self, results: Vec<FitResult>) -> Result<()> {
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t0 = Instant::now();
         let mut touched_weights: Vec<String> = Vec::new();
         for r in results {
@@ -1005,6 +1013,7 @@ impl Trainer {
         for g in &grad_names {
             fetch.push(g);
         }
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t0 = Instant::now();
         let (outs, res) = self.rt.execute_fetch(&self.rt.server, &artifact,
                                                 inputs, &fetch)?;
@@ -1161,8 +1170,11 @@ fn concat_user_batches(parts: Vec<Vec<(String, Value)>>) -> Result<Vec<(String, 
                 let mut data = Vec::new();
                 shape[0] = 0;
                 for v in &vals {
-                    shape[0] += v.shape()[0];
-                    data.extend_from_slice(v.as_f32().unwrap().data());
+                    let t = v.as_f32().ok_or_else(|| {
+                        anyhow!("user batches for {key} mix f32 and i32 values")
+                    })?;
+                    shape[0] += t.shape()[0];
+                    data.extend_from_slice(t.data());
                 }
                 Value::F32(Tensor::new(shape, data))
             }

@@ -84,6 +84,7 @@ impl LmTaskGen {
             // closed qa: the middle third
             6 => prompt[plen / 3..2 * plen / 3].to_vec(),
             // general qa: first and last
+            // lint:allow(panic-safety): prompt always holds plen >= 1 tokens by construction — the `prompt[0]` beside it leans on the same invariant
             _ => vec![prompt[0], *prompt.last().unwrap()],
         };
         let mut seq = Vec::with_capacity(self.seq);

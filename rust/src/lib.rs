@@ -40,6 +40,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod lint;
 pub mod memory;
 pub mod merge;
 pub mod metrics;

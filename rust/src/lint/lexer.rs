@@ -1,0 +1,288 @@
+//! A masking tokenizer for Rust source.
+//!
+//! `cola lint` needs to answer "does this *code* mention token X?"
+//! without being fooled by comments, doc text, or string literals —
+//! and, separately, "what does the *comment* on line N say?" for
+//! `// lint:allow` pragmas and `// SAFETY:` audits. One pass over the
+//! bytes produces both views:
+//!
+//! - [`Masked::code`] — the source with every comment body, string
+//!   literal, and char literal blanked to spaces (newlines preserved,
+//!   so byte offsets and line numbers still line up with the input).
+//!   Rule scans run plain substring searches over this view.
+//! - [`Masked::comments`] — per-line concatenated comment text (line
+//!   comments, doc comments, and any block-comment segment that
+//!   touches the line), with the `//`/`/*` delimiters stripped.
+//!
+//! The lexer understands line comments, nested block comments, string
+//! literals with escapes, raw strings (`r"…"`, `r#"…"#`, byte/raw-byte
+//! variants), byte strings, char and byte-char literals, and the
+//! lifetime-vs-char-literal ambiguity (`'a` vs `'a'`). It is not a
+//! full Rust lexer — it only has to be exact about where code stops
+//! and text begins.
+
+/// The views produced by [`mask`]. Same length/line structure as the
+/// input source.
+pub struct Masked {
+    /// Source with comments and string/char literals blanked.
+    pub code: String,
+    /// Plain `//` and `/* */` comment text per 0-based line index —
+    /// the only place `lint:allow` pragmas are recognized.
+    pub comments: Vec<String>,
+    /// Doc comment text (`///`, `//!`) per 0-based line index — doc
+    /// prose may *mention* pragma syntax without enacting it, but its
+    /// `# Safety` sections do count for the unsafe audit.
+    pub docs: Vec<String>,
+}
+
+impl Masked {
+    /// Masked source split into lines (no trailing newlines).
+    pub fn code_lines(&self) -> Vec<&str> {
+        self.code.split('\n').collect()
+    }
+
+    /// Plain comment text for a 0-based line ("" when out of range).
+    pub fn comment(&self, line0: usize) -> &str {
+        self.comments.get(line0).map(String::as_str).unwrap_or("")
+    }
+
+    /// Doc comment text for a 0-based line ("" when out of range).
+    pub fn doc(&self, line0: usize) -> &str {
+        self.docs.get(line0).map(String::as_str).unwrap_or("")
+    }
+}
+
+/// Blank comments and literals out of `src` (see module docs).
+pub fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let nlines = src.split('\n').count() + 1;
+    let mut comments = vec![String::new(); nlines];
+    let mut docs = vec![String::new(); nlines];
+    let mut line = 0usize;
+    let mut i = 0usize;
+    // true when the previous code byte could continue an identifier —
+    // distinguishes the `r`/`b` of a raw/byte string prefix from the
+    // trailing `r`/`b` of an identifier like `var` or `ptr`
+    let mut prev_ident = false;
+
+    // blank bytes [i, j) to spaces, preserving newlines
+    let mut blank_to = |i: &mut usize, line: &mut usize, out: &mut Vec<u8>, j: usize| {
+        let j = j.min(n);
+        while *i < j {
+            if b[*i] == b'\n' {
+                out.push(b'\n');
+                *line += 1;
+            } else {
+                out.push(b' ');
+            }
+            *i += 1;
+        }
+    };
+    let mut note = |comments: &mut Vec<String>, line: usize, text: &str| {
+        let t = text.trim();
+        if !t.is_empty() {
+            let slot = &mut comments[line];
+            if !slot.is_empty() {
+                slot.push(' ');
+            }
+            slot.push_str(t);
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        // line comment; ///… and //!… are doc text, recorded apart
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i + 2;
+            let is_doc = j < n && (b[j] == b'/' || b[j] == b'!');
+            while j < n && b[j] == b'/' {
+                j += 1; // strip the extra slashes of ///
+            }
+            if j < n && b[j] == b'!' {
+                j += 1; // strip the bang of //!
+            }
+            let start = j;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            if is_doc {
+                note(&mut docs, line, &src[start..j]);
+            } else {
+                note(&mut comments, line, &src[start..j]);
+            }
+            blank_to(&mut i, &mut line, &mut out, j);
+            prev_ident = false;
+            continue;
+        }
+        // block comment, possibly nested and multi-line
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            blank_to(&mut i, &mut line, &mut out, i + 2);
+            let mut seg = i;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    blank_to(&mut i, &mut line, &mut out, i + 2);
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    if depth == 0 {
+                        note(&mut comments, line, &src[seg..i]);
+                    }
+                    blank_to(&mut i, &mut line, &mut out, i + 2);
+                } else if b[i] == b'\n' {
+                    note(&mut comments, line, &src[seg..i]);
+                    blank_to(&mut i, &mut line, &mut out, i + 1);
+                    seg = i;
+                } else {
+                    blank_to(&mut i, &mut line, &mut out, i + 1);
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+        // raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#
+        if (c == b'r' || c == b'b') && !prev_ident {
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            let saw_r = j < n && b[j] == b'r';
+            if saw_r {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while saw_r && j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                if saw_r {
+                    // raw: ends at `"` followed by `hashes` hash marks
+                    while j < n {
+                        if b[j] == b'"' && b[j + 1..].len() >= hashes
+                            && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#')
+                        {
+                            j += 1 + hashes;
+                            break;
+                        }
+                        j += 1;
+                    }
+                } else {
+                    // b"…": ordinary escape rules
+                    while j < n {
+                        if b[j] == b'\\' {
+                            j += 2;
+                        } else if b[j] == b'"' {
+                            j += 1;
+                            break;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                }
+                blank_to(&mut i, &mut line, &mut out, j);
+                prev_ident = false;
+                continue;
+            }
+            if c == b'b' && i + 1 < n && b[i + 1] == b'\'' {
+                // byte char literal b'x'
+                let mut j = i + 2;
+                while j < n {
+                    if b[j] == b'\\' {
+                        j += 2;
+                    } else if b[j] == b'\'' {
+                        j += 1;
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank_to(&mut i, &mut line, &mut out, j);
+                prev_ident = false;
+                continue;
+            }
+            // plain identifier starting with r/b — fall through
+        }
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank_to(&mut i, &mut line, &mut out, j);
+            prev_ident = false;
+            continue;
+        }
+        if c == b'\'' {
+            // `'a>` is a lifetime, `'a'` is a char literal
+            let lifetime = i + 1 < n
+                && (b[i + 1] == b'_' || b[i + 1].is_ascii_alphabetic())
+                && !(i + 2 < n && b[i + 2] == b'\'');
+            if lifetime {
+                out.push(c);
+                i += 1;
+                prev_ident = false;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'\'' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank_to(&mut i, &mut line, &mut out, j);
+            prev_ident = false;
+            continue;
+        }
+        prev_ident = c == b'_' || c.is_ascii_alphanumeric();
+        out.push(c);
+        if c == b'\n' {
+            line += 1;
+        }
+        i += 1;
+    }
+
+    // blanking only ever replaces bytes with ASCII spaces, so the
+    // result is valid UTF-8 whenever the input was
+    let code = String::from_utf8_lossy(&out).into_owned();
+    Masked { code, comments, docs }
+}
+
+/// True when `tok` occurs in `line` as a standalone word: neither end
+/// may extend an identifier. Tokens whose boundary chars are already
+/// non-ident (like `.unwrap()`) match as plain substrings.
+pub fn has_word(line: &str, tok: &str) -> bool {
+    let lb = line.as_bytes();
+    let tb = tok.as_bytes();
+    if tb.is_empty() {
+        return false;
+    }
+    let is_ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut from = 0usize;
+    while let Some(k) = line[from..].find(tok) {
+        let at = from + k;
+        let pre_ok = !is_ident(tb[0]) || at == 0 || !is_ident(lb[at - 1]);
+        let end = at + tb.len();
+        let post_ok =
+            !is_ident(tb[tb.len() - 1]) || end >= lb.len() || !is_ident(lb[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}

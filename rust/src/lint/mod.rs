@@ -1,0 +1,660 @@
+//! `cola lint` — the repo's standing invariants as deny-by-default
+//! static checks over `rust/src/**`.
+//!
+//! ColA's reproduction contract is *exact*: the same config must train
+//! to byte-identical loss curves across transports, thread counts, and
+//! SIMD tiers. The runtime suites prove that today; this pass keeps
+//! future PRs from silently breaking it. Zero dependencies, in
+//! character with the repo's hand-rolled wire/toml/json code: a small
+//! masking lexer ([`lexer`]) plus substring rules.
+//!
+//! Rules (all deny by default):
+//!
+//! - **determinism** — curve-affecting modules (`adapters/`,
+//!   `coordinator/`, `data/`, `merge/`, `metrics/`, `tensor/`,
+//!   `runtime/native/`, `rng.rs`, `transport/wire.rs`) must not touch
+//!   `HashMap`/`HashSet` (iteration order is randomized per process),
+//!   wall clocks (`SystemTime`/`Instant::now`), or unseeded randomness
+//!   (`thread_rng`/`from_entropy`). Ordered state lives in
+//!   `BTreeMap`/`BTreeSet`; time belongs in the timing ledger behind a
+//!   pragma.
+//! - **panic-safety** — no `.unwrap()` / `.expect(…)` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in non-test library
+//!   code. Fallible paths return `anyhow` errors naming the
+//!   (user, site) they affect.
+//! - **mutex-poison** — no `lock().unwrap()` *and* no ad-hoc
+//!   `lock().unwrap_or_else(…)` recovery: shared daemon/pool state goes
+//!   through [`crate::util::lock_recover`], the one audited place that
+//!   strips `PoisonError` so a panicking fit cannot wedge a
+//!   multi-tenant daemon.
+//! - **wire-exhaustiveness** — every `wire::Msg` / `wire::BatchItem`
+//!   variant must appear in `encode_with`, `decode`, AND the fuzz
+//!   generator `arb_msg`, so a new message cannot ship without codec +
+//!   fuzz coverage.
+//! - **unsafe-audit** — every `unsafe` token carries a `// SAFETY:`
+//!   comment (or `# Safety` doc section) on the same line or the
+//!   contiguous comment/attribute block above it.
+//! - **pragma-hygiene** — `// lint:allow(rule): reason` pragmas must
+//!   carry a non-empty reason and must actually suppress something;
+//!   stale pragmas are warnings (errors under `--deny-all`).
+//!
+//! An audited exception is written on the flagged line or the line
+//! directly above it:
+//!
+//! ```text
+//! // lint:allow(determinism): timing ledger only; never in curve math
+//! let t0 = Instant::now();
+//! ```
+//!
+//! `#[cfg(test)]` items (inline test modules and test-only fns) are
+//! exempt from every rule.
+
+pub mod lexer;
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use lexer::{has_word, mask, Masked};
+
+/// Rule identifiers; `name()` is the spelling used inside
+/// `lint:allow(…)` pragmas and report output.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Rule {
+    Determinism,
+    PanicSafety,
+    MutexPoison,
+    WireExhaustive,
+    UnsafeAudit,
+    PragmaHygiene,
+}
+
+/// All rules, in report order.
+pub const RULES: [Rule; 6] = [
+    Rule::Determinism,
+    Rule::PanicSafety,
+    Rule::MutexPoison,
+    Rule::WireExhaustive,
+    Rule::UnsafeAudit,
+    Rule::PragmaHygiene,
+];
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Determinism => "determinism",
+            Rule::PanicSafety => "panic-safety",
+            Rule::MutexPoison => "mutex-poison",
+            Rule::WireExhaustive => "wire-exhaustiveness",
+            Rule::UnsafeAudit => "unsafe-audit",
+            Rule::PragmaHygiene => "pragma-hygiene",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rule> {
+        RULES.iter().copied().find(|r| r.name() == s)
+    }
+
+    /// One-line remediation hint for `--fix-report`.
+    pub fn remedy(self) -> &'static str {
+        match self {
+            Rule::Determinism => {
+                "use BTreeMap/BTreeSet and the seeded rng::Rng; wall-clock \
+                 reads belong in the timing ledger behind a pragma"
+            }
+            Rule::PanicSafety => {
+                "return an anyhow error naming the (user, site) affected, \
+                 or pragma-audit a guarded invariant"
+            }
+            Rule::MutexPoison => "route the lock through util::lock_recover",
+            Rule::WireExhaustive => {
+                "add the variant to encode_with, decode, and arb_msg in \
+                 transport/wire.rs"
+            }
+            Rule::UnsafeAudit => {
+                "state the alignment / lane-width / feature-detection \
+                 argument in a SAFETY: comment directly above the block"
+            }
+            Rule::PragmaHygiene => {
+                "give the pragma a non-empty reason, or delete it if the \
+                 flagged code is gone"
+            }
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Severity {
+    /// Fails the default `cola lint` run.
+    Deny,
+    /// Reported; fails only under `--deny-all`.
+    Warn,
+}
+
+/// One finding, addressed `file:line` (1-based).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub severity: Severity,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = match self.severity {
+            Severity::Deny => "",
+            Severity::Warn => "warn: ",
+        };
+        write!(
+            f,
+            "{}:{}: [{}] {}{}",
+            self.file, self.line, self.rule, tag, self.message
+        )
+    }
+}
+
+/// A violation suppressed by an audited `lint:allow` pragma.
+#[derive(Clone, Debug)]
+pub struct Allowed {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub reason: String,
+}
+
+/// Everything one scan produced.
+#[derive(Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub allowed: Vec<Allowed>,
+}
+
+impl Report {
+    pub fn deny_count(&self) -> usize {
+        self.violations
+            .iter()
+            .filter(|v| v.severity == Severity::Deny)
+            .count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.violations
+            .iter()
+            .filter(|v| v.severity == Severity::Warn)
+            .count()
+    }
+
+    pub fn count_for(&self, rule: Rule) -> usize {
+        self.violations.iter().filter(|v| v.rule == rule).count()
+    }
+}
+
+/// Modules where nondeterminism changes loss-curve bytes. Paths are
+/// relative to `rust/src`, `/`-separated.
+fn curve_scoped(rel: &str) -> bool {
+    const DIRS: [&str; 7] = [
+        "adapters/",
+        "coordinator/",
+        "data/",
+        "merge/",
+        "metrics/",
+        "tensor/",
+        "runtime/native/",
+    ];
+    DIRS.iter().any(|d| rel.starts_with(d)) || rel == "rng.rs" || rel == "transport/wire.rs"
+}
+
+const DET_TOKENS: [&str; 6] = [
+    "HashMap",
+    "HashSet",
+    "SystemTime",
+    "Instant::now",
+    "thread_rng",
+    "from_entropy",
+];
+
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+const MUTEX_TOKENS: [&str; 3] = [
+    ".lock().unwrap()",
+    ".lock().expect(",
+    ".lock().unwrap_or_else(",
+];
+
+/// The wire codec file and the three fns that must each cover every
+/// message variant.
+const WIRE_FILE: &str = "transport/wire.rs";
+const WIRE_ENUMS: [&str; 2] = ["Msg", "BatchItem"];
+const WIRE_FNS: [&str; 3] = ["encode_with", "decode", "arb_msg"];
+
+/// A `// lint:allow(rule): reason` pragma found on one line.
+struct Pragma {
+    rule: Rule,
+    reason: String,
+    used: bool,
+    bad_rule: Option<String>,
+}
+
+fn parse_pragma(comment: &str) -> Option<Pragma> {
+    let key = "lint:allow(";
+    let k = comment.find(key)?;
+    let rest = &comment[k + key.len()..];
+    let close = rest.find(')')?;
+    let name = rest[..close].trim();
+    let after = rest[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix(':')
+        .map(|r| r.trim().to_string())
+        .unwrap_or_default();
+    match Rule::parse(name) {
+        Some(rule) => Some(Pragma { rule, reason, used: false, bad_rule: None }),
+        None => Some(Pragma {
+            rule: Rule::PragmaHygiene,
+            reason,
+            used: false,
+            bad_rule: Some(name.to_string()),
+        }),
+    }
+}
+
+/// Mark the 0-based lines covered by `#[cfg(test)]` items: the
+/// attribute block plus the item that follows, through its matching
+/// close brace (or terminating `;` for brace-less items).
+fn test_spans(code_lines: &[&str]) -> Vec<bool> {
+    let mut inactive = vec![false; code_lines.len()];
+    let mut i = 0usize;
+    while i < code_lines.len() {
+        let t = code_lines[i].trim();
+        if !(t.starts_with("#[cfg(") && has_word(t, "test")) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 1;
+        while j < code_lines.len() {
+            let tj = code_lines[j].trim();
+            if tj.is_empty() || tj.starts_with("#[") {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        // walk the item to its end
+        let mut depth = 0i64;
+        let mut seen_brace = false;
+        let mut k = j;
+        'item: while k < code_lines.len() {
+            for ch in code_lines[k].bytes() {
+                match ch {
+                    b'{' => {
+                        depth += 1;
+                        seen_brace = true;
+                    }
+                    b'}' => depth -= 1,
+                    b';' if !seen_brace && depth == 0 => break 'item,
+                    _ => {}
+                }
+            }
+            if seen_brace && depth == 0 {
+                break;
+            }
+            k += 1;
+        }
+        let end = k.min(code_lines.len().saturating_sub(1));
+        for slot in inactive.iter_mut().take(end + 1).skip(start) {
+            *slot = true;
+        }
+        i = end + 1;
+    }
+    inactive
+}
+
+/// Parse variant names out of an enum body (text between the outer
+/// braces): idents starting uppercase at nesting depth 0, in
+/// declaration position (after `{` or `,`), skipping attributes.
+fn enum_variants(body: &str) -> Vec<String> {
+    let b = body.as_bytes();
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut expecting = true;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'{' | b'(' | b'[' => {
+                depth += 1;
+                i += 1;
+            }
+            b'}' | b')' | b']' => {
+                depth -= 1;
+                i += 1;
+            }
+            b',' if depth == 0 => {
+                expecting = true;
+                i += 1;
+            }
+            b'#' if depth == 0 => {
+                while i < b.len() && b[i] != b']' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            _ if depth == 0 && expecting && c.is_ascii_uppercase() => {
+                let s = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                out.push(body[s..i].to_string());
+                expecting = false;
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+/// Find `anchor` (e.g. `"enum Msg"` / `"fn decode"`) as a whole word in
+/// masked code and return (anchor offset, body start, body end) of the
+/// brace-delimited body that follows.
+fn find_span(masked: &str, anchor: &str) -> Option<(usize, usize, usize)> {
+    let mb = masked.as_bytes();
+    let is_ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut from = 0usize;
+    let at = loop {
+        let k = masked[from..].find(anchor)? + from;
+        let end = k + anchor.len();
+        let pre_ok = k == 0 || !is_ident(mb[k - 1]);
+        let post_ok = end >= mb.len() || !is_ident(mb[end]);
+        if pre_ok && post_ok {
+            break k;
+        }
+        from = k + 1;
+    };
+    let open = at + masked[at..].find('{')?;
+    let mut depth = 0i64;
+    for (off, ch) in masked[open..].bytes().enumerate() {
+        match ch {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((at, open + 1, open + off));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Cross-check that every variant of `enum_name` appears (as
+/// `Enum::Variant`) inside each named fn. Returns (variant, fn) pairs
+/// that are missing, or sentinel entries when the enum/fn itself is
+/// absent. Public so the linter tests can run it on synthetic enums.
+pub fn check_enum_coverage(src: &str, enum_name: &str, fns: &[&str]) -> Vec<(String, String)> {
+    let masked = mask(src).code;
+    let mut missing = Vec::new();
+    let body = match find_span(&masked, &format!("enum {enum_name}")) {
+        Some((_, s, e)) => masked[s..e].to_string(),
+        None => {
+            missing.push((format!("<enum {enum_name} not found>"), String::new()));
+            return missing;
+        }
+    };
+    let variants = enum_variants(&body);
+    for fname in fns {
+        let span = match find_span(&masked, &format!("fn {fname}")) {
+            Some((_, s, e)) => &masked[s..e],
+            None => {
+                missing.push((format!("<fn {fname} not found>"), fname.to_string()));
+                continue;
+            }
+        };
+        for v in &variants {
+            if !has_word(span, &format!("{enum_name}::{v}")) {
+                missing.push((format!("{enum_name}::{v}"), fname.to_string()));
+            }
+        }
+    }
+    missing
+}
+
+/// Scan one file's source. `rel` is the `/`-separated path relative to
+/// `rust/src` — it decides determinism scope and the wire cross-check.
+pub fn scan_source(rel: &str, src: &str) -> (Vec<Violation>, Vec<Allowed>) {
+    let masked: Masked = mask(src);
+    let lines = masked.code_lines();
+    let inactive = test_spans(&lines);
+    let mut pragmas: Vec<Option<Pragma>> = (0..lines.len())
+        .map(|ln| parse_pragma(masked.comment(ln)))
+        .collect();
+    let mut violations = Vec::new();
+    let mut allowed = Vec::new();
+
+    // a finding on line ln0 is suppressed by a pragma on the same line
+    // or the line directly above; a matching pragma without a reason
+    // re-files the finding under pragma-hygiene
+    let mut emit = |pragmas: &mut Vec<Option<Pragma>>,
+                    allowed: &mut Vec<Allowed>,
+                    violations: &mut Vec<Violation>,
+                    ln0: usize,
+                    rule: Rule,
+                    message: String| {
+        for cand in [Some(ln0), ln0.checked_sub(1)].into_iter().flatten() {
+            if let Some(p) = pragmas.get_mut(cand).and_then(Option::as_mut) {
+                if p.rule == rule {
+                    p.used = true;
+                    if p.reason.is_empty() {
+                        violations.push(Violation {
+                            file: rel.to_string(),
+                            line: ln0 + 1,
+                            rule: Rule::PragmaHygiene,
+                            severity: Severity::Deny,
+                            message: format!(
+                                "lint:allow({rule}) needs a `: reason` to audit this site"
+                            ),
+                        });
+                    } else {
+                        allowed.push(Allowed {
+                            file: rel.to_string(),
+                            line: ln0 + 1,
+                            rule,
+                            reason: p.reason.clone(),
+                        });
+                    }
+                    return;
+                }
+            }
+        }
+        violations.push(Violation {
+            file: rel.to_string(),
+            line: ln0 + 1,
+            rule,
+            severity: Severity::Deny,
+            message,
+        });
+    };
+
+    let scoped = curve_scoped(rel);
+    for (ln0, line) in lines.iter().enumerate() {
+        if inactive[ln0] {
+            continue;
+        }
+        if scoped {
+            for tok in DET_TOKENS {
+                if has_word(line, tok) {
+                    emit(
+                        &mut pragmas,
+                        &mut allowed,
+                        &mut violations,
+                        ln0,
+                        Rule::Determinism,
+                        format!("`{tok}` in a curve-affecting module breaks byte-identical replay"),
+                    );
+                }
+            }
+        }
+        if MUTEX_TOKENS.iter().any(|t| line.contains(t)) {
+            emit(
+                &mut pragmas,
+                &mut allowed,
+                &mut violations,
+                ln0,
+                Rule::MutexPoison,
+                "poison handled ad hoc; shared locks go through util::lock_recover".to_string(),
+            );
+        } else if let Some(tok) = PANIC_TOKENS.iter().find(|t| line.contains(*t)) {
+            emit(
+                &mut pragmas,
+                &mut allowed,
+                &mut violations,
+                ln0,
+                Rule::PanicSafety,
+                format!("`{tok}` in library code; return an anyhow error instead"),
+            );
+        }
+        if has_word(line, "unsafe") {
+            let mut covered = covered_by_safety(&masked, ln0);
+            let mut k = ln0;
+            let mut steps = 0usize;
+            while !covered && k > 0 && steps < 12 {
+                k -= 1;
+                steps += 1;
+                let t = lines[k].trim();
+                if !t.is_empty() && !t.starts_with("#[") {
+                    break;
+                }
+                covered = covered_by_safety(&masked, k);
+            }
+            if !covered {
+                emit(
+                    &mut pragmas,
+                    &mut allowed,
+                    &mut violations,
+                    ln0,
+                    Rule::UnsafeAudit,
+                    "state the alignment/lane-width/feature argument in a SAFETY: comment"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    if rel == WIRE_FILE {
+        for enum_name in WIRE_ENUMS {
+            for (variant, fname) in check_enum_coverage(src, enum_name, &WIRE_FNS) {
+                violations.push(Violation {
+                    file: rel.to_string(),
+                    line: 1,
+                    rule: Rule::WireExhaustive,
+                    severity: Severity::Deny,
+                    message: format!("{variant} is not covered by fn {fname}"),
+                });
+            }
+        }
+    }
+
+    // pragmas that suppressed nothing are stale (warn); pragmas naming
+    // an unknown rule are outright errors
+    for (ln0, p) in pragmas.iter().enumerate() {
+        if let Some(p) = p {
+            if let Some(bad) = &p.bad_rule {
+                violations.push(Violation {
+                    file: rel.to_string(),
+                    line: ln0 + 1,
+                    rule: Rule::PragmaHygiene,
+                    severity: Severity::Deny,
+                    message: format!("unknown lint rule `{bad}` in lint:allow"),
+                });
+            } else if !p.used {
+                violations.push(Violation {
+                    file: rel.to_string(),
+                    line: ln0 + 1,
+                    rule: Rule::PragmaHygiene,
+                    severity: Severity::Warn,
+                    message: format!("stale lint:allow({}) suppresses nothing", p.rule),
+                });
+            }
+        }
+    }
+
+    (violations, allowed)
+}
+
+fn covered_by_safety(masked: &Masked, line0: usize) -> bool {
+    let c = masked.comment(line0);
+    let d = masked.doc(line0);
+    c.contains("SAFETY:") || d.contains("SAFETY:") || d.contains("# Safety")
+}
+
+/// Recursively collect `.rs` files under `root`, sorted, as
+/// `/`-separated paths relative to `root`. Deterministic by
+/// construction — the linter holds itself to its own rules.
+fn rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("lint: cannot read {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace(std::path::MAIN_SEPARATOR, "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `src_root` (normally `rust/src`).
+pub fn scan_tree(src_root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    rs_files(src_root, src_root, &mut files)?;
+    let mut report = Report::default();
+    for rel in files {
+        let src = std::fs::read_to_string(src_root.join(&rel))
+            .with_context(|| format!("lint: cannot read {rel}"))?;
+        let (violations, allowed) = scan_source(&rel, &src);
+        report.files_scanned += 1;
+        report.violations.extend(violations);
+        report.allowed.extend(allowed);
+    }
+    Ok(report)
+}
+
+/// Locate the `rust/src` tree from a working directory: accepts being
+/// run at the repo root, inside `rust/`, or inside `rust/src`.
+pub fn default_src_root() -> Result<std::path::PathBuf> {
+    let cwd = std::env::current_dir().context("lint: no working directory")?;
+    for cand in [cwd.join("rust/src"), cwd.join("src"), cwd.clone()] {
+        if cand.join("lib.rs").is_file() && cand.join("transport").is_dir() {
+            return Ok(cand);
+        }
+    }
+    anyhow::bail!(
+        "lint: cannot find rust/src from {} (pass --root <dir>)",
+        cwd.display()
+    )
+}

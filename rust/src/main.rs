@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         "curvediff" => cmd_curvediff(&args),
         "memory" => cmd_memory(&args),
         "table1" => cmd_table1(),
+        "lint" => cmd_lint(&args),
         "" | "help" => {
             print_help();
             Ok(())
@@ -87,8 +88,58 @@ fn print_help() {
            memory   analytic memory report\n\
                     --profile llama2-qv|llama2-all|gpt2|roberta-base|bart-base|tiny|small\n\
                     --batch B --interval I\n\
-           table1   print the Table-1 computation-space complexity summary\n"
+           table1   print the Table-1 computation-space complexity summary\n\
+           lint     zero-dep determinism / panic-safety static analysis\n\
+                    over rust/src (see README \"Static analysis\")\n\
+                    --root <dir>  (source tree; default auto-detected)\n\
+                    --deny-all    (warnings also fail the run)\n\
+                    --fix-report  (per-rule counts, remediation hints,\n\
+                    and the audited lint:allow pragma inventory)\n"
     );
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => cola::lint::default_src_root()?,
+    };
+    let deny_all = args.has_flag("deny-all");
+    let report = cola::lint::scan_tree(&root)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if args.has_flag("fix-report") {
+        println!("\nper-rule counts ({} files scanned):", report.files_scanned);
+        for rule in cola::lint::RULES {
+            let n = report.count_for(rule);
+            if n > 0 {
+                println!("  {:<20} {:>4}   fix: {}", rule.name(), n, rule.remedy());
+            } else {
+                println!("  {:<20} {:>4}", rule.name(), n);
+            }
+        }
+        println!("\naudited lint:allow pragmas ({}):", report.allowed.len());
+        for a in &report.allowed {
+            println!("  {}:{}: [{}] {}", a.file, a.line, a.rule, a.reason);
+        }
+    }
+    let denies = report.deny_count();
+    let warns = report.warn_count();
+    println!(
+        "cola lint: {} deny, {} warn, {} allowed across {} files",
+        denies,
+        warns,
+        report.allowed.len(),
+        report.files_scanned
+    );
+    if denies > 0 {
+        bail!("{denies} deny violation(s)");
+    }
+    if deny_all && warns > 0 {
+        bail!("{warns} warning(s) under --deny-all");
+    }
+    Ok(())
 }
 
 /// Keys consumed by the launcher itself, not by `TrainConfig`.
@@ -279,6 +330,7 @@ fn cmd_pool(args: &Args) -> Result<()> {
                 bail!("{addr} is not in worker_addrs");
             }
         }
+        // lint:allow(panic-safety): `action` is matched against these same literals by the caller before dispatch
         _ => unreachable!("filtered above"),
     }
 

@@ -67,7 +67,7 @@ impl PjrtDevice {
     }
 
     fn send(&self, cmd: Cmd) -> Result<()> {
-        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        let tx = crate::util::lock_recover(&self.tx);
         tx.send(cmd).map_err(|_| anyhow!("device {} gone", self.name))
     }
 
@@ -212,6 +212,7 @@ fn run_execute(
                 refs.push(lit);
             }
             Input::Val(_) => {
+                // lint:allow(panic-safety): temps holds exactly one entry per Input::Val, built from this same list a few lines up
                 let (ti, lit) = temp_it.next().unwrap();
                 debug_assert_eq!(*ti, i);
                 refs.push(lit);
@@ -219,7 +220,10 @@ fn run_execute(
         }
     }
 
-    let exe = st.exes.get(artifact).unwrap();
+    let exe = st
+        .exes
+        .get(artifact)
+        .ok_or_else(|| anyhow!("{artifact}: executable was never compiled"))?;
     let t0 = Instant::now();
     let result = exe
         .execute::<&xla::Literal>(&refs)

@@ -129,6 +129,7 @@ pub fn tunable_shapes(
                 out.push((format!("l{i}.pv"), vec![PREFIX_LEN, d]));
             }
         }
+        // lint:allow(panic-safety): the method list is compiled into the builtin manifest — an unknown name is a build-time bug, not input
         other => panic!("unknown baseline method '{other}'"),
     }
     if let Some(c) = n_classes {
@@ -150,6 +151,7 @@ pub fn ic_site_dims(model: &str) -> Vec<(&'static str, (usize, usize, usize))> {
             ("conv2", (16 * 9, 32, 14 * 14)),
             ("fc", (32 * 7 * 7, N_CLASSES_IC, 1)),
         ],
+        // lint:allow(panic-safety): model names are compiled into the builtin manifest — an unknown one is a build-time bug, not input
         other => panic!("unknown ic model '{other}'"),
     }
 }
@@ -171,6 +173,7 @@ pub fn ic_adapter_shapes(model: &str, kind: &str) -> Vec<(String, Vec<usize>)> {
                 out.push((format!("{site}.W2"), vec![MLP_HIDDEN, dout]));
                 out.push((format!("{site}.b2"), vec![dout]));
             }
+            // lint:allow(panic-safety): adapter kinds are compiled into the builtin manifest — an unknown one is a build-time bug, not input
             other => panic!("unknown adapter kind '{other}'"),
         }
     }
@@ -296,6 +299,7 @@ fn emit_fit(b: &mut Builder, kind: &str, d_in: usize, d_out: usize, rows: usize)
             inputs.push(f32io("b2", vec![d_out]));
             vec!["dW1".into(), "db1".into(), "dW2".into(), "db2".into()]
         }
+        // lint:allow(panic-safety): fit kinds are compiled into the builtin manifest — an unknown one is a build-time bug, not input
         other => panic!("unknown fit kind '{other}'"),
     };
     b.emit(&name, inputs, outputs);

@@ -152,7 +152,10 @@ impl<'a> Sites<'a> {
                 .ok_or_else(|| anyhow!("missing site weight '{site}'"))?;
             return Ok(tensor::matmul(x, w));
         }
-        let base = self.base.as_ref().unwrap();
+        let base = self
+            .base
+            .as_ref()
+            .ok_or_else(|| anyhow!("unmerged forward pass with no base weights loaded"))?;
         let w = base
             .get(site)
             .ok_or_else(|| anyhow!("missing base weight '{site}.Wbase'"))?;
@@ -171,14 +174,21 @@ impl<'a> Sites<'a> {
         grads: &mut BTreeMap<String, Tensor>,
     ) -> Result<Tensor> {
         if let Some(ws) = &self.merged {
-            let w = ws.get(site).unwrap();
+            let w = ws
+                .get(site)
+                .ok_or_else(|| anyhow!("missing site weight '{site}' in backward pass"))?;
             if self.want_grads {
                 grads.insert(format!("{site}.W"), tensor::matmul_tn(x, dout));
             }
             return Ok(tensor::matmul_nt(dout, w));
         }
-        let base = self.base.as_ref().unwrap();
-        let w = base.get(site).unwrap();
+        let base = self
+            .base
+            .as_ref()
+            .ok_or_else(|| anyhow!("unmerged backward pass with no base weights loaded"))?;
+        let w = base
+            .get(site)
+            .ok_or_else(|| anyhow!("missing base weight '{site}.Wbase' in backward pass"))?;
         let mut dx = tensor::matmul_nt(dout, w);
         let g = if self.want_grads { Some(&mut *grads) } else { None };
         if let Some(dxa) = adapter_back(&self.kind, &self.a, site, x, dout, g)? {

@@ -15,7 +15,7 @@
 //! differences in a numpy reference before porting; the backward order
 //! and caches mirror that derivation exactly.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -284,6 +284,7 @@ fn lm_run(cfg: &SizeConfig, p: &Params, tokens: &IntTensor, task: &Task, opts: &
         for t in 0..st {
             let dst = (b * st + t) * d;
             if t < pl {
+                // lint:allow(panic-safety): pl > 0 only when a prompt tensor was supplied — the two travel together in FwdOpts
                 let pr = opts.prompt.as_ref().unwrap();
                 hdat[dst..dst + d].copy_from_slice(&pr.data()[t * d..(t + 1) * d]);
             } else {
@@ -602,11 +603,13 @@ fn lm_run(cfg: &SizeConfig, p: &Params, tokens: &IntTensor, task: &Task, opts: &
             let lv = p.ia3(&format!("l{i}.lv"))?;
             out.ia3_grads.insert(
                 format!("l{i}.lk"),
+                // lint:allow(panic-safety): the forward pass caches k_raw whenever opts.ia3 is set — same flag that guards this branch
                 kernels::col_dot(&dk2, c.k_raw.as_ref().unwrap()),
             );
             dk2 = kernels::scale_cols(&dk2, lk);
             out.ia3_grads.insert(
                 format!("l{i}.lv"),
+                // lint:allow(panic-safety): the forward pass caches v2_raw whenever opts.ia3 is set — same flag that guards this branch
                 kernels::col_dot(&dv2, c.v2_raw.as_ref().unwrap()),
             );
             dv2 = kernels::scale_cols(&dv2, lv);
@@ -649,10 +652,12 @@ fn lm_run(cfg: &SizeConfig, p: &Params, tokens: &IntTensor, task: &Task, opts: &
     if opts.want_xs {
         out.gq = gq
             .into_iter()
+            // lint:allow(panic-safety): the layer loop above fills every gq slot when opts.want_xs is set
             .map(|t| t.unwrap().reshape(&[bsz, st, d]))
             .collect();
         out.gv = gv
             .into_iter()
+            // lint:allow(panic-safety): the layer loop above fills every gv slot when opts.want_xs is set
             .map(|t| t.unwrap().reshape(&[bsz, st, d]))
             .collect();
     }
@@ -697,7 +702,7 @@ fn partition<'a>(
     named: &Named<'a>,
     data_names: &[&str],
 ) -> (Params<'a>, BTreeMap<&'a str, &'a Tensor>) {
-    let wnames: HashSet<String> = builtin::lm_param_shapes(cfg)
+    let wnames: BTreeSet<String> = builtin::lm_param_shapes(cfg)
         .into_iter()
         .map(|(n, _)| n)
         .collect();
@@ -882,6 +887,7 @@ pub(super) fn coupled(
         }
         "ptuning" => {
             if let Some(dpr) = out.dprompt {
+                // lint:allow(panic-safety): the ptuning cache is built unconditionally on this method's forward path
                 let (z, mid) = ptune.as_ref().unwrap();
                 let anchor = f32_in(named, "anchor")?;
                 let w1 = f32_in(named, "pt.W1")?;
@@ -896,6 +902,7 @@ pub(super) fn coupled(
             }
         }
         "prefix" => grads.extend(out.prefix_grads),
+        // lint:allow(panic-safety): method names come from the compiled-in baseline list matched exhaustively above
         _ => unreachable!(),
     }
     if seqcls {

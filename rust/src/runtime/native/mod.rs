@@ -27,7 +27,7 @@ pub mod kernels;
 mod ic;
 mod lm;
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -47,7 +47,7 @@ use lm::{f32_in, Named};
 pub struct NativeDevice {
     name: Arc<String>,
     manifest: Arc<Manifest>,
-    store: Arc<Mutex<HashMap<String, Value>>>,
+    store: Arc<Mutex<BTreeMap<String, Value>>>,
 }
 
 impl NativeDevice {
@@ -55,7 +55,7 @@ impl NativeDevice {
         NativeDevice {
             name: Arc::new(name.to_string()),
             manifest,
-            store: Arc::new(Mutex::new(HashMap::new())),
+            store: Arc::new(Mutex::new(BTreeMap::new())),
         }
     }
 
@@ -63,8 +63,8 @@ impl NativeDevice {
         &self.name
     }
 
-    fn store(&self) -> MutexGuard<'_, HashMap<String, Value>> {
-        self.store.lock().unwrap_or_else(|e| e.into_inner())
+    fn store(&self) -> MutexGuard<'_, BTreeMap<String, Value>> {
+        crate::util::lock_recover(&self.store)
     }
 
     pub fn upload(&self, name: &str, value: Value) -> Result<()> {
@@ -105,6 +105,7 @@ impl NativeDevice {
         // Resolve positional values. Inline values are owned; resident
         // refs are borrowed from the store for the duration of the run
         // (no per-step copy of the resident base model).
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t_up = Instant::now();
         let mut bytes_up = 0usize;
         enum Slot {
@@ -135,6 +136,7 @@ impl NativeDevice {
             .chain(plan.keep.iter().map(|(i, _)| *i))
             .any(|i| i >= 2);
 
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t0 = Instant::now();
         let mut by_name = {
             let store = self.store();
@@ -180,6 +182,7 @@ impl NativeDevice {
             .collect::<Result<_>>()?;
         let exec_time = t0.elapsed();
 
+        // lint:allow(determinism): timing ledger only — durations never feed curve math
         let t_fetch = Instant::now();
         let mut fetched = Vec::new();
         let mut bytes_down = 0usize;

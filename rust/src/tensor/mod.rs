@@ -109,6 +109,7 @@ impl Tensor {
 
     /// Flatten all leading dims into rows: (.., d) -> (n, d).
     pub fn to_rows(self) -> Self {
+        // lint:allow(panic-safety): Tensor construction rejects rank-0 shapes, so `last()` always holds
         let d = *self.shape.last().expect("rank >= 1");
         let n = self.data.len() / d;
         self.reshape(&[n, d])

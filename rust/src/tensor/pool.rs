@@ -136,7 +136,9 @@ pub fn join_row_bands<F>(
         let mut ai = a.chunks(band * a_cols);
         let mut oi = out.chunks_mut(band * o_cols);
         // run the first band on the calling thread, the rest on helpers
-        let (a0, o0) = (ai.next().unwrap(), oi.next().unwrap());
+        let (Some(a0), Some(o0)) = (ai.next(), oi.next()) else {
+            return; // rows == 0: no bands to run
+        };
         for (ab, ob) in ai.zip(oi) {
             s.spawn(move || f(ab, ob));
         }
@@ -166,7 +168,9 @@ where
     std::thread::scope(|s| {
         let f = &f;
         let mut iter = out.chunks_mut(chunk).enumerate();
-        let (i0, c0) = iter.next().unwrap();
+        let Some((i0, c0)) = iter.next() else {
+            return; // n == 0 is handled above; empty only if out is empty
+        };
         for (ci, csl) in iter {
             s.spawn(move || {
                 for (i, slot) in csl.iter_mut().enumerate() {
@@ -179,6 +183,7 @@ where
         }
     });
     out.into_iter()
+        // lint:allow(panic-safety): the band loops above fill every slot; a None here is a plain bug, not a runtime condition
         .map(|o| o.expect("parallel_map: missing slot"))
         .collect()
 }
@@ -204,7 +209,9 @@ where
     std::thread::scope(|s| {
         let f = &f;
         let mut gi = buf.chunks_mut(group * chunk_len).enumerate();
-        let (g0, first) = gi.next().unwrap();
+        let Some((g0, first)) = gi.next() else {
+            return; // empty buffer: no chunks to run
+        };
         for (g, gsl) in gi {
             s.spawn(move || {
                 for (ci, c) in gsl.chunks_mut(chunk_len).enumerate() {

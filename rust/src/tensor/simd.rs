@@ -179,7 +179,10 @@ pub fn axpy_accum_scalar(o: &mut [f32], b: &[f32], a: f32) {
 pub fn axpy_accum_avx2(o: &mut [f32], b: &[f32], a: f32) {
     #[cfg(target_arch = "x86_64")]
     if detect().0 {
-        // safety: AVX2 presence just checked
+        // SAFETY: detect().0 is is_x86_feature_detected!("avx2"), checked on
+        // this very branch; the kernel's only other contract (in-bounds lane
+        // access for any o/b lengths) is upheld internally by its 8-wide
+        // loop guard + scalar tail
         return unsafe { x86::axpy_accum_avx2(o, b, a) };
     }
     axpy_accum_scalar(o, b, a)
@@ -194,7 +197,9 @@ pub fn axpy_accum_fma(o: &mut [f32], b: &[f32], a: f32) {
     {
         let (avx2, fma) = detect();
         if avx2 && fma {
-            // safety: AVX2+FMA presence just checked
+            // SAFETY: both is_x86_feature_detected! results are required true
+            // on this branch, matching the kernel's target_feature(avx2,fma)
+            // contract; lane bounds are upheld internally
             return unsafe { x86::axpy_accum_fma(o, b, a) };
         }
     }
@@ -245,7 +250,8 @@ pub fn softmax_row_avx2(row: &mut [f32]) {
     if detect().0 {
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let shift = if m.is_finite() { m } else { 0.0 };
-        // safety: AVX2 presence just checked
+        // SAFETY: AVX2 verified by detect().0 on this branch; unaligned
+        // loads/stores + scalar tail keep any row length in bounds
         unsafe { x86::sub_scalar_avx2(row, shift) };
         let mut sum = 0.0f32;
         for x in row.iter_mut() {
@@ -253,7 +259,9 @@ pub fn softmax_row_avx2(row: &mut [f32]) {
             sum += *x;
         }
         if sum > 0.0 {
-            // safety: AVX2 presence just checked
+            // SAFETY: AVX2 verified by detect().0 on the enclosing branch;
+            // unaligned loads/stores + scalar tail keep any row length in
+            // bounds
             unsafe { x86::div_scalar_avx2(row, sum) };
         } else {
             for x in row.iter_mut() {
@@ -309,7 +317,9 @@ pub fn adamw_update_scalar(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32
 pub fn adamw_update_avx2(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], s: &AdamwStep) {
     #[cfg(target_arch = "x86_64")]
     if detect().0 {
-        // safety: AVX2 presence just checked
+        // SAFETY: AVX2 verified by detect().0 on this branch; the kernel
+        // debug-asserts the four slices share one length and bounds its
+        // lane accesses with an 8-wide guard + scalar tail
         return unsafe { x86::adamw_update_avx2(w, g, m, v, s) };
     }
     adamw_update_scalar(w, g, m, v, s)
@@ -337,7 +347,8 @@ pub fn sgd_update_scalar(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
 pub fn sgd_update_avx2(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
     #[cfg(target_arch = "x86_64")]
     if detect().0 {
-        // safety: AVX2 presence just checked
+        // SAFETY: AVX2 verified by detect().0 on this branch; lane bounds
+        // are upheld internally (8-wide guard + scalar tail)
         return unsafe { x86::sgd_update_avx2(w, g, lr, weight_decay) };
     }
     sgd_update_scalar(w, g, lr, weight_decay)
@@ -358,7 +369,13 @@ mod x86 {
     use super::AdamwStep;
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support
+    /// (`is_x86_feature_detected!("avx2")`); executing the body without
+    /// it is an illegal-instruction fault. Alignment: only `loadu`/
+    /// `storeu` (alignment-free) intrinsics touch memory. Lane width:
+    /// the `i + 8 <= n` guard keeps every 8-lane access inside both
+    /// slices (which `debug_assert_eq!` pins to one length); the tail
+    /// is scalar.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy_accum_avx2(o: &mut [f32], b: &[f32], a: f32) {
         debug_assert_eq!(o.len(), b.len());
@@ -381,7 +398,10 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 + FMA support.
+    /// Caller must have verified AVX2 **and** FMA support — this body
+    /// emits `vfmadd` encodings gated by both feature bits. Alignment:
+    /// `loadu`/`storeu` only. Lane width: `i + 8 <= n` guard + scalar
+    /// tail keep all accesses inside the equal-length slices.
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn axpy_accum_fma(o: &mut [f32], b: &[f32], a: f32) {
         debug_assert_eq!(o.len(), b.len());
@@ -404,7 +424,10 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support. Alignment: `loadu`/
+    /// `storeu` only, so `row` may start anywhere. Lane width: the
+    /// `i + 8 <= n` guard + scalar tail cover every row length,
+    /// including 0..8.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sub_scalar_avx2(row: &mut [f32], shift: f32) {
         let n = row.len();
@@ -423,7 +446,9 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support. Alignment: `loadu`/
+    /// `storeu` only. Lane width: `i + 8 <= n` guard + scalar tail
+    /// cover every row length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn div_scalar_avx2(row: &mut [f32], d: f32) {
         let n = row.len();
@@ -444,7 +469,11 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support. Alignment: `loadu`/
+    /// `storeu` only. Lane width: the `i + 8 <= n` guard bounds every
+    /// 8-lane access by `n = w.len()`, which the `debug_assert_eq!`s
+    /// pin to the g/m/v lengths as well; the tail reuses the scalar
+    /// kernel on safe subslices.
     #[target_feature(enable = "avx2")]
     pub unsafe fn adamw_update_avx2(
         w: &mut [f32],
@@ -501,7 +530,9 @@ mod x86 {
     }
 
     /// # Safety
-    /// Caller must have verified AVX2 support.
+    /// Caller must have verified AVX2 support. Alignment: `loadu`/
+    /// `storeu` only. Lane width: `i + 8 <= n` guard + scalar tail,
+    /// with `debug_assert_eq!` pinning `w.len() == g.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sgd_update_avx2(w: &mut [f32], g: &[f32], lr: f32, weight_decay: f32) {
         debug_assert_eq!(w.len(), g.len());

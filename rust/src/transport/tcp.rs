@@ -113,10 +113,13 @@ pub fn connect_with_backoff(addr: &str, attempts: u32, base: Duration) -> Result
             Err(e) => last_err = Some(e),
         }
     }
+    let detail = match last_err {
+        Some(e) => e.to_string(),
+        None => "no connection attempt ran".to_string(),
+    };
     Err(anyhow!(
-        "connect to worker at {addr} failed after {} attempts: {}",
-        attempts.max(1),
-        last_err.expect("at least one attempt ran")
+        "connect to worker at {addr} failed after {} attempts: {detail}",
+        attempts.max(1)
     ))
 }
 
@@ -423,7 +426,9 @@ impl Link {
         self.ensure_conn()?;
         let fmt = self.active;
         let ledger = self.wire_bytes.clone();
-        let stream = self.conn.as_mut().expect("connected above");
+        let stream = self.conn.as_mut().ok_or_else(|| {
+            anyhow!("worker link lost before the request could be sent")
+        })?;
         let t0 = Instant::now();
         let r = wire::send_with(stream, msg, fmt).and_then(|n| {
             ledger.fetch_add(n as u64, Ordering::Relaxed);
@@ -477,13 +482,17 @@ impl Link {
 
         // split into <= inflight contiguous chunks, keeping job order
         let mut chunks: Vec<(Vec<FitJob>, Repliers)> = Vec::with_capacity(w);
-        for (i, (job, sender)) in pairs.into_iter().enumerate() {
-            if i % per == 0 {
-                chunks.push((Vec::with_capacity(per), Vec::with_capacity(per)));
+        let mut pending = pairs;
+        while !pending.is_empty() {
+            let rest = pending.split_off(per.min(pending.len()));
+            let mut jobs = Vec::with_capacity(pending.len());
+            let mut repliers = Vec::with_capacity(pending.len());
+            for (job, sender) in pending {
+                repliers.push((job.user, job.site.clone(), sender));
+                jobs.push(job);
             }
-            let (jobs, repliers) = chunks.last_mut().expect("pushed above");
-            repliers.push((job.user, job.site.clone(), sender));
-            jobs.push(job);
+            chunks.push((jobs, repliers));
+            pending = rest;
         }
 
         if let Err(e) = self.ensure_conn() {
@@ -498,7 +507,17 @@ impl Link {
         while let Some((jobs, repliers)) = chunk_iter.next() {
             let seq = self.seq;
             self.seq += 1;
-            let stream = self.conn.as_mut().expect("connected above");
+            let Some(stream) = self.conn.as_mut() else {
+                // ensure_conn succeeded above, so this means the link
+                // object was torn down mid-batch: fail every job not
+                // yet answered, naming its (user, site)
+                let e = anyhow!("worker link lost during the batch send window");
+                let mut rest = std::iter::once(repliers)
+                    .chain(sent.drain(..).map(|(_, r, _)| r))
+                    .chain(chunk_iter.map(|(_, r)| r));
+                fail_all(&mut rest, &e);
+                return;
+            };
             let t_send = Instant::now();
             match wire::send_with(stream, &Msg::FitBatch { seq, jobs }, fmt) {
                 Ok(n) => {
@@ -525,7 +544,13 @@ impl Link {
         // transfer when the window is > 1
         let mut mark: Option<Instant> = None;
         while let Some((seq, repliers, t_send)) = sent_iter.next() {
-            let stream = self.conn.as_mut().expect("connected above");
+            let Some(stream) = self.conn.as_mut() else {
+                let e = anyhow!("worker link lost before the batch replies arrived");
+                let mut rest =
+                    std::iter::once(repliers).chain(sent_iter.map(|(_, r, _)| r));
+                fail_all(&mut rest, &e);
+                return;
+            };
             let reply = wire::recv(stream);
             let done = Instant::now();
             let wire_time = done.saturating_duration_since(mark.unwrap_or(t_send));
@@ -712,7 +737,9 @@ struct DaemonShared {
 }
 
 fn lock_conns(shared: &DaemonShared) -> std::sync::MutexGuard<'_, Vec<(usize, TcpStream)>> {
-    shared.conns.lock().unwrap_or_else(|p| p.into_inner())
+    // a connection thread that died mid-registration must not wedge the
+    // accept loop; poison recovery is centralized in util::lock_recover
+    crate::util::lock_recover(&shared.conns)
 }
 
 impl WorkerDaemon {
@@ -745,6 +772,16 @@ impl WorkerDaemon {
     /// The actually-bound address (resolves `:0` to the real port).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Arm a one-shot injected panic in the shared core: the next fit
+    /// for `(tenant, user, site)` panics while holding the adapter
+    /// table lock. The chaos-testing stand-in for a kernel assert
+    /// inside a serving thread — the poisoned-mutex regression test
+    /// uses it to prove the daemon keeps serving every other tenant
+    /// (see [`WorkerCore::inject_fit_panic`]).
+    pub fn inject_fit_panic(&self, tenant: &str, user: usize, site: &str) {
+        self.shared.core.inject_fit_panic(tenant, user, site);
     }
 
     /// Block until a client completes the shutdown handshake.

@@ -829,22 +829,28 @@ impl<'a> Dec<'a> {
         for _ in 0..n {
             ts.push(self.tensor()?);
         }
-        match (kind, ts.len()) {
-            (0, 2) => {
-                let mut it = ts.into_iter();
-                Ok(AdapterParams::LowRank { a: it.next().unwrap(), b: it.next().unwrap() })
+        // arity mismatches surface as decode errors instead of being
+        // unwrapped away — `try_into` to a fixed-size array checks the
+        // count and moves the tensors in one step
+        fn fixed<const N: usize>(ts: Vec<Tensor>, what: &str) -> Result<[Tensor; N]> {
+            let got = ts.len();
+            ts.try_into()
+                .map_err(|_| anyhow!("wire: {what} adapter needs {N} tensors, got {got}"))
+        }
+        match kind {
+            0 => {
+                let [a, b] = fixed(ts, "low-rank")?;
+                Ok(AdapterParams::LowRank { a, b })
             }
-            (1, 1) => Ok(AdapterParams::Linear { w: ts.pop().unwrap() }),
-            (2, 4) => {
-                let mut it = ts.into_iter();
-                Ok(AdapterParams::Mlp {
-                    w1: it.next().unwrap(),
-                    b1: it.next().unwrap(),
-                    w2: it.next().unwrap(),
-                    b2: it.next().unwrap(),
-                })
+            1 => {
+                let [w] = fixed(ts, "linear")?;
+                Ok(AdapterParams::Linear { w })
             }
-            (k, n) => bail!("wire: adapter kind tag {k} with {n} tensors is invalid"),
+            2 => {
+                let [w1, b1, w2, b2] = fixed(ts, "mlp")?;
+                Ok(AdapterParams::Mlp { w1, b1, w2, b2 })
+            }
+            k => bail!("wire: unknown adapter kind tag {k}"),
         }
     }
 

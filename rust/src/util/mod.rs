@@ -1,3 +1,33 @@
 //! Small shared substrates (offline stand-ins for serde etc.).
 
 pub mod json;
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Acquire a mutex, stripping poison.
+///
+/// THE one audited place where `PoisonError` is swallowed: a panicking
+/// fit on one daemon connection must not wedge every other tenant
+/// forever, so shared coordinator/daemon/runtime state always locks
+/// through here. The data under these locks stays structurally valid
+/// across a panic — the fit paths hand adapters out by value
+/// (checkout/checkin) and discard any state a panic may have torn, so
+/// recovering the lock is sound. Enforced by the `mutex-poison` rule
+/// of `cola lint`: ad-hoc `lock().unwrap_or_else(…)` recovery (and of
+/// course `lock().unwrap()`) is flagged everywhere else.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // lint:allow(mutex-poison): this IS the audited recovery helper
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Render a `catch_unwind` payload as text for error messages; panics
+/// almost always carry `&str` or `String`.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

@@ -1,0 +1,122 @@
+//! Mutex-poisoning containment — a panicking fit must not wedge the
+//! daemon.
+//!
+//! Before the `util::lock_recover` sweep, a panic that unwound while a
+//! connection thread held the shared adapter-table lock poisoned the
+//! mutex, and every later `lock().unwrap()` on ANY connection panicked
+//! in turn: one bad tenant took the whole multi-tenant daemon down.
+//! These tests inject exactly that panic (the chaos hook fires *under*
+//! the table lock) and assert the daemon keeps serving everyone else —
+//! and even the victim, since a pre-checkout panic leaves registered
+//! state intact.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cola::adapters::{AdapterParams, OptimizerCfg, SiteAdapter};
+use cola::config::{AdapterKind, OffloadTarget, WireFormat};
+use cola::coordinator::FitJob;
+use cola::rng::Rng;
+use cola::runtime::Manifest;
+use cola::tensor::Tensor;
+use cola::transport::tcp::{request_daemon_shutdown, TcpLinkOpts, TcpWorker,
+                           WorkerDaemon};
+use cola::transport::Transport;
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load_or_builtin(std::path::Path::new("artifacts")).unwrap())
+}
+
+fn daemon() -> (WorkerDaemon, String) {
+    let d = WorkerDaemon::bind("127.0.0.1:0", OffloadTarget::NativeCpu,
+                               manifest(), None)
+        .unwrap();
+    let addr = d.local_addr().to_string();
+    (d, addr)
+}
+
+fn adapter() -> SiteAdapter {
+    let mut rng = Rng::new(7);
+    let params = AdapterParams::init(AdapterKind::LowRank, 8, 8, 4, 4, &mut rng);
+    SiteAdapter::new("s", params, &OptimizerCfg::sgd(0.1, 0.0))
+}
+
+fn job(user: usize) -> FitJob {
+    FitJob {
+        user,
+        site: "s".into(),
+        x: Tensor::zeros(&[2, 8]),
+        ghat: Tensor::zeros(&[2, 8]),
+        grad_scale: 1.0,
+        merged: false,
+    }
+}
+
+fn tenant_link(id: usize, addr: &str, tenant: &str) -> TcpWorker {
+    TcpWorker::connect_with_link_opts(
+        id,
+        addr,
+        &TcpLinkOpts {
+            attempts: 3,
+            base: Duration::from_millis(5),
+            tenant: tenant.to_string(),
+            batch: false,
+            inflight: 1,
+            wire: WireFormat::F32,
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn injected_fit_panic_poisons_nothing_daemon_keeps_serving() {
+    let (d, addr) = daemon();
+    let w = TcpWorker::connect(0, &addr).unwrap();
+    w.register(0, "s", adapter()).unwrap();
+
+    // the panic fires inside checkout, while the connection thread
+    // holds the adapter-table mutex — the poisoned-lock worst case
+    d.inject_fit_panic("", 0, "s");
+    let err = w.fit(job(0)).unwrap().recv().unwrap().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panicked"), "{msg}");
+    assert!(msg.contains("(0, s)"), "error must name (user, site): {msg}");
+    assert!(msg.contains("state is intact"), "{msg}");
+
+    // the chaos hook fired before checkout, so the registered state
+    // survived: the SAME key fits fine on the next try, no re-register
+    let r = w.fit(job(0)).unwrap().recv().unwrap().unwrap();
+    assert!(r.new_params.is_some(), "unmerged fit must return fresh params");
+
+    // and the shared table still serves every other tenant
+    let other = tenant_link(1, &addr, "bob");
+    other.register(1, "s", adapter()).unwrap();
+    other.fit(job(1)).unwrap().recv().unwrap().unwrap();
+    assert!(other.state_bytes().unwrap() > 0);
+    let snap = other.snapshot(1, "s").unwrap();
+    assert_eq!(snap.kind(), AdapterKind::LowRank);
+
+    w.shutdown();
+    other.shutdown();
+    request_daemon_shutdown(&addr).unwrap();
+    d.join();
+}
+
+#[test]
+fn panic_error_is_per_key_not_per_connection() {
+    let (d, addr) = daemon();
+    let w = TcpWorker::connect(0, &addr).unwrap();
+    w.register(2, "s", adapter()).unwrap();
+    w.register(3, "s", adapter()).unwrap();
+
+    d.inject_fit_panic("", 2, "s");
+    // user 2 gets the contained error...
+    let err = w.fit(job(2)).unwrap().recv().unwrap().unwrap_err();
+    assert!(format!("{err:#}").contains("(2, s)"), "{err:#}");
+    // ...while user 3, on the very same connection, is untouched
+    w.fit(job(3)).unwrap().recv().unwrap().unwrap();
+
+    w.shutdown();
+    request_daemon_shutdown(&addr).unwrap();
+    d.join();
+}

@@ -1,0 +1,6 @@
+// lint fixture: seeded determinism violation (never compiled).
+use std::collections::HashMap;
+
+pub fn table() -> HashMap<String, u32> {
+    HashMap::new()
+}

@@ -1,0 +1,6 @@
+// lint fixture: seeded mutex-poison violation (never compiled).
+use std::sync::Mutex;
+
+pub fn read(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

@@ -1,0 +1,12 @@
+// lint fixture: seeded panic-safety violation (never compiled).
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_test_code_unwrap_is_fine() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

@@ -1,0 +1,5 @@
+// lint fixture: a properly audited pragma (never compiled).
+pub fn last_of_three(v: &[u32; 3]) -> u32 {
+    // lint:allow(panic-safety): fixed-size array always has a last element
+    *v.last().unwrap()
+}

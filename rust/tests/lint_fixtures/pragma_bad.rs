@@ -1,0 +1,12 @@
+// lint fixture: pragma-hygiene violations (never compiled).
+pub fn a(v: &[u32]) -> u32 {
+    // lint:allow(panic-safety)
+    *v.first().unwrap()
+}
+
+pub fn b() {
+    // lint:allow(no-such-rule): not a real rule
+}
+
+// lint:allow(determinism): nothing here to suppress
+pub fn c() {}

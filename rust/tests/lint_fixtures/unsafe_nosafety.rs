@@ -1,0 +1,9 @@
+// lint fixture: seeded unsafe-audit violation (never compiled).
+pub fn peek(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn peek_audited(v: &[u8]) -> u8 {
+    // SAFETY: caller guarantees v is non-empty
+    unsafe { *v.get_unchecked(0) }
+}
