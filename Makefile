@@ -5,6 +5,7 @@
 #   make build     — hermetic release build (native backend, no Python/XLA)
 #   make test      — run the test suite
 #   make smoke     — distributed-offload loopback smoke (TCP == local)
+#   make serve-smoke — FTaaS gateway smoke (HTTP job == cola train)
 #   make lint-invariants — `cola lint --deny-all` + linter test suite
 #   make sanitizers      — nightly TSan/ASan sweep (pool, transport, SIMD)
 #   make bench     — run the paper's table/figure benches (results/ *.md+csv)
@@ -15,7 +16,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt clippy doc smoke bench artifacts clean \
+.PHONY: ci build test fmt clippy doc smoke serve-smoke bench artifacts clean \
         lint-invariants sanitizers
 
 ci: fmt clippy doc build test
@@ -28,6 +29,9 @@ test:
 
 smoke: build
 	bash scripts/distributed_smoke.sh
+
+serve-smoke: build
+	bash scripts/gateway_smoke.sh
 
 fmt:
 	$(CARGO) fmt --all --check

@@ -8,6 +8,24 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+/// One row per `cola` subcommand: (name, one-line summary). The single
+/// source of truth behind `cola help` and the README "Command
+/// reference" table — `tests/cli_docs.rs` asserts all three stay in
+/// sync with the dispatch match in `main.rs`.
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("train", "run one fine-tuning job from flags and/or a --config TOML"),
+    ("serve", "FTaaS HTTP gateway: token-auth REST API over std::net"),
+    ("http", "stdlib-only HTTP client for driving a gateway (CI has no curl)"),
+    ("worker", "gradient-offload worker daemon (distributed mode)"),
+    ("pool", "elastic-pool resize between runs (add/drain/remove daemons)"),
+    ("curvediff", "numerically compare two --loss_out curve files"),
+    ("demo", "FTaaS collaboration demo: K users sharing one base model"),
+    ("memory", "analytic memory report for the paper's model profiles"),
+    ("table1", "print the Table-1 computation-space complexity summary"),
+    ("lint", "zero-dep determinism / panic-safety static analysis"),
+    ("help", "this overview"),
+];
+
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: String,

@@ -5,6 +5,13 @@
 //! File format: `[section]` headers, `key = value` lines, `#` comments.
 //! Values: string (quoted or bare), int, float, bool. Flat keys override
 //! via dotted names, e.g. `train.interval = 4`.
+//!
+//! The same `[train]` key namespace is the FTaaS gateway's job-submission
+//! format: `POST /v1/fit` bodies parse through [`TrainConfig::from_toml`]
+//! exactly like `cola train --config` files do, so a config means the
+//! same thing over HTTP as on the CLI (see [`crate::gateway`]). A config
+//! file may additionally carry a `[serve]` section for the gateway
+//! process itself ([`crate::gateway::ServeConfig`]).
 
 pub mod toml;
 

@@ -6,6 +6,10 @@
 //!   dispatches through `crate::transport` (in-process or TCP daemons)
 //! - `server`  — the training loop (Algorithm 1) + coupled baselines
 //! - `api`     — FTaaS service facade (Figure 1)
+//!
+//! The [`crate::gateway`] serves this layer over HTTP: its job runner
+//! drives [`Trainer::run_with_progress`] and exports adapters with
+//! [`Trainer::export_adapter_bundle`].
 
 pub mod api;
 pub mod buffer;
@@ -21,4 +25,4 @@ pub use offload::{
     MigrationStats, PoolMember, PoolSupervisor, TransferModel, Worker, WorkerCore,
     WorkerPool,
 };
-pub use server::{RunReport, Trainer};
+pub use server::{Progress, RunReport, Trainer};

@@ -36,6 +36,7 @@ use crate::runtime::{Input, Runtime, Value};
 use crate::tensor::{self, Tensor};
 use crate::transport::tcp::TcpLinkOpts;
 use crate::transport::{wire, Transport};
+use crate::util::json::Json;
 
 /// Summary of a finished run (consumed by benches/examples).
 #[derive(Clone, Debug)]
@@ -56,6 +57,68 @@ impl RunReport {
     pub fn score(&self) -> f64 {
         100.0 * self.eval_acc.tail_mean(3)
     }
+
+    /// Loss/accuracy curves as stable JSON. f64 values print in Rust's
+    /// shortest round-trip form, so two runs diff byte-equal iff their
+    /// curves are bit-identical — the contract the `distributed-smoke`
+    /// CI job checks across transports, and the gateway-vs-CLI contract
+    /// `gateway-smoke` checks across entry points. `cola train
+    /// --loss_out` and the gateway's `/v1/jobs/{id}/curves` endpoint
+    /// both serialize through here, so "byte-identical" is trivially
+    /// the same function on both sides.
+    pub fn curves_json(&self) -> String {
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                // JSON has no NaN/inf tokens; a diverged run must still
+                // produce a parseable (and still deterministic) file
+                Json::Str(v.to_string())
+            }
+        }
+        fn curve(c: &Curve) -> Json {
+            Json::Arr(
+                c.points
+                    .iter()
+                    .map(|(s, v)| Json::Arr(vec![Json::Num(*s as f64), num(*v)]))
+                    .collect(),
+            )
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("train_loss".to_string(), curve(&self.train_loss));
+        obj.insert("train_acc".to_string(), curve(&self.train_acc));
+        obj.insert("eval_loss".to_string(), curve(&self.eval_loss));
+        obj.insert("eval_acc".to_string(), curve(&self.eval_acc));
+        format!("{}\n", Json::Obj(obj))
+    }
+}
+
+/// One observation of a running training loop, delivered to the
+/// [`Trainer::run_with_progress`] callback after every step (and once
+/// more after the final drain + eval). Values are copied out of the
+/// trainer so observers never borrow it — the byte-identity contract
+/// holds because observation cannot perturb the run.
+#[derive(Clone, Debug)]
+pub struct Progress {
+    /// Step index `t` (== `cfg.steps` for the final post-drain event).
+    pub step: u64,
+    /// This step's training loss (NaN on the final event of a 0-step run).
+    pub train_loss: f32,
+    /// This step's training accuracy, for tasks that report one.
+    pub train_acc: Option<f32>,
+    /// Mean held-out loss, present when this step sat on an
+    /// `eval_every` boundary (and always on the final event).
+    pub eval_loss: Option<f64>,
+    /// Mean held-out accuracy when evaluated and the task reports one.
+    pub eval_acc: Option<f64>,
+    /// True when this step flushed adaptation buffers to the worker
+    /// pool (`(step + 1) % interval == 0`, plus the final drain). The
+    /// gateway streams one progress line per boundary.
+    pub interval_boundary: bool,
+    /// Cumulative adaptation-pair bytes fetched off the server device.
+    pub bytes_offloaded: u64,
+    /// Cumulative fit-reply bytes returned by workers.
+    pub bytes_returned: u64,
 }
 
 /// One dispatched-but-unapplied worker fit. Carrying (user, site) next
@@ -371,9 +434,35 @@ impl Trainer {
     /// chaos/soak harnesses use it to kill, drain, and add pool members
     /// at deterministic points mid-run; operational tooling can use it
     /// for progress reporting.
-    pub fn run_with_hook<F>(&mut self, mut hook: F) -> Result<RunReport>
+    pub fn run_with_hook<F>(&mut self, hook: F) -> Result<RunReport>
     where
         F: FnMut(&mut Trainer, u64) -> Result<()>,
+    {
+        self.run_driven(hook, |_: &Progress| Ok(()))
+    }
+
+    /// [`Self::run`] with a read-only [`Progress`] observer invoked
+    /// after every step and once more after the final drain + eval. The
+    /// gateway's job runner uses it to stream per-interval loss lines
+    /// and feed the usage ledger without touching the trainer — the
+    /// observer receives copies, never `&mut Trainer`, so it cannot
+    /// perturb the run and the loss curves stay byte-identical to
+    /// [`Self::run`] on the same config.
+    pub fn run_with_progress<P>(&mut self, progress: P) -> Result<RunReport>
+    where
+        P: FnMut(&Progress) -> Result<()>,
+    {
+        self.run_driven(|_, _| Ok(()), progress)
+    }
+
+    /// The one training-loop body behind [`Self::run`],
+    /// [`Self::run_with_hook`], and [`Self::run_with_progress`]: both
+    /// observers thread through every path, so combining them later
+    /// cannot fork the loop's semantics.
+    fn run_driven<F, P>(&mut self, mut hook: F, mut progress: P) -> Result<RunReport>
+    where
+        F: FnMut(&mut Trainer, u64) -> Result<()>,
+        P: FnMut(&Progress) -> Result<()>,
     {
         let mut train_loss = Curve::new("train_loss");
         let mut train_acc = Curve::new("train_acc");
@@ -385,6 +474,16 @@ impl Trainer {
             if let Some(a) = acc {
                 train_acc.push(t, a as f64);
             }
+            let mut obs = Progress {
+                step: t,
+                train_loss: loss,
+                train_acc: acc,
+                eval_loss: None,
+                eval_acc: None,
+                interval_boundary: (t + 1) % self.cfg.interval as u64 == 0,
+                bytes_offloaded: self.timings.bytes_offloaded,
+                bytes_returned: self.timings.bytes_returned,
+            };
             if self.cfg.eval_every > 0
                 && (t + 1) % self.cfg.eval_every as u64 == 0
             {
@@ -394,7 +493,11 @@ impl Trainer {
                 if let Some(a) = ea {
                     eval_acc.push(t + 1, a);
                 }
+                obs.eval_loss = Some(el);
+                obs.eval_acc = ea;
+                obs.bytes_returned = self.timings.bytes_returned;
             }
+            progress(&obs)?;
             hook(self, t)?;
         }
         // final drain so no adaptation data is dropped
@@ -405,6 +508,16 @@ impl Trainer {
         if let Some(a) = ea {
             eval_acc.push(self.cfg.steps as u64, a);
         }
+        progress(&Progress {
+            step: self.cfg.steps as u64,
+            train_loss: train_loss.last().unwrap_or(f64::NAN) as f32,
+            train_acc: None,
+            eval_loss: Some(el),
+            eval_acc: ea,
+            interval_boundary: true,
+            bytes_offloaded: self.timings.bytes_offloaded,
+            bytes_returned: self.timings.bytes_returned,
+        })?;
         // pick up bytes from registration/snapshot traffic that never
         // flowed through a fit interval (collect_pending early-returns
         // when nothing is pending)
@@ -1116,6 +1229,40 @@ impl Trainer {
             *variant = old;
         }
         r
+    }
+
+    /// Export every (user, site) adapter as one deterministic bundle:
+    /// a u32-LE blob count, then each `StateExport` blob ([`wire::encode_state`],
+    /// always raw-bit f32) length-prefixed with a u32-LE. Blobs are
+    /// ordered user-major over `0..cfg.users`, site order as the driver
+    /// enumerates them — a fixed traversal, so two runs of the same
+    /// config produce bitwise-equal bundles regardless of transport.
+    /// This is the payload behind the gateway's `/v1/jobs/{id}/adapter`
+    /// endpoint and `cola train --adapter_out`; decode it with
+    /// [`wire::decode_state`] per blob.
+    ///
+    /// Errors for coupled baselines (no worker pool — their tunables
+    /// live on the server, not in exportable per-user adapters).
+    pub fn export_adapter_bundle(&self) -> Result<Vec<u8>> {
+        let pool = self
+            .pool
+            .as_ref()
+            .ok_or_else(|| anyhow!("no worker pool (coupled methods keep their \
+                                    tunables on the server — nothing to export)"))?;
+        let mut blobs: Vec<Vec<u8>> = Vec::new();
+        for user in 0..self.cfg.users {
+            for s in &self.driver.sites {
+                blobs.push(pool.for_user(user).export_state(user, &s.site)?);
+            }
+        }
+        let total: usize = blobs.iter().map(|b| b.len() + 4).sum();
+        let mut out = Vec::with_capacity(4 + total);
+        out.extend_from_slice(&(blobs.len() as u32).to_le_bytes());
+        for b in blobs {
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.extend_from_slice(&b);
+        }
+        Ok(out)
     }
 
     /// Snapshot a user's adapter for a site (from its worker).

@@ -1,0 +1,125 @@
+//! Per-tenant API tokens for the gateway.
+//!
+//! The token file is trivially auditable: one `tenant:token` pair per
+//! line, `#` comments and blank lines ignored (the format and its
+//! rationale live in `docs/decisions/004-per-tenant-api-tokens.md`).
+//! Lookup walks the WHOLE table and compares every candidate with
+//! [`constant_time_eq`], so neither the match position nor the first
+//! differing byte leaks through response timing.
+
+use anyhow::{bail, Context, Result};
+
+/// The parsed `tenant:token` table.
+#[derive(Debug)]
+pub struct TokenTable {
+    /// (tenant, token) pairs in file order.
+    entries: Vec<(String, String)>,
+}
+
+impl TokenTable {
+    /// Parse token-file text. Duplicate tenants, empty names, empty
+    /// tokens, and `:` in a tenant name are all hard errors — a typo in
+    /// an auth file must fail loudly at startup, not at request time.
+    pub fn parse(src: &str) -> Result<TokenTable> {
+        let mut entries: Vec<(String, String)> = Vec::new();
+        for (i, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((tenant, token)) = line.split_once(':') else {
+                bail!("token file line {}: expected tenant:token, got {line:?}",
+                      i + 1);
+            };
+            let (tenant, token) = (tenant.trim(), token.trim());
+            if tenant.is_empty() || token.is_empty() {
+                bail!("token file line {}: empty tenant or token", i + 1);
+            }
+            if entries.iter().any(|(t, _)| t == tenant) {
+                bail!("token file line {}: duplicate tenant {tenant:?}", i + 1);
+            }
+            entries.push((tenant.to_string(), token.to_string()));
+        }
+        Ok(TokenTable { entries })
+    }
+
+    /// Load and parse a token file.
+    pub fn load(path: &str) -> Result<TokenTable> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading token file {path}"))?;
+        Self::parse(&src).with_context(|| format!("parsing token file {path}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resolve an `Authorization` header to a tenant name, or `None`
+    /// (missing header, wrong scheme, unknown token). Always scans the
+    /// full table — no early exit on match.
+    pub fn tenant_for(&self, authorization: Option<&str>) -> Option<&str> {
+        let token = authorization?.strip_prefix("Bearer ")?.trim();
+        let mut found: Option<&str> = None;
+        for (tenant, secret) in &self.entries {
+            let hit = constant_time_eq(secret.as_bytes(), token.as_bytes());
+            if hit && found.is_none() {
+                found = Some(tenant);
+            }
+        }
+        found
+    }
+}
+
+/// Compare two byte strings without data-dependent early exit: the
+/// loop always runs `max(len_a, len_b)` iterations and folds every
+/// byte XOR (plus the length difference) into one accumulator. A
+/// mismatched length or byte therefore costs the same time as a match.
+pub fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        diff |= (x ^ y) as usize;
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_resolves() {
+        let t = TokenTable::parse(
+            "# comment\n\nalice:tok-a\nbob: tok-b \n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.tenant_for(Some("Bearer tok-a")), Some("alice"));
+        assert_eq!(t.tenant_for(Some("Bearer tok-b")), Some("bob"));
+        assert_eq!(t.tenant_for(Some("Bearer nope")), None);
+        assert_eq!(t.tenant_for(Some("Basic tok-a")), None);
+        assert_eq!(t.tenant_for(None), None);
+    }
+
+    #[test]
+    fn rejects_malformed_files() {
+        assert!(TokenTable::parse("no-colon-here\n").is_err());
+        assert!(TokenTable::parse("alice:\n").is_err());
+        assert!(TokenTable::parse(":tok\n").is_err());
+        assert!(TokenTable::parse("alice:a\nalice:b\n").is_err());
+    }
+
+    #[test]
+    fn constant_time_eq_semantics() {
+        assert!(constant_time_eq(b"secret", b"secret"));
+        assert!(!constant_time_eq(b"secret", b"secreT"));
+        assert!(!constant_time_eq(b"secret", b"secre"));
+        assert!(!constant_time_eq(b"", b"x"));
+        assert!(constant_time_eq(b"", b""));
+    }
+}

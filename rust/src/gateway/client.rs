@@ -1,0 +1,168 @@
+//! Stdlib-only HTTP/1.1 client for driving a gateway — `cola http` and
+//! the smoke scripts use this instead of depending on `curl`.
+//!
+//! Mirrors the server's framing subset ([`super::http`]): one request
+//! per connection, `Content-Length` request bodies, and response
+//! bodies framed by `Content-Length`, chunked transfer-encoding, or
+//! connection close. Strictly a test/ops convenience — nothing in the
+//! training path calls it.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A complete response.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup (first match wins).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Split an `http://host:port/path` URL. Only plain `http` — the
+/// gateway speaks nothing else.
+fn split_url(url: &str) -> Result<(String, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| anyhow!("only http:// URLs are supported, got {url:?}"))?;
+    let (hostport, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    if hostport.is_empty() {
+        bail!("empty host in {url:?}");
+    }
+    Ok((hostport.to_string(), path.to_string()))
+}
+
+/// Issue one request. `body` is `(content_type, bytes)`; `token`
+/// becomes a `Bearer` Authorization header. Blocks until the full
+/// response (including a chunked progress stream) has arrived.
+pub fn request(
+    method: &str,
+    url: &str,
+    token: Option<&str>,
+    body: Option<(&str, &[u8])>,
+) -> Result<HttpResponse> {
+    let (hostport, path) = split_url(url)?;
+    let mut stream = TcpStream::connect(&hostport)
+        .with_context(|| format!("connecting to {hostport}"))?;
+    stream.set_nodelay(true).ok();
+
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {hostport}\r\nConnection: close\r\n"
+    );
+    if let Some(t) = token {
+        head.push_str(&format!("Authorization: Bearer {t}\r\n"));
+    }
+    match body {
+        Some((ctype, bytes)) => {
+            head.push_str(&format!(
+                "Content-Type: {ctype}\r\nContent-Length: {}\r\n\r\n",
+                bytes.len()
+            ));
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(bytes)?;
+        }
+        None => {
+            head.push_str("\r\n");
+            stream.write_all(head.as_bytes())?;
+        }
+    }
+    stream.flush()?;
+
+    let mut r = BufReader::new(stream);
+    let mut status_line = String::new();
+    r.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    let chunked = headers.iter().any(|(k, v)| {
+        k.eq_ignore_ascii_case("transfer-encoding")
+            && v.eq_ignore_ascii_case("chunked")
+    });
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse::<usize>().ok());
+
+    let mut body = Vec::new();
+    if chunked {
+        loop {
+            let mut size_line = String::new();
+            r.read_line(&mut size_line)?;
+            let size = usize::from_str_radix(
+                size_line.trim_end_matches(['\r', '\n']).trim(),
+                16,
+            )
+            .map_err(|_| anyhow!("malformed chunk size {size_line:?}"))?;
+            if size == 0 {
+                // trailing CRLF after the terminator (may be absent on
+                // a server that closes right away)
+                let mut rest = String::new();
+                let _ = r.read_line(&mut rest);
+                break;
+            }
+            let mut chunk = vec![0u8; size];
+            r.read_exact(&mut chunk)?;
+            body.extend_from_slice(&chunk);
+            let mut crlf = [0u8; 2];
+            r.read_exact(&mut crlf)?;
+        }
+    } else if let Some(n) = content_length {
+        let mut buf = vec![0u8; n];
+        r.read_exact(&mut buf)?;
+        body = buf;
+    } else {
+        // Connection: close framing
+        r.read_to_end(&mut body)?;
+    }
+    Ok(HttpResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_urls() {
+        assert_eq!(
+            split_url("http://127.0.0.1:7780/v1/fit").unwrap(),
+            ("127.0.0.1:7780".to_string(), "/v1/fit".to_string())
+        );
+        assert_eq!(
+            split_url("http://localhost:1").unwrap(),
+            ("localhost:1".to_string(), "/".to_string())
+        );
+        assert!(split_url("https://x/").is_err());
+        assert!(split_url("ftp://x/").is_err());
+        assert!(split_url("http:///path").is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! Minimal HTTP/1.1 framing over `std::net`, hand-rolled like the rest
+//! of the repo's wire code (see [`crate::transport::wire`] and
+//! `docs/decisions/001-http-over-std-net.md` for why no HTTP crate).
+//!
+//! Scope is deliberately tiny: one request per connection
+//! (`Connection: close`), `Content-Length` request bodies only, and
+//! chunked transfer-encoding on the *response* side for progress
+//! streaming. Everything is bounded — request-line length, header
+//! count, header length, body size — and every malformed input maps to
+//! an [`HttpError`] status, never a panic: the malformed-request fuzz
+//! in `tests/gateway_http.rs` pins that down.
+
+use std::io::{BufRead, Read, Write};
+use std::net::TcpStream;
+
+/// Max request-line / header-line length in bytes.
+pub const MAX_LINE: usize = 8 * 1024;
+/// Max number of request headers.
+pub const MAX_HEADERS: usize = 64;
+/// Max request body size (a `[train]` config TOML is a few hundred
+/// bytes; 1 MiB leaves room without letting a client balloon memory).
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed request. Header names keep their wire spelling; use
+/// [`Request::header`] for case-insensitive lookup.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first match wins).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A request-level failure carrying the HTTP status to answer with.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+}
+
+/// Canonical reason phrase for the statuses the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Read one CRLF/LF-terminated line with a hard length cap, without
+/// over-reading past the terminator. Returns `Ok(None)` on clean EOF
+/// before any byte (client connected and went away — not an error).
+fn read_line(r: &mut impl BufRead, cap: usize) -> Result<Option<String>, HttpError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r
+            .fill_buf()
+            .map_err(|e| HttpError::new(400, format!("read failed: {e}")))?;
+        if chunk.is_empty() {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            // EOF mid-line: treat what we have as the line
+            break;
+        }
+        let nl = chunk.iter().position(|&b| b == b'\n');
+        let take = match nl {
+            Some(i) => i + 1,
+            None => chunk.len(),
+        };
+        if buf.len() + take > cap {
+            return Err(HttpError::new(431, "request line or header too long"));
+        }
+        buf.extend_from_slice(&chunk[..take]);
+        r.consume(take);
+        if nl.is_some() {
+            break;
+        }
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| HttpError::new(400, "non-UTF-8 bytes in request head"))
+}
+
+/// Parse one request off the connection. `Ok(None)` = the peer closed
+/// before sending anything (drop silently, as the daemon accept loop
+/// does for its wake connection).
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>, HttpError> {
+    let Some(line) = read_line(r, MAX_LINE)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(path), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(HttpError::new(400, format!("malformed request line {line:?}")));
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) || method.is_empty() {
+        return Err(HttpError::new(400, format!("malformed method {method:?}")));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(505, format!("unsupported version {version:?}")));
+    }
+    if !path.starts_with('/') {
+        return Err(HttpError::new(400, format!("malformed path {path:?}")));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let Some(h) = read_line(r, MAX_LINE)? else {
+            return Err(HttpError::new(400, "EOF inside request headers"));
+        };
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() == MAX_HEADERS {
+            return Err(HttpError::new(431, "too many request headers"));
+        }
+        let Some(colon) = h.find(':') else {
+            return Err(HttpError::new(400, format!("malformed header {h:?}")));
+        };
+        let (name, value) = h.split_at(colon);
+        headers.push((name.trim().to_string(), value[1..].trim().to_string()));
+    }
+    let req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::new(501, "chunked request bodies are not supported"));
+    }
+    let body_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::new(400, format!("bad Content-Length {v:?}")))?,
+    };
+    if body_len > MAX_BODY {
+        return Err(HttpError::new(
+            413,
+            format!("body of {body_len} bytes exceeds the {MAX_BODY}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body)
+        .map_err(|e| HttpError::new(400, format!("short body: {e}")))?;
+    Ok(Some(Request { body, ..req }))
+}
+
+/// Write a complete response with a known body. Extra headers ride
+/// along for e.g. `WWW-Authenticate` and `Retry-After`.
+pub fn respond(
+    w: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Answer an [`HttpError`] with a small JSON body. A 401 advertises the
+/// Bearer challenge so plain HTTP clients know what to send.
+pub fn respond_error(w: &mut TcpStream, e: &HttpError) -> std::io::Result<()> {
+    let body = format!(
+        "{}\n",
+        crate::util::json::Json::Obj(
+            [("error".to_string(), crate::util::json::Json::Str(e.message.clone()))]
+                .into_iter()
+                .collect()
+        )
+    );
+    let extra: &[(&str, &str)] = if e.status == 401 {
+        &[("WWW-Authenticate", "Bearer realm=\"cola\"")]
+    } else if e.status == 429 {
+        &[("Retry-After", "1")]
+    } else {
+        &[]
+    };
+    respond(w, e.status, "application/json", extra, body.as_bytes())
+}
+
+/// Open a chunked-transfer response (the progress stream).
+pub fn start_chunked(
+    w: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+) -> std::io::Result<()> {
+    w.write_all(
+        format!(
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+             Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            reason(status)
+        )
+        .as_bytes(),
+    )?;
+    w.flush()
+}
+
+/// Write one chunk. Empty payloads are skipped — a zero-length chunk is
+/// the stream terminator, which only [`finish_chunked`] may send.
+pub fn write_chunk(w: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    w.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked response.
+pub fn finish_chunked(w: &mut TcpStream) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<Option<Request>, HttpError> {
+        read_request(&mut BufReader::new(raw))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            b"POST /v1/fit HTTP/1.1\r\nAuthorization: Bearer t\r\n\
+              Content-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/fit");
+        assert_eq!(req.header("authorization"), Some("Bearer t"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_with_statuses() {
+        assert_eq!(parse(b"GET\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse(b"GET / SMTP/1.0\r\n\r\n").unwrap_err().status, 505);
+        assert_eq!(parse(b"GET relative HTTP/1.1\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse(b"G E T / HTTP/1.1\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(
+            parse(b"GET / HTTP/1.1\r\nbroken header\r\n\r\n").unwrap_err().status,
+            400
+        );
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: zebra\r\n\r\n")
+                .unwrap_err()
+                .status,
+            400
+        );
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")
+                .unwrap_err()
+                .status,
+            413
+        );
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+                .unwrap_err()
+                .status,
+            400
+        );
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+                .unwrap_err()
+                .status,
+            501
+        );
+        assert_eq!(parse(b"\xff\xfe\x00garbage\r\n\r\n").unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn caps_line_length_and_header_count() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE));
+        assert_eq!(parse(long.as_bytes()).unwrap_err().status, 431);
+        let mut many = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            many.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        assert_eq!(parse(many.as_bytes()).unwrap_err().status, 431);
+    }
+}

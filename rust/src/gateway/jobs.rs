@@ -1,0 +1,329 @@
+//! Job registry: every submitted fine-tuning job's lifecycle, progress
+//! lines, and result artifacts, behind one mutex + condvar.
+//!
+//! Jobs are tenant-owned: every accessor takes the authenticated
+//! tenant and answers `None`/`NotFound` for another tenant's job id —
+//! the gateway maps that to 404, so ids don't leak existence across
+//! tenants. Progress consumers block on [`JobRegistry::wait_progress`]
+//! (condvar with a short timeout so streams can also notice server
+//! shutdown); the runner publishes with the lock held briefly and
+//! notifies after every append.
+//!
+//! Locking goes through [`crate::util::lock_recover`] /
+//! [`crate::util::wait_timeout_recover`]: a panicking job is caught by
+//! the runner, but the registry must stay serviceable even if a panic
+//! ever unwinds through a lock holder.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::util::{lock_recover, wait_timeout_recover};
+
+/// Lifecycle of one job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+/// Owner-visible view of a job (everything but the bulk artifacts).
+#[derive(Clone, Debug)]
+pub struct JobSnapshot {
+    pub id: u64,
+    pub state: JobState,
+    /// Global start ordinal (1-based) — the fairness tests assert the
+    /// exact service order through this.
+    pub started_seq: Option<u64>,
+    pub error: Option<String>,
+    pub progress_lines: usize,
+}
+
+/// Outcome of fetching a result artifact (curves or adapter bundle).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fetch<T> {
+    /// No such job for this tenant (gateway answers 404).
+    NotFound,
+    /// Job exists but has not finished (409).
+    NotReady,
+    /// Job failed; the message explains why (409).
+    Failed(String),
+    /// Job finished but never produced this artifact — e.g. a coupled
+    /// baseline has no exportable adapter (409).
+    Missing,
+    Ready(T),
+}
+
+struct JobRecord {
+    tenant: String,
+    config: String,
+    state: JobState,
+    started_seq: Option<u64>,
+    error: Option<String>,
+    progress: Vec<String>,
+    curves: Option<String>,
+    adapter: Option<Vec<u8>>,
+}
+
+struct Inner {
+    next_id: u64,
+    next_seq: u64,
+    jobs: BTreeMap<u64, JobRecord>,
+}
+
+/// The registry. One per gateway; shared between connection threads
+/// and the job runner.
+pub struct JobRegistry {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Default for JobRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobRegistry {
+    pub fn new() -> JobRegistry {
+        JobRegistry {
+            inner: Mutex::new(Inner { next_id: 1, next_seq: 1, jobs: BTreeMap::new() }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register a new queued job; returns its id.
+    pub fn create(&self, tenant: &str, config: String) -> u64 {
+        let mut g = lock_recover(&self.inner);
+        let id = g.next_id;
+        g.next_id += 1;
+        g.jobs.insert(
+            id,
+            JobRecord {
+                tenant: tenant.to_string(),
+                config,
+                state: JobState::Queued,
+                started_seq: None,
+                error: None,
+                progress: Vec::new(),
+                curves: None,
+                adapter: None,
+            },
+        );
+        id
+    }
+
+    /// Drop a job record (admission rollback when the queue is full).
+    pub fn remove(&self, id: u64) {
+        lock_recover(&self.inner).jobs.remove(&id);
+    }
+
+    /// The runner fetches the config text it should train from.
+    pub fn config(&self, id: u64) -> Option<String> {
+        lock_recover(&self.inner).jobs.get(&id).map(|j| j.config.clone())
+    }
+
+    /// Transition to Running, stamping the global start ordinal.
+    pub fn mark_running(&self, id: u64) {
+        let mut g = lock_recover(&self.inner);
+        // single deref so the borrow checker can split the field borrows
+        let inner = &mut *g;
+        if let Some(j) = inner.jobs.get_mut(&id) {
+            j.state = JobState::Running;
+            j.started_seq = Some(inner.next_seq);
+            inner.next_seq += 1;
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Append one progress line (already-serialized JSON).
+    pub fn push_progress(&self, id: u64, line: String) {
+        if let Some(j) = lock_recover(&self.inner).jobs.get_mut(&id) {
+            j.progress.push(line);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Transition to Done with the result artifacts. `adapter` is
+    /// `None` for methods with nothing exportable (coupled baselines).
+    pub fn finish(&self, id: u64, curves: String, adapter: Option<Vec<u8>>) {
+        if let Some(j) = lock_recover(&self.inner).jobs.get_mut(&id) {
+            j.state = JobState::Done;
+            j.curves = Some(curves);
+            j.adapter = adapter;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Transition to Failed with an error message.
+    pub fn fail(&self, id: u64, error: String) {
+        if let Some(j) = lock_recover(&self.inner).jobs.get_mut(&id) {
+            j.state = JobState::Failed;
+            j.error = Some(error);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Owner-checked status view; `None` = not this tenant's job.
+    pub fn snapshot(&self, tenant: &str, id: u64) -> Option<JobSnapshot> {
+        let g = lock_recover(&self.inner);
+        let j = g.jobs.get(&id).filter(|j| j.tenant == tenant)?;
+        Some(JobSnapshot {
+            id,
+            state: j.state,
+            started_seq: j.started_seq,
+            error: j.error.clone(),
+            progress_lines: j.progress.len(),
+        })
+    }
+
+    /// Owner-checked curves fetch.
+    pub fn curves(&self, tenant: &str, id: u64) -> Fetch<String> {
+        let g = lock_recover(&self.inner);
+        let Some(j) = g.jobs.get(&id).filter(|j| j.tenant == tenant) else {
+            return Fetch::NotFound;
+        };
+        match (&j.state, &j.curves) {
+            (JobState::Failed, _) => {
+                Fetch::Failed(j.error.clone().unwrap_or_else(|| "job failed".into()))
+            }
+            (JobState::Done, Some(c)) => Fetch::Ready(c.clone()),
+            (JobState::Done, None) => Fetch::Missing,
+            _ => Fetch::NotReady,
+        }
+    }
+
+    /// Owner-checked adapter-bundle fetch.
+    pub fn adapter(&self, tenant: &str, id: u64) -> Fetch<Vec<u8>> {
+        let g = lock_recover(&self.inner);
+        let Some(j) = g.jobs.get(&id).filter(|j| j.tenant == tenant) else {
+            return Fetch::NotFound;
+        };
+        match (&j.state, &j.adapter) {
+            (JobState::Failed, _) => {
+                Fetch::Failed(j.error.clone().unwrap_or_else(|| "job failed".into()))
+            }
+            (JobState::Done, Some(b)) => Fetch::Ready(b.clone()),
+            (JobState::Done, None) => Fetch::Missing,
+            _ => Fetch::NotReady,
+        }
+    }
+
+    /// Block (up to `timeout`) for progress lines past index `from`, or
+    /// for the job to reach a terminal state. Returns the new lines and
+    /// whether the job is terminal; `None` = not this tenant's job. A
+    /// timeout returns `Some((vec![], false))` so streaming loops can
+    /// interleave shutdown checks.
+    pub fn wait_progress(
+        &self,
+        tenant: &str,
+        id: u64,
+        from: usize,
+        timeout: Duration,
+    ) -> Option<(Vec<String>, bool)> {
+        let mut g = lock_recover(&self.inner);
+        loop {
+            let Some(j) = g.jobs.get(&id) else {
+                return None;
+            };
+            if j.tenant != tenant {
+                return None;
+            }
+            if j.progress.len() > from || j.state.terminal() {
+                let lines = j.progress.get(from..).unwrap_or(&[]).to_vec();
+                return Some((lines, j.state.terminal()));
+            }
+            let before = j.progress.len();
+            g = wait_timeout_recover(&self.cv, g, timeout);
+            let still = g
+                .jobs
+                .get(&id)
+                .map(|j| j.progress.len() == before && !j.state.terminal())
+                .unwrap_or(false);
+            if still {
+                // spurious wake or timeout with no news: hand control
+                // back so the caller can check its stop flag
+                return Some((Vec::new(), false));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_tenant_isolation() {
+        let r = JobRegistry::new();
+        let id = r.create("alice", "[train]\n".into());
+        assert_eq!(r.snapshot("alice", id).unwrap().state, JobState::Queued);
+        // another tenant can't even observe the job
+        assert!(r.snapshot("bob", id).is_none());
+        assert_eq!(r.curves("bob", id), Fetch::NotFound);
+        assert!(r.wait_progress("bob", id, 0, Duration::from_millis(1)).is_none());
+
+        r.mark_running(id);
+        assert_eq!(r.snapshot("alice", id).unwrap().started_seq, Some(1));
+        assert_eq!(r.curves("alice", id), Fetch::NotReady);
+
+        r.push_progress(id, "{\"step\":0}".into());
+        let (lines, done) =
+            r.wait_progress("alice", id, 0, Duration::from_millis(1)).unwrap();
+        assert_eq!(lines, vec!["{\"step\":0}".to_string()]);
+        assert!(!done);
+
+        r.finish(id, "{}\n".into(), Some(vec![1, 2, 3]));
+        assert_eq!(r.curves("alice", id), Fetch::Ready("{}\n".into()));
+        assert_eq!(r.adapter("alice", id), Fetch::Ready(vec![1, 2, 3]));
+        let (rest, done) =
+            r.wait_progress("alice", id, 1, Duration::from_millis(1)).unwrap();
+        assert!(rest.is_empty());
+        assert!(done);
+    }
+
+    #[test]
+    fn failure_and_missing_artifacts() {
+        let r = JobRegistry::new();
+        let a = r.create("t", String::new());
+        r.fail(a, "boom".into());
+        assert_eq!(r.curves("t", a), Fetch::Failed("boom".into()));
+        assert_eq!(r.adapter("t", a), Fetch::Failed("boom".into()));
+
+        let b = r.create("t", String::new());
+        r.finish(b, "{}\n".into(), None);
+        assert_eq!(r.adapter("t", b), Fetch::Missing);
+
+        r.remove(b);
+        assert!(r.snapshot("t", b).is_none());
+    }
+
+    #[test]
+    fn start_seq_is_global_service_order() {
+        let r = JobRegistry::new();
+        let a = r.create("x", String::new());
+        let b = r.create("y", String::new());
+        r.mark_running(b);
+        r.mark_running(a);
+        assert_eq!(r.snapshot("y", b).unwrap().started_seq, Some(1));
+        assert_eq!(r.snapshot("x", a).unwrap().started_seq, Some(2));
+    }
+}

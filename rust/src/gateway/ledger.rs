@@ -1,0 +1,216 @@
+//! Fire-and-forget usage ledger: one JSONL line per (tenant, user) per
+//! adaptation interval, appended off the hot path.
+//!
+//! The training loop must never block on accounting, so
+//! [`UsageLedger::record`] is a bounded-channel `try_send`: a full
+//! channel (writer stalled on disk) DROPS the entry and bumps a
+//! counter instead of applying backpressure. That loss tolerance is a
+//! deliberate trade — billing samples, curves don't — and is written
+//! up in `docs/decisions/003-fire-and-forget-usage-ledger.md`. Dropped
+//! counts are surfaced via [`UsageLedger::dropped`] and the gateway's
+//! `/healthz` body, so silent loss is still visible loss.
+//!
+//! Timestamps come from `SystemTime` — the only wall-clock read in the
+//! gateway. They annotate ledger lines for operators and never feed
+//! curve math, so the determinism contract is untouched.
+
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Channel capacity: at one line per (tenant, user, interval) this
+/// absorbs seconds of burst before sampling kicks in.
+const CHANNEL_DEPTH: usize = 1024;
+
+/// One accounting record.
+#[derive(Clone, Debug)]
+pub struct UsageEntry {
+    pub tenant: String,
+    pub job: u64,
+    pub user: usize,
+    /// 1-based interval ordinal within the job.
+    pub interval: u64,
+    /// Training step the interval ended on.
+    pub step: u64,
+    /// Adaptation-pair bytes offloaded to this user's worker during the
+    /// interval.
+    pub bytes_offloaded: u64,
+    /// Fit-reply bytes returned by this user's worker during the interval.
+    pub bytes_returned: u64,
+    /// Milliseconds since the Unix epoch, stamped at record time.
+    pub unix_ms: u64,
+}
+
+impl UsageEntry {
+    /// Serialize as one JSON object (sorted keys, no whitespace — the
+    /// house `Json` serializer, so lines are byte-stable given equal
+    /// fields).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("tenant".to_string(), Json::Str(self.tenant.clone()));
+        obj.insert("job".to_string(), Json::Num(self.job as f64));
+        obj.insert("user".to_string(), Json::Num(self.user as f64));
+        obj.insert("interval".to_string(), Json::Num(self.interval as f64));
+        obj.insert("step".to_string(), Json::Num(self.step as f64));
+        obj.insert(
+            "bytes_offloaded".to_string(),
+            Json::Num(self.bytes_offloaded as f64),
+        );
+        obj.insert(
+            "bytes_returned".to_string(),
+            Json::Num(self.bytes_returned as f64),
+        );
+        obj.insert("unix_ms".to_string(), Json::Num(self.unix_ms as f64));
+        Json::Obj(obj).to_string()
+    }
+}
+
+/// Milliseconds since the Unix epoch for ledger annotation.
+pub fn now_unix_ms() -> u64 {
+    // lint:allow(determinism): operator-facing ledger timestamp — never feeds curve math
+    match std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => d.as_millis() as u64,
+        Err(_) => 0,
+    }
+}
+
+/// Appending JSONL writer with a dedicated flush thread.
+pub struct UsageLedger {
+    tx: Option<SyncSender<String>>,
+    dropped: Arc<AtomicU64>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl UsageLedger {
+    /// Open (create-or-append) the ledger file and start the writer.
+    pub fn open(path: &str) -> Result<UsageLedger> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening usage ledger {path}"))?;
+        let (tx, rx) = mpsc::sync_channel::<String>(CHANNEL_DEPTH);
+        let writer = std::thread::Builder::new()
+            .name("cola-ledger".into())
+            .spawn(move || {
+                let mut w = BufWriter::new(file);
+                while let Ok(line) = rx.recv() {
+                    // best-effort by design: an I/O error here must not
+                    // take the gateway down, and there is no one to
+                    // propagate it to off-thread
+                    let _ = w.write_all(line.as_bytes());
+                    let _ = w.write_all(b"\n");
+                    // drain the burst before flushing, so disk syncs
+                    // amortize across however many lines queued up
+                    while let Ok(next) = rx.try_recv() {
+                        let _ = w.write_all(next.as_bytes());
+                        let _ = w.write_all(b"\n");
+                    }
+                    let _ = w.flush();
+                }
+                let _ = w.flush();
+            })
+            .context("spawning the ledger writer thread")?;
+        Ok(UsageLedger {
+            tx: Some(tx),
+            dropped: Arc::new(AtomicU64::new(0)),
+            writer: Some(writer),
+        })
+    }
+
+    /// Enqueue one entry without blocking. A full channel drops the
+    /// entry (counted); a closed channel (shutdown race) also counts as
+    /// a drop.
+    pub fn record(&self, entry: &UsageEntry) {
+        let Some(tx) = &self.tx else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        match tx.try_send(entry.to_json()) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Entries dropped so far (full channel or shutdown race).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for UsageLedger {
+    fn drop(&mut self) {
+        // closing the channel lets the writer drain and exit; join so
+        // buffered lines hit disk before the gateway reports "exited"
+        drop(self.tx.take());
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_serializes_with_sorted_keys() {
+        let e = UsageEntry {
+            tenant: "alice".into(),
+            job: 7,
+            user: 1,
+            interval: 3,
+            step: 5,
+            bytes_offloaded: 4096,
+            bytes_returned: 1024,
+            unix_ms: 1700000000000,
+        };
+        assert_eq!(
+            e.to_json(),
+            "{\"bytes_offloaded\":4096,\"bytes_returned\":1024,\
+             \"interval\":3,\"job\":7,\"step\":5,\"tenant\":\"alice\",\
+             \"unix_ms\":1700000000000,\"user\":1}"
+        );
+    }
+
+    #[test]
+    fn writes_lines_and_counts_drops() {
+        let path = std::env::temp_dir().join(format!(
+            "cola_ledger_test_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let ledger = UsageLedger::open(path.to_str().unwrap()).unwrap();
+        let e = UsageEntry {
+            tenant: "t".into(),
+            job: 1,
+            user: 0,
+            interval: 1,
+            step: 1,
+            bytes_offloaded: 1,
+            bytes_returned: 2,
+            unix_ms: now_unix_ms(),
+        };
+        ledger.record(&e);
+        ledger.record(&e);
+        assert_eq!(ledger.dropped(), 0);
+        drop(ledger); // joins the writer -> file is complete
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("tenant").and_then(Json::as_str), Some("t"));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

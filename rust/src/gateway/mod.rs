@@ -1,0 +1,688 @@
+//! FTaaS serving gateway — `cola serve` (L3's front door).
+//!
+//! The paper's headline deployment is Fine-Tuning as a Service:
+//! *numerous* users offload gradient learning to a shared coordinator.
+//! This module is that front door: a long-running, zero-dependency
+//! HTTP/1.1 service over `std::net` TCP (same hand-rolled house style
+//! as [`crate::transport::wire`]; rationale in
+//! `docs/decisions/001-http-over-std-net.md`) that accepts fine-tuning
+//! jobs, streams their progress, and serves the trained adapters back.
+//!
+//! # Endpoints
+//!
+//! | endpoint | auth | semantics |
+//! |---|---|---|
+//! | `GET /healthz` | none | liveness + ledger drop counter |
+//! | `POST /v1/fit` | Bearer | submit a `[train]` TOML config; `202 {"job":id}`, `400` invalid config, `429` backlog full |
+//! | `POST /v1/shutdown` | Bearer | clean shutdown after the current job |
+//! | `GET /v1/jobs/{id}` | Bearer | status JSON (`queued`/`running`/`done`/`failed`) |
+//! | `GET /v1/jobs/{id}/progress` | Bearer | chunked JSONL stream, one line per adaptation interval |
+//! | `GET /v1/jobs/{id}/curves` | Bearer | the run's loss curves — byte-identical to `cola train --loss_out` |
+//! | `GET /v1/jobs/{id}/adapter` | Bearer | deterministic adapter bundle ([`crate::coordinator::Trainer::export_adapter_bundle`]) |
+//!
+//! Jobs are tenant-scoped: tokens map to tenants
+//! ([`auth::TokenTable`]), another tenant's job id answers `404`, and
+//! admission is fair-share round-robin with a bounded per-tenant
+//! backlog ([`queue::AdmissionQueue`]). Jobs execute **sequentially**
+//! on one runner thread: a [`crate::coordinator::Trainer`] pins
+//! process-global engine state (thread pool width, SIMD policy) at
+//! construction, so serial execution is what keeps every gateway job
+//! byte-identical to the same config run via `cola train` — the
+//! determinism contract `tests/gateway_http.rs` and the
+//! `gateway-smoke` CI job enforce.
+//!
+//! # Worked example
+//!
+//! Write a token file (`tenant:token` per line), bind, and serve:
+//!
+//! ```no_run
+//! use cola::gateway::{Gateway, ServeConfig};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     std::fs::write("tokens.txt", "alice:s3cr3t\n")?;
+//!     let mut cfg = ServeConfig::default();
+//!     cfg.listen = "127.0.0.1:0".to_string(); // port 0 = ephemeral
+//!     cfg.token_file = "tokens.txt".to_string();
+//!     cfg.ledger = "usage.jsonl".to_string();
+//!     let gateway = Gateway::bind(&cfg)?;
+//!     println!("cola gateway listening on {}", gateway.local_addr());
+//!     gateway.join(); // blocks until POST /v1/shutdown
+//!     Ok(())
+//! }
+//! ```
+//!
+//! then drive it with the stdlib-only client (`cola http`):
+//!
+//! ```text
+//! cola http post http://$ADDR/v1/fit --token s3cr3t --body job.toml
+//! cola http get  http://$ADDR/v1/jobs/1/progress --token s3cr3t
+//! cola http get  http://$ADDR/v1/jobs/1/adapter  --token s3cr3t --out a.bin
+//! ```
+
+pub mod auth;
+pub mod client;
+pub mod http;
+pub mod jobs;
+pub mod ledger;
+pub mod queue;
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Method, TomlDoc, TrainConfig};
+use crate::coordinator::{Progress, Trainer};
+use crate::util::json::Json;
+use crate::util::{lock_recover, panic_message, wait_timeout_recover};
+
+use auth::TokenTable;
+use http::{HttpError, Request};
+use jobs::{Fetch, JobRegistry};
+use ledger::{now_unix_ms, UsageEntry, UsageLedger};
+use queue::AdmissionQueue;
+
+/// Condvar/stream poll period: how quickly idle threads notice stop.
+const TICK: Duration = Duration::from_millis(50);
+
+/// `[serve]` section of a config file + CLI overrides.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address; port 0 binds an ephemeral port (scraped from
+    /// the "cola gateway listening on ..." stdout line, same contract
+    /// as the worker daemon).
+    pub listen: String,
+    /// Path to the `tenant:token` file ([`auth::TokenTable`]); required.
+    pub token_file: String,
+    /// Max queued jobs per tenant before `429` (>= 1).
+    pub backlog: usize,
+    /// Usage-ledger JSONL path; empty disables the ledger.
+    pub ledger: String,
+    /// Test-only: start with the job runner paused so tests can stage
+    /// a deterministic admission order, then [`Gateway::resume`]. Not
+    /// reachable from config keys or CLI flags.
+    pub start_paused: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:7780".to_string(),
+            token_file: String::new(),
+            backlog: 8,
+            ledger: String::new(),
+            start_paused: false,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Set one key (`listen`, `token_file`, `backlog`, `ledger`) from
+    /// its string form. Unknown keys are hard errors — same loud-typo
+    /// contract as [`TrainConfig::set`].
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "listen" => self.listen = val.to_string(),
+            "token_file" => self.token_file = val.to_string(),
+            "backlog" => {
+                self.backlog = val
+                    .parse()
+                    .with_context(|| format!("backlog must be an integer, got {val:?}"))?
+            }
+            "ledger" => self.ledger = val.to_string(),
+            other => bail!("unknown [serve] key {other:?} \
+                            (listen|token_file|backlog|ledger)"),
+        }
+        Ok(())
+    }
+
+    /// Apply the `serve.*` keys of a parsed config file over `self`.
+    /// Other sections (e.g. `[train]`) are ignored so one file can
+    /// describe both a gateway and the jobs submitted to it.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (k, v) in doc.flat() {
+            if let Some(key) = k.strip_prefix("serve.") {
+                self.set(key, &v).with_context(|| format!("config key {k}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Cross-field checks, applied by [`Gateway::bind`].
+    pub fn validate(&self) -> Result<()> {
+        if self.token_file.is_empty() {
+            bail!("serve.token_file is required — the gateway refuses to run \
+                   unauthenticated");
+        }
+        if self.backlog == 0 {
+            bail!("serve.backlog must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// State shared by the accept loop, connection threads, and the runner.
+struct Shared {
+    auth: TokenTable,
+    jobs: JobRegistry,
+    queue: Mutex<AdmissionQueue>,
+    queue_cv: Condvar,
+    ledger: Option<UsageLedger>,
+    stop: AtomicBool,
+    paused: AtomicBool,
+    /// Resolved listen address (for the shutdown self-connect wake).
+    addr: String,
+}
+
+/// The running gateway: accept loop + sequential job runner.
+pub struct Gateway {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    runner: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Validate config, load tokens, bind the listener, and start the
+    /// accept + runner threads.
+    pub fn bind(cfg: &ServeConfig) -> Result<Gateway> {
+        cfg.validate()?;
+        let auth = TokenTable::load(&cfg.token_file)?;
+        if auth.is_empty() {
+            bail!("token file {} has no tenant:token entries", cfg.token_file);
+        }
+        let ledger = if cfg.ledger.is_empty() {
+            None
+        } else {
+            Some(UsageLedger::open(&cfg.ledger)?)
+        };
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding gateway listener on {}", cfg.listen))?;
+        let addr = listener.local_addr()?.to_string();
+        let shared = Arc::new(Shared {
+            auth,
+            jobs: JobRegistry::new(),
+            queue: Mutex::new(AdmissionQueue::new(cfg.backlog)),
+            queue_cv: Condvar::new(),
+            ledger,
+            stop: AtomicBool::new(false),
+            paused: AtomicBool::new(cfg.start_paused),
+            addr,
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("cola-gw-accept".into())
+                .spawn(move || accept_main(&shared, listener))
+                .context("spawning the gateway accept thread")?
+        };
+        let runner = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("cola-gw-runner".into())
+                .spawn(move || runner_main(&shared))
+                .context("spawning the gateway job runner")?
+        };
+        Ok(Gateway { shared, accept: Some(accept), runner: Some(runner) })
+    }
+
+    /// Resolved listen address (`host:port`, port concrete).
+    pub fn local_addr(&self) -> &str {
+        &self.shared.addr
+    }
+
+    /// Un-pause a gateway built with [`ServeConfig::start_paused`].
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+        self.queue_notify();
+    }
+
+    fn queue_notify(&self) {
+        // grab-and-drop the lock so a runner between check and wait
+        // can't miss the notification
+        drop(lock_recover(&self.shared.queue));
+        self.shared.queue_cv.notify_all();
+    }
+
+    /// Ask the gateway to stop (same effect as `POST /v1/shutdown`).
+    pub fn request_stop(&self) {
+        stop_shared(&self.shared);
+    }
+
+    /// Block until the accept loop and runner exit (i.e. until someone
+    /// calls [`Gateway::request_stop`] or `POST /v1/shutdown` arrives),
+    /// then flush the ledger.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.runner.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Ledger entries dropped so far (0 when no ledger is configured).
+    pub fn ledger_dropped(&self) -> u64 {
+        self.shared.ledger.as_ref().map_or(0, UsageLedger::dropped)
+    }
+}
+
+fn stop_shared(shared: &Shared) {
+    shared.stop.store(true, Ordering::SeqCst);
+    drop(lock_recover(&shared.queue));
+    shared.queue_cv.notify_all();
+    // wake the blocking accept() the way the worker daemon does
+    let _ = TcpStream::connect(&shared.addr);
+}
+
+// ----------------------------------------------------------------------
+// accept loop + connection handling
+// ----------------------------------------------------------------------
+
+fn accept_main(shared: &Arc<Shared>, listener: TcpListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let shared = Arc::clone(shared);
+                let _ = std::thread::Builder::new()
+                    .name("cola-gw-conn".into())
+                    .spawn(move || serve_conn(&shared, stream));
+            }
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(TICK);
+            }
+        }
+    }
+}
+
+fn serve_conn(shared: &Arc<Shared>, stream: TcpStream) {
+    // a stalled or malicious peer must not pin the thread forever
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    match http::read_request(&mut reader) {
+        Ok(Some(req)) => route(shared, &mut writer, &req),
+        Ok(None) => {} // peer connected and left (e.g. the stop wake)
+        Err(e) => {
+            let _ = http::respond_error(&mut writer, &e);
+        }
+    }
+}
+
+/// Serialize an f64 the way curve files do: numeric when finite, a
+/// string otherwise (JSON has no NaN/inf tokens).
+fn json_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+fn json_body(w: &mut TcpStream, status: u16, obj: BTreeMap<String, Json>) {
+    let body = format!("{}\n", Json::Obj(obj));
+    let _ = http::respond(w, status, "application/json", &[], body.as_bytes());
+}
+
+fn route(shared: &Arc<Shared>, w: &mut TcpStream, req: &Request) {
+    // none of the endpoints take query parameters; strip them so a
+    // `?x=y` suffix can't dodge the route match
+    let path = req.path.split('?').next().unwrap_or("");
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+
+    if req.method == "GET" && segs == ["healthz"] {
+        let mut obj = BTreeMap::new();
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert(
+            "ledger_dropped".to_string(),
+            Json::Num(shared.ledger.as_ref().map_or(0, UsageLedger::dropped) as f64),
+        );
+        json_body(w, 200, obj);
+        return;
+    }
+
+    let Some(tenant) = shared.auth.tenant_for(req.header("authorization")) else {
+        let _ = http::respond_error(
+            w,
+            &HttpError::new(401, "missing or invalid bearer token"),
+        );
+        return;
+    };
+    let tenant = tenant.to_string();
+
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "fit"]) => handle_fit(shared, w, &tenant, &req.body),
+        ("POST", ["v1", "shutdown"]) => {
+            let mut obj = BTreeMap::new();
+            obj.insert("stopping".to_string(), Json::Bool(true));
+            json_body(w, 200, obj);
+            stop_shared(shared);
+        }
+        ("GET", ["v1", "jobs", id]) => match id.parse::<u64>() {
+            Ok(id) => handle_status(shared, w, &tenant, id),
+            Err(_) => not_found(w),
+        },
+        ("GET", ["v1", "jobs", id, sub @ ("progress" | "curves" | "adapter")]) => {
+            match id.parse::<u64>() {
+                Ok(id) => match *sub {
+                    "progress" => handle_progress(shared, w, &tenant, id),
+                    "curves" => handle_curves(shared, w, &tenant, id),
+                    _ => handle_adapter(shared, w, &tenant, id),
+                },
+                Err(_) => not_found(w),
+            }
+        }
+        (_, ["healthz"]) | (_, ["v1", "fit"]) | (_, ["v1", "shutdown"]) => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(405, format!("method {} not allowed here", req.method)),
+            );
+        }
+        _ => not_found(w),
+    }
+}
+
+fn not_found(w: &mut TcpStream) {
+    let _ = http::respond_error(&mut *w, &HttpError::new(404, "no such resource"));
+}
+
+/// Parse + validate a job's `[train]` config TOML, exactly the way
+/// `cola train --config` does (same key namespace, same defaults), so
+/// gateway-submitted configs mean the same thing as CLI ones.
+fn parse_train_config(src: &str) -> Result<TrainConfig> {
+    let doc = TomlDoc::parse(src)?;
+    let cfg = TrainConfig::from_toml(&doc)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn handle_fit(shared: &Shared, w: &mut TcpStream, tenant: &str, body: &[u8]) {
+    let Ok(src) = std::str::from_utf8(body) else {
+        let _ = http::respond_error(
+            w,
+            &HttpError::new(400, "config body must be UTF-8 TOML"),
+        );
+        return;
+    };
+    if let Err(e) = parse_train_config(src) {
+        let _ = http::respond_error(
+            w,
+            &HttpError::new(400, format!("invalid config: {e:#}")),
+        );
+        return;
+    }
+    let id = shared.jobs.create(tenant, src.to_string());
+    let pushed = lock_recover(&shared.queue).push(tenant, id);
+    match pushed {
+        Ok(depth) => {
+            shared.queue_cv.notify_all();
+            let mut obj = BTreeMap::new();
+            obj.insert("job".to_string(), Json::Num(id as f64));
+            obj.insert("backlog".to_string(), Json::Num(depth as f64));
+            json_body(w, 202, obj);
+        }
+        Err(cap) => {
+            shared.jobs.remove(id);
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(
+                    429,
+                    format!("tenant backlog is full ({cap} queued jobs)"),
+                ),
+            );
+        }
+    }
+}
+
+fn handle_status(shared: &Shared, w: &mut TcpStream, tenant: &str, id: u64) {
+    let Some(s) = shared.jobs.snapshot(tenant, id) else {
+        not_found(w);
+        return;
+    };
+    let mut obj = BTreeMap::new();
+    obj.insert("job".to_string(), Json::Num(s.id as f64));
+    obj.insert("state".to_string(), Json::Str(s.state.as_str().to_string()));
+    obj.insert(
+        "progress_lines".to_string(),
+        Json::Num(s.progress_lines as f64),
+    );
+    if let Some(seq) = s.started_seq {
+        obj.insert("started_seq".to_string(), Json::Num(seq as f64));
+    }
+    if let Some(e) = s.error {
+        obj.insert("error".to_string(), Json::Str(e));
+    }
+    json_body(w, 200, obj);
+}
+
+fn handle_progress(shared: &Shared, w: &mut TcpStream, tenant: &str, id: u64) {
+    let Some(snap) = shared.jobs.snapshot(tenant, id) else {
+        not_found(w);
+        return;
+    };
+    if http::start_chunked(w, 200, "application/x-ndjson").is_err() {
+        return;
+    }
+    let mut from = 0usize;
+    let done = loop {
+        let Some((lines, done)) = shared.jobs.wait_progress(tenant, id, from, TICK)
+        else {
+            break false; // record vanished mid-stream
+        };
+        from += lines.len();
+        for line in lines {
+            if http::write_chunk(w, format!("{line}\n").as_bytes()).is_err() {
+                return; // client went away
+            }
+        }
+        if done {
+            break true;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            break false;
+        }
+    };
+    if done {
+        // terminal summary line so stream consumers need no second call
+        let mut obj = BTreeMap::new();
+        obj.insert("done".to_string(), Json::Bool(true));
+        let state = shared
+            .jobs
+            .snapshot(tenant, id)
+            .map_or(snap.state, |s| s.state);
+        obj.insert("state".to_string(), Json::Str(state.as_str().to_string()));
+        let _ = http::write_chunk(w, format!("{}\n", Json::Obj(obj)).as_bytes());
+    }
+    let _ = http::finish_chunked(w);
+}
+
+fn handle_curves(shared: &Shared, w: &mut TcpStream, tenant: &str, id: u64) {
+    match shared.jobs.curves(tenant, id) {
+        Fetch::NotFound => not_found(w),
+        Fetch::NotReady => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(409, "job has not finished yet"),
+            );
+        }
+        Fetch::Failed(e) => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(409, format!("job failed: {e}")),
+            );
+        }
+        Fetch::Missing => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(409, "job produced no curves"),
+            );
+        }
+        Fetch::Ready(curves) => {
+            let _ = http::respond(w, 200, "application/json", &[], curves.as_bytes());
+        }
+    }
+}
+
+fn handle_adapter(shared: &Shared, w: &mut TcpStream, tenant: &str, id: u64) {
+    match shared.jobs.adapter(tenant, id) {
+        Fetch::NotFound => not_found(w),
+        Fetch::NotReady => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(409, "job has not finished yet"),
+            );
+        }
+        Fetch::Failed(e) => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(409, format!("job failed: {e}")),
+            );
+        }
+        Fetch::Missing => {
+            let _ = http::respond_error(
+                w,
+                &HttpError::new(
+                    409,
+                    "job has no exportable adapter (coupled baseline — its \
+                     tunables live on the server)",
+                ),
+            );
+        }
+        Fetch::Ready(bundle) => {
+            let _ = http::respond(w, 200, "application/octet-stream", &[], &bundle);
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// the job runner
+// ----------------------------------------------------------------------
+
+fn runner_main(shared: &Arc<Shared>) {
+    loop {
+        let next = {
+            let mut q = lock_recover(&shared.queue);
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                if !shared.paused.load(Ordering::SeqCst) {
+                    if let Some(x) = q.pop() {
+                        break Some(x);
+                    }
+                }
+                q = wait_timeout_recover(&shared.queue_cv, q, TICK);
+            }
+        };
+        let Some((tenant, id)) = next else {
+            return;
+        };
+        run_job(shared, &tenant, id);
+    }
+}
+
+/// Run one job to a terminal state. Panics unwind into a `Failed`
+/// record instead of killing the runner — one poisoned config must not
+/// wedge every later tenant.
+fn run_job(shared: &Shared, tenant: &str, id: u64) {
+    let Some(src) = shared.jobs.config(id) else {
+        shared.jobs.fail(id, "job record vanished before it ran".to_string());
+        return;
+    };
+    shared.jobs.mark_running(id);
+    match catch_unwind(AssertUnwindSafe(|| execute_job(shared, tenant, id, &src))) {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => shared.jobs.fail(id, format!("{e:#}")),
+        Err(payload) => shared.jobs.fail(
+            id,
+            format!("job panicked: {}", panic_message(payload.as_ref())),
+        ),
+    }
+}
+
+fn execute_job(shared: &Shared, tenant: &str, id: u64, src: &str) -> Result<()> {
+    let cfg = parse_train_config(src)?;
+    let users = cfg.users.max(1);
+    let is_cola = matches!(cfg.method, Method::Cola(_));
+    let mut trainer = Trainer::new(cfg).context("building trainer")?;
+    let mut interval_no = 0u64;
+    let mut last_off = 0u64;
+    let mut last_ret = 0u64;
+    let report = trainer.run_with_progress(|p| {
+        if !p.interval_boundary {
+            return Ok(());
+        }
+        interval_no += 1;
+        shared.jobs.push_progress(id, progress_line(p, interval_no));
+        if let Some(ledger) = &shared.ledger {
+            // per-interval deltas, attributed evenly per user (the
+            // joint batch divides evenly across users by construction)
+            let d_off = p.bytes_offloaded.saturating_sub(last_off);
+            let d_ret = p.bytes_returned.saturating_sub(last_ret);
+            last_off = p.bytes_offloaded;
+            last_ret = p.bytes_returned;
+            for user in 0..users {
+                ledger.record(&UsageEntry {
+                    tenant: tenant.to_string(),
+                    job: id,
+                    user,
+                    interval: interval_no,
+                    step: p.step,
+                    bytes_offloaded: d_off / users as u64,
+                    bytes_returned: d_ret / users as u64,
+                    unix_ms: now_unix_ms(),
+                });
+            }
+        }
+        Ok(())
+    })?;
+    let curves = report.curves_json();
+    let adapter = if is_cola {
+        Some(trainer.export_adapter_bundle()?)
+    } else {
+        None
+    };
+    shared.jobs.finish(id, curves, adapter);
+    Ok(())
+}
+
+/// One progress-stream line per adaptation interval.
+fn progress_line(p: &Progress, interval: u64) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("step".to_string(), Json::Num(p.step as f64));
+    obj.insert("interval".to_string(), Json::Num(interval as f64));
+    obj.insert("train_loss".to_string(), json_f64(p.train_loss as f64));
+    if let Some(a) = p.train_acc {
+        obj.insert("train_acc".to_string(), json_f64(a as f64));
+    }
+    if let Some(e) = p.eval_loss {
+        obj.insert("eval_loss".to_string(), json_f64(e));
+    }
+    if let Some(a) = p.eval_acc {
+        obj.insert("eval_acc".to_string(), json_f64(a));
+    }
+    obj.insert(
+        "bytes_offloaded".to_string(),
+        Json::Num(p.bytes_offloaded as f64),
+    );
+    obj.insert(
+        "bytes_returned".to_string(),
+        Json::Num(p.bytes_returned as f64),
+    );
+    Json::Obj(obj).to_string()
+}

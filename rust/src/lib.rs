@@ -31,8 +31,14 @@
 //! otherwise — so a clean checkout with only stable Rust installed
 //! builds, tests and trains end to end.
 //!
-//! Start at [`coordinator::Trainer`] (Algorithm 1) and
-//! [`coordinator::FtaasService`] (Figure 1).
+//! Start at [`coordinator::Trainer`] (Algorithm 1),
+//! [`coordinator::FtaasService`] (Figure 1), and [`gateway::Gateway`]
+//! (`cola serve` — the FTaaS HTTP front door).
+
+// Docs are part of the test surface: CI builds with
+// `RUSTDOCFLAGS="-D warnings"`, and a link to a renamed item must fail
+// the build rather than rot silently.
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod adapters;
 pub mod bench_harness;
@@ -40,6 +46,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod gateway;
 pub mod lint;
 pub mod memory;
 pub mod merge;

@@ -11,8 +11,9 @@
 //! Rules (all deny by default):
 //!
 //! - **determinism** — curve-affecting modules (`adapters/`,
-//!   `coordinator/`, `data/`, `merge/`, `metrics/`, `tensor/`,
-//!   `runtime/native/`, `rng.rs`, `transport/wire.rs`) must not touch
+//!   `coordinator/`, `data/`, `gateway/`, `merge/`, `metrics/`,
+//!   `tensor/`, `runtime/native/`, `rng.rs`, `transport/wire.rs`) must
+//!   not touch
 //!   `HashMap`/`HashSet` (iteration order is randomized per process),
 //!   wall clocks (`SystemTime`/`Instant::now`), or unseeded randomness
 //!   (`thread_rng`/`from_entropy`). Ordered state lives in
@@ -202,10 +203,13 @@ impl Report {
 /// Modules where nondeterminism changes loss-curve bytes. Paths are
 /// relative to `rust/src`, `/`-separated.
 fn curve_scoped(rel: &str) -> bool {
-    const DIRS: [&str; 7] = [
+    const DIRS: [&str; 8] = [
         "adapters/",
         "coordinator/",
         "data/",
+        // the gateway promises HTTP-submitted jobs replay byte-identical
+        // to `cola train`, so it carries the same determinism rules
+        "gateway/",
         "merge/",
         "metrics/",
         "tensor/",

@@ -1,6 +1,6 @@
 //! `cola` CLI — launcher for training runs, the worker daemon
-//! (distributed offload), the FTaaS demo service, memory reports, and
-//! experiment drivers.
+//! (distributed offload), the FTaaS HTTP gateway (`cola serve`),
+//! memory reports, and experiment drivers.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -10,11 +10,12 @@ use anyhow::{bail, Context, Result};
 use cola::cli::Args;
 use cola::config::{apply_overrides, Method, OffloadTarget, SimdMode, TomlDoc,
                    TrainConfig, TransportKind};
-use cola::coordinator::{rebalance_daemons, Driver, FtaasService, RunReport,
-                        TransferModel, Trainer};
+use cola::coordinator::{rebalance_daemons, Driver, FtaasService, TransferModel,
+                        Trainer};
+use cola::gateway::{client as gateway_client, Gateway, ServeConfig};
 use cola::transport::tcp::TcpLinkOpts;
 use cola::memory::{footprint, Arrangement, ModelProfile, GB};
-use cola::metrics::{markdown_table, Curve};
+use cola::metrics::markdown_table;
 use cola::runtime::Manifest;
 use cola::transport::tcp::{request_daemon_shutdown, WorkerDaemon};
 use cola::util::json::Json;
@@ -24,10 +25,12 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv)?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "http" => cmd_http(&args),
         "worker" => cmd_worker(&args),
         "pool" => cmd_pool(&args),
-        "serve" => cmd_serve(&args),
         "curvediff" => cmd_curvediff(&args),
+        "demo" => cmd_demo(&args),
         "memory" => cmd_memory(&args),
         "table1" => cmd_table1(),
         "lint" => cmd_lint(&args),
@@ -43,9 +46,17 @@ fn print_help() {
     println!(
         "cola — Collaborative Adaptation with Gradient Learning\n\n\
          USAGE: cola <subcommand> [--key value]...\n\n\
-         SUBCOMMANDS\n\
-           train    run one fine-tuning job\n\
-                    --config <file.toml> (CLI options override file keys)\n\
+         SUBCOMMANDS"
+    );
+    // generated from the same table the README command reference uses
+    // (`cola::cli::SUBCOMMANDS`); tests/cli_docs.rs keeps all three in
+    // sync with the dispatch match above
+    for (name, summary) in cola::cli::SUBCOMMANDS {
+        println!("  {name:<10} {summary}");
+    }
+    println!(
+        "\nOPTIONS BY SUBCOMMAND\n\
+           train    --config <file.toml> (CLI options override file keys)\n\
                     --task clm|s2s|seqcls --size tiny|small|base\n\
                     --method ft|lora|ia3|prompt|ptuning|prefix|cola-lowrank|cola-linear|cola-mlp\n\
                     --mode merged|unmerged --interval I --steps N --users K\n\
@@ -65,6 +76,24 @@ fn print_help() {
                     defers to the COLA_SIMD env var, `fma` trades bitwise\n\
                     reproducibility for fused multiply-add speed)\n\
                     --loss_out <file.json> (write loss/acc curves for diffing)\n\
+                    --adapter_out <file> (write the deterministic adapter\n\
+                    bundle — same bytes the gateway's /adapter endpoint serves)\n\
+           serve    long-running FTaaS gateway over HTTP/1.1 (std::net only);\n\
+                    POST /v1/fit submits a [train] config TOML, progress\n\
+                    streams as chunked JSONL, adapters download bit-exact;\n\
+                    fair-share admission across token-authenticated tenants\n\
+                    (see README \"FTaaS gateway\" + docs/decisions/)\n\
+                    --config <file.toml> (its [serve] section; CLI overrides)\n\
+                    --listen 127.0.0.1:7780 (port 0 = ephemeral)\n\
+                    --token_file <file> (required; tenant:token per line)\n\
+                    --backlog N (max queued jobs per tenant; default 8)\n\
+                    --ledger <file.jsonl> (usage ledger; empty = disabled)\n\
+           http     cola http <get|post> <url> — minimal client for the\n\
+                    gateway API (smoke scripts run without curl)\n\
+                    --token T (Bearer token) --body <file> (POST payload)\n\
+                    --out <file> (write body; default stdout)\n\
+                    --expect CODE (fail unless the status matches; default:\n\
+                    fail on any status >= 400)\n\
            worker   gradient-offload worker daemon (distributed mode);\n\
                     serves any number of concurrent trainer connections;\n\
                     bf16 fit tensors are negotiated per connection (Hello\n\
@@ -84,7 +113,7 @@ fn print_help() {
                     --drain host:port  (shrink gracefully: state moves off it)\n\
                     --remove host:port (drop a DEAD daemon from the list;\n\
                     its unmigrated state is gone — prefer --drain when alive)\n\
-           serve    FTaaS collaboration demo (--users K --rounds N)\n\
+           demo     FTaaS collaboration demo (--users K --rounds N)\n\
            memory   analytic memory report\n\
                     --profile llama2-qv|llama2-all|gpt2|roberta-base|bart-base|tiny|small\n\
                     --batch B --interval I\n\
@@ -143,7 +172,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
 }
 
 /// Keys consumed by the launcher itself, not by `TrainConfig`.
-const LAUNCHER_KEYS: &[&str] = &["config", "loss_out"];
+const LAUNCHER_KEYS: &[&str] = &["config", "loss_out", "adapter_out"];
 
 /// Precedence (least to most binding): built-in defaults, then the
 /// CLI `--method` hyperparameter preset, then `--config` file keys,
@@ -168,36 +197,6 @@ fn config_from_args(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-/// Loss/accuracy curves as stable JSON. f64 values print in Rust's
-/// shortest round-trip form, so two runs diff byte-equal iff their
-/// curves are bit-identical — the contract the `distributed-smoke` CI
-/// job checks across transports.
-fn curves_json(report: &RunReport) -> String {
-    fn num(v: f64) -> Json {
-        if v.is_finite() {
-            Json::Num(v)
-        } else {
-            // JSON has no NaN/inf tokens; a diverged run must still
-            // produce a parseable (and still deterministic) file
-            Json::Str(v.to_string())
-        }
-    }
-    fn curve(c: &Curve) -> Json {
-        Json::Arr(
-            c.points
-                .iter()
-                .map(|(s, v)| Json::Arr(vec![Json::Num(*s as f64), num(*v)]))
-                .collect(),
-        )
-    }
-    let mut obj = std::collections::BTreeMap::new();
-    obj.insert("train_loss".to_string(), curve(&report.train_loss));
-    obj.insert("train_acc".to_string(), curve(&report.train_acc));
-    obj.insert("eval_loss".to_string(), curve(&report.eval_loss));
-    obj.insert("eval_acc".to_string(), curve(&report.eval_acc));
-    format!("{}\n", Json::Obj(obj))
-}
-
 fn cmd_train(args: &Args) -> Result<()> {
     // every train option takes a value; a bare `--offload_batch` would
     // otherwise parse as a flag and be silently dropped
@@ -218,9 +217,16 @@ fn cmd_train(args: &Args) -> Result<()> {
              report.worker_state_bytes as f64 / (1024.0 * 1024.0));
     println!("timings: {}", report.timings.report());
     if let Some(path) = args.get("loss_out") {
-        std::fs::write(path, curves_json(&report))
+        // the exact bytes the gateway's /curves endpoint serves — one
+        // shared serializer keeps the determinism diff honest
+        std::fs::write(path, report.curves_json())
             .with_context(|| format!("writing {path}"))?;
         println!("loss curves      -> {path}");
+    }
+    if let Some(path) = args.get("adapter_out") {
+        let bundle = trainer.export_adapter_bundle()?;
+        std::fs::write(path, &bundle).with_context(|| format!("writing {path}"))?;
+        println!("adapter bundle   -> {path}");
     }
     Ok(())
 }
@@ -361,7 +367,86 @@ fn cmd_pool(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cola serve` — the FTaaS HTTP gateway. All option plumbing lives in
+/// [`ServeConfig`]; this function only resolves precedence (defaults <
+/// `--config` `[serve]` section < explicit CLI keys) and then blocks on
+/// the gateway until a `POST /v1/shutdown` arrives.
 fn cmd_serve(args: &Args) -> Result<()> {
+    const SERVE_KEYS: &[&str] = &["config", "listen", "token_file", "backlog", "ledger"];
+    args.require_no_flags("serve")?;
+    for k in args.options.keys() {
+        if !SERVE_KEYS.contains(&k.as_str()) {
+            bail!("unknown serve option --{k} (config|listen|token_file|backlog|ledger)");
+        }
+    }
+    let mut cfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        let doc = TomlDoc::load(path).with_context(|| format!("loading config {path}"))?;
+        cfg.apply_toml(&doc)
+            .with_context(|| format!("config {path}: [serve] section"))?;
+    }
+    for key in &SERVE_KEYS[1..] {
+        if let Some(v) = args.get(key) {
+            cfg.set(key, v)?;
+        }
+    }
+    let gateway = Gateway::bind(&cfg)?;
+    // launchers (CI, scripts) scrape this line for the resolved port,
+    // exactly like the worker daemon's banner
+    println!("cola gateway listening on {}", gateway.local_addr());
+    gateway.join();
+    println!("cola gateway: shutdown complete, exiting");
+    Ok(())
+}
+
+/// `cola http <get|post> <url>` — a stdlib-only HTTP client so smoke
+/// scripts can drive the gateway on runners without curl. Streams
+/// chunked bodies to completion, so `cola http get .../progress`
+/// follows a job live.
+fn cmd_http(args: &Args) -> Result<()> {
+    const HTTP_KEYS: &[&str] = &["token", "body", "out", "expect"];
+    args.require_no_flags("http")?;
+    for k in args.options.keys() {
+        if !HTTP_KEYS.contains(&k.as_str()) {
+            bail!("unknown http option --{k} (token|body|out|expect)");
+        }
+    }
+    let [method, url] = &args.positional[..] else {
+        bail!("usage: cola http <get|post> <url> [--token T] [--body file] \
+               [--out file] [--expect CODE]");
+    };
+    let method = method.to_ascii_uppercase();
+    let body_bytes;
+    let body = match args.get("body") {
+        Some(path) => {
+            body_bytes =
+                std::fs::read(path).with_context(|| format!("reading --body {path}"))?;
+            Some(("application/toml", body_bytes.as_slice()))
+        }
+        None => None,
+    };
+    let resp = gateway_client::request(&method, url, args.get("token"), body)?;
+    // status goes to stderr so `--out -`-less stdout stays pipeable
+    eprintln!("HTTP {}", resp.status);
+    match args.get("out") {
+        Some(path) => std::fs::write(path, &resp.body)
+            .with_context(|| format!("writing {path}"))?,
+        None => print!("{}", String::from_utf8_lossy(&resp.body)),
+    }
+    match args.get("expect") {
+        Some(want) => {
+            let want: u16 = want.parse().context("--expect takes a status code")?;
+            if resp.status != want {
+                bail!("expected HTTP {want}, got {}", resp.status);
+            }
+        }
+        None if resp.status >= 400 => bail!("HTTP {} from {url}", resp.status),
+        None => {}
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
     let mut cfg = config_from_args(args)?;
     if !args.options.contains_key("users") {
         cfg.users = 4;

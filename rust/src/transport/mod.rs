@@ -42,6 +42,13 @@
 //! no longer byte-identical to the f32 run. The
 //! [`Transport::take_wire_bytes`] ledger feeds the bytes/interval
 //! trajectory that CI's wire benchmark gates on.
+//!
+//! The same bit-exact `StateExport` blobs double as the FTaaS
+//! gateway's download format: `GET /v1/jobs/{id}/adapter` serves a
+//! bundle of [`wire::encode_state`] blobs (via
+//! [`Trainer::export_adapter_bundle`](crate::coordinator::Trainer::export_adapter_bundle)),
+//! so an adapter fetched over HTTP is the identical byte sequence a
+//! daemon would export — see [`crate::gateway`].
 
 pub mod tcp;
 pub mod wire;

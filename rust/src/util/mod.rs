@@ -1,8 +1,20 @@
-//! Small shared substrates (offline stand-ins for serde etc.).
+//! Small shared substrates (offline stand-ins for crates the repo
+//! cannot depend on).
+//!
+//! - [`json`] — a hand-rolled JSON reader/writer (serde substitute),
+//!   used by the artifact manifest, `--loss_out` curve files, the
+//!   [`crate::gateway`] HTTP responses, and the usage ledger.
+//! - [`lock_recover`] / [`wait_timeout_recover`] — the audited
+//!   mutex-poison recovery points shared by every concurrent subsystem
+//!   (worker daemons, the gateway, the tensor pool). See the
+//!   `mutex-poison` rule in [`crate::lint`].
+//! - [`panic_message`] — render a `catch_unwind` payload for error
+//!   reporting (daemon fits, gateway jobs).
 
 pub mod json;
 
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
 
 /// Acquire a mutex, stripping poison.
 ///
@@ -18,6 +30,30 @@ use std::sync::{Mutex, MutexGuard, PoisonError};
 pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     // lint:allow(mutex-poison): this IS the audited recovery helper
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar companion to [`lock_recover`]: wait on `cv` with a timeout,
+/// stripping poison from the reacquired guard.
+///
+/// `Condvar::wait_timeout` hands the poison flag back on reacquisition
+/// just like `Mutex::lock`, so any waiter sharing a mutex with
+/// panic-prone holders needs the same audited recovery. The soundness
+/// argument is identical to [`lock_recover`] (state under these locks
+/// is kept structurally valid across panics); callers must re-check
+/// their predicate in a loop, as with any condvar wait.
+///
+/// The `timed_out` flag from the underlying wait is intentionally not
+/// returned: every caller loops on its own predicate plus a stop flag,
+/// so "why did we wake" never matters.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, _timeout)) => g,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
 }
 
 /// Render a `catch_unwind` payload as text for error messages; panics

@@ -1,0 +1,82 @@
+//! Docs-stay-true test: the `cola` subcommand surface is declared once
+//! (`cola::cli::SUBCOMMANDS`) and this test pins the other two copies
+//! to it — the dispatch match in `src/main.rs` and the README
+//! "Command reference" table. Adding a subcommand without documenting
+//! it (or documenting one that doesn't exist) fails here, not in a
+//! reviewer's head.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+fn manifest_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Subcommand names as actually dispatched by `main()`: every
+/// `"name" => cmd_*` arm, plus the `"" | "help"` arm.
+fn dispatched_subcommands(main_src: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for line in main_src.lines() {
+        let t = line.trim();
+        if !t.contains("=> cmd_") && !t.contains("=> print_help") {
+            continue;
+        }
+        // the arm pattern is one or more string literals before `=>`
+        let Some(pat) = t.split("=>").next() else { continue };
+        let mut rest = pat;
+        while let Some(open) = rest.find('"') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('"') else { break };
+            let name = &tail[..close];
+            if !name.is_empty() {
+                out.insert(name.to_string());
+            }
+            rest = &tail[close + 1..];
+        }
+    }
+    // `"" | "help"` dispatches print_help via a block, not `=> cmd_*`
+    if main_src.contains("\"help\"") {
+        out.insert("help".to_string());
+    }
+    out
+}
+
+#[test]
+fn dispatch_matches_the_declared_subcommand_table() {
+    let main_src =
+        std::fs::read_to_string(manifest_dir().join("src/main.rs")).unwrap();
+    let dispatched = dispatched_subcommands(&main_src);
+    let declared: BTreeSet<String> = cola::cli::SUBCOMMANDS
+        .iter()
+        .map(|(name, _)| name.to_string())
+        .collect();
+    assert_eq!(
+        dispatched, declared,
+        "src/main.rs dispatch and cola::cli::SUBCOMMANDS disagree — \
+         update both (and the README table) together"
+    );
+    assert!(dispatched.len() >= 10, "suspiciously few subcommands parsed");
+}
+
+#[test]
+fn readme_command_table_covers_every_subcommand() {
+    let readme =
+        std::fs::read_to_string(manifest_dir().join("../README.md")).unwrap();
+    for (name, _) in cola::cli::SUBCOMMANDS {
+        let row = format!("| `{name}` |");
+        assert!(
+            readme.contains(&row),
+            "README.md command reference is missing a `| `{name}` |` row \
+             (regenerate it from cola::cli::SUBCOMMANDS)"
+        );
+    }
+}
+
+#[test]
+fn declared_summaries_are_nonempty_and_unique() {
+    let mut names = BTreeSet::new();
+    for (name, summary) in cola::cli::SUBCOMMANDS {
+        assert!(!summary.is_empty(), "{name} has an empty summary");
+        assert!(names.insert(name), "duplicate subcommand {name}");
+    }
+}

@@ -1,0 +1,400 @@
+//! Loopback e2e for the FTaaS gateway (`cola serve`) — the in-repo
+//! mirror of the `gateway-smoke` CI job.
+//!
+//! The load-bearing invariant: a job submitted over HTTP produces
+//! **byte-identical** loss curves and adapter bundles to the same
+//! config run directly through [`Trainer`] (what `cola train` does).
+//! On top of that: tenant isolation (someone else's job id is a 404,
+//! not a 403), malformed requests never kill the server, and a
+//! flooding tenant cannot starve another out of the admission queue.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use cola::config::{TomlDoc, TrainConfig};
+use cola::coordinator::Trainer;
+use cola::gateway::{client, Gateway, ServeConfig};
+use cola::rng::Rng;
+use cola::transport::wire;
+use cola::util::json::Json;
+
+/// The job every determinism check trains: small enough to run in a
+/// test, big enough to cross several adaptation intervals and an eval.
+const SMOKE_CONFIG: &str = "\
+[train]
+task = \"clm\"
+size = \"tiny\"
+method = \"cola-lowrank\"
+mode = \"unmerged\"
+optimizer = \"sgd\"
+steps = 6
+batch = 4
+interval = 2
+lr = 0.05
+seed = 11
+workers = 1
+eval_every = 3
+eval_batches = 2
+threads = 2
+";
+
+/// A cheap config for scheduling-order tests (fairness, 429s) where
+/// only *when* jobs run matters, not what they learn.
+const QUICK_CONFIG: &str = "\
+[train]
+task = \"clm\"
+size = \"tiny\"
+method = \"cola-lowrank\"
+mode = \"unmerged\"
+optimizer = \"sgd\"
+steps = 2
+batch = 4
+interval = 2
+lr = 0.05
+seed = 7
+workers = 1
+threads = 2
+";
+
+/// Coupled baseline: trains fine, but has no exportable adapter.
+const COUPLED_CONFIG: &str = "\
+[train]
+task = \"clm\"
+size = \"tiny\"
+method = \"lora\"
+mode = \"unmerged\"
+optimizer = \"sgd\"
+steps = 2
+batch = 4
+interval = 2
+lr = 0.05
+seed = 7
+workers = 1
+threads = 2
+";
+
+/// Per-test scratch path (tests share one process; pid alone is not
+/// unique enough).
+fn tmp_path(suffix: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cola-gw-{}-{suffix}", std::process::id()))
+}
+
+fn write_tokens(suffix: &str) -> PathBuf {
+    let path = tmp_path(&format!("tokens-{suffix}"));
+    std::fs::write(&path, "# gateway test tenants\nalice:tok-a\nbob:tok-b\n")
+        .unwrap();
+    path
+}
+
+fn gateway(suffix: &str, backlog: usize, ledger: bool, paused: bool) -> Gateway {
+    let cfg = ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        token_file: write_tokens(suffix).to_string_lossy().into_owned(),
+        backlog,
+        ledger: if ledger {
+            tmp_path(&format!("ledger-{suffix}.jsonl")).to_string_lossy().into_owned()
+        } else {
+            String::new()
+        },
+        start_paused: paused,
+    };
+    Gateway::bind(&cfg).unwrap()
+}
+
+fn url(addr: &str, path: &str) -> String {
+    format!("http://{addr}{path}")
+}
+
+fn get(addr: &str, path: &str, token: Option<&str>) -> client::HttpResponse {
+    client::request("GET", &url(addr, path), token, None).unwrap()
+}
+
+fn post(
+    addr: &str,
+    path: &str,
+    token: Option<&str>,
+    body: Option<&str>,
+) -> client::HttpResponse {
+    client::request(
+        "POST",
+        &url(addr, path),
+        token,
+        body.map(|b| ("application/toml", b.as_bytes())),
+    )
+    .unwrap()
+}
+
+/// Submit a config; returns the job id out of the 202 body.
+fn submit(addr: &str, token: &str, config: &str) -> u64 {
+    let resp = post(addr, "/v1/fit", Some(token), Some(config));
+    assert_eq!(resp.status, 202, "{}", String::from_utf8_lossy(&resp.body));
+    let obj = Json::parse(&String::from_utf8_lossy(&resp.body)).unwrap();
+    obj.get("job").and_then(Json::as_f64).unwrap() as u64
+}
+
+/// Poll a job's status until it reaches a terminal state.
+fn wait_done(addr: &str, token: &str, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = get(addr, &format!("/v1/jobs/{id}"), Some(token));
+        assert_eq!(resp.status, 200);
+        let obj = Json::parse(&String::from_utf8_lossy(&resp.body)).unwrap();
+        let state = obj.get("state").map(|s| s.to_string()).unwrap_or_default();
+        if state.contains("done") || state.contains("failed") {
+            return obj;
+        }
+        assert!(Instant::now() < deadline, "job {id} never finished: {obj}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// What `cola train` would produce for this config: the reference the
+/// gateway must match byte-for-byte.
+fn baseline(config: &str) -> (String, Vec<u8>) {
+    let doc = TomlDoc::parse(config).unwrap();
+    let cfg = TrainConfig::from_toml(&doc).unwrap();
+    cfg.validate().unwrap();
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let report = trainer.run().unwrap();
+    let bundle = trainer.export_adapter_bundle().unwrap();
+    (report.curves_json(), bundle)
+}
+
+#[test]
+fn gateway_job_is_bitwise_identical_to_cli_train() {
+    let gw = gateway("det", 8, true, false);
+    let addr = gw.local_addr().to_string();
+    let (base_curves, base_bundle) = baseline(SMOKE_CONFIG);
+
+    let id = submit(&addr, "tok-a", SMOKE_CONFIG);
+
+    // the progress stream blocks until the job is done, then closes
+    // with a terminal {"done":true,...} line
+    let resp = get(&addr, &format!("/v1/jobs/{id}/progress"), Some("tok-a"));
+    assert_eq!(resp.status, 200);
+    let text = String::from_utf8(resp.body).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // steps=6, interval=2 -> 3 boundary observations + 1 final + done
+    assert!(lines.len() >= 4, "short progress stream:\n{text}");
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("done").map(|d| d.to_string()), Some("true".into()));
+    for line in &lines[..lines.len() - 1] {
+        let p = Json::parse(line).unwrap();
+        assert!(p.get("step").and_then(Json::as_f64).is_some(), "{line}");
+        assert!(p.get("train_loss").is_some(), "{line}");
+        assert!(p.get("bytes_offloaded").is_some(), "{line}");
+    }
+
+    // curves: byte-identical to what `cola train --loss_out` writes
+    let resp = get(&addr, &format!("/v1/jobs/{id}/curves"), Some("tok-a"));
+    assert_eq!(resp.status, 200);
+    assert_eq!(String::from_utf8(resp.body).unwrap(), base_curves);
+
+    // adapter bundle: byte-identical, and every blob decodes
+    let resp = get(&addr, &format!("/v1/jobs/{id}/adapter"), Some("tok-a"));
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, base_bundle);
+    let (count, mut rest) = {
+        let (head, rest) = resp.body.split_at(4);
+        (u32::from_le_bytes(head.try_into().unwrap()) as usize, rest)
+    };
+    assert!(count > 0);
+    for _ in 0..count {
+        let (head, tail) = rest.split_at(4);
+        let len = u32::from_le_bytes(head.try_into().unwrap()) as usize;
+        let (blob, tail) = tail.split_at(len);
+        let (_user, site, _adapter) = wire::decode_state(blob).unwrap();
+        assert!(!site.is_empty());
+        rest = tail;
+    }
+    assert!(rest.is_empty(), "trailing bytes after {count} blobs");
+
+    // the usage ledger saw the run (fire-and-forget, so give the
+    // writer thread a moment to drain)
+    let ledger_path = tmp_path("ledger-det.jsonl");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let text = std::fs::read_to_string(&ledger_path).unwrap_or_default();
+        if text.lines().count() >= 3 {
+            for line in text.lines() {
+                let e = Json::parse(line).unwrap();
+                assert_eq!(
+                    e.get("tenant").map(|t| t.to_string()),
+                    Some("\"alice\"".into())
+                );
+                assert!(e.get("bytes_offloaded").and_then(Json::as_f64).is_some());
+            }
+            break;
+        }
+        assert!(Instant::now() < deadline, "ledger never filled: {text:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(gw.ledger_dropped(), 0);
+
+    let resp = post(&addr, "/v1/shutdown", Some("tok-a"), None);
+    assert_eq!(resp.status, 200);
+    gw.join();
+}
+
+#[test]
+fn auth_and_tenant_isolation() {
+    // paused: jobs stay queued, so this test never trains anything
+    let gw = gateway("auth", 8, false, true);
+    let addr = gw.local_addr().to_string();
+
+    // liveness is the one unauthenticated endpoint
+    let resp = get(&addr, "/healthz", None);
+    assert_eq!(resp.status, 200);
+
+    // everything else requires a valid bearer token
+    assert_eq!(post(&addr, "/v1/fit", None, Some(SMOKE_CONFIG)).status, 401);
+    let resp = post(&addr, "/v1/fit", Some("wrong"), Some(SMOKE_CONFIG));
+    assert_eq!(resp.status, 401);
+    assert!(resp.header("www-authenticate").is_some());
+    assert_eq!(get(&addr, "/v1/jobs/1", Some("")).status, 401);
+
+    // a syntactically/semantically invalid config is rejected up front
+    let resp = post(&addr, "/v1/fit", Some("tok-a"), Some("steps = \"many\"\n"));
+    assert_eq!(resp.status, 400);
+
+    // wrong method on a known path
+    assert_eq!(get(&addr, "/v1/fit", Some("tok-a")).status, 405);
+
+    // alice's queued job is invisible to bob: 404, not 403
+    let id = submit(&addr, "tok-a", SMOKE_CONFIG);
+    assert_eq!(get(&addr, &format!("/v1/jobs/{id}"), Some("tok-a")).status, 200);
+    assert_eq!(get(&addr, &format!("/v1/jobs/{id}"), Some("tok-b")).status, 404);
+    let resp = get(&addr, &format!("/v1/jobs/{id}/adapter"), Some("tok-b"));
+    assert_eq!(resp.status, 404);
+    // artifacts before completion: conflict, not absence
+    let resp = get(&addr, &format!("/v1/jobs/{id}/adapter"), Some("tok-a"));
+    assert_eq!(resp.status, 409);
+
+    // unknown resources
+    assert_eq!(get(&addr, "/v1/jobs/999", Some("tok-a")).status, 404);
+    assert_eq!(get(&addr, "/v1/jobs/not-a-number", Some("tok-a")).status, 404);
+    assert_eq!(get(&addr, "/nope", Some("tok-a")).status, 404);
+
+    gw.request_stop();
+    gw.join();
+}
+
+#[test]
+fn malformed_requests_never_kill_the_server() {
+    let gw = gateway("fuzz", 8, false, true);
+    let addr = gw.local_addr().to_string();
+
+    let mut payloads: Vec<Vec<u8>> = vec![
+        b"\r\n\r\n".to_vec(),
+        b"GARBAGE\r\n\r\n".to_vec(),
+        b"GET\r\n\r\n".to_vec(),
+        b"GET / SPDY/9\r\n\r\n".to_vec(),
+        b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n".to_vec(),
+        b"POST /v1/fit HTTP/1.1\r\nContent-Length: banana\r\n\r\n".to_vec(),
+        b"POST /v1/fit HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n".to_vec(),
+        b"POST /v1/fit HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(),
+        // request line far past the 8 KiB line cap
+        {
+            let mut v = b"GET /".to_vec();
+            v.extend(std::iter::repeat(b'a').take(64 * 1024));
+            v.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+            v
+        },
+        // header flood past the header-count cap
+        {
+            let mut v = b"GET /healthz HTTP/1.1\r\n".to_vec();
+            for i in 0..200 {
+                v.extend_from_slice(format!("X-H{i}: x\r\n").as_bytes());
+            }
+            v.extend_from_slice(b"\r\n");
+            v
+        },
+        // truncated body: promises 100 bytes, sends 5, hangs up
+        b"POST /v1/fit HTTP/1.1\r\nContent-Length: 100\r\n\r\nshort".to_vec(),
+    ];
+    // deterministic pseudo-random garbage (no external fuzzer available)
+    let mut rng = Rng::new(0xC01A);
+    for _ in 0..50 {
+        let n = rng.below(512) + 1;
+        let mut blob = Vec::with_capacity(n);
+        while blob.len() < n {
+            blob.extend_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        blob.truncate(n);
+        payloads.push(blob);
+    }
+
+    for payload in &payloads {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let _ = s.write_all(payload);
+        let _ = s.flush();
+        // half-close so the server sees EOF instead of waiting out its
+        // read timeout on a request that will never complete
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        // drain whatever error response the server sends, then hang up
+        let mut sink = Vec::new();
+        let _ = s.take(4096).read_to_end(&mut sink);
+    }
+
+    // the server survived all of it
+    let resp = get(&addr, "/healthz", None);
+    assert_eq!(resp.status, 200);
+
+    gw.request_stop();
+    gw.join();
+}
+
+#[test]
+fn flooding_tenant_cannot_starve_another() {
+    // paused so the admission order is fully staged before anything
+    // runs — the service order is then deterministic
+    let gw = gateway("fair", 4, false, true);
+    let addr = gw.local_addr().to_string();
+
+    // alice floods her whole backlog...
+    let alice: Vec<u64> =
+        (0..4).map(|_| submit(&addr, "tok-a", QUICK_CONFIG)).collect();
+    // ...and her 5th submission bounces with 429 + Retry-After
+    let resp = post(&addr, "/v1/fit", Some("tok-a"), Some(QUICK_CONFIG));
+    assert_eq!(resp.status, 429);
+    assert!(resp.header("retry-after").is_some());
+    // bob arrives last with a single job
+    let bob = submit(&addr, "tok-b", QUICK_CONFIG);
+
+    gw.resume();
+    let bob_status = wait_done(&addr, "tok-b", bob);
+    for id in &alice {
+        wait_done(&addr, "tok-a", *id);
+    }
+
+    // round-robin admission: alice runs first (seq 1), then bob's only
+    // job (seq 2) — NOT after alice's entire backlog
+    let seq = bob_status.get("started_seq").and_then(Json::as_f64).unwrap();
+    assert_eq!(seq as u64, 2, "bob was starved behind the flood: {bob_status}");
+
+    gw.request_stop();
+    gw.join();
+}
+
+#[test]
+fn coupled_method_has_no_adapter_to_export() {
+    let gw = gateway("coupled", 8, false, false);
+    let addr = gw.local_addr().to_string();
+
+    let id = submit(&addr, "tok-a", COUPLED_CONFIG);
+    let status = wait_done(&addr, "tok-a", id);
+    assert!(status.to_string().contains("done"), "{status}");
+
+    // curves exist (they are method-agnostic)...
+    let resp = get(&addr, &format!("/v1/jobs/{id}/curves"), Some("tok-a"));
+    assert_eq!(resp.status, 200);
+    // ...but a coupled baseline keeps its tunables on the server
+    let resp = get(&addr, &format!("/v1/jobs/{id}/adapter"), Some("tok-a"));
+    assert_eq!(resp.status, 409);
+
+    gw.request_stop();
+    gw.join();
+}

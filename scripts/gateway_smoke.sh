@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# FTaaS gateway smoke: launch `cola serve` on an ephemeral loopback
+# port and require the full HTTP surface to hold its contracts:
+#
+#   1. DETERMINISM: a job submitted over POST /v1/fit must produce loss
+#      curves and an adapter bundle byte-identical to the same config
+#      run via `cola train --loss_out --adapter_out`;
+#   2. AUTH: a wrong bearer token answers 401, /healthz needs none;
+#   3. STREAMING: GET /v1/jobs/{id}/progress follows the run live as
+#      chunked JSONL and closes with a terminal {"done":true} line;
+#   4. LEDGER: the fire-and-forget usage ledger lands per-interval
+#      per-user JSONL rows attributed to the submitting tenant;
+#   5. SHUTDOWN: POST /v1/shutdown exits the server process cleanly.
+#
+# The client side is `cola http` (stdlib-only) — CI runners need no
+# curl. Runnable locally after `cargo build --release --locked`.
+set -euo pipefail
+
+BIN=${BIN:-./target/release/cola}
+OUT=$(mktemp -d)
+
+cleanup() {
+  # belt and braces: never leave a gateway behind, even on failure paths
+  if [ -n "${GW_PID:-}" ] && kill -0 "$GW_PID" 2>/dev/null; then
+    kill "$GW_PID" 2>/dev/null || true
+  fi
+}
+trap cleanup EXIT
+
+JOB_CONFIG=config/distributed_smoke.toml
+
+printf 'smoke:smoke-token\n' > "$OUT/tokens.txt"
+
+"$BIN" serve --listen 127.0.0.1:0 --token_file "$OUT/tokens.txt" \
+  --ledger "$OUT/usage.jsonl" >"$OUT/gateway.log" 2>&1 &
+GW_PID=$!
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$OUT/gateway.log" | head -n1)
+  [ -n "$ADDR" ] && break
+  if ! kill -0 "$GW_PID" 2>/dev/null; then
+    echo "FAIL: gateway died during startup" >&2
+    cat "$OUT/gateway.log" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+  echo "FAIL: gateway never reported its address" >&2
+  cat "$OUT/gateway.log" >&2
+  exit 1
+fi
+echo "gateway at $ADDR (pid $GW_PID)"
+
+echo "--- baseline: the same job via cola train"
+"$BIN" train --config "$JOB_CONFIG" \
+  --loss_out "$OUT/base_curves.json" --adapter_out "$OUT/base.adapter"
+
+echo "--- liveness + auth"
+"$BIN" http get "http://$ADDR/healthz" >"$OUT/healthz.json"
+grep -q '"ok":true' "$OUT/healthz.json"
+"$BIN" http get "http://$ADDR/v1/jobs/1" --token wrong-token --expect 401 \
+  >/dev/null
+echo "OK: /healthz is open, a wrong token answers 401"
+
+echo "--- submit the job over HTTP"
+SUBMIT_NS=$(date +%s%N)
+"$BIN" http post "http://$ADDR/v1/fit" --token smoke-token \
+  --body "$JOB_CONFIG" --expect 202 --out "$OUT/submit.json"
+JOB=$(sed -n 's/.*"job":\([0-9][0-9]*\).*/\1/p' "$OUT/submit.json" | head -n1)
+if [ -z "$JOB" ]; then
+  echo "FAIL: no job id in the 202 body:" >&2
+  cat "$OUT/submit.json" >&2
+  exit 1
+fi
+echo "submitted as job $JOB"
+
+echo "--- stream progress until the job completes"
+"$BIN" http get "http://$ADDR/v1/jobs/$JOB/progress" --token smoke-token \
+  --out "$OUT/progress.jsonl"
+FIRST_NS=$(date +%s%N)
+if ! grep -q '"done":true' "$OUT/progress.jsonl"; then
+  echo "FAIL: progress stream never reached the terminal line:" >&2
+  cat "$OUT/progress.jsonl" >&2
+  exit 1
+fi
+LINES=$(wc -l < "$OUT/progress.jsonl")
+echo "OK: streamed $LINES progress lines (submit->stream-drained $(( (FIRST_NS - SUBMIT_NS) / 1000000 )) ms)"
+
+echo "--- fetched curves must byte-diff clean against cola train"
+"$BIN" http get "http://$ADDR/v1/jobs/$JOB/curves" --token smoke-token \
+  --out "$OUT/gw_curves.json"
+if ! diff "$OUT/base_curves.json" "$OUT/gw_curves.json"; then
+  echo "FAIL: gateway curves differ from the cola train baseline" >&2
+  exit 1
+fi
+echo "OK: loss curves are byte-identical"
+
+echo "--- fetched adapter bundle must be bit-exact too"
+"$BIN" http get "http://$ADDR/v1/jobs/$JOB/adapter" --token smoke-token \
+  --out "$OUT/gw.adapter"
+if ! cmp "$OUT/base.adapter" "$OUT/gw.adapter"; then
+  echo "FAIL: gateway adapter bundle differs from the cola train baseline" >&2
+  exit 1
+fi
+echo "OK: adapter bundle is bit-exact ($(wc -c < "$OUT/gw.adapter") bytes)"
+
+echo "--- the usage ledger attributed the run to the tenant"
+# fire-and-forget: give the writer thread a beat to flush
+for _ in $(seq 1 50); do
+  grep -q '"tenant":"smoke"' "$OUT/usage.jsonl" 2>/dev/null && break
+  sleep 0.1
+done
+if ! grep -q '"tenant":"smoke"' "$OUT/usage.jsonl"; then
+  echo "FAIL: no smoke-tenant rows in the usage ledger" >&2
+  cat "$OUT/usage.jsonl" >&2 || true
+  exit 1
+fi
+ROWS=$(wc -l < "$OUT/usage.jsonl")
+BYTES=$(wc -c < "$OUT/usage.jsonl")
+echo "OK: ledger holds $ROWS rows ($BYTES bytes)"
+
+echo "--- clean shutdown over the API"
+"$BIN" http post "http://$ADDR/v1/shutdown" --token smoke-token --expect 200 \
+  >/dev/null
+if ! wait "$GW_PID"; then
+  echo "FAIL: gateway exited non-zero after /v1/shutdown" >&2
+  cat "$OUT/gateway.log" >&2
+  exit 1
+fi
+GW_PID=""
+echo "OK: gateway exited cleanly after POST /v1/shutdown"
