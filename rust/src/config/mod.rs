@@ -430,6 +430,23 @@ pub struct TrainConfig {
     /// degrades loudly instead of aborting), and mid-run the supervisor
     /// promotes one whenever a member dies.
     pub standby_addrs: Vec<String>,
+    /// address the coordinator's worker-registry announce listener
+    /// binds (tcp + `failover = "migrate"` only), e.g. `127.0.0.1:0`
+    /// for an ephemeral port (printed at startup). Daemons started with
+    /// `cola worker --join <this addr>` self-register and are admitted
+    /// into the pool at sweep boundaries. Empty = no listener; the pool
+    /// is exactly the static worker_addrs. With a listener bound,
+    /// worker_addrs becomes the optional bootstrap fallback and may be
+    /// empty (the trainer then waits for the first joiner).
+    pub registry_listen: String,
+    /// push each shard's post-interval state blob to a buddy member
+    /// (its rendezvous runner-up) so a member kill is absorbed by
+    /// promoting the buddy's replica in place — zero recovery bytes on
+    /// the wire — instead of a checkpoint-restore round trip (tcp +
+    /// `failover = "migrate"` only). Replicas are the same bit-exact
+    /// `wire::encode_state` blobs as shadow checkpoints, so loss curves
+    /// stay byte-identical either way.
+    pub replicate: bool,
     /// Fit/FitBatch payload encoding on the TCP wire (tcp only).
     /// "f32" (default) keeps every tensor bit-exact; "bf16" halves the
     /// payload bytes with round-to-nearest-even truncation (negotiated
@@ -476,6 +493,8 @@ impl Default for TrainConfig {
             heartbeat_interval: 1,
             failover: FailoverPolicy::Fail,
             standby_addrs: Vec::new(),
+            registry_listen: String::new(),
+            replicate: false,
             offload_wire: WireFormat::F32,
             simd: SimdMode::Auto,
         }
@@ -536,6 +555,8 @@ impl TrainConfig {
                     val.parse().context("heartbeat_interval")?
             }
             "failover" => self.failover = val.parse()?,
+            "registry_listen" => self.registry_listen = val.into(),
+            "replicate" => self.replicate = val.parse().context("replicate")?,
             "offload_wire" => self.offload_wire = val.parse()?,
             "simd" => self.simd = val.parse()?,
             "standby_addrs" => {
@@ -573,9 +594,25 @@ impl TrainConfig {
         }
         match self.offload_transport {
             TransportKind::Tcp => {
-                if self.worker_addrs.is_empty() {
+                if self.worker_addrs.is_empty() && self.registry_listen.is_empty() {
                     bail!("offload_transport = \"tcp\" requires worker_addrs \
-                           (comma-separated `cola worker` daemon addresses)");
+                           (comma-separated `cola worker` daemon addresses) or \
+                           registry_listen (so daemons can self-register with \
+                           `cola worker --join`)");
+                }
+                if !self.registry_listen.is_empty()
+                    && self.failover != FailoverPolicy::Migrate
+                {
+                    bail!("registry_listen is set but failover = \"fail\" — \
+                           joiners are admitted (and dead members replaced) at \
+                           liveness-sweep boundaries, which only run under \
+                           failover = \"migrate\" (refusing to silently ignore)");
+                }
+                if self.replicate && self.failover != FailoverPolicy::Migrate {
+                    bail!("replicate = true is set but failover = \"fail\" — \
+                           buddy replicas are promoted by the migrate failover \
+                           path; without it they would never be read (refusing \
+                           to silently ignore)");
                 }
                 // duplicate addresses are allowed: a daemon serves any
                 // number of concurrent links, so one low-cost device can
@@ -632,6 +669,19 @@ impl TrainConfig {
                            frames on a TCP socket; in-process jobs move by \
                            reference (refusing to silently ignore)",
                           self.offload_wire);
+                }
+                if !self.registry_listen.is_empty() {
+                    bail!("registry_listen is set but offload_transport is \
+                           \"local\" — the registry admits TCP daemons; an \
+                           in-process pool has fixed membership (refusing to \
+                           silently ignore)");
+                }
+                if self.replicate {
+                    bail!("replicate = true is set but offload_transport is \
+                           \"local\" — buddy replicas guard against a daemon \
+                           dying independently of the trainer, which an \
+                           in-process pool cannot do (refusing to silently \
+                           ignore)");
                 }
             }
         }
@@ -827,6 +877,44 @@ mod tests {
         cfg.set("standby_addrs", "127.0.0.1:7710").unwrap();
         cfg.validate().unwrap();
         assert_eq!(cfg.offload_wire, WireFormat::Bf16);
+    }
+
+    #[test]
+    fn registry_and_replication_knobs_validate() {
+        // registry listener with no static addrs: the all-dynamic fleet
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("registry_listen", "127.0.0.1:0").unwrap();
+        cfg.set("failover", "migrate").unwrap();
+        cfg.set("replicate", "true").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.worker_addrs.is_empty());
+
+        // registry + static addrs: static members become the bootstrap
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        cfg.validate().unwrap();
+
+        // joiners are admitted at sweep boundaries, which need migrate
+        cfg.set("failover", "fail").unwrap();
+        assert!(cfg.validate().is_err());
+
+        // replicas are only ever read by the migrate failover path
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        cfg.set("replicate", "true").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn registry_and_replication_rejected_on_local_transport() {
+        let mut cfg = TrainConfig::default();
+        cfg.set("registry_listen", "127.0.0.1:0").unwrap();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = TrainConfig::default();
+        cfg.set("replicate", "true").unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

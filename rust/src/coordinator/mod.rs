@@ -4,6 +4,9 @@
 //! - `buffer`  — adaptation-interval buffering (Algorithm 1 lines 10-16)
 //! - `offload` — Gradient Offloading worker pool ("low-cost devices");
 //!   dispatches through `crate::transport` (in-process or TCP daemons)
+//! - `registry` — self-assembling fleet membership (`cola worker
+//!   --join`): lifecycle book + announce listener + buddy replication's
+//!   placement inputs
 //! - `server`  — the training loop (Algorithm 1) + coupled baselines
 //! - `api`     — FTaaS service facade (Figure 1)
 //!
@@ -15,14 +18,16 @@ pub mod api;
 pub mod buffer;
 pub mod driver;
 pub mod offload;
+pub mod registry;
 pub mod server;
 
 pub use api::FtaasService;
 pub use buffer::AdaptationBuffers;
 pub use driver::{Driver, LmVariant, SiteSpec, TaskData};
 pub use offload::{
-    key_addr, member_keys, rebalance_daemons, rendezvous_owner, FitJob, FitResult,
-    MigrationStats, PoolMember, PoolSupervisor, TransferModel, Worker, WorkerCore,
-    WorkerPool,
+    key_addr, member_keys, quantize_loads, rebalance_daemons, rendezvous_owner, FitJob,
+    FitResult, MigrationStats, PoolMember, PoolSupervisor, TransferModel, Worker,
+    WorkerCore, WorkerPool,
 };
+pub use registry::{join_coordinator, MemberState, RegistryServer, WorkerRegistry};
 pub use server::{Progress, RunReport, Trainer};

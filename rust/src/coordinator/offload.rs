@@ -258,21 +258,51 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// The one HRW winner-selection loop — every sharding decision (live
-/// pool, offline rebalancer) MUST flow through this single body, or two
-/// copies could drift and silently disagree about ownership.
-fn rendezvous_best<'a>(keys: impl Iterator<Item = &'a str>, user: usize) -> usize {
+/// The one HRW weight function — every sharding decision (live pool,
+/// offline rebalancer, buddy selection, load-aware placement) MUST
+/// derive its per-(key, user) weight from this single body, or two
+/// copies could drift and silently disagree about ownership. `user_mix`
+/// is `splitmix64(user as u64)`, hoisted so a loop over keys mixes the
+/// user exactly once.
+fn rendezvous_weight(key: &str, user_mix: u64) -> u64 {
+    splitmix64(fnv1a64(key.as_bytes()) ^ user_mix)
+}
+
+/// HRW winner *and* runner-up of `user` among `keys`. The runner-up is
+/// the member that would win if the winner vanished — which is exactly
+/// why it doubles as the **buddy** for shard replication: when the
+/// owner dies, the survivor rendezvous re-homes its users onto the very
+/// member already holding their replicas. `None` runner-up on
+/// single-member pools.
+fn rendezvous_rank<'a>(
+    keys: impl Iterator<Item = &'a str>,
+    user: usize,
+) -> (usize, Option<usize>) {
     let u = splitmix64(user as u64);
     let mut best = 0usize;
     let mut best_w = 0u64;
+    let mut second: Option<usize> = None;
+    let mut second_w = 0u64;
     for (i, k) in keys.enumerate() {
-        let w = splitmix64(fnv1a64(k.as_bytes()) ^ u);
+        let w = rendezvous_weight(k, u);
         if i == 0 || w > best_w {
+            if i > 0 {
+                second = Some(best);
+                second_w = best_w;
+            }
             best = i;
             best_w = w;
+        } else if second.is_none() || w > second_w {
+            second = Some(i);
+            second_w = w;
         }
     }
-    best
+    (best, second)
+}
+
+/// The HRW winner alone — the common case.
+fn rendezvous_best<'a>(keys: impl Iterator<Item = &'a str>, user: usize) -> usize {
+    rendezvous_rank(keys, user).0
 }
 
 /// Rendezvous (highest-random-weight) owner of `user` among `keys`:
@@ -322,6 +352,63 @@ pub fn key_addr(key: &str) -> &str {
         Some((addr, n)) if n.parse::<usize>().is_ok() => addr,
         _ => key,
     }
+}
+
+// ---------------------------------------------------------------------
+// load-aware placement
+// ---------------------------------------------------------------------
+
+/// Tier at (and above) which a member **sheds new users**: it is
+/// excluded from placement entirely, not merely down-weighted, so a
+/// pathologically hot daemon provably receives no new placements while
+/// any cooler member exists.
+pub const SHED_TIER: u8 = 3;
+
+/// Per-tier right-shift applied to a member's HRW weight — a power-of-
+/// two penalty keeps the scoring pure integer arithmetic (no float
+/// rounding to drift across platforms).
+const TIER_SHIFT: u32 = 8;
+
+/// The load-quantization determinism rule (ADR 005): raw `Pong{load}`
+/// figures are snapshotted **once per liveness sweep** (never
+/// mid-interval) and quantized to power-of-two tiers relative to the
+/// fleet median:
+///
+/// | load vs `max(median, 1)` | tier | effect on HRW weight        |
+/// |--------------------------|------|-----------------------------|
+/// | `< 2x`                   | 0    | unchanged                   |
+/// | `< 4x`                   | 1    | `>> 8`                      |
+/// | `< 8x`                   | 2    | `>> 16`                     |
+/// | `>= 8x`                  | 3    | excluded (sheds new users)  |
+///
+/// Placement is then a pure function of (member keys, tier map, user):
+/// the same snapshot always places identically, and because WHERE a
+/// shard lives never moves a loss curve (sharding contract), live load
+/// can steer placement without touching the "same config ⇒
+/// byte-identical curves" guarantee.
+///
+/// The median uses the upper-median element of the sorted snapshot and
+/// is clamped to >= 1 so an idle fleet (median 0) still tiers sanely:
+/// a member 10x above the fleet median always lands in [`SHED_TIER`].
+pub fn quantize_loads(loads: &BTreeMap<String, u64>) -> BTreeMap<String, u8> {
+    let mut vals: Vec<u64> = loads.values().copied().collect();
+    vals.sort_unstable();
+    let median = vals.get(vals.len() / 2).copied().unwrap_or(0).max(1);
+    loads
+        .iter()
+        .map(|(k, &l)| {
+            let tier = if l < 2 * median {
+                0
+            } else if l < 4 * median {
+                1
+            } else if l < 8 * median {
+                2
+            } else {
+                SHED_TIER
+            };
+            (k.clone(), tier)
+        })
+        .collect()
 }
 
 /// One pool slot: a stable identity for the rendezvous hash plus the
@@ -375,6 +462,16 @@ pub struct WorkerPool {
     /// transport ids are labels for logs/errors; monotone so a promoted
     /// standby never reuses a dead member's id
     next_id: usize,
+    /// Sticky placement diversions (user -> member key): recorded when
+    /// load-aware placement ([`WorkerPool::place_user`]) steers a user
+    /// away from its plain-HRW home, consulted by
+    /// [`WorkerPool::shard_of`] ever after. Overrides are only ever
+    /// written at (re)placement points — membership changes — never by
+    /// a load snapshot alone, which is what keeps existing shards put
+    /// while hot members shed *new* users. An override whose target key
+    /// left the pool is ignored (the user falls back to plain HRW until
+    /// the next placement).
+    overrides: BTreeMap<usize, String>,
 }
 
 impl WorkerPool {
@@ -403,7 +500,7 @@ impl WorkerPool {
                 )?),
             });
         }
-        Ok(WorkerPool { members, next_id: n })
+        Ok(WorkerPool { members, next_id: n, overrides: BTreeMap::new() })
     }
 
     /// Connect to remote worker daemons (`offload_transport = "tcp"`) —
@@ -435,7 +532,11 @@ impl WorkerPool {
             );
         }
         let mut remaining: Vec<String> = standbys.to_vec();
-        let mut pool = WorkerPool { members: Vec::with_capacity(addrs.len()), next_id: 0 };
+        let mut pool = WorkerPool {
+            members: Vec::with_capacity(addrs.len()),
+            next_id: 0,
+            overrides: BTreeMap::new(),
+        };
         for addr in addrs {
             match pool.add_tcp_member(addr, link) {
                 Ok(_) => {}
@@ -523,11 +624,99 @@ impl WorkerPool {
         &self.members
     }
 
-    /// The worker index currently owning a user — the rendezvous winner
-    /// over the live member keys (see the sharding contract). Same
-    /// selection body as [`rendezvous_owner`], by construction.
+    /// The worker index currently owning a user: a sticky load-aware
+    /// override when one was recorded (and its member still exists),
+    /// else the rendezvous winner over the live member keys (see the
+    /// sharding contract). Same weight body as [`rendezvous_owner`], by
+    /// construction.
     pub fn shard_of(&self, user: usize) -> usize {
+        if let Some(k) = self.overrides.get(&user) {
+            if let Some(i) = self.index_of_key(k) {
+                return i;
+            }
+        }
+        self.plain_shard_of(user)
+    }
+
+    /// The unweighted HRW winner, ignoring overrides — the baseline
+    /// every placement decision compares against.
+    fn plain_shard_of(&self, user: usize) -> usize {
         rendezvous_best(self.members.iter().map(|m| m.key.as_str()), user)
+    }
+
+    /// The member key currently owning `user` (override-aware) — what
+    /// the supervisor snapshots before mutating membership.
+    pub fn owner_key(&self, user: usize) -> String {
+        self.members[self.shard_of(user)].key.clone()
+    }
+
+    /// Place (or re-place) a user: the load-aware HRW winner among
+    /// members that are neither excluded (joining/draining per the
+    /// registry) nor in [`SHED_TIER`]. Members absent from `tiers`
+    /// (fresh joiners, promoted standbys) count as tier 0. If every
+    /// member is excluded or shed, placement falls back to plain HRW
+    /// over the full pool — a hot owner beats no owner. Records an
+    /// override iff the choice diverges from plain HRW, so
+    /// [`WorkerPool::shard_of`] keeps agreeing with this decision on
+    /// every later dispatch. Only membership changes call this; a load
+    /// snapshot alone never moves an existing shard.
+    pub fn place_user(
+        &mut self,
+        user: usize,
+        tiers: &BTreeMap<String, u8>,
+        exclude: &BTreeSet<String>,
+    ) -> usize {
+        let u = splitmix64(user as u64);
+        let tier_of = |m: &PoolMember| tiers.get(&m.key).copied().unwrap_or(0);
+        let eligible = |m: &PoolMember| {
+            tier_of(m) < SHED_TIER && !exclude.contains(&m.addr)
+        };
+        let mut best: Option<(usize, u64)> = None;
+        for (i, m) in self.members.iter().enumerate() {
+            if !eligible(m) {
+                continue;
+            }
+            let score = rendezvous_weight(&m.key, u) >> (u32::from(tier_of(m)) * TIER_SHIFT);
+            if best.map_or(true, |(_, bw)| score > bw) {
+                best = Some((i, score));
+            }
+        }
+        let chosen = match best {
+            Some((i, _)) => i,
+            // every member is hot or excluded: plain HRW over the full
+            // pool (placing somewhere beats placing nowhere)
+            None => self.plain_shard_of(user),
+        };
+        if chosen == self.plain_shard_of(user) {
+            self.overrides.remove(&user);
+        } else {
+            self.overrides.insert(user, self.members[chosen].key.clone());
+        }
+        chosen
+    }
+
+    /// The buddy holding `user`'s shard replicas: the highest-HRW member
+    /// on a daemon *distinct from the owner's* (a replica sharing the
+    /// owner's failure domain is dead weight). With no overrides in play
+    /// this is exactly the rendezvous runner-up — the member the
+    /// survivor remap re-homes the user onto when the owner dies, which
+    /// is what makes buddy promotion zero-copy. `None` when every other
+    /// member shares the owner's endpoint (or the pool has one member).
+    pub fn buddy_of(&self, user: usize) -> Option<usize> {
+        let owner = self.shard_of(user);
+        let owner_addr = &self.members[owner].addr;
+        let u = splitmix64(user as u64);
+        let mut best: Option<(usize, u64)> = None;
+        for (i, m) in self.members.iter().enumerate() {
+            if i == owner || (!owner_addr.is_empty() && &m.addr == owner_addr) {
+                continue;
+            }
+            let w = rendezvous_weight(&m.key, u);
+            if best.map_or(true, |(_, bw)| w > bw) {
+                best = Some((i, w));
+            }
+        }
+        best.map(|(i, _)| i)
     }
 
     pub fn for_user(&self, user: usize) -> &dyn Transport {
@@ -594,6 +783,10 @@ pub struct MigrationStats {
     pub shards_moved: usize,
     /// migration blob bytes shipped (export + checkpoint imports)
     pub bytes_moved: usize,
+    /// (user, site) shards recovered by promoting a buddy replica in
+    /// place — these cost zero wire bytes (the blob was already resident
+    /// on the new owner) and are NOT counted in `shards_moved`
+    pub shards_promoted: usize,
 }
 
 /// Health + elasticity for a TCP worker pool: heartbeats at adaptation-
@@ -619,6 +812,23 @@ pub struct PoolSupervisor {
     heartbeat_interval: usize,
     flushes: usize,
     checkpoints: BTreeMap<(usize, String), Vec<u8>>,
+    /// buddy replication on (`replicate = true`): post-interval blobs
+    /// are pushed to each shard's buddy, and failover promotes the
+    /// replica in place instead of shipping a checkpoint
+    replicate: bool,
+    /// which member key holds each shard's current replica — consulted
+    /// at failover to decide promote-vs-restore, pruned when the buddy
+    /// itself leaves the pool
+    replica_homes: BTreeMap<(usize, String), String>,
+    /// member lifecycle bookkeeping (`joining → active → draining →
+    /// dead`), shared with the `cola worker --join` listener when one is
+    /// running; `None` for supervisors predating the registry (offline
+    /// tools, older tests) — lifecycle exclusions then never apply
+    registry: Option<Arc<Mutex<WorkerRegistry>>>,
+    /// last liveness sweep's load snapshot (member key -> in-flight
+    /// fits) — the only load figure placement ever sees, refreshed at
+    /// interval boundaries and never mid-flush
+    last_loads: BTreeMap<String, u64>,
 }
 
 impl PoolSupervisor {
@@ -639,12 +849,56 @@ impl PoolSupervisor {
             heartbeat_interval,
             flushes: 0,
             checkpoints: BTreeMap::new(),
+            replicate: false,
+            replica_homes: BTreeMap::new(),
+            registry: None,
+            last_loads: BTreeMap::new(),
         }
+    }
+
+    /// Enable buddy replication (`replicate = true`; requires
+    /// `failover = "migrate"`, enforced by config validation).
+    pub fn with_replication(mut self, on: bool) -> PoolSupervisor {
+        self.replicate = on;
+        self
+    }
+
+    /// Attach the member-lifecycle registry (shared with the join
+    /// listener when `registry_listen` is set).
+    pub fn with_registry(mut self, reg: Arc<Mutex<WorkerRegistry>>) -> PoolSupervisor {
+        self.registry = Some(reg);
+        self
     }
 
     /// Checkpoints (and therefore dead-member recovery) are on.
     pub fn migrate_enabled(&self) -> bool {
         self.migrate
+    }
+
+    /// Buddy replication is on.
+    pub fn replicate_enabled(&self) -> bool {
+        self.replicate
+    }
+
+    /// The lifecycle registry, if one is attached.
+    pub fn registry(&self) -> Option<&Arc<Mutex<WorkerRegistry>>> {
+        self.registry.as_ref()
+    }
+
+    /// Load tiers from the last sweep's snapshot (empty before the
+    /// first sweep — every member then places at tier 0).
+    fn tiers(&self) -> BTreeMap<String, u8> {
+        quantize_loads(&self.last_loads)
+    }
+
+    /// Daemon addresses placement must skip: members the registry holds
+    /// in a non-`active` lifecycle state (joining daemons own nothing
+    /// yet; draining ones finish what they own but take no new users).
+    fn place_exclusions(&self) -> BTreeSet<String> {
+        match &self.registry {
+            Some(reg) => crate::util::lock_recover(reg).non_placeable_addrs(),
+            None => BTreeSet::new(),
+        }
     }
 
     /// Standby addresses not yet promoted.
@@ -669,20 +923,37 @@ impl PoolSupervisor {
         self.flushes % self.heartbeat_interval == 0
     }
 
-    /// Heartbeat every member; indices of the ones that cannot answer.
-    pub fn find_dead(&self, pool: &WorkerPool) -> Vec<usize> {
+    /// Heartbeat every member: indices of the ones that cannot answer,
+    /// plus a fresh load snapshot (member key -> in-flight fits) from
+    /// the ones that can. The snapshot replaces [`Self::tiers`]' input
+    /// wholesale — this is the ONLY point where live load enters
+    /// placement, so placement inputs change at sweep boundaries and
+    /// never mid-interval (the load-quantization determinism rule).
+    pub fn probe(&mut self, pool: &WorkerPool) -> Vec<usize> {
         let mut dead = Vec::new();
+        let mut loads = BTreeMap::new();
         for (i, m) in pool.members().iter().enumerate() {
-            if let Err(e) = m.transport().ping() {
-                eprintln!(
-                    "warning: worker {} ({}) failed its heartbeat: {e:#}",
-                    m.key,
-                    m.transport().describe()
-                );
-                dead.push(i);
+            match m.transport().ping() {
+                Ok(load) => {
+                    loads.insert(m.key.clone(), load);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: worker {} ({}) failed its heartbeat: {e:#}",
+                        m.key,
+                        m.transport().describe()
+                    );
+                    dead.push(i);
+                }
             }
         }
+        self.last_loads = loads;
         dead
+    }
+
+    /// Heartbeat every member; indices of the ones that cannot answer.
+    pub fn find_dead(&mut self, pool: &WorkerPool) -> Vec<usize> {
+        self.probe(pool)
     }
 
     /// Fail dead members over: remove them, promote standbys into the
@@ -699,8 +970,12 @@ impl PoolSupervisor {
         if dead.is_empty() {
             return Ok(MigrationStats::default());
         }
-        let old_keys = pool.keys();
+        // ownership snapshot BEFORE any mutation (override-aware): the
+        // remap compares against where each user actually lived, not
+        // just where plain HRW would have put it
+        let old_owners: Vec<String> = (0..self.users).map(|u| pool.owner_key(u)).collect();
         let mut dead_keys: BTreeSet<String> = BTreeSet::new();
+        let mut dead_addrs: BTreeSet<String> = BTreeSet::new();
         let mut idxs: Vec<usize> = dead.to_vec();
         idxs.sort_unstable();
         for &i in idxs.iter().rev() {
@@ -712,6 +987,17 @@ impl PoolSupervisor {
             );
             m.transport().shutdown();
             dead_keys.insert(m.key);
+            dead_addrs.insert(m.addr);
+        }
+        if let Some(reg) = &self.registry {
+            let mut reg = crate::util::lock_recover(reg);
+            for addr in &dead_addrs {
+                // a duplicate-addr daemon may back several slots; only
+                // flip lifecycle when no surviving slot still serves it
+                if pool.index_of_addr(addr).is_none() {
+                    reg.mark_dead(addr);
+                }
+            }
         }
         // promote one standby per dead member (a restarted daemon at a
         // dead address must NOT inherit the dead key, or the remap would
@@ -742,7 +1028,7 @@ impl PoolSupervisor {
                  pool cannot serve fits"
             );
         }
-        self.remap_and_migrate(pool, &old_keys, &dead_keys)
+        self.remap_and_migrate(pool, &old_owners, &dead_keys)
     }
 
     /// Gracefully remove the DAEMON at `addr` from the pool — every
@@ -761,7 +1047,13 @@ impl PoolSupervisor {
         if idxs.len() == pool.len() {
             bail!("cannot drain the last worker(s) in the pool");
         }
-        let old_keys = pool.keys();
+        // lifecycle first: a draining member takes no new users even
+        // while it still serves the shards it owns
+        if let Some(reg) = &self.registry {
+            crate::util::lock_recover(reg).begin_drain(addr);
+        }
+        let old_owners: Vec<String> =
+            (0..self.users).map(|u| pool.owner_key(u)).collect();
         // remove every slot of the daemon (desc order keeps indices
         // valid); all slots reach the same state table, so one handle
         // serves every export/evict
@@ -770,14 +1062,18 @@ impl PoolSupervisor {
             removed.push(pool.remove_member(i));
         }
         let removed_keys: BTreeSet<&String> = removed.iter().map(|m| &m.key).collect();
+        // replicas homed on the leaving daemon leave with it
+        self.replica_homes.retain(|_, k| !removed_keys.contains(k));
         let daemon = removed[0].transport();
         let mut stats = MigrationStats::default();
         let sites = self.sites.clone();
+        let tiers = self.tiers();
+        let exclude = self.place_exclusions();
         for user in 0..self.users {
-            if !removed_keys.contains(&old_keys[rendezvous_owner(&old_keys, user)]) {
+            if !removed_keys.contains(&old_owners[user]) {
                 continue;
             }
-            let new_idx = pool.shard_of(user);
+            let new_idx = pool.place_user(user, &tiers, &exclude);
             let mut moved = false;
             for site in &sites {
                 let blob = daemon.export_state(user, site)?;
@@ -801,34 +1097,137 @@ impl PoolSupervisor {
         for m in &removed {
             m.transport().shutdown();
         }
+        // drain complete: the daemon is healthy but out of the fleet; a
+        // later `--join` starts a fresh lifecycle
+        if let Some(reg) = &self.registry {
+            crate::util::lock_recover(reg).remove(addr);
+        }
         Ok(stats)
     }
 
     /// Grow the pool by one daemon: connect it, remap, and migrate the
     /// users the new member wins (live export from their old owners).
     pub fn add(&mut self, pool: &mut WorkerPool, addr: &str) -> Result<MigrationStats> {
-        let old_keys = pool.keys();
+        let old_owners: Vec<String> =
+            (0..self.users).map(|u| pool.owner_key(u)).collect();
         pool.add_tcp_member(addr, &self.link)?;
-        self.remap_and_migrate(pool, &old_keys, &BTreeSet::new())
+        self.remap_and_migrate(pool, &old_owners, &BTreeSet::new())
     }
 
-    /// Move every user whose rendezvous owner changed between `old_keys`
-    /// and the pool's current keys: live export + evict when the old
-    /// owner is still a member, shadow checkpoint when it is dead.
+    /// Admit every daemon currently waiting in the registry's `joining`
+    /// state: connect it as a pool member, migrate the users it wins,
+    /// and flip it `active`. Called at sweep boundaries only — the same
+    /// cadence as failover — so membership (and therefore placement)
+    /// changes at deterministic points of the run. An unreachable
+    /// joiner is marked dead (it can re-join later) instead of failing
+    /// the run.
+    pub fn admit_joiners(&mut self, pool: &mut WorkerPool) -> Result<MigrationStats> {
+        let Some(reg) = self.registry.clone() else {
+            return Ok(MigrationStats::default());
+        };
+        let pending = crate::util::lock_recover(&reg).pending_joins();
+        let mut total = MigrationStats::default();
+        for addr in pending {
+            match self.add(pool, &addr) {
+                Ok(st) => {
+                    crate::util::lock_recover(&reg).activate(&addr);
+                    println!(
+                        "cola: admitted worker {addr} into the pool \
+                         ({} users re-homed, {} bytes migrated)",
+                        st.users_moved, st.bytes_moved
+                    );
+                    total.users_moved += st.users_moved;
+                    total.shards_moved += st.shards_moved;
+                    total.bytes_moved += st.bytes_moved;
+                    total.shards_promoted += st.shards_promoted;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: joining worker {addr} could not be admitted \
+                         ({e:#}); marking it dead — it may re-join"
+                    );
+                    crate::util::lock_recover(&reg).mark_dead(&addr);
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// Push one shard's post-interval state blob to its buddy (the
+    /// runner-up HRW owner on a distinct daemon). Best-effort by
+    /// design: a failed push degrades that shard to checkpoint-only
+    /// recovery with a warning — replication must never fail a healthy
+    /// run. No-op unless `replicate = true` or when the pool has no
+    /// member outside the owner's failure domain.
+    pub fn replicate_shard(
+        &mut self,
+        pool: &WorkerPool,
+        user: usize,
+        site: &str,
+        blob: Vec<u8>,
+    ) {
+        if !self.replicate {
+            return;
+        }
+        let Some(bi) = pool.buddy_of(user) else {
+            return;
+        };
+        let bkey = pool.members()[bi].key.clone();
+        let hk = (user, site.to_string());
+        if let Some(old) = self.replica_homes.get(&hk) {
+            if old != &bkey {
+                // the buddy moved (membership changed): drop the stale
+                // replica so the old buddy's memory accounting stays
+                // honest; best-effort, the old buddy may be gone
+                if let Some(oi) = pool.index_of_key(old) {
+                    if let Err(e) = pool.worker(oi).drop_replica(user, site) {
+                        eprintln!(
+                            "warning: dropping stale replica (user {user}, site \
+                             {site}) on {old} failed: {e:#}"
+                        );
+                    }
+                }
+            }
+        }
+        match pool.worker(bi).put_replica(blob) {
+            Ok(()) => {
+                self.replica_homes.insert(hk, bkey);
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: replica push (user {user}, site {site}) to {bkey} \
+                     failed ({e:#}); this shard falls back to shadow-checkpoint \
+                     recovery"
+                );
+                self.replica_homes.remove(&hk);
+            }
+        }
+    }
+
+    /// Move every user whose owner changed between the `old_owners`
+    /// snapshot (one member key per user, taken before the membership
+    /// mutation) and this pool's fresh placement: buddy-replica
+    /// promotion in place when the old owner is dead and the new owner
+    /// already holds the replica, live export + evict when the old
+    /// owner is still a member, shadow checkpoint otherwise.
     fn remap_and_migrate(
         &mut self,
         pool: &mut WorkerPool,
-        old_keys: &[String],
+        old_owners: &[String],
         dead_keys: &BTreeSet<String>,
     ) -> Result<MigrationStats> {
         let mut stats = MigrationStats::default();
-        if old_keys.is_empty() {
+        if old_owners.is_empty() {
             return Ok(stats);
         }
+        // replicas die with the daemon holding them
+        self.replica_homes.retain(|_, k| pool.index_of_key(k).is_some());
         let sites = self.sites.clone();
+        let tiers = self.tiers();
+        let exclude = self.place_exclusions();
         for user in 0..self.users {
-            let old_key = &old_keys[rendezvous_owner(old_keys, user)];
-            let new_idx = pool.shard_of(user);
+            let old_key = &old_owners[user];
+            let new_idx = pool.place_user(user, &tiers, &exclude);
             if &pool.members()[new_idx].key == old_key {
                 continue;
             }
@@ -843,6 +1242,31 @@ impl PoolSupervisor {
             }
             let mut moved = false;
             for site in &sites {
+                if src_idx.is_none() && self.replicate {
+                    // the old owner is gone — if the new owner is this
+                    // shard's buddy, its replica is already resident and
+                    // bit-identical to the shadow checkpoint: promote in
+                    // place, zero bytes on the wire, zero stall
+                    let hk = (user, site.clone());
+                    let new_key = pool.members()[new_idx].key.as_str();
+                    if self.replica_homes.get(&hk).map(String::as_str) == Some(new_key) {
+                        match pool.worker(new_idx).promote_replica(user, site) {
+                            Ok(()) => {
+                                self.replica_homes.remove(&hk);
+                                stats.shards_promoted += 1;
+                                moved = true;
+                                continue;
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "warning: buddy promotion of (user {user}, \
+                                     site {site}) on {new_key} failed ({e:#}); \
+                                     restoring from the shadow checkpoint"
+                                );
+                            }
+                        }
+                    }
+                }
                 let blob = match src_idx {
                     Some(si) => pool.worker(si).export_state(user, site)?,
                     None => {
@@ -1023,6 +1447,12 @@ pub struct WorkerCore {
     /// adapter-table lock is held — the regression suite's stand-in for
     /// a kernel assert, proving poison recovery end to end
     chaos_panic_keys: Mutex<BTreeSet<TenantKey>>,
+    /// passive buddy-replica store: raw `wire::encode_state` blobs for
+    /// shards this worker does NOT own. Replicas never serve fits; they
+    /// wait to be promoted (or dropped) by the coordinator. Kept apart
+    /// from the adapter table on purpose — a replica must not collide
+    /// with a live shard's busy/checkout machinery.
+    replicas: Mutex<BTreeMap<TenantKey, Vec<u8>>>,
 }
 
 impl WorkerCore {
@@ -1040,6 +1470,7 @@ impl WorkerCore {
             adapters: Mutex::new(AdapterTable::default()),
             pjrt: Mutex::new(None),
             chaos_panic_keys: Mutex::new(BTreeSet::new()),
+            replicas: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -1092,15 +1523,19 @@ impl WorkerCore {
             .ok_or_else(|| anyhow!("worker {}: no adapter {}", self.id, key_label(&key)))
     }
 
-    /// Bytes of resident adapter + optimizer state, across all tenants.
-    /// Best-effort during concurrent fits: a checked-out adapter is not
-    /// counted until it checks back in.
+    /// Bytes of resident adapter + optimizer state, across all tenants,
+    /// plus passive buddy-replica blobs (they occupy real device memory
+    /// too, so the footprint ledger stays honest). Best-effort during
+    /// concurrent fits: a checked-out adapter is not counted until it
+    /// checks back in.
     pub fn state_bytes(&self) -> usize {
-        lock(&self.adapters)
+        let live: usize = lock(&self.adapters)
             .map
             .values()
             .map(|a| a.params.bytes() + a.opt.bytes())
-            .sum()
+            .sum();
+        let passive: usize = lock(&self.replicas).values().map(Vec::len).sum();
+        live + passive
     }
 
     /// Current number of in-flight fits (checked-out adapters) — the
@@ -1163,6 +1598,44 @@ impl WorkerCore {
         }
         tab.map.remove(&key);
         Ok(())
+    }
+
+    /// Store a buddy-replica blob under `tenant`, replacing any earlier
+    /// replica for the same `(user, site)`. The blob is validated (it
+    /// must decode as a [`crate::transport::wire::encode_state`]
+    /// payload) but kept as raw bytes — promotion re-decodes, so the
+    /// promoted state is bit-identical to what the owner exported.
+    pub fn put_replica(&self, tenant: &str, blob: &[u8]) -> Result<()> {
+        let (user, site, _) = crate::transport::wire::decode_state(blob)
+            .map_err(|e| anyhow!("worker {}: rejected replica blob: {e:#}", self.id))?;
+        let key = (tenant.to_string(), user, site);
+        lock(&self.replicas).insert(key, blob.to_vec());
+        Ok(())
+    }
+
+    /// Promote a stored replica to live state — the zero-wire-cost half
+    /// of buddy failover. Decodes + installs exactly like
+    /// [`WorkerCore::import_state`]; the replica entry is removed only
+    /// after the install succeeds, so a failed promotion (busy key)
+    /// leaves the replica in place for a retry.
+    pub fn promote_replica(&self, tenant: &str, user: usize, site: &str) -> Result<()> {
+        let key = (tenant.to_string(), user, site.to_string());
+        let blob = lock(&self.replicas)
+            .get(&key)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!("worker {}: no replica for {}", self.id, key_label(&key))
+            })?;
+        self.import_state(tenant, &blob)?;
+        lock(&self.replicas).remove(&key);
+        Ok(())
+    }
+
+    /// Discard a replica whose buddy assignment moved elsewhere.
+    /// Dropping an absent key is a no-op.
+    pub fn drop_replica(&self, tenant: &str, user: usize, site: &str) {
+        let key = (tenant.to_string(), user, site.to_string());
+        lock(&self.replicas).remove(&key);
     }
 
     fn checkout(&self, key: &TenantKey) -> Result<SiteAdapter> {
@@ -1747,5 +2220,185 @@ mod tests {
         assert!(format!("{err}").contains("do not match adapter dims"), "{err}");
         // the adapter survived the rejected job
         core.fit("", job_for(0, "s", 3)).unwrap();
+    }
+
+    /// Pin the load-quantization table the ADR documents: power-of-two
+    /// bands against max(upper-median, 1), with everything at >= 8x the
+    /// median landing in the shed tier.
+    #[test]
+    fn quantize_loads_tiers_by_powers_of_two_over_the_median() {
+        let loads: BTreeMap<String, u64> = [
+            ("a".to_string(), 7u64),   // < 2x median(4)  -> 0
+            ("b".to_string(), 9),      // < 4x            -> 1
+            ("c".to_string(), 20),     // < 8x            -> 2
+            ("d".to_string(), 40),     // >= 8x           -> shed
+            ("e".to_string(), 4),
+            ("f".to_string(), 4),
+            ("g".to_string(), 4),
+            ("h".to_string(), 4),
+            ("i".to_string(), 4),
+        ]
+        .into_iter()
+        .collect();
+        // sorted snapshot [4,4,4,4,4,7,9,20,40]: upper median vals[4]
+        // = 4, so the band edges sit at 8 / 16 / 32
+        let tiers = quantize_loads(&loads);
+        assert_eq!(tiers["a"], 0);
+        assert_eq!(tiers["b"], 1);
+        assert_eq!(tiers["c"], 2);
+        assert_eq!(tiers["d"], SHED_TIER);
+        // an idle fleet (all zeros) clamps the median to 1 and nobody
+        // gets shed
+        let idle: BTreeMap<String, u64> =
+            [("x".to_string(), 0u64), ("y".to_string(), 0)].into_iter().collect();
+        assert!(quantize_loads(&idle).values().all(|&t| t == 0));
+        // ...but a member 10x above an idle fleet still sheds
+        let one_hot: BTreeMap<String, u64> =
+            [("x".to_string(), 0u64), ("y".to_string(), 0), ("z".to_string(), 10)]
+                .into_iter()
+                .collect();
+        assert_eq!(quantize_loads(&one_hot)["z"], SHED_TIER);
+    }
+
+    /// The ISSUE acceptance scenario: a member reporting 10x the fleet
+    /// median load receives no NEW users at the next placement, while
+    /// every existing shard stays exactly where it was.
+    #[test]
+    fn hot_member_sheds_new_users_but_existing_shards_stay_put() {
+        let mut pool =
+            WorkerPool::spawn(3, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        let keys = pool.keys();
+        let before: Vec<usize> = (0..32).map(|u| pool.shard_of(u)).collect();
+        let loads: BTreeMap<String, u64> = [
+            (keys[0].clone(), 4u64),
+            (keys[1].clone(), 40), // 10x the fleet median
+            (keys[2].clone(), 4),
+        ]
+        .into_iter()
+        .collect();
+        let tiers = quantize_loads(&loads);
+        assert_eq!(tiers[&keys[1]], SHED_TIER);
+        let exclude = BTreeSet::new();
+        let mut diverted = 0;
+        for u in 100..164 {
+            let placed = pool.place_user(u, &tiers, &exclude);
+            assert_ne!(placed, 1, "hot member was handed new user {u}");
+            if pool.shard_of(u) != rendezvous_owner(&keys, u) {
+                diverted += 1;
+            }
+        }
+        // the hot member would have won some of those users under plain
+        // HRW — shedding must actually have diverted them
+        assert!(diverted > 0, "shed tier never diverged from plain HRW");
+        // existing users (placed before the load snapshot) never moved
+        for (u, b) in before.iter().enumerate() {
+            assert_eq!(pool.shard_of(u), *b, "existing shard {u} moved");
+        }
+        // once the member cools off, re-placing a diverted user sends it
+        // home and clears the override (plain HRW and shard_of agree)
+        for u in 100..164 {
+            pool.place_user(u, &BTreeMap::new(), &exclude);
+            assert_eq!(pool.shard_of(u), rendezvous_owner(&keys, u));
+        }
+    }
+
+    /// When every member is shed or excluded, placement falls back to
+    /// plain HRW (a hot owner beats no owner) and records no override.
+    #[test]
+    fn place_user_falls_back_to_plain_hrw_when_nobody_is_eligible() {
+        let mut pool =
+            WorkerPool::spawn(2, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        let keys = pool.keys();
+        // in-process members share the empty addr, so excluding "" is
+        // "exclude everyone" — the degenerate case we want
+        let exclude: BTreeSet<String> = [String::new()].into_iter().collect();
+        for u in 0..16 {
+            let placed = pool.place_user(u, &BTreeMap::new(), &exclude);
+            assert_eq!(placed, rendezvous_owner(&keys, u));
+            assert_eq!(pool.shard_of(u), placed);
+        }
+    }
+
+    /// The buddy is the rendezvous runner-up: the HRW winner among the
+    /// non-owner members — exactly where the survivor remap re-homes
+    /// the user when the owner dies, which is what makes promotion
+    /// zero-copy. Never the owner; `None` for a one-member pool.
+    #[test]
+    fn buddy_is_the_rendezvous_runner_up_and_never_the_owner() {
+        let pool = WorkerPool::spawn(3, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        let keys = pool.keys();
+        for u in 0..64 {
+            let owner = pool.shard_of(u);
+            let buddy = pool.buddy_of(u).expect("3-member pool must have a buddy");
+            assert_ne!(buddy, owner, "buddy shares the owner's failure domain");
+            let rest: Vec<String> = keys
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != owner)
+                .map(|(_, k)| k.clone())
+                .collect();
+            assert_eq!(keys[buddy], rest[rendezvous_owner(&rest, u)]);
+        }
+        let solo = WorkerPool::spawn(1, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        assert!(solo.buddy_of(0).is_none());
+    }
+
+    /// Buddy promotion is bit-identical to a shadow-checkpoint restore:
+    /// both paths import the same `wire::encode_state` blob, so the
+    /// promoted adapter's params, moments, and next fit all match.
+    #[test]
+    fn replica_promotion_matches_checkpoint_restore_bitwise() {
+        use crate::adapters::OptimizerCfg;
+        let owner = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        let mut rng = crate::rng::Rng::new(17);
+        let params =
+            AdapterParams::init(crate::config::AdapterKind::LowRank, 6, 4, 3, 5, &mut rng);
+        let adapter = SiteAdapter::new("s", params, &OptimizerCfg::adamw(1e-3, 1e-4));
+        owner.register("", 3, "s", adapter).unwrap();
+        owner.fit("", job_for(3, "s", 5)).unwrap();
+        let blob = owner.export_state("", 3, "s").unwrap();
+
+        // the buddy holds the blob passively; a third core plays the
+        // shadow-checkpoint restore path
+        let buddy = WorkerCore::new(1, OffloadTarget::NativeCpu, manifest(), None);
+        buddy.put_replica("", &blob).unwrap();
+        // passive bytes are accounted (the replica is real memory)...
+        assert!(buddy.state_bytes() >= blob.len());
+        let restored = WorkerCore::new(2, OffloadTarget::NativeCpu, manifest(), None);
+        restored.import_state("", &blob).unwrap();
+
+        buddy.promote_replica("", 3, "s").unwrap();
+        let a = buddy.snapshot("", 3, "s").unwrap();
+        let b = restored.snapshot("", 3, "s").unwrap();
+        for (x, y) in a.tensors().into_iter().zip(b.tensors()) {
+            assert_eq!(x, y, "promoted replica diverged from checkpoint restore");
+        }
+        let r1 = buddy.fit("", job_for(3, "s", 4)).unwrap();
+        let r2 = restored.fit("", job_for(3, "s", 4)).unwrap();
+        let (p1, p2) = (r1.new_params.unwrap(), r2.new_params.unwrap());
+        assert_eq!(p1.len(), p2.len());
+        for (x, y) in p1.iter().zip(&p2) {
+            assert_eq!(x, y, "post-promotion fit diverged bit-wise");
+        }
+        // promotion consumed the replica: a second promotion has
+        // nothing to work from
+        assert!(buddy.promote_replica("", 3, "s").is_err());
+    }
+
+    #[test]
+    fn replica_store_rejects_garbage_and_drop_is_idempotent() {
+        let core = WorkerCore::new(0, OffloadTarget::NativeCpu, manifest(), None);
+        assert!(core.put_replica("", &[]).is_err());
+        assert!(core.put_replica("", &[1, 2, 3, 4]).is_err());
+        core.register("", 3, "s", lowrank_adapter(5)).unwrap();
+        let blob = core.export_state("", 3, "s").unwrap();
+        let buddy = WorkerCore::new(1, OffloadTarget::NativeCpu, manifest(), None);
+        buddy.put_replica("", &blob).unwrap();
+        buddy.drop_replica("", 3, "s");
+        // dropped replicas are gone: promotion fails, dropping again is
+        // a no-op, and the passive bytes are released
+        assert!(buddy.promote_replica("", 3, "s").is_err());
+        buddy.drop_replica("", 3, "s");
+        assert_eq!(buddy.state_bytes(), 0);
     }
 }

@@ -1,0 +1,467 @@
+//! Worker registry — the self-assembling fleet (ROADMAP open item #1).
+//!
+//! `worker_addrs` used to be the source of truth for pool membership:
+//! operators hand-wired every daemon address into the config, and a
+//! fleet could only change shape by restarting the trainer. This module
+//! inverts that: daemons announce themselves (`cola worker --join
+//! <coordinator>`), the coordinator tracks them through an explicit
+//! member lifecycle, and `worker_addrs` degrades to a static bootstrap
+//! fallback (its members are registered as already-active, which is
+//! also how pre-registry v1/v2 daemons interop).
+//!
+//! # Lifecycle
+//!
+//! ```text
+//!             Join frame             admitted at a
+//!             arrives                sweep boundary
+//!   (absent) ──────────► joining ─────────────────► active
+//!                           ▲                        │   │
+//!                      re-join OK              drain │   │ missed
+//!                           │                        ▼   │ heartbeat
+//!                         dead ◄──────────────── draining│
+//!                           ▲    (or dropped            ▼
+//!                           └──── when empty)          dead
+//! ```
+//!
+//! - **joining** — announced but not yet admitted. Receives no
+//!   placements; the supervisor admits joiners only at heartbeat-sweep
+//!   boundaries, the same deterministic points where failures are
+//!   detected, so membership changes never land mid-interval.
+//! - **active** — a full member: owns shards, receives new users.
+//! - **draining** — scheduled for removal: receives no *new* users but
+//!   finishes (and then migrates away) the shards it owns.
+//! - **dead** — failed a heartbeat (or was killed). Its shards were
+//!   re-homed by `fail_over`; the address may re-join later.
+//!
+//! The registry itself is pure bookkeeping — [`WorkerRegistry`] never
+//! touches the network. The network half is [`RegistryServer`] (the
+//! coordinator-side listener that turns wire-v3 [`Msg::Join`] frames
+//! into `joining` entries) and [`join_coordinator`] (the daemon-side
+//! announce call). Capability negotiation is NOT duplicated here: after
+//! admission the coordinator dials the daemon back through the normal
+//! [`TcpWorker`](crate::transport::tcp::TcpWorker) connect path, whose
+//! `Hello` handshake carries tenant + wire-format capabilities exactly
+//! as it does for static members.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::transport::tcp::{connect_with_backoff, BASE_BACKOFF, CONNECT_ATTEMPTS};
+use crate::transport::wire::{self, Msg};
+
+/// Where a member sits in the `joining → active → draining → dead`
+/// lifecycle (see the module diagram).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MemberState {
+    Joining,
+    Active,
+    Draining,
+    Dead,
+}
+
+impl std::fmt::Display for MemberState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MemberState::Joining => "joining",
+            MemberState::Active => "active",
+            MemberState::Draining => "draining",
+            MemberState::Dead => "dead",
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Member {
+    state: MemberState,
+    /// came from `worker_addrs` (the static bootstrap fallback) rather
+    /// than a `Join` announce — how v1/v2 daemons without the registry
+    /// capability participate
+    is_static: bool,
+}
+
+/// Coordinator-side membership book: daemon address → lifecycle state.
+/// Keyed by address (`BTreeMap` for deterministic iteration — placement
+/// decisions derive from registry scans). Shared between the trainer
+/// thread and the [`RegistryServer`] accept loop behind a mutex; all
+/// lock traffic goes through [`crate::util::lock_recover`].
+#[derive(Default)]
+pub struct WorkerRegistry {
+    members: BTreeMap<String, Member>,
+}
+
+impl WorkerRegistry {
+    pub fn new() -> WorkerRegistry {
+        WorkerRegistry::default()
+    }
+
+    /// Register a `worker_addrs` bootstrap member: enters `active`
+    /// directly (the trainer connects to it before training starts, so
+    /// there is no join/admit window to wait out).
+    pub fn register_static(&mut self, addr: &str) {
+        self.members
+            .insert(addr.to_string(), Member { state: MemberState::Active, is_static: true });
+    }
+
+    /// A `Join` announce arrived for `addr`. New addresses enter
+    /// `joining`; a `dead` address re-enters `joining` (daemon restart
+    /// on the same endpoint); announces for members already in flight
+    /// (`joining`/`active`/`draining`) are idempotent no-ops so a
+    /// re-sent Join frame cannot demote a live member.
+    pub fn join(&mut self, addr: &str) -> MemberState {
+        match self.members.get_mut(addr) {
+            Some(m) if m.state == MemberState::Dead => {
+                m.state = MemberState::Joining;
+                m.is_static = false;
+                MemberState::Joining
+            }
+            Some(m) => m.state,
+            None => {
+                self.members.insert(
+                    addr.to_string(),
+                    Member { state: MemberState::Joining, is_static: false },
+                );
+                MemberState::Joining
+            }
+        }
+    }
+
+    /// Promote a joiner to full membership — called by the supervisor
+    /// once the member's `TcpWorker` link is up and its shards can be
+    /// placed. Only `joining` members promote; anything else is left
+    /// alone (a drain must not be cancelled by a stale admit).
+    pub fn activate(&mut self, addr: &str) {
+        if let Some(m) = self.members.get_mut(addr) {
+            if m.state == MemberState::Joining {
+                m.state = MemberState::Active;
+            }
+        }
+    }
+
+    /// Begin draining `addr`: it stops receiving new users immediately
+    /// (it leaves the placement-eligible set) while its owned shards
+    /// are finished and migrated away by the supervisor.
+    pub fn begin_drain(&mut self, addr: &str) {
+        if let Some(m) = self.members.get_mut(addr) {
+            m.state = MemberState::Draining;
+        }
+    }
+
+    /// A heartbeat sweep declared `addr` unreachable.
+    pub fn mark_dead(&mut self, addr: &str) {
+        if let Some(m) = self.members.get_mut(addr) {
+            m.state = MemberState::Dead;
+        }
+    }
+
+    /// Forget `addr` entirely (a completed drain). A later `Join` from
+    /// the same address starts the lifecycle over.
+    pub fn remove(&mut self, addr: &str) {
+        self.members.remove(addr);
+    }
+
+    /// Addresses waiting in `joining`, in deterministic (sorted) order
+    /// — what the supervisor admits at the next sweep boundary.
+    pub fn pending_joins(&self) -> Vec<String> {
+        self.members
+            .iter()
+            .filter(|(_, m)| m.state == MemberState::Joining)
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    /// Addresses excluded from *new-user* placement: everything not
+    /// `active`. Draining members keep serving the shards they already
+    /// own — exclusion only steers where new users land.
+    pub fn non_placeable_addrs(&self) -> BTreeSet<String> {
+        self.members
+            .iter()
+            .filter(|(_, m)| m.state != MemberState::Active)
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    pub fn state(&self, addr: &str) -> Option<MemberState> {
+        self.members.get(addr).map(|m| m.state)
+    }
+
+    /// Whether `addr` is a static (`worker_addrs`) bootstrap member.
+    pub fn is_static(&self, addr: &str) -> bool {
+        self.members.get(addr).map_or(false, |m| m.is_static)
+    }
+
+    /// (address, state, is_static) rows for status output, sorted.
+    pub fn snapshot(&self) -> Vec<(String, MemberState, bool)> {
+        self.members
+            .iter()
+            .map(|(a, m)| (a.clone(), m.state, m.is_static))
+            .collect()
+    }
+}
+
+/// How long the registry listener waits on a connection before giving
+/// up on it — announces are a single tiny frame, so anything slower is
+/// a stuck peer that must not pin an accept-loop thread.
+const REGISTRY_READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The coordinator-side announce listener: accepts connections from
+/// `cola worker --join` daemons and records them in the shared
+/// [`WorkerRegistry`] as `joining`. Admission (dialing the daemon back,
+/// placing users on it) happens on the trainer thread at sweep
+/// boundaries — the listener only books the announce, so a burst of
+/// joins can never race the training loop's placement decisions.
+pub struct RegistryServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RegistryServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start accepting announces into `registry`.
+    pub fn bind(listen: &str, registry: Arc<Mutex<WorkerRegistry>>) -> Result<RegistryServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("worker registry: binding {listen}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cola-registry".into())
+            .spawn(move || registry_main(listener, registry, stop2))?;
+        Ok(RegistryServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The actually-bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting announces and join the listener thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop the same way WorkerDaemon::kill does
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RegistryServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The loopback address that reaches our own listener — used to wake a
+/// blocking `accept()` after the stop flag is set.
+fn wake_addr(addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        let ip = if addr.is_ipv4() {
+            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+        } else {
+            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+        };
+        SocketAddr::new(ip, addr.port())
+    } else {
+        addr
+    }
+}
+
+fn registry_main(
+    listener: TcpListener,
+    registry: Arc<Mutex<WorkerRegistry>>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("cola registry: accept failed: {e}");
+                // fd exhaustion etc. must not become a busy spin
+                std::thread::sleep(Duration::from_millis(200));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let reg = registry.clone();
+        // one short-lived thread per announce: a stuck peer times out on
+        // its own connection instead of blocking the accept loop
+        let spawned = std::thread::Builder::new()
+            .name("cola-registry-conn".into())
+            .spawn(move || {
+                if let Err(e) = serve_announce(stream, &reg) {
+                    eprintln!("cola registry: announce from {peer} failed: {e:#}");
+                }
+            });
+        if let Err(e) = spawned {
+            eprintln!("cola registry: spawning announce thread failed: {e}");
+        }
+    }
+}
+
+/// Serve one announce connection: `Join` frames register the sender,
+/// `Hello` is acked (a capability-probing joiner may lead with it),
+/// `Ping` answers with a zero-load `Pong` so fleet tooling can probe
+/// the listener, and anything else is rejected loudly.
+fn serve_announce(mut stream: TcpStream, registry: &Arc<Mutex<WorkerRegistry>>) -> Result<()> {
+    stream.set_read_timeout(Some(REGISTRY_READ_TIMEOUT))?;
+    let _ = stream.set_nodelay(true);
+    loop {
+        let msg = match wire::recv(&mut stream) {
+            Ok(m) => m,
+            // announce done; peer went away
+            Err(_) => return Ok(()),
+        };
+        match msg {
+            Msg::Join { addr } => {
+                if addr.is_empty() {
+                    wire::send(
+                        &mut stream,
+                        &Msg::Error("join announce carried an empty address".into()),
+                    )?;
+                    continue;
+                }
+                let state = crate::util::lock_recover(registry).join(&addr);
+                println!("cola: worker {addr} announced itself (now {state})");
+                wire::send(&mut stream, &Msg::Ack)?;
+            }
+            Msg::Hello { .. } => {
+                wire::send(&mut stream, &Msg::Ack)?;
+            }
+            Msg::Ping => {
+                wire::send(&mut stream, &Msg::Pong { load: 0 })?;
+            }
+            other => {
+                wire::send(
+                    &mut stream,
+                    &Msg::Error(format!(
+                        "unexpected message on registry side: {other:?}"
+                    )),
+                )?;
+            }
+        }
+    }
+}
+
+/// Daemon-side announce: tell the coordinator's registry listener that
+/// a worker is serving on `own_addr`. Retries the connect with the
+/// standard backoff schedule (the daemon may come up before the
+/// coordinator), then fails loudly — a mis-pointed `--join` (e.g. at a
+/// worker daemon, or at a pre-registry coordinator) gets the remote's
+/// "unexpected message" rejection verbatim instead of a silent no-op.
+pub fn join_coordinator(coordinator: &str, own_addr: &str) -> Result<()> {
+    let mut stream = connect_with_backoff(coordinator, CONNECT_ATTEMPTS, BASE_BACKOFF)
+        .with_context(|| format!("joining coordinator at {coordinator}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    wire::send(&mut stream, &Msg::Join { addr: own_addr.to_string() })?;
+    match wire::recv(&mut stream)? {
+        Msg::Ack => Ok(()),
+        Msg::Error(e) => bail!(
+            "coordinator at {coordinator} rejected the join announce: {e} \
+             (is --join pointed at the registry listener printed by the \
+             coordinator, not at a worker or a pre-registry build?)"
+        ),
+        other => bail!("unexpected reply to join announce: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_walks_joining_active_draining_dead() {
+        let mut reg = WorkerRegistry::new();
+        assert_eq!(reg.join("a:1"), MemberState::Joining);
+        assert_eq!(reg.state("a:1"), Some(MemberState::Joining));
+        assert_eq!(reg.pending_joins(), vec!["a:1".to_string()]);
+        assert!(reg.non_placeable_addrs().contains("a:1"));
+
+        reg.activate("a:1");
+        assert_eq!(reg.state("a:1"), Some(MemberState::Active));
+        assert!(reg.pending_joins().is_empty());
+        assert!(reg.non_placeable_addrs().is_empty());
+
+        reg.begin_drain("a:1");
+        assert_eq!(reg.state("a:1"), Some(MemberState::Draining));
+        assert!(reg.non_placeable_addrs().contains("a:1"));
+
+        reg.mark_dead("a:1");
+        assert_eq!(reg.state("a:1"), Some(MemberState::Dead));
+    }
+
+    #[test]
+    fn dead_member_may_rejoin_but_live_states_are_sticky() {
+        let mut reg = WorkerRegistry::new();
+        reg.join("a:1");
+        reg.activate("a:1");
+        // a re-sent Join must not demote a live member
+        assert_eq!(reg.join("a:1"), MemberState::Active);
+        reg.begin_drain("a:1");
+        assert_eq!(reg.join("a:1"), MemberState::Draining);
+        // a stale admit must not cancel a drain
+        reg.activate("a:1");
+        assert_eq!(reg.state("a:1"), Some(MemberState::Draining));
+        // but a daemon restart on a dead endpoint starts over
+        reg.mark_dead("a:1");
+        assert_eq!(reg.join("a:1"), MemberState::Joining);
+        assert!(!reg.is_static("a:1"));
+    }
+
+    #[test]
+    fn static_members_enter_active_and_are_flagged() {
+        let mut reg = WorkerRegistry::new();
+        reg.register_static("b:2");
+        assert_eq!(reg.state("b:2"), Some(MemberState::Active));
+        assert!(reg.is_static("b:2"));
+        assert!(reg.non_placeable_addrs().is_empty());
+    }
+
+    #[test]
+    fn removed_member_restarts_the_lifecycle() {
+        let mut reg = WorkerRegistry::new();
+        reg.join("c:3");
+        reg.activate("c:3");
+        reg.begin_drain("c:3");
+        reg.remove("c:3");
+        assert_eq!(reg.state("c:3"), None);
+        assert_eq!(reg.join("c:3"), MemberState::Joining);
+    }
+
+    #[test]
+    fn announce_listener_registers_joiners_over_the_wire() {
+        let reg = Arc::new(Mutex::new(WorkerRegistry::new()));
+        let mut srv = RegistryServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.local_addr().to_string();
+        join_coordinator(&addr, "10.1.2.3:7701").unwrap();
+        assert_eq!(
+            crate::util::lock_recover(&reg).state("10.1.2.3:7701"),
+            Some(MemberState::Joining)
+        );
+        // idempotent re-announce
+        join_coordinator(&addr, "10.1.2.3:7701").unwrap();
+        assert_eq!(crate::util::lock_recover(&reg).pending_joins().len(), 1);
+        srv.stop();
+    }
+
+    #[test]
+    fn empty_announce_is_rejected_loudly() {
+        let reg = Arc::new(Mutex::new(WorkerRegistry::new()));
+        let mut srv = RegistryServer::bind("127.0.0.1:0", reg.clone()).unwrap();
+        let addr = srv.local_addr().to_string();
+        let err = join_coordinator(&addr, "").unwrap_err();
+        assert!(err.to_string().contains("rejected"), "got: {err:#}");
+        srv.stop();
+    }
+}

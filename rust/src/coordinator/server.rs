@@ -23,9 +23,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::buffer::AdaptationBuffers;
 use super::driver::{Driver, TaskData};
-use super::offload::{
-    rendezvous_owner, FitJob, FitResult, PoolSupervisor, TransferModel, WorkerPool,
-};
+use super::offload::{FitJob, FitResult, PoolSupervisor, TransferModel, WorkerPool};
+use super::registry::{RegistryServer, WorkerRegistry};
 use crate::adapters::{AdapterParams, OptState, OptimizerCfg, SiteAdapter};
 use crate::config::{AdapterKind, FailoverPolicy, Method, Mode, Optimizer, SimdMode,
                     Task, TrainConfig, TransportKind};
@@ -154,6 +153,11 @@ struct IntervalSlot {
 /// bounds cascading failures, not ordinary operation.
 const MAX_RECOVERY_ROUNDS: usize = 4;
 
+/// How long an all-dynamic trainer (`worker_addrs` empty, registry
+/// bound) waits for the first `cola worker --join` announce before
+/// failing loudly.
+const BOOTSTRAP_JOIN_WAIT: Duration = Duration::from_secs(60);
+
 /// Move a slot's error out (leaving a tombstone) so it can be returned
 /// by value with context attached.
 fn take_slot_error(s: &mut IntervalSlot) -> anyhow::Error {
@@ -173,6 +177,13 @@ pub struct Trainer {
     pool: Option<WorkerPool>,
     /// elastic-pool health + migration (tcp transport only)
     supervisor: Option<PoolSupervisor>,
+    /// fleet membership book (tcp transport only); shared with the
+    /// supervisor and, when `registry_listen` is set, with the announce
+    /// listener thread
+    registry: Option<std::sync::Arc<std::sync::Mutex<WorkerRegistry>>>,
+    /// the `cola worker --join` announce listener; held so it serves
+    /// for the life of the run and stops on drop
+    registry_server: Option<RegistryServer>,
     /// fits transiently lost to dying daemons and recovered by
     /// re-dispatch, in loss order — each names its (user, site)
     lost: Vec<(usize, String)>,
@@ -230,6 +241,8 @@ impl Trainer {
             coupled_opt: None,
             pool: None,
             supervisor: None,
+            registry: None,
+            registry_server: None,
             lost: Vec::new(),
             pending: Vec::new(),
             buffers: AdaptationBuffers::default(),
@@ -308,8 +321,30 @@ impl Trainer {
             // --offload`); determinism holds either way because both
             // targets implement the same Eq. 6 update bit-exactly
             TransportKind::Tcp => {
+                // membership book: static worker_addrs enter active (the
+                // bootstrap fallback, and how v1/v2 daemons without the
+                // registry capability participate); --join daemons flow
+                // through joining -> active at sweep boundaries
+                let registry = std::sync::Arc::new(std::sync::Mutex::new(
+                    WorkerRegistry::new(),
+                ));
+                for a in &self.cfg.worker_addrs {
+                    crate::util::lock_recover(&registry).register_static(a);
+                }
+                if !self.cfg.registry_listen.is_empty() {
+                    let srv =
+                        RegistryServer::bind(&self.cfg.registry_listen, registry.clone())?;
+                    // greppable by scripts/distributed_smoke.sh registry mode
+                    println!("cola: worker registry listening on {}", srv.local_addr());
+                    self.registry_server = Some(srv);
+                }
+                let boot_addrs = if self.cfg.worker_addrs.is_empty() {
+                    Self::await_bootstrap_joiners(&registry)?
+                } else {
+                    self.cfg.worker_addrs.clone()
+                };
                 let (pool, standbys) = WorkerPool::connect_tcp_with_standbys(
-                    &self.cfg.worker_addrs,
+                    &boot_addrs,
                     &self.cfg.standby_addrs,
                     &link,
                 )?;
@@ -322,7 +357,10 @@ impl Trainer {
                     standbys,
                     migrate,
                     self.cfg.heartbeat_interval,
-                );
+                )
+                .with_registry(registry.clone())
+                .with_replication(self.cfg.replicate);
+                self.registry = Some(registry);
                 (pool, Some(sup))
             }
         };
@@ -347,14 +385,15 @@ impl Trainer {
                 }
                 let adapter = SiteAdapter::new(&s.site, params, &self.opt_cfg);
                 if migrate {
-                    // seed the shadow checkpoint from the state we are
+                    // seed the shadow checkpoint (and the buddy replica,
+                    // when replication is on) from the state we are
                     // about to install — no extra round-trip needed
                     if let Some(sup) = supervisor.as_mut() {
-                        sup.checkpoint(
-                            user,
-                            &s.site,
-                            wire::encode_state(user, &s.site, &adapter),
-                        );
+                        let blob = wire::encode_state(user, &s.site, &adapter);
+                        if sup.replicate_enabled() {
+                            sup.replicate_shard(&pool, user, &s.site, blob.clone());
+                        }
+                        sup.checkpoint(user, &s.site, blob);
                     }
                 }
                 pool.for_user(user).register(user, &s.site, adapter)?;
@@ -363,6 +402,55 @@ impl Trainer {
         self.pool = Some(pool);
         self.supervisor = supervisor;
         Ok(())
+    }
+
+    /// Bootstrap a pool with no static `worker_addrs`: wait (bounded)
+    /// for at least one `cola worker --join` announce, then take every
+    /// joiner booked by that moment as the founding membership —
+    /// activated directly, since the trainer connects to them before
+    /// any training state exists to place.
+    fn await_bootstrap_joiners(
+        registry: &std::sync::Arc<std::sync::Mutex<WorkerRegistry>>,
+    ) -> Result<Vec<String>> {
+        // lint:allow(determinism): bootstrap wait only — membership settles before any curve math runs
+        let t0 = Instant::now();
+        loop {
+            let pending = crate::util::lock_recover(registry).pending_joins();
+            if !pending.is_empty() {
+                let mut reg = crate::util::lock_recover(registry);
+                for a in &pending {
+                    reg.activate(a);
+                }
+                drop(reg);
+                println!(
+                    "cola: bootstrapping the worker pool from {} joined worker(s): {}",
+                    pending.len(),
+                    pending.join(", ")
+                );
+                return Ok(pending);
+            }
+            if t0.elapsed() >= BOOTSTRAP_JOIN_WAIT {
+                bail!(
+                    "worker_addrs is empty and no worker announced itself within \
+                     {}s — start daemons with `cola worker --join <registry addr>` \
+                     or set worker_addrs",
+                    BOOTSTRAP_JOIN_WAIT.as_secs()
+                );
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// The fleet membership book (tcp transport only) — read by the
+    /// registry integration tests and status output.
+    pub fn registry(&self) -> Option<&std::sync::Arc<std::sync::Mutex<WorkerRegistry>>> {
+        self.registry.as_ref()
+    }
+
+    /// Where the `--join` announce listener is bound, when
+    /// `registry_listen` is set (resolves `:0` to the real port).
+    pub fn registry_addr(&self) -> Option<std::net::SocketAddr> {
+        self.registry_server.as_ref().map(|s| s.local_addr())
     }
 
     fn init_coupled(&mut self, method: Method) -> Result<()> {
@@ -744,12 +832,16 @@ impl Trainer {
         self.collect_pending()
     }
 
-    /// Heartbeat the pool when a sweep is due and fail dead members
-    /// over (standby promotion + checkpoint restore) BEFORE any
-    /// dispatch. Only active under `failover = "migrate"`: with
-    /// `"fail"` the trainer sends no v3 control traffic at all — the
-    /// wire stays exactly as compatible as before this feature, and a
-    /// death surfaces reactively through the lost fits themselves.
+    /// Heartbeat the pool when a sweep is due, fail dead members over
+    /// (buddy promotion / standby promotion / checkpoint restore)
+    /// BEFORE any dispatch, then admit pending `--join` workers — all
+    /// at the same deterministic interval boundary, so membership never
+    /// changes mid-interval. The probe also snapshots per-member loads
+    /// for load-aware placement. Only active under `failover =
+    /// "migrate"`: with `"fail"` the trainer sends no v3 control
+    /// traffic at all — the wire stays exactly as compatible as before
+    /// this feature, and a death surfaces reactively through the lost
+    /// fits themselves.
     fn sweep_pool(&mut self) -> Result<()> {
         let Trainer { supervisor, pool, timings, .. } = self;
         let (Some(sup), Some(pool)) = (supervisor.as_mut(), pool.as_mut()) else {
@@ -759,12 +851,17 @@ impl Trainer {
             return Ok(());
         }
         let dead = sup.find_dead(pool);
-        if dead.is_empty() {
-            return Ok(());
+        if !dead.is_empty() {
+            let stats = sup.fail_over(pool, &dead)?;
+            timings.migrations += 1;
+            timings.migrated_state_bytes += stats.bytes_moved as u64;
+            timings.shard_promotions += stats.shards_promoted as u64;
         }
-        let stats = sup.fail_over(pool, &dead)?;
-        timings.migrations += 1;
-        timings.migrated_state_bytes += stats.bytes_moved as u64;
+        let stats = sup.admit_joiners(pool)?;
+        if stats.users_moved > 0 || stats.shards_moved > 0 {
+            timings.migrations += 1;
+            timings.migrated_state_bytes += stats.bytes_moved as u64;
+        }
         Ok(())
     }
 
@@ -936,25 +1033,28 @@ impl Trainer {
         };
         let pool = pool.as_mut().ok_or_else(|| anyhow!("no worker pool"))?;
         let old_keys = pool.keys();
+        // per-slot owner snapshot BEFORE failover mutates the pool —
+        // with load-aware placement the owner is whatever shard_of
+        // says (overrides included), not the plain rendezvous winner
+        let slot_owners: Vec<String> =
+            slots.iter().map(|s| pool.owner_key(s.user)).collect();
         let dead = sup.find_dead(pool);
         let dead_keys: std::collections::BTreeSet<&String> =
             dead.iter().map(|&i| &old_keys[i]).collect();
         // a failure whose owner is alive is a real error, not a transient
-        for s in slots.iter_mut() {
-            if s.outcome.is_err() {
-                let owner = &old_keys[rendezvous_owner(&old_keys, s.user)];
-                if !dead_keys.contains(owner) {
-                    return Err(take_slot_error(s).context(format!(
-                        "fit for (user {}, site {}) failed but its worker \
-                         {owner} is alive — not a failover case",
-                        s.user, s.site
-                    )));
-                }
+        for (s, owner) in slots.iter_mut().zip(&slot_owners) {
+            if s.outcome.is_err() && !dead_keys.contains(owner) {
+                return Err(take_slot_error(s).context(format!(
+                    "fit for (user {}, site {}) failed but its worker \
+                     {owner} is alive — not a failover case",
+                    s.user, s.site
+                )));
             }
         }
         let stats = sup.fail_over(pool, &dead)?;
         timings.migrations += 1;
         timings.migrated_state_bytes += stats.bytes_moved as u64;
+        timings.shard_promotions += stats.shards_promoted as u64;
         // Re-dispatch everything the dead members owned whose step is
         // not yet in a checkpoint. That includes fits that SUCCEEDED on
         // a dead daemon before it died: their reply was real, but the
@@ -966,7 +1066,7 @@ impl Trainer {
         let mut retries: Vec<(usize, std::sync::mpsc::Receiver<Result<FitResult>>)> =
             Vec::new();
         for (i, s) in slots.iter_mut().enumerate() {
-            let owner = &old_keys[rendezvous_owner(&old_keys, s.user)];
+            let owner = &slot_owners[i];
             if !dead_keys.contains(owner) || s.refreshed {
                 continue;
             }
@@ -1025,6 +1125,13 @@ impl Trainer {
             }
             match pool.for_user(s.user).export_state(s.user, &s.site) {
                 Ok(blob) => {
+                    // the post-interval push point: the same blob seeds
+                    // the shadow checkpoint AND the buddy replica, so a
+                    // promoted replica is bit-identical to a checkpoint
+                    // restore by construction
+                    if sup.replicate_enabled() {
+                        sup.replicate_shard(pool, s.user, &s.site, blob.clone());
+                    }
                     sup.checkpoint(s.user, &s.site, blob);
                     s.refreshed = true;
                 }

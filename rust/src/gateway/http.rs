@@ -46,11 +46,23 @@ impl Request {
 pub struct HttpError {
     pub status: u16,
     pub message: String,
+    /// Seconds to advertise in a 429's `Retry-After` header. `None`
+    /// falls back to the 1-second floor — a flat hint was always wrong
+    /// for deep backlogs, so admission-control sites derive this from
+    /// backlog depth x smoothed per-job runtime (see
+    /// `Gateway::retry_after_hint`).
+    pub retry_after: Option<u64>,
 }
 
 impl HttpError {
     pub fn new(status: u16, message: impl Into<String>) -> HttpError {
-        HttpError { status, message: message.into() }
+        HttpError { status, message: message.into(), retry_after: None }
+    }
+
+    /// Attach a derived `Retry-After` hint (seconds) to a 429.
+    pub fn with_retry_after(mut self, secs: u64) -> HttpError {
+        self.retry_after = Some(secs);
+        self
     }
 }
 
@@ -213,14 +225,16 @@ pub fn respond_error(w: &mut TcpStream, e: &HttpError) -> std::io::Result<()> {
                 .collect()
         )
     );
-    let extra: &[(&str, &str)] = if e.status == 401 {
-        &[("WWW-Authenticate", "Bearer realm=\"cola\"")]
+    // formatted into an owned string declared before `extra` so the
+    // borrow lives across the respond() call
+    let retry_after = e.retry_after.unwrap_or(1).max(1).to_string();
+    let mut extra: Vec<(&str, &str)> = Vec::new();
+    if e.status == 401 {
+        extra.push(("WWW-Authenticate", "Bearer realm=\"cola\""));
     } else if e.status == 429 {
-        &[("Retry-After", "1")]
-    } else {
-        &[]
-    };
-    respond(w, e.status, "application/json", extra, body.as_bytes())
+        extra.push(("Retry-After", retry_after.as_str()));
+    }
+    respond(w, e.status, "application/json", &extra, body.as_bytes())
 }
 
 /// Open a chunked-transfer response (the progress stream).

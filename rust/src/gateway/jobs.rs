@@ -76,6 +76,10 @@ struct JobRecord {
     config: String,
     state: JobState,
     started_seq: Option<u64>,
+    /// Wall-clock start stamp feeding the runtime EMA. Never surfaces
+    /// in any curve or artifact — it only tunes the 429 Retry-After
+    /// hint, which is advisory by spec.
+    started_at: Option<std::time::Instant>,
     error: Option<String>,
     progress: Vec<String>,
     curves: Option<String>,
@@ -86,6 +90,25 @@ struct Inner {
     next_id: u64,
     next_seq: u64,
     jobs: BTreeMap<u64, JobRecord>,
+    /// Smoothed per-job runtime in ms (`ema = ema*3/4 + sample/4`),
+    /// seeded by the first completed job. Shared across tenants: the
+    /// runner is single-threaded, so fleet-wide runtime is the right
+    /// estimate for how long a queue slot takes to drain.
+    runtime_ema_ms: Option<u64>,
+}
+
+impl Inner {
+    /// Fold one completed job's elapsed runtime into the EMA.
+    fn observe_runtime(&mut self, id: u64) {
+        let Some(started) = self.jobs.get(&id).and_then(|j| j.started_at) else {
+            return;
+        };
+        let sample = started.elapsed().as_millis().min(u64::MAX as u128) as u64;
+        self.runtime_ema_ms = Some(match self.runtime_ema_ms {
+            None => sample,
+            Some(ema) => ema - ema / 4 + sample / 4,
+        });
+    }
 }
 
 /// The registry. One per gateway; shared between connection threads
@@ -104,7 +127,12 @@ impl Default for JobRegistry {
 impl JobRegistry {
     pub fn new() -> JobRegistry {
         JobRegistry {
-            inner: Mutex::new(Inner { next_id: 1, next_seq: 1, jobs: BTreeMap::new() }),
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                next_seq: 1,
+                jobs: BTreeMap::new(),
+                runtime_ema_ms: None,
+            }),
             cv: Condvar::new(),
         }
     }
@@ -121,6 +149,7 @@ impl JobRegistry {
                 config,
                 state: JobState::Queued,
                 started_seq: None,
+                started_at: None,
                 error: None,
                 progress: Vec::new(),
                 curves: None,
@@ -148,6 +177,8 @@ impl JobRegistry {
         if let Some(j) = inner.jobs.get_mut(&id) {
             j.state = JobState::Running;
             j.started_seq = Some(inner.next_seq);
+            // lint:allow(determinism): feeds only the advisory Retry-After hint, never a curve
+            j.started_at = Some(std::time::Instant::now());
             inner.next_seq += 1;
         }
         drop(g);
@@ -165,21 +196,35 @@ impl JobRegistry {
     /// Transition to Done with the result artifacts. `adapter` is
     /// `None` for methods with nothing exportable (coupled baselines).
     pub fn finish(&self, id: u64, curves: String, adapter: Option<Vec<u8>>) {
-        if let Some(j) = lock_recover(&self.inner).jobs.get_mut(&id) {
+        let mut g = lock_recover(&self.inner);
+        g.observe_runtime(id);
+        if let Some(j) = g.jobs.get_mut(&id) {
             j.state = JobState::Done;
             j.curves = Some(curves);
             j.adapter = adapter;
         }
+        drop(g);
         self.cv.notify_all();
     }
 
     /// Transition to Failed with an error message.
     pub fn fail(&self, id: u64, error: String) {
-        if let Some(j) = lock_recover(&self.inner).jobs.get_mut(&id) {
+        let mut g = lock_recover(&self.inner);
+        // failed jobs still held a runner slot for their whole runtime,
+        // so they are real samples for the backlog-drain estimate
+        g.observe_runtime(id);
+        if let Some(j) = g.jobs.get_mut(&id) {
             j.state = JobState::Failed;
             j.error = Some(error);
         }
+        drop(g);
         self.cv.notify_all();
+    }
+
+    /// Smoothed per-job runtime in ms, if any job has completed yet.
+    /// Admission control turns this into the 429 `Retry-After` hint.
+    pub fn runtime_ema_ms(&self) -> Option<u64> {
+        lock_recover(&self.inner).runtime_ema_ms
     }
 
     /// Owner-checked status view; `None` = not this tenant's job.

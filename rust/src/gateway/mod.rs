@@ -443,10 +443,22 @@ fn handle_fit(shared: &Shared, w: &mut TcpStream, tenant: &str, body: &[u8]) {
                 &HttpError::new(
                     429,
                     format!("tenant backlog is full ({cap} queued jobs)"),
-                ),
+                )
+                .with_retry_after(retry_after_secs(cap, shared.jobs.runtime_ema_ms())),
             );
         }
     }
+}
+
+/// Derive a 429 `Retry-After` hint (seconds) from how many jobs the
+/// tenant has queued and the smoothed per-job runtime: the earliest a
+/// retry can possibly be admitted is once one backlog slot drains.
+/// Deterministic given registry state: before any job has completed,
+/// the estimate is a flat 1 s/job, so the value equals the backlog cap.
+/// Clamped to [1, 60] — an advisory hint, not a reservation.
+fn retry_after_secs(backlog: usize, runtime_ema_ms: Option<u64>) -> u64 {
+    let est_ms = runtime_ema_ms.unwrap_or(1000).max(1);
+    (backlog as u64).saturating_mul(est_ms).div_ceil(1000).clamp(1, 60)
 }
 
 fn handle_status(shared: &Shared, w: &mut TcpStream, tenant: &str, id: u64) {
@@ -685,4 +697,24 @@ fn progress_line(p: &Progress, interval: u64) -> String {
         Json::Num(p.bytes_returned as f64),
     );
     Json::Obj(obj).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::retry_after_secs;
+
+    #[test]
+    fn retry_after_scales_with_backlog_and_runtime() {
+        // no completed job yet: 1 s/job default, value = backlog depth
+        assert_eq!(retry_after_secs(4, None), 4);
+        // fast jobs round up to whole seconds, floored at 1
+        assert_eq!(retry_after_secs(4, Some(100)), 1);
+        assert_eq!(retry_after_secs(8, Some(300)), 3);
+        // slow jobs: depth x runtime, capped at the 60 s ceiling
+        assert_eq!(retry_after_secs(8, Some(2000)), 16);
+        assert_eq!(retry_after_secs(64, Some(30_000)), 60);
+        // degenerate inputs stay in-range
+        assert_eq!(retry_after_secs(0, Some(5000)), 1);
+        assert_eq!(retry_after_secs(usize::MAX, Some(u64::MAX)), 60);
+    }
 }

@@ -142,6 +142,94 @@ mod tests {
         assert_eq!(q.pop(), None);
     }
 
+    /// Churn property: random enqueue/pop interleavings — tenants
+    /// drain to empty, leave the backlog map, and rejoin later — never
+    /// break strict wrap-around rotation. In particular the cursor may
+    /// keep naming a tenant that has since been removed; the next pop
+    /// must still pick the first live tenant strictly after it in
+    /// sorted order, wrapping. The expectation is recomputed here from
+    /// an independently-maintained shadow backlog, so a cursor-reset or
+    /// stale-cursor regression in `pop` shows up as a mismatch.
+    #[test]
+    fn churn_keeps_wraparound_rotation_fair() {
+        let mut rng = crate::rng::Rng::new(0xC01A_FA12);
+        let tenants = ["anna", "bob", "carol", "dave", "erin"];
+        let cap = 4;
+        let mut q = AdmissionQueue::new(cap);
+        let mut shadow: BTreeMap<String, VecDeque<u64>> = BTreeMap::new();
+        let mut cursor: Option<String> = None;
+        let mut next_job = 0u64;
+        for _ in 0..4000 {
+            if rng.below(5) < 3 {
+                let t = tenants[rng.below(tenants.len())];
+                next_job += 1;
+                match q.push(t, next_job) {
+                    Ok(depth) => {
+                        let sq = shadow.entry(t.to_string()).or_default();
+                        sq.push_back(next_job);
+                        assert_eq!(depth, sq.len());
+                    }
+                    Err(reported) => {
+                        assert_eq!(reported, cap);
+                        assert_eq!(shadow.get(t).map_or(0, VecDeque::len), cap);
+                    }
+                }
+            } else {
+                let live: Vec<String> = shadow
+                    .iter()
+                    .filter(|(_, v)| !v.is_empty())
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                let expect = live.first().map(|first| match &cursor {
+                    None => first.clone(),
+                    Some(c) => live
+                        .iter()
+                        .find(|k| k.as_str() > c.as_str())
+                        .unwrap_or(first)
+                        .clone(),
+                });
+                match (q.pop(), expect) {
+                    (None, None) => {}
+                    (Some((t, j)), Some(want)) => {
+                        assert_eq!(t, want);
+                        let sq = shadow.get_mut(&t).unwrap();
+                        assert_eq!(sq.pop_front(), Some(j));
+                        if sq.is_empty() {
+                            shadow.remove(&t);
+                        }
+                        cursor = Some(t);
+                    }
+                    (got, want) => panic!("pop mismatch: got {got:?}, want {want:?}"),
+                }
+            }
+        }
+    }
+
+    /// With every tenant fully backlogged, per-tenant service counts
+    /// differ by at most 1 at every prefix of the pop sequence: strict
+    /// round robin never gives one tenant two turns before another
+    /// gets its first.
+    #[test]
+    fn service_counts_spread_at_most_one_when_all_backlogged() {
+        let cap = 8;
+        let mut q = AdmissionQueue::new(cap);
+        let tenants = ["a", "b", "c", "d"];
+        for t in tenants {
+            for j in 0..cap as u64 {
+                q.push(t, j).unwrap();
+            }
+        }
+        let mut served: BTreeMap<&str, usize> = tenants.iter().map(|t| (*t, 0)).collect();
+        for _ in 0..tenants.len() * cap {
+            let (t, _) = q.pop().unwrap();
+            *served.get_mut(t.as_str()).unwrap() += 1;
+            let lo = *served.values().min().unwrap();
+            let hi = *served.values().max().unwrap();
+            assert!(hi - lo <= 1, "unfair prefix: {served:?}");
+        }
+        assert!(q.pop().is_none());
+    }
+
     #[test]
     fn per_tenant_backlog_is_bounded() {
         let mut q = AdmissionQueue::new(2);

@@ -68,6 +68,11 @@ fn print_help() {
                     --standby_addrs host:port,... (cold spare daemons)\n\
                     --failover fail|migrate (survive daemon death bit-exactly)\n\
                     --heartbeat_interval N (liveness sweep every N flushes)\n\
+                    --registry_listen host:port (accept `cola worker --join`\n\
+                    self-registrations; with it, worker_addrs may be empty)\n\
+                    --replicate true|false (push each shard's post-interval\n\
+                    state to a buddy daemon; failed shards promote the buddy\n\
+                    replica in place — zero recovery rounds)\n\
                     --offload_wire f32|bf16 (bf16 halves fit-tensor bytes on\n\
                     the TCP wire; replies, snapshots, and migration state\n\
                     blobs always stay f32, so bf16 composes with\n\
@@ -102,6 +107,8 @@ fn print_help() {
                     --listen 127.0.0.1:0 --offload cpu|gpu --threads N\n\
                     --simd auto|off|on|fma (kernel dispatch tier)\n\
                     --simulate_link cpu|gpu (add a modeled link delay)\n\
+                    --join host:port (self-register with a coordinator's\n\
+                    worker registry listener — see --registry_listen)\n\
                     --stop host:port (clean-shutdown a running daemon)\n\
            curvediff  numerically compare two --loss_out curve files\n\
                     cola curvediff a.json b.json [--tol T]\n\
@@ -236,11 +243,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // silently launch a daemon with the wrong topology
     const WORKER_KEYS: &[&str] =
         &["stop", "listen", "offload", "threads", "simd", "simulate_link",
-          "artifacts_dir"];
+          "artifacts_dir", "join"];
     for k in args.options.keys() {
         if !WORKER_KEYS.contains(&k.as_str()) {
             bail!("unknown worker option --{k} \
-                   (listen|offload|threads|simd|simulate_link|artifacts_dir|stop)");
+                   (listen|offload|threads|simd|simulate_link|artifacts_dir|join|stop)");
         }
     }
     args.require_no_flags("worker")?;
@@ -275,6 +282,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // launchers (CI, scripts) scrape this line for the resolved port;
     // stdout is line-buffered so it is visible immediately
     println!("cola worker listening on {}", daemon.local_addr());
+    if let Some(coordinator) = args.get("join") {
+        // announce before blocking in join(): a mis-pointed --join must
+        // kill the daemon loudly, not leave it listening unregistered
+        cola::coordinator::join_coordinator(coordinator, &daemon.local_addr().to_string())?;
+        println!("cola worker: registered with coordinator at {coordinator}");
+    }
     daemon.join();
     println!("cola worker: shutdown handshake complete, exiting");
     Ok(())

@@ -109,6 +109,10 @@ pub struct Timings {
     /// adaptation intervals that stalled on a recovery round before
     /// their replies could apply
     pub stall_intervals: u64,
+    /// shards recovered by promoting a buddy replica in place (zero
+    /// wire bytes, zero recovery rounds) instead of restoring a shadow
+    /// checkpoint — the `replicate = true` fast path
+    pub shard_promotions: u64,
     /// actual request bytes put on the wire by TCP transports (frame
     /// headers included) — the quantity `offload_wire = "bf16"`
     /// shrinks; 0 for in-process transports. Unlike `bytes_offloaded`
@@ -151,6 +155,12 @@ impl Timings {
                 self.lost_fits,
                 self.stall_intervals,
             ));
+        }
+        if self.shard_promotions > 0 {
+            // greppable exact count: distributed_smoke.sh's registry mode
+            // asserts the kill was absorbed by buddy promotion, not by a
+            // checkpoint-restore recovery round
+            s.push_str(&format!(" | shards promoted {}", self.shard_promotions));
         }
         s
     }

@@ -129,6 +129,32 @@ pub trait Transport: Send {
     /// absent key is a no-op.
     fn evict_state(&self, user: usize, site: &str) -> Result<()>;
 
+    /// Store a shard's replica blob (a [`wire::encode_state`] payload,
+    /// bit-exact) in the worker's passive replica store. Replicas never
+    /// serve fits until promoted, so a buddy holds copies of shards it
+    /// does not own. Only meaningful for remote workers — an in-process
+    /// pool shares one failure domain with the trainer, so replicating
+    /// inside it buys nothing and the default refuses loudly.
+    fn put_replica(&self, blob: Vec<u8>) -> Result<()> {
+        let _ = blob;
+        anyhow::bail!("transport {} does not hold buddy replicas", self.describe())
+    }
+
+    /// Promote a previously pushed replica to live state in place —
+    /// the zero-wire-cost half of buddy failover. Errors if no replica
+    /// exists for the key.
+    fn promote_replica(&self, user: usize, site: &str) -> Result<()> {
+        let _ = (user, site);
+        anyhow::bail!("transport {} does not hold buddy replicas", self.describe())
+    }
+
+    /// Discard a replica after the buddy assignment moved elsewhere.
+    /// Dropping an absent key is a no-op.
+    fn drop_replica(&self, user: usize, site: &str) -> Result<()> {
+        let _ = (user, site);
+        anyhow::bail!("transport {} does not hold buddy replicas", self.describe())
+    }
+
     /// Drain the request-byte ledger: bytes this transport has put on
     /// the wire (frame headers included) since the last call. Feeds
     /// `Timings::wire_bytes` — the bytes/interval trajectory that the

@@ -58,6 +58,11 @@ pub const BASE_BACKOFF: Duration = Duration::from_millis(50);
 /// How long the connect-time liveness probe waits for the daemon to
 /// answer before declaring the link dead-on-arrival.
 pub const PROBE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a liveness [`Transport::ping`] waits for its `Pong` before
+/// declaring the daemon unreachable. Deliberately much shorter than
+/// [`PROBE_TIMEOUT`]: a heartbeat sweep pings every member in sequence,
+/// so one hung daemon must not stall the whole sweep.
+pub const PING_DEADLINE: Duration = Duration::from_secs(2);
 
 /// Everything a [`TcpWorker`] link is built with beyond its address:
 /// the reconnect schedule, the tenant namespace, and the FitBatch /
@@ -134,10 +139,12 @@ enum ClientCmd {
     FitBatch(Vec<(FitJob, Sender<Result<FitResult>>)>),
     Snapshot { user: usize, site: String, reply: Sender<Result<AdapterParams>> },
     StateBytes(Sender<Result<usize>>),
-    Ping(Sender<Result<u64>>),
     ExportState { user: usize, site: String, reply: Sender<Result<Vec<u8>>> },
     ImportState { blob: Vec<u8>, reply: Sender<Result<()>> },
     EvictState { user: usize, site: String, reply: Sender<Result<()>> },
+    PutReplica { blob: Vec<u8>, reply: Sender<Result<()>> },
+    PromoteReplica { user: usize, site: String, reply: Sender<Result<()>> },
+    DropReplica { user: usize, site: String, reply: Sender<Result<()>> },
     Disconnect,
 }
 
@@ -315,10 +322,27 @@ impl Transport for TcpWorker {
         rx.recv()?
     }
 
+    /// Liveness ping on a dedicated short-deadline connection.
+    /// Deliberately NOT routed through the client I/O thread: that
+    /// thread serializes commands, so a ping queued behind an in-flight
+    /// `FitBatch` would wait out the whole fit — and a hung daemon
+    /// would stall the heartbeat sweep indefinitely. A busy-but-alive
+    /// daemon answers from a fresh connection thread within
+    /// [`PING_DEADLINE`]; a dead or wedged one fails fast.
     fn ping(&self) -> Result<u64> {
-        let (tx, rx) = channel();
-        self.send_cmd(ClientCmd::Ping(tx))?;
-        rx.recv()?
+        let r = (|| -> Result<u64> {
+            // single connect attempt: a dead daemon must be *detected*,
+            // not patiently retried into looking alive
+            let mut stream = connect_with_backoff(&self.addr, 1, BASE_BACKOFF)?;
+            stream.set_read_timeout(Some(PING_DEADLINE))?;
+            let n = wire::send(&mut stream, &Msg::Ping)?;
+            self.wire_bytes.fetch_add(n as u64, Ordering::Relaxed);
+            match wire::recv(&mut stream)? {
+                Msg::Pong { load } => Ok(load),
+                other => unexpected(other),
+            }
+        })();
+        r.map_err(|e| anyhow!("worker {} @ {}: ping: {e:#}", self.id, self.addr))
     }
 
     fn export_state(&self, user: usize, site: &str) -> Result<Vec<u8>> {
@@ -336,6 +360,24 @@ impl Transport for TcpWorker {
     fn evict_state(&self, user: usize, site: &str) -> Result<()> {
         let (tx, rx) = channel();
         self.send_cmd(ClientCmd::EvictState { user, site: site.to_string(), reply: tx })?;
+        rx.recv()?
+    }
+
+    fn put_replica(&self, blob: Vec<u8>) -> Result<()> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::PutReplica { blob, reply: tx })?;
+        rx.recv()?
+    }
+
+    fn promote_replica(&self, user: usize, site: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::PromoteReplica { user, site: site.to_string(), reply: tx })?;
+        rx.recv()?
+    }
+
+    fn drop_replica(&self, user: usize, site: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.send_cmd(ClientCmd::DropReplica { user, site: site.to_string(), reply: tx })?;
         rx.recv()?
     }
 
@@ -669,13 +711,6 @@ fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
                 });
                 let _ = reply.send(r.map_err(wrap));
             }
-            ClientCmd::Ping(reply) => {
-                let r = link.request(&Msg::Ping).and_then(|(m, _)| match m {
-                    Msg::Pong { load } => Ok(load),
-                    other => unexpected(other),
-                });
-                let _ = reply.send(r.map_err(wrap));
-            }
             ClientCmd::ExportState { user, site, reply } => {
                 let r = link
                     .request(&Msg::StateExport { user, site })
@@ -697,6 +732,33 @@ fn client_main(mut link: Link, rx: Receiver<ClientCmd>) {
             ClientCmd::EvictState { user, site, reply } => {
                 let r = link
                     .request(&Msg::StateEvict { user, site })
+                    .and_then(|(m, _)| match m {
+                        Msg::Ack => Ok(()),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::PutReplica { blob, reply } => {
+                let r = link
+                    .request(&Msg::ReplicaPut(blob))
+                    .and_then(|(m, _)| match m {
+                        Msg::Ack => Ok(()),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::PromoteReplica { user, site, reply } => {
+                let r = link
+                    .request(&Msg::ReplicaPromote { user, site })
+                    .and_then(|(m, _)| match m {
+                        Msg::Ack => Ok(()),
+                        other => unexpected(other),
+                    });
+                let _ = reply.send(r.map_err(wrap));
+            }
+            ClientCmd::DropReplica { user, site, reply } => {
+                let r = link
+                    .request(&Msg::ReplicaDrop { user, site })
                     .and_then(|(m, _)| match m {
                         Msg::Ack => Ok(()),
                         other => unexpected(other),
@@ -960,6 +1022,21 @@ fn dispatch(msg: Msg, tenant: &str, core: &WorkerCore) -> Msg {
             core.evict_state(tenant, user, &site)?;
             Ok(Msg::Ack)
         }
+        Msg::ReplicaPut(blob) => {
+            core.put_replica(tenant, &blob)?;
+            Ok(Msg::Ack)
+        }
+        Msg::ReplicaPromote { user, site } => {
+            core.promote_replica(tenant, user, &site)?;
+            Ok(Msg::Ack)
+        }
+        Msg::ReplicaDrop { user, site } => {
+            core.drop_replica(tenant, user, &site);
+            Ok(Msg::Ack)
+        }
+        // Join is a registry-listener message; a worker daemon receiving
+        // it falls through to the loud rejection below, which is exactly
+        // what a mis-pointed `--join` should see
         other => bail!("unexpected message on worker side: {other:?}"),
     })();
     r.unwrap_or_else(|e| Msg::Error(format!("{e:#}")))

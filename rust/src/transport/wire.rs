@@ -156,6 +156,35 @@ pub enum Msg {
     /// stays honest. Evicting an absent key is a no-op. Reply:
     /// [`Msg::Ack`].
     StateEvict { user: usize, site: String },
+    /// v3 (registry): store a shard's replica blob — an [`encode_state`]
+    /// payload, bit-exact — in the daemon's *replica store* under the
+    /// connection's tenant namespace. Replicas are passive: they never
+    /// serve fits, snapshots, or exports until promoted, so a buddy can
+    /// hold a copy of a shard it does not own without the two colliding.
+    /// Re-putting a key replaces the previous replica. Reply:
+    /// [`Msg::Ack`].
+    ReplicaPut(Vec<u8>),
+    /// v3 (registry): promote a replica to live state — decode the
+    /// stored blob and install it exactly as a [`Msg::StateImport`]
+    /// would, then drop the replica entry. This is the zero-copy half of
+    /// buddy failover: the bytes are already resident on the new owner,
+    /// so promotion ships no state on the wire. Errors (and leaves the
+    /// replica in place) if no replica exists or the key is mid-fit.
+    /// Reply: [`Msg::Ack`].
+    ReplicaPromote { user: usize, site: String },
+    /// v3 (registry): discard a replica after the buddy assignment moved
+    /// elsewhere. Dropping an absent key is a no-op. Reply: [`Msg::Ack`].
+    ReplicaDrop { user: usize, site: String },
+    /// v3 (registry): a daemon announcing itself to a coordinator's
+    /// registry listener (`cola worker --join`). `addr` is the daemon's
+    /// own resolved listen address — the coordinator dials back through
+    /// the normal [`Msg::Hello`] handshake, which is where capabilities
+    /// are negotiated exactly as for a statically configured member.
+    /// Reply: [`Msg::Ack`] (registered, lifecycle `joining`) or
+    /// [`Msg::Error`]. A pre-registry peer answers `Error`
+    /// ("unexpected message"), which a joiner reports loudly — the same
+    /// reject-then-fall-back shape as the bf16 `Hello` capability byte.
+    Join { addr: String },
 }
 
 /// Per-job outcome inside a [`Msg::FitBatchOk`].
@@ -188,6 +217,11 @@ mod tag {
     pub const STATE_EXPORT_OK: u8 = 0x12;
     pub const STATE_IMPORT: u8 = 0x13;
     pub const STATE_EVICT: u8 = 0x14;
+    // v3 registry additions (worker self-registration + buddy replicas)
+    pub const REPLICA_PUT: u8 = 0x15;
+    pub const REPLICA_PROMOTE: u8 = 0x16;
+    pub const REPLICA_DROP: u8 = 0x17;
+    pub const JOIN: u8 = 0x18;
 }
 
 /// The lowest frame version whose decoder understands `msg` — what
@@ -199,7 +233,11 @@ pub fn frame_version(msg: &Msg) -> u8 {
         | Msg::StateExport { .. }
         | Msg::StateExportOk(_)
         | Msg::StateImport(_)
-        | Msg::StateEvict { .. } => 3,
+        | Msg::StateEvict { .. }
+        | Msg::ReplicaPut(_)
+        | Msg::ReplicaPromote { .. }
+        | Msg::ReplicaDrop { .. }
+        | Msg::Join { .. } => 3,
         // a bf16-capability Hello carries the v3 trailing byte
         Msg::Hello { wire: WireFormat::Bf16, .. } => 3,
         Msg::Hello { .. } | Msg::FitBatch { .. } | Msg::FitBatchOk { .. } => 2,
@@ -615,6 +653,28 @@ pub fn encode_with(msg: &Msg, fmt: WireFormat) -> Vec<u8> {
             let mut e = Enc::new(tag::STATE_EVICT);
             e.u64(*user as u64);
             e.str(site);
+            e.buf
+        }
+        Msg::ReplicaPut(blob) => {
+            let mut e = Enc::new(tag::REPLICA_PUT);
+            e.bytes(blob);
+            e.buf
+        }
+        Msg::ReplicaPromote { user, site } => {
+            let mut e = Enc::new(tag::REPLICA_PROMOTE);
+            e.u64(*user as u64);
+            e.str(site);
+            e.buf
+        }
+        Msg::ReplicaDrop { user, site } => {
+            let mut e = Enc::new(tag::REPLICA_DROP);
+            e.u64(*user as u64);
+            e.str(site);
+            e.buf
+        }
+        Msg::Join { addr } => {
+            let mut e = Enc::new(tag::JOIN);
+            e.str(addr);
             e.buf
         }
         Msg::Shutdown => vec![tag::SHUTDOWN],
@@ -1044,6 +1104,18 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
             let site = d.str()?;
             Msg::StateEvict { user, site }
         }
+        tag::REPLICA_PUT => Msg::ReplicaPut(d.bytes()?),
+        tag::REPLICA_PROMOTE => {
+            let user = d.u64()? as usize;
+            let site = d.str()?;
+            Msg::ReplicaPromote { user, site }
+        }
+        tag::REPLICA_DROP => {
+            let user = d.u64()? as usize;
+            let site = d.str()?;
+            Msg::ReplicaDrop { user, site }
+        }
+        tag::JOIN => Msg::Join { addr: d.str()? },
         tag::SHUTDOWN => Msg::Shutdown,
         tag::SHUTDOWN_OK => Msg::ShutdownOk,
         tag::ACK => Msg::Ack,
@@ -1393,6 +1465,45 @@ mod tests {
     }
 
     #[test]
+    fn registry_messages_roundtrip_as_v3_frames() {
+        // the v3 registry control plane: replica push/promote/drop plus
+        // the daemon self-registration announcement
+        let blob = encode_state(6, "l1.k", &sample_adapter(AdapterKind::LowRank));
+        let Msg::ReplicaPut(b) = roundtrip(&Msg::ReplicaPut(blob.clone())) else {
+            panic!("wrong variant")
+        };
+        assert_eq!(b, blob);
+
+        let Msg::ReplicaPromote { user, site } =
+            roundtrip(&Msg::ReplicaPromote { user: 7, site: "l0.v".into() })
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!((user, site.as_str()), (7, "l0.v"));
+
+        let Msg::ReplicaDrop { user, site } =
+            roundtrip(&Msg::ReplicaDrop { user: 2, site: "head".into() })
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!((user, site.as_str()), (2, "head"));
+
+        let Msg::Join { addr } =
+            roundtrip(&Msg::Join { addr: "10.0.0.9:7701".into() })
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(addr, "10.0.0.9:7701");
+
+        // tags are wire ABI — pin them so a reorder can't silently
+        // renumber the registry messages
+        assert_eq!(encode(&Msg::ReplicaPut(vec![]))[0], 0x15);
+        assert_eq!(encode(&Msg::ReplicaPromote { user: 0, site: String::new() })[0], 0x16);
+        assert_eq!(encode(&Msg::ReplicaDrop { user: 0, site: String::new() })[0], 0x17);
+        assert_eq!(encode(&Msg::Join { addr: String::new() })[0], 0x18);
+    }
+
+    #[test]
     fn state_blob_roundtrips_bit_exactly() {
         for kind in [AdapterKind::LowRank, AdapterKind::Linear, AdapterKind::Mlp] {
             let adapter = sample_adapter(kind);
@@ -1523,7 +1634,7 @@ mod tests {
 
     /// One arbitrary message over every v1 + v2 + v3 variant.
     fn arb_msg(rng: &mut Rng) -> Msg {
-        match rng.below(20) {
+        match rng.below(24) {
             0 => Msg::Register {
                 user: rng.below(1 << 16),
                 site: arb_string(rng),
@@ -1557,6 +1668,10 @@ mod tests {
                 seq: rng.next_u64(),
                 jobs: (0..rng.below(4)).map(|_| arb_fit_job(rng)).collect(),
             },
+            19 => Msg::ReplicaPut(arb_blob(rng)),
+            20 => Msg::ReplicaPromote { user: rng.below(1 << 16), site: arb_string(rng) },
+            21 => Msg::ReplicaDrop { user: rng.below(1 << 16), site: arb_string(rng) },
+            22 => Msg::Join { addr: arb_string(rng) },
             _ => Msg::FitBatchOk {
                 seq: rng.next_u64(),
                 results: (0..rng.below(4))

@@ -357,10 +357,13 @@ fn flooding_tenant_cannot_starve_another() {
     // alice floods her whole backlog...
     let alice: Vec<u64> =
         (0..4).map(|_| submit(&addr, "tok-a", QUICK_CONFIG)).collect();
-    // ...and her 5th submission bounces with 429 + Retry-After
+    // ...and her 5th submission bounces with 429 + Retry-After derived
+    // from backlog depth x smoothed per-job runtime. The gateway is
+    // paused, so no job has completed and the runtime estimate sits at
+    // its 1 s/job default: the hint equals the backlog cap exactly.
     let resp = post(&addr, "/v1/fit", Some("tok-a"), Some(QUICK_CONFIG));
     assert_eq!(resp.status, 429);
-    assert!(resp.header("retry-after").is_some());
+    assert_eq!(resp.header("retry-after"), Some("4"));
     // bob arrives last with a single job
     let bob = submit(&addr, "tok-b", QUICK_CONFIG);
 

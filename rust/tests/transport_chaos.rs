@@ -23,6 +23,13 @@
 //! 6. Offline resize (`cola pool --add` / `rebalance_daemons`) migrates
 //!    existing daemon state instead of erroring — the replacement for
 //!    the old `verify_shard_count` hard reject.
+//! 7. Buddy replication (`replicate = true`) makes a kill free: the
+//!    dead member's shards are promoted from their buddy replicas in
+//!    place — zero lost fits, zero stall intervals, zero migration
+//!    bytes — and the curves still match the uninterrupted baseline.
+//! 8. The worker registry (`registry_listen` / `cola worker --join`)
+//!    bootstraps all-dynamic fleets and admits mid-run joiners at sweep
+//!    boundaries without moving any curve.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -339,6 +346,156 @@ fn connect_tcp_substitutes_standby_for_dead_primary() {
     drop(pool);
 
     for (d, addr) in [(d_live, addr_live), (d_sb, addr_sb)] {
+        request_daemon_shutdown(&addr).unwrap();
+        d.join();
+    }
+}
+
+/// Invariant 7 (the ISSUE's acceptance chaos test): with buddy
+/// replication on, killing a registered member costs literally nothing.
+/// Every post-interval refresh pushed each shard's state blob to its
+/// rendezvous runner-up; the heartbeat sweep catches the death before
+/// dispatch, and the survivor remap re-homes each dead shard onto
+/// exactly that runner-up — so `fail_over` promotes the local replica
+/// in place instead of shipping a checkpoint: zero lost fits, zero
+/// stall intervals, zero migration bytes, bit-identical curves.
+#[test]
+fn buddy_replication_absorbs_a_kill_with_zero_recovery_cost() {
+    let r_base = run(base_cfg(21));
+
+    let (d_a, addr_a) = daemon();
+    let (d_b, addr_b) = daemon();
+    let (mut victim, survivor, survivor_addr) = if victim_of(&addr_a, &addr_b) {
+        (d_a, d_b, addr_b.clone())
+    } else {
+        (d_b, d_a, addr_a.clone())
+    };
+
+    let mut cfg = chaos_cfg(&[&addr_a, &addr_b], &[], 21, "buddy");
+    cfg.heartbeat_interval = 1; // catch the death before dispatch
+    cfg.replicate = true;
+    let mut tr = Trainer::new(cfg).unwrap();
+    let report = tr
+        .run_with_hook(|_, t| {
+            if t == 4 {
+                victim.kill();
+            }
+            Ok(())
+        })
+        .unwrap();
+
+    assert_curves_eq(&r_base, &report, "buddy promotion after kill");
+    assert_eq!(report.timings.lost_fits, 0, "promotion must lose no fits");
+    assert_eq!(report.timings.stall_intervals, 0,
+               "promotion must need no recovery rounds");
+    assert!(report.timings.shard_promotions > 0,
+            "the kill was absorbed by checkpoints, not buddy promotion");
+    assert_eq!(report.timings.migrated_state_bytes, 0,
+               "in-place promotion must move zero blob bytes");
+    assert!(report.timings.migrations >= 1);
+    drop(tr);
+
+    request_daemon_shutdown(&survivor_addr).unwrap();
+    survivor.join();
+}
+
+/// Invariant 8a: a fleet with NO static `worker_addrs` bootstraps
+/// entirely from `cola worker --join` announcements, and the joined
+/// member ends the run Active (and not static) in the registry. The
+/// curves still match the in-process baseline — membership provenance
+/// is invisible to the math.
+#[test]
+fn all_dynamic_fleet_bootstraps_from_a_joiner() {
+    let r_base = run(base_cfg(55));
+
+    let (d_a, addr_a) = daemon();
+    // reserve a port for the announce listener before the trainer
+    // exists, so the joiner knows where to announce
+    let reg_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let announcer = {
+        let (ra, wa) = (reg_addr.clone(), addr_a.clone());
+        // the trainer binds the listener during construction below;
+        // retry around the window where the reserved port is not yet
+        // re-bound
+        std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut last = None;
+            for _ in 0..5 {
+                match cola::coordinator::join_coordinator(&ra, &wa) {
+                    Ok(()) => return Ok(()),
+                    Err(e) => last = Some(e),
+                }
+                std::thread::sleep(Duration::from_millis(250));
+            }
+            Err(last.unwrap())
+        })
+    };
+
+    let mut cfg = chaos_cfg(&[], &[], 55, "dynamic");
+    cfg.heartbeat_interval = 1;
+    cfg.registry_listen = reg_addr;
+    let mut tr = Trainer::new(cfg).unwrap();
+    announcer.join().unwrap().unwrap();
+    let report = tr.run().unwrap();
+
+    assert_curves_eq(&r_base, &report, "fleet bootstrapped from --join");
+    {
+        use cola::coordinator::MemberState;
+        let reg = tr.registry().expect("tcp trainer must hold a registry");
+        let g = reg.lock().unwrap();
+        assert_eq!(g.state(&addr_a), Some(MemberState::Active));
+        assert!(!g.is_static(&addr_a), "a joiner is not a static member");
+    }
+    drop(tr);
+
+    request_daemon_shutdown(&addr_a).unwrap();
+    d_a.join();
+}
+
+/// Invariant 8b: a daemon that announces itself MID-RUN is admitted at
+/// the next sweep boundary — it walks joining -> active, static members
+/// interop beside it, and no curve moves when the pool grows under it.
+#[test]
+fn mid_run_joiner_is_admitted_without_moving_curves() {
+    let r_base = run(base_cfg(33));
+
+    let (d_a, addr_a) = daemon(); // static bootstrap member
+    let (d_b, addr_b) = daemon(); // joins mid-run
+
+    let mut cfg = chaos_cfg(&[&addr_a], &[], 33, "joiner");
+    cfg.heartbeat_interval = 1;
+    cfg.registry_listen = "127.0.0.1:0".into();
+    let mut tr = Trainer::new(cfg).unwrap();
+    let reg_addr = tr.registry_addr().expect("registry listener must be bound").to_string();
+
+    let mut joined = false;
+    let join_target = addr_b.clone();
+    let report = tr
+        .run_with_hook(move |_, t| {
+            if t == 4 && !joined {
+                cola::coordinator::join_coordinator(&reg_addr, &join_target)?;
+                joined = true;
+            }
+            Ok(())
+        })
+        .unwrap();
+
+    assert_curves_eq(&r_base, &report, "mid-run join");
+    {
+        use cola::coordinator::MemberState;
+        let g = tr.registry().unwrap().lock().unwrap();
+        assert_eq!(g.state(&addr_b), Some(MemberState::Active),
+                   "mid-run joiner never reached active");
+        // the bootstrap member really is the static one
+        assert_eq!(g.state(&addr_a), Some(MemberState::Active));
+        assert!(g.is_static(&addr_a));
+        assert!(!g.is_static(&addr_b));
+    }
+    drop(tr);
+
+    for (d, addr) in [(d_a, addr_a), (d_b, addr_b)] {
         request_daemon_shutdown(&addr).unwrap();
         d.join();
     }

@@ -13,7 +13,7 @@ use std::time::Duration;
 use cola::adapters::{AdapterParams, OptimizerCfg, SiteAdapter};
 use cola::config::{AdapterKind, Method, Mode, OffloadTarget, Optimizer, Task,
                    TrainConfig, TransportKind};
-use cola::coordinator::{FitJob, Trainer};
+use cola::coordinator::{FitJob, Trainer, TransferModel};
 use cola::rng::Rng;
 use cola::runtime::Manifest;
 use cola::tensor::Tensor;
@@ -175,4 +175,54 @@ fn fit_against_dead_peer_names_user_and_site() {
     let msg = format!("{err:#}");
     assert!(msg.contains("user 5"), "error must name the user: {msg}");
     assert!(msg.contains("l0.q"), "error must name the site: {msg}");
+}
+
+/// Regression: `ping` must answer within its bounded deadline even
+/// while a slow fit is in flight on the same worker. The old
+/// implementation enqueued the ping on the same client-thread command
+/// channel as fits, so a liveness probe queued behind every in-flight
+/// fit — one slow interval and the sweep judged a perfectly healthy
+/// daemon dead.
+#[test]
+fn ping_answers_while_a_slow_fit_is_in_flight() {
+    // the modeled link makes each fit occupy the daemon for ~1.5 s
+    let slow = TransferModel {
+        latency: Duration::from_millis(1500),
+        bytes_per_sec: 1e12,
+    };
+    let d = WorkerDaemon::bind("127.0.0.1:0", OffloadTarget::NativeCpu,
+                               manifest(), Some(slow))
+        .unwrap();
+    let addr = d.local_addr().to_string();
+
+    let w = TcpWorker::connect(0, &addr).unwrap();
+    let mut rng = Rng::new(5);
+    let params = AdapterParams::init(AdapterKind::LowRank, 8, 8, 4, 4, &mut rng);
+    w.register(3, "s", SiteAdapter::new("s", params, &OptimizerCfg::sgd(0.1, 0.0)))
+        .unwrap();
+
+    let job = FitJob {
+        user: 3,
+        site: "s".into(),
+        x: Tensor::from_fn(&[4, 8], |i| (i as f32).sin()),
+        ghat: Tensor::from_fn(&[4, 8], |i| (i as f32).cos()),
+        grad_scale: 1.0,
+        merged: false,
+    };
+    let rx = w.fit(job).unwrap(); // async: the slow fit is now in flight
+
+    let t0 = std::time::Instant::now();
+    w.ping().expect("ping failed while a fit was in flight");
+    assert!(
+        t0.elapsed() < Duration::from_millis(1200),
+        "ping took {:?} — it queued behind the in-flight fit",
+        t0.elapsed()
+    );
+
+    // the slow fit still completes normally after the probe
+    rx.recv().unwrap().unwrap();
+
+    w.shutdown();
+    request_daemon_shutdown(&addr).unwrap();
+    d.join();
 }
