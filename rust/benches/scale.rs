@@ -1,0 +1,185 @@
+//! Million-user scale baseline (EXPERIMENTS.md §Scale harness).
+//!
+//! Drives the `cola::scale` harness twice — unbounded (paging off) and
+//! with a bounded LRU working set paging cold adapter state to disk —
+//! and emits the machine-readable baseline to `BENCH_scale.json`
+//! (override with `COLA_BENCH_SCALE_OUT`). Headline figures are the
+//! paged arm's: users/sec, p99 interval latency, resident bytes, and
+//! page faults per interval. The bench also byte-compares the two
+//! arms' curves: paging must never move a number, at any working-set
+//! size — a divergence here is a correctness bug, not a perf note.
+
+#[path = "common.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use cola::bench_harness::BenchReport;
+use cola::metrics::markdown_table;
+use cola::scale::{ScaleCfg, ScaleHarness, ScaleSummary};
+use cola::util::json::Json;
+
+struct ArmResult {
+    summary: ScaleSummary,
+    curve_hex: String,
+    users_per_sec: f64,
+    p99_interval_ms: f64,
+    wall_s: f64,
+}
+
+fn run_arm(cfg: ScaleCfg) -> anyhow::Result<ArmResult> {
+    let intervals = cfg.intervals;
+    let mut harness = ScaleHarness::new(cfg)?;
+    let t0 = Instant::now();
+    let mut interval_secs = Vec::with_capacity(intervals);
+    for _ in 0..intervals {
+        let s = Instant::now();
+        harness.run_interval()?;
+        interval_secs.push(s.elapsed().as_secs_f64());
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let summary = harness.summary();
+    anyhow::ensure!(summary.fits_lost == 0, "lost {} fits", summary.fits_lost);
+    interval_secs.sort_by(|a, b| a.total_cmp(b));
+    let p99 = interval_secs[((interval_secs.len() as f64 * 0.99).ceil() as usize)
+        .saturating_sub(1)
+        .min(interval_secs.len() - 1)];
+    Ok(ArmResult {
+        summary,
+        curve_hex: harness.curve_hex(),
+        users_per_sec: summary.fits_ok as f64 / wall_s,
+        p99_interval_ms: p99 * 1e3,
+        wall_s,
+    })
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (_steps, quick) = common::bench_args();
+    // quick = the bench-smoke CI shape; full = the 10^5-user baseline
+    let (users, intervals, touches, workers, working_set) = if quick {
+        (2_000, 8, 256, 4, 64)
+    } else {
+        (100_000, 20, 2_048, 8, 256)
+    };
+    let page_dir = std::env::temp_dir()
+        .join(format!("cola_bench_scale_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&page_dir);
+    let base = ScaleCfg {
+        users,
+        intervals,
+        touches_per_interval: touches,
+        workers,
+        working_set: 0,
+        page_dir: None,
+        seed: 0xC01A,
+        rows: 4,
+    };
+
+    let unpaged = run_arm(base.clone())?;
+    let paged = run_arm(ScaleCfg {
+        working_set,
+        page_dir: Some(page_dir.clone()),
+        ..base
+    })?;
+    let _ = std::fs::remove_dir_all(&page_dir);
+
+    // the determinism half of the bench: paging on/off is invisible in
+    // the numbers, byte for byte
+    anyhow::ensure!(
+        unpaged.curve_hex == paged.curve_hex,
+        "paged and unpaged curves diverged — paging moved a number"
+    );
+    anyhow::ensure!(
+        paged.summary.page_stats.faults > 0,
+        "the paged arm never faulted — working_set {working_set} is not \
+         exercising the pager at these sizes"
+    );
+    anyhow::ensure!(paged.summary.page_stats.page_errors == 0, "page errors");
+    anyhow::ensure!(
+        paged.summary.resident_bytes < unpaged.summary.resident_bytes,
+        "bounded working set did not reduce resident bytes"
+    );
+
+    let mut report = BenchReport::new("Scale harness: LRU adapter-state paging");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let ws_label = format!("ws={working_set}");
+    for (label, arm) in [("unpaged", &unpaged), (ws_label.as_str(), &paged)] {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}", arm.users_per_sec),
+            format!("{:.1}", arm.p99_interval_ms),
+            format!("{:.1}", arm.summary.resident_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.1}", arm.summary.page_stats.faults as f64 / intervals as f64),
+            format!("{:.2}", arm.wall_s),
+        ]);
+    }
+    report.section(
+        &format!(
+            "{users} users, {intervals} intervals x {touches} touches, \
+             {workers} workers (curves byte-identical across arms)"
+        ),
+        markdown_table(
+            &["arm", "users/sec", "p99 interval ms", "resident MiB",
+              "faults/interval", "wall s"],
+            &rows,
+        ),
+    );
+    report.emit("scale")?;
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("scale".to_string()));
+    top.insert("schema".to_string(), num(1.0));
+    top.insert("quick".to_string(), Json::Bool(quick));
+    top.insert("users".to_string(), num(users as f64));
+    top.insert("intervals".to_string(), num(intervals as f64));
+    top.insert("touches_per_interval".to_string(), num(touches as f64));
+    top.insert("workers".to_string(), num(workers as f64));
+    top.insert("working_set".to_string(), num(working_set as f64));
+    top.insert(
+        "users_registered".to_string(),
+        num(paged.summary.users_registered as f64),
+    );
+    // headline figures come from the paged arm — that is the
+    // configuration the scale story ships
+    top.insert("users_per_sec".to_string(), num(paged.users_per_sec));
+    top.insert("p99_interval_ms".to_string(), num(paged.p99_interval_ms));
+    top.insert("resident_bytes".to_string(), num(paged.summary.resident_bytes as f64));
+    top.insert(
+        "page_faults_per_interval".to_string(),
+        num(paged.summary.page_stats.faults as f64 / intervals as f64),
+    );
+    top.insert(
+        "page_evictions".to_string(),
+        num(paged.summary.page_stats.evictions as f64),
+    );
+    top.insert(
+        "unpaged_users_per_sec".to_string(),
+        num(unpaged.users_per_sec),
+    );
+    top.insert(
+        "unpaged_resident_bytes".to_string(),
+        num(unpaged.summary.resident_bytes as f64),
+    );
+    top.insert("curves_byte_identical".to_string(), Json::Bool(true));
+    let out = std::env::var("COLA_BENCH_SCALE_OUT").unwrap_or_else(|_| {
+        match std::env::var("CARGO_MANIFEST_DIR") {
+            Ok(dir) => format!("{dir}/../BENCH_scale.json"),
+            Err(_) => "BENCH_scale.json".to_string(),
+        }
+    });
+    std::fs::write(&out, format!("{}\n", Json::Obj(top)))?;
+    println!(
+        "wrote {out} ({:.0} users/sec paged vs {:.0} unpaged; resident \
+         {:.1} MiB vs {:.1} MiB; curves byte-identical)",
+        paged.users_per_sec,
+        unpaged.users_per_sec,
+        paged.summary.resident_bytes as f64 / (1024.0 * 1024.0),
+        unpaged.summary.resident_bytes as f64 / (1024.0 * 1024.0),
+    );
+    Ok(())
+}

@@ -19,6 +19,7 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("worker", "gradient-offload worker daemon (distributed mode)"),
     ("pool", "elastic-pool resize between runs (add/drain/remove daemons)"),
     ("curvediff", "numerically compare two --loss_out curve files"),
+    ("scale", "million-user traffic harness over the LRU-paged state store"),
     ("demo", "FTaaS collaboration demo: K users sharing one base model"),
     ("memory", "analytic memory report for the paper's model profiles"),
     ("table1", "print the Table-1 computation-space complexity summary"),

@@ -460,6 +460,18 @@ pub struct TrainConfig {
     /// "fma" trades bit-parity of the matmul panel kernel for speed
     /// within a documented tolerance.
     pub simd: SimdMode,
+    /// max resident adapters per in-process worker (local transport
+    /// only); 0 = unbounded, no paging. With a bound, each worker's
+    /// state store pages cold `(user, site)` shards to
+    /// `state_page_dir/w<id>` as bit-exact `wire::encode_state` blobs
+    /// and faults them back on touch — loss curves are byte-identical
+    /// paging on or off at any working-set size (see
+    /// `crate::scale::store` and README §Scale harness & state paging).
+    pub state_working_set: usize,
+    /// page-file root for `state_working_set` (required iff the
+    /// working set is bounded). Each worker owns the `w<id>`
+    /// subdirectory; page files are bit-exact migration blobs.
+    pub state_page_dir: String,
 }
 
 impl Default for TrainConfig {
@@ -497,6 +509,8 @@ impl Default for TrainConfig {
             replicate: false,
             offload_wire: WireFormat::F32,
             simd: SimdMode::Auto,
+            state_working_set: 0,
+            state_page_dir: String::new(),
         }
     }
 }
@@ -559,6 +573,11 @@ impl TrainConfig {
             "replicate" => self.replicate = val.parse().context("replicate")?,
             "offload_wire" => self.offload_wire = val.parse()?,
             "simd" => self.simd = val.parse()?,
+            "state_working_set" => {
+                self.state_working_set =
+                    val.parse().context("state_working_set")?
+            }
+            "state_page_dir" => self.state_page_dir = val.into(),
             "standby_addrs" => {
                 self.standby_addrs = val
                     .split(',')
@@ -592,6 +611,20 @@ impl TrainConfig {
         if self.offload_inflight == 0 {
             bail!("offload_inflight must be >= 1");
         }
+        match (self.state_working_set, self.state_page_dir.is_empty()) {
+            (0, false) => bail!(
+                "state_page_dir is set but state_working_set is 0 — an \
+                 unbounded store never pages, so the directory would never \
+                 be used (set state_working_set >= 1 or drop the dir; \
+                 refusing to silently ignore)"
+            ),
+            (ws, true) if ws > 0 => bail!(
+                "state_working_set = {ws} bounds resident adapters but \
+                 state_page_dir is empty — evicted state has to live \
+                 somewhere (set state_page_dir)"
+            ),
+            _ => {}
+        }
         match self.offload_transport {
             TransportKind::Tcp => {
                 if self.worker_addrs.is_empty() && self.registry_listen.is_empty() {
@@ -622,6 +655,12 @@ impl TrainConfig {
                     bail!("with offload_transport = \"tcp\" the compute target \
                            is chosen per daemon (`cola worker --offload ...`); \
                            leave offload = \"cpu\" on the server config");
+                }
+                if self.state_working_set > 0 {
+                    bail!("state_working_set is set but offload_transport is \
+                           \"tcp\" — adapter-state paging bounds the memory of \
+                           in-process workers; a remote daemon manages its own \
+                           working set (refusing to silently ignore)");
                 }
                 // offload_wire = "bf16" + failover = "migrate" is allowed
                 // ONLY because state blobs never compress: wire::encode_state
@@ -928,6 +967,34 @@ mod tests {
         cfg.set("simd", "off").unwrap();
         cfg.validate().unwrap();
         assert_eq!(cfg.simd, SimdMode::Off);
+    }
+
+    #[test]
+    fn state_paging_knobs_validate() {
+        // both set: the bounded-memory local configuration
+        let mut cfg = TrainConfig::default();
+        cfg.set("state_working_set", "64").unwrap();
+        cfg.set("state_page_dir", "/tmp/cola_pages").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.state_working_set, 64);
+
+        // half-configured pager: dir without a bound
+        let mut cfg = TrainConfig::default();
+        cfg.set("state_page_dir", "/tmp/cola_pages").unwrap();
+        assert!(cfg.validate().is_err());
+
+        // ...or a bound without a dir
+        let mut cfg = TrainConfig::default();
+        cfg.set("state_working_set", "64").unwrap();
+        assert!(cfg.validate().is_err());
+
+        // paging is an in-process concern; daemons bound themselves
+        let mut cfg = TrainConfig::default();
+        cfg.set("offload_transport", "tcp").unwrap();
+        cfg.set("worker_addrs", "127.0.0.1:7701").unwrap();
+        cfg.set("state_working_set", "64").unwrap();
+        cfg.set("state_page_dir", "/tmp/cola_pages").unwrap();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -31,12 +31,13 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::adapters::{AdapterParams, SiteAdapter};
 use crate::config::OffloadTarget;
 use crate::merge;
 use crate::runtime::{Device, Input, Manifest, OutputPlan, Value};
+use crate::scale::store::{KeyedStateStore, PageStats, PagerCfg};
 use crate::tensor::{self, Tensor};
 use crate::transport::tcp::{TcpLinkOpts, TcpWorker};
 use crate::transport::Transport;
@@ -117,6 +118,8 @@ enum WorkerCmd {
     Import { blob: Vec<u8>, reply: Sender<Result<()>> },
     /// drop a migrated-away shard
     Evict { user: usize, site: String, reply: Sender<Result<()>> },
+    /// paging counters (faults/evictions/page writes/errors)
+    PageStats(Sender<PageStats>),
     Shutdown,
 }
 
@@ -137,11 +140,37 @@ impl Worker {
         manifest: Arc<Manifest>,
         transfer: Option<TransferModel>,
     ) -> Result<Worker> {
+        Self::spawn_local_paged(id, target, manifest, transfer, None)
+    }
+
+    /// [`Self::spawn_local`] with an optional LRU pager: cold
+    /// `(user, site)` state spills to `pager.dir` once more than
+    /// `pager.capacity` adapters are resident. The core (and so any
+    /// page-dir error) is built on the CALLING thread, before the
+    /// worker thread exists — a bad directory fails the spawn, not the
+    /// first fit.
+    pub fn spawn_local_paged(
+        id: usize,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+        pager: Option<PagerCfg>,
+    ) -> Result<Worker> {
+        let core = WorkerCore::new_paged(id, target, manifest, transfer, pager)?;
         let (tx, rx) = channel();
         std::thread::Builder::new()
             .name(format!("worker-{id}"))
-            .spawn(move || worker_main(id, rx, target, manifest, transfer))?;
+            .spawn(move || worker_main(core, rx))?;
         Ok(Worker { tx, id })
+    }
+
+    /// Paging counters for this worker's state store.
+    pub fn page_stats(&self) -> Result<PageStats> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(WorkerCmd::PageStats(tx))
+            .map_err(|_| anyhow!("worker {} gone", self.id))?;
+        Ok(rx.recv()?)
     }
 
     pub fn register(&self, user: usize, site: &str, adapter: SiteAdapter) -> Result<()> {
@@ -228,6 +257,10 @@ impl Transport for Worker {
         rx.recv()?
     }
 
+    fn page_stats(&self) -> Result<PageStats> {
+        Worker::page_stats(self)
+    }
+
     fn shutdown(&self) {
         Worker::shutdown(self)
     }
@@ -273,47 +306,64 @@ fn rendezvous_weight(key: &str, user_mix: u64) -> u64 {
 /// why it doubles as the **buddy** for shard replication: when the
 /// owner dies, the survivor rendezvous re-homes its users onto the very
 /// member already holding their replicas. `None` runner-up on
-/// single-member pools.
+/// single-member pools; `None` overall on an EMPTY key set — the old
+/// code silently answered `(0, None)` there, which downstream callers
+/// turned into a `members[0]` index panic the first time a pool lost
+/// its last member before a placement.
 fn rendezvous_rank<'a>(
     keys: impl Iterator<Item = &'a str>,
     user: usize,
-) -> (usize, Option<usize>) {
+) -> Option<(usize, Option<usize>)> {
     let u = splitmix64(user as u64);
-    let mut best = 0usize;
+    let mut best: Option<usize> = None;
     let mut best_w = 0u64;
     let mut second: Option<usize> = None;
     let mut second_w = 0u64;
     for (i, k) in keys.enumerate() {
         let w = rendezvous_weight(k, u);
-        if i == 0 || w > best_w {
-            if i > 0 {
-                second = Some(best);
+        if best.is_none() || w > best_w {
+            if let Some(b) = best {
+                second = Some(b);
                 second_w = best_w;
             }
-            best = i;
+            best = Some(i);
             best_w = w;
         } else if second.is_none() || w > second_w {
             second = Some(i);
             second_w = w;
         }
     }
-    (best, second)
+    best.map(|b| (b, second))
 }
 
-/// The HRW winner alone — the common case.
-fn rendezvous_best<'a>(keys: impl Iterator<Item = &'a str>, user: usize) -> usize {
-    rendezvous_rank(keys, user).0
+/// The HRW winner alone — the common case. `None` on an empty key set.
+fn rendezvous_best<'a>(keys: impl Iterator<Item = &'a str>, user: usize) -> Option<usize> {
+    rendezvous_rank(keys, user).map(|(b, _)| b)
+}
+
+/// The named error every empty-member-set placement surfaces: callers
+/// removed or failed over the pool's last member and then asked who
+/// owns a user. An error beats the old `assert!`/index panic — the
+/// supervisor and `cola pool` can report WHICH user was orphaned and
+/// die cleanly (or refuse the resize) instead of unwinding.
+fn empty_member_set_error(user: usize) -> anyhow::Error {
+    anyhow!(
+        "rendezvous over an empty member set: no live pool member remains \
+         to own user {user} (the last member was removed or marked dead \
+         before placement)"
+    )
 }
 
 /// Rendezvous (highest-random-weight) owner of `user` among `keys`:
 /// every (key, user) pair gets a deterministic weight and the max wins.
 /// Adding a member can only steal users *to* the new member, and
 /// removing one only re-homes the users it owned — the minimal-movement
-/// property that makes elastic resizes cheap. Keys must be non-empty
-/// and unique ([`member_keys`] guarantees both).
-pub fn rendezvous_owner(keys: &[String], user: usize) -> usize {
-    assert!(!keys.is_empty(), "rendezvous over an empty member set");
+/// property that makes elastic resizes cheap. Keys must be unique
+/// ([`member_keys`] guarantees that); an empty key set is a named
+/// error, never a panic.
+pub fn rendezvous_owner(keys: &[String], user: usize) -> Result<usize> {
     rendezvous_best(keys.iter().map(String::as_str), user)
+        .ok_or_else(|| empty_member_set_error(user))
 }
 
 /// A key not yet in `existing`: `base` itself, else `base#2`, `base#3`,
@@ -482,6 +532,20 @@ impl WorkerPool {
         manifest: Arc<Manifest>,
         transfer: Option<TransferModel>,
     ) -> Result<WorkerPool> {
+        Self::spawn_paged(n, target, manifest, transfer, None)
+    }
+
+    /// [`Self::spawn`] with adapter-state paging: each worker gets its
+    /// OWN page subdirectory (`<dir>/w<id>`) and an LRU working set of
+    /// `capacity` resident adapters — the memory-bounded configuration
+    /// the `cola scale` harness drives 10^5+ users through.
+    pub fn spawn_paged(
+        n: usize,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+        pager: Option<PagerCfg>,
+    ) -> Result<WorkerPool> {
         if n == 0 {
             // rendezvous over an empty member set has no winner; fail at
             // construction, not on the first dispatch
@@ -489,14 +553,19 @@ impl WorkerPool {
         }
         let mut members = Vec::with_capacity(n);
         for id in 0..n {
+            let worker_pager = pager.as_ref().map(|p| PagerCfg {
+                dir: p.dir.join(format!("w{id}")),
+                capacity: p.capacity,
+            });
             members.push(PoolMember {
                 key: format!("local-{id}"),
                 addr: String::new(),
-                transport: Box::new(Worker::spawn_local(
+                transport: Box::new(Worker::spawn_local_paged(
                     id,
                     target,
                     manifest.clone(),
                     transfer,
+                    worker_pager,
                 )?),
             });
         }
@@ -628,11 +697,13 @@ impl WorkerPool {
     /// override when one was recorded (and its member still exists),
     /// else the rendezvous winner over the live member keys (see the
     /// sharding contract). Same weight body as [`rendezvous_owner`], by
-    /// construction.
-    pub fn shard_of(&self, user: usize) -> usize {
+    /// construction. Errors (named, no panic) when the pool has no
+    /// members left — removing the last member and then placing is an
+    /// operator mistake the caller must surface, not an index crash.
+    pub fn shard_of(&self, user: usize) -> Result<usize> {
         if let Some(k) = self.overrides.get(&user) {
             if let Some(i) = self.index_of_key(k) {
-                return i;
+                return Ok(i);
             }
         }
         self.plain_shard_of(user)
@@ -640,14 +711,15 @@ impl WorkerPool {
 
     /// The unweighted HRW winner, ignoring overrides — the baseline
     /// every placement decision compares against.
-    fn plain_shard_of(&self, user: usize) -> usize {
+    fn plain_shard_of(&self, user: usize) -> Result<usize> {
         rendezvous_best(self.members.iter().map(|m| m.key.as_str()), user)
+            .ok_or_else(|| empty_member_set_error(user))
     }
 
     /// The member key currently owning `user` (override-aware) — what
     /// the supervisor snapshots before mutating membership.
-    pub fn owner_key(&self, user: usize) -> String {
-        self.members[self.shard_of(user)].key.clone()
+    pub fn owner_key(&self, user: usize) -> Result<String> {
+        Ok(self.members[self.shard_of(user)?].key.clone())
     }
 
     /// Place (or re-place) a user: the load-aware HRW winner among
@@ -665,7 +737,7 @@ impl WorkerPool {
         user: usize,
         tiers: &BTreeMap<String, u8>,
         exclude: &BTreeSet<String>,
-    ) -> usize {
+    ) -> Result<usize> {
         let u = splitmix64(user as u64);
         let tier_of = |m: &PoolMember| tiers.get(&m.key).copied().unwrap_or(0);
         let eligible = |m: &PoolMember| {
@@ -681,18 +753,19 @@ impl WorkerPool {
                 best = Some((i, score));
             }
         }
+        let plain = self.plain_shard_of(user)?;
         let chosen = match best {
             Some((i, _)) => i,
             // every member is hot or excluded: plain HRW over the full
             // pool (placing somewhere beats placing nowhere)
-            None => self.plain_shard_of(user),
+            None => plain,
         };
-        if chosen == self.plain_shard_of(user) {
+        if chosen == plain {
             self.overrides.remove(&user);
         } else {
             self.overrides.insert(user, self.members[chosen].key.clone());
         }
-        chosen
+        Ok(chosen)
     }
 
     /// The buddy holding `user`'s shard replicas: the highest-HRW member
@@ -701,9 +774,10 @@ impl WorkerPool {
     /// this is exactly the rendezvous runner-up — the member the
     /// survivor remap re-homes the user onto when the owner dies, which
     /// is what makes buddy promotion zero-copy. `None` when every other
-    /// member shares the owner's endpoint (or the pool has one member).
+    /// member shares the owner's endpoint, the pool has one member, or
+    /// the pool is empty (no owner exists, so no buddy either).
     pub fn buddy_of(&self, user: usize) -> Option<usize> {
-        let owner = self.shard_of(user);
+        let owner = self.shard_of(user).ok()?;
         let owner_addr = &self.members[owner].addr;
         let u = splitmix64(user as u64);
         let mut best: Option<(usize, u64)> = None;
@@ -719,8 +793,8 @@ impl WorkerPool {
         best.map(|(i, _)| i)
     }
 
-    pub fn for_user(&self, user: usize) -> &dyn Transport {
-        self.members[self.shard_of(user)].transport.as_ref()
+    pub fn for_user(&self, user: usize) -> Result<&dyn Transport> {
+        Ok(self.members[self.shard_of(user)?].transport.as_ref())
     }
 
     /// Worker by pool index (callers that already grouped jobs by
@@ -759,6 +833,28 @@ impl WorkerPool {
                 })
             })
             .sum()
+    }
+
+    /// Fleet-wide paging counters, summed per distinct endpoint (same
+    /// dedup rule as [`Self::total_state_bytes`]). Best-effort: a dead
+    /// link contributes zeros.
+    pub fn total_page_stats(&self) -> PageStats {
+        let mut seen = BTreeSet::new();
+        let mut total = PageStats::default();
+        for w in self
+            .members
+            .iter()
+            .map(|m| m.transport.as_ref())
+            .filter(|w| seen.insert(w.describe()))
+        {
+            if let Ok(s) = w.page_stats() {
+                total.faults += s.faults;
+                total.evictions += s.evictions;
+                total.page_writes += s.page_writes;
+                total.page_errors += s.page_errors;
+            }
+        }
+        total
     }
 }
 
@@ -973,7 +1069,9 @@ impl PoolSupervisor {
         // ownership snapshot BEFORE any mutation (override-aware): the
         // remap compares against where each user actually lived, not
         // just where plain HRW would have put it
-        let old_owners: Vec<String> = (0..self.users).map(|u| pool.owner_key(u)).collect();
+        let old_owners: Vec<String> = (0..self.users)
+            .map(|u| pool.owner_key(u))
+            .collect::<Result<_>>()?;
         let mut dead_keys: BTreeSet<String> = BTreeSet::new();
         let mut dead_addrs: BTreeSet<String> = BTreeSet::new();
         let mut idxs: Vec<usize> = dead.to_vec();
@@ -1052,8 +1150,9 @@ impl PoolSupervisor {
         if let Some(reg) = &self.registry {
             crate::util::lock_recover(reg).begin_drain(addr);
         }
-        let old_owners: Vec<String> =
-            (0..self.users).map(|u| pool.owner_key(u)).collect();
+        let old_owners: Vec<String> = (0..self.users)
+            .map(|u| pool.owner_key(u))
+            .collect::<Result<_>>()?;
         // remove every slot of the daemon (desc order keeps indices
         // valid); all slots reach the same state table, so one handle
         // serves every export/evict
@@ -1073,7 +1172,7 @@ impl PoolSupervisor {
             if !removed_keys.contains(&old_owners[user]) {
                 continue;
             }
-            let new_idx = pool.place_user(user, &tiers, &exclude);
+            let new_idx = pool.place_user(user, &tiers, &exclude)?;
             let mut moved = false;
             for site in &sites {
                 let blob = daemon.export_state(user, site)?;
@@ -1108,8 +1207,9 @@ impl PoolSupervisor {
     /// Grow the pool by one daemon: connect it, remap, and migrate the
     /// users the new member wins (live export from their old owners).
     pub fn add(&mut self, pool: &mut WorkerPool, addr: &str) -> Result<MigrationStats> {
-        let old_owners: Vec<String> =
-            (0..self.users).map(|u| pool.owner_key(u)).collect();
+        let old_owners: Vec<String> = (0..self.users)
+            .map(|u| pool.owner_key(u))
+            .collect::<Result<_>>()?;
         pool.add_tcp_member(addr, &self.link)?;
         self.remap_and_migrate(pool, &old_owners, &BTreeSet::new())
     }
@@ -1227,7 +1327,7 @@ impl PoolSupervisor {
         let exclude = self.place_exclusions();
         for user in 0..self.users {
             let old_key = &old_owners[user];
-            let new_idx = pool.place_user(user, &tiers, &exclude);
+            let new_idx = pool.place_user(user, &tiers, &exclude)?;
             if &pool.members()[new_idx].key == old_key {
                 continue;
             }
@@ -1351,8 +1451,8 @@ pub fn rebalance_daemons(
     let mut conns: BTreeMap<String, TcpWorker> = BTreeMap::new();
     let mut stats = MigrationStats::default();
     for user in 0..users {
-        let old_key = &old_keys[rendezvous_owner(&old_keys, user)];
-        let new_key = &new_keys[rendezvous_owner(&new_keys, user)];
+        let old_key = &old_keys[rendezvous_owner(&old_keys, user)?];
+        let new_key = &new_keys[rendezvous_owner(&new_keys, user)?];
         if old_key == new_key {
             continue;
         }
@@ -1417,30 +1517,29 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     crate::util::lock_recover(m)
 }
 
-#[derive(Default)]
-struct AdapterTable {
-    map: BTreeMap<TenantKey, SiteAdapter>,
-    /// keys currently checked out by an in-flight fit
-    busy: BTreeSet<TenantKey>,
-}
-
 /// The shared compute core behind every transport: the adapter +
 /// optimizer state of the users assigned to one "low-cost device", and
 /// the fit/step math that serves a `FitJob`.
 ///
-/// The table is mutex-protected but fits do NOT hold the lock while
-/// computing: an adapter is *checked out* (removed, marked busy),
-/// fitted lock-free, then checked back in. Fits for different
+/// State lives in a [`KeyedStateStore`] — a keyed table with an
+/// optional bounded LRU working set that pages cold `(tenant, user,
+/// site)` adapters to disk as bit-exact `wire::encode_state` blobs
+/// (ADR 006). The store is mutex-protected but fits do NOT hold the
+/// lock while computing: an adapter is *checked out* (removed, marked
+/// busy), fitted lock-free, then checked back in. Fits for different
 /// `(tenant, user, site)` keys therefore run genuinely concurrently —
 /// across daemon connections and inside one [`WorkerCore::fit_batch`]
 /// fan-out — while a concurrent fit for the *same* key surfaces as a
-/// "busy" error instead of a deadlock or a silent double-step.
+/// "busy" error instead of a deadlock or a silent double-step. Page
+/// faults DO happen under the lock: the fault is part of checkout, and
+/// serializing it keeps the LRU clock a pure function of the access
+/// sequence.
 pub struct WorkerCore {
     id: usize,
     target: OffloadTarget,
     manifest: Arc<Manifest>,
     transfer: Option<TransferModel>,
-    adapters: Mutex<AdapterTable>,
+    adapters: Mutex<KeyedStateStore>,
     /// the PJRT "low-end GPU" device, spawned lazily on first use
     pjrt: Mutex<Option<Device>>,
     /// chaos hook: keys whose next fit panics mid-checkout, while the
@@ -1462,16 +1561,39 @@ impl WorkerCore {
         manifest: Arc<Manifest>,
         transfer: Option<TransferModel>,
     ) -> WorkerCore {
+        // no pager -> KeyedStateStore::with_pager is never hit, so this
+        // construction cannot fail
         WorkerCore {
             id,
             target,
             manifest,
             transfer,
-            adapters: Mutex::new(AdapterTable::default()),
+            adapters: Mutex::new(KeyedStateStore::new()),
             pjrt: Mutex::new(None),
             chaos_panic_keys: Mutex::new(BTreeSet::new()),
             replicas: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// [`Self::new`] with an optional LRU pager behind the state store.
+    /// Fails only when the page directory cannot be created.
+    pub fn new_paged(
+        id: usize,
+        target: OffloadTarget,
+        manifest: Arc<Manifest>,
+        transfer: Option<TransferModel>,
+        pager: Option<PagerCfg>,
+    ) -> Result<WorkerCore> {
+        let mut core = WorkerCore::new(id, target, manifest, transfer);
+        if let Some(cfg) = pager {
+            core.adapters = Mutex::new(KeyedStateStore::with_pager(cfg)?);
+        }
+        Ok(core)
+    }
+
+    /// Paging counters of this core's state store.
+    pub fn page_stats(&self) -> PageStats {
+        lock(&self.adapters).stats()
     }
 
     pub fn id(&self) -> usize {
@@ -1499,41 +1621,40 @@ impl WorkerCore {
         adapter: SiteAdapter,
     ) -> Result<()> {
         let key = (tenant.to_string(), user, site.to_string());
-        let mut tab = lock(&self.adapters);
-        if tab.busy.contains(&key) {
+        let mut store = lock(&self.adapters);
+        if store.is_busy(&key) {
             bail!(
                 "worker {}: cannot register {} while a fit for it is in flight",
                 self.id,
                 key_label(&key)
             );
         }
-        tab.map.insert(key, adapter);
+        store.insert(key, adapter);
         Ok(())
     }
 
     pub fn snapshot(&self, tenant: &str, user: usize, site: &str) -> Result<AdapterParams> {
         let key = (tenant.to_string(), user, site.to_string());
-        let tab = lock(&self.adapters);
-        if tab.busy.contains(&key) {
+        let mut store = lock(&self.adapters);
+        if store.is_busy(&key) {
             bail!("worker {}: adapter {} is busy (fit in flight)", self.id, key_label(&key));
         }
-        tab.map
-            .get(&key)
-            .map(|a| a.params.clone())
+        store
+            .peek_clone(&key)
+            .with_context(|| format!("worker {}: snapshot failed", self.id))?
+            .map(|a| a.params)
             .ok_or_else(|| anyhow!("worker {}: no adapter {}", self.id, key_label(&key)))
     }
 
-    /// Bytes of resident adapter + optimizer state, across all tenants,
+    /// Bytes of RESIDENT adapter + optimizer state, across all tenants,
     /// plus passive buddy-replica blobs (they occupy real device memory
-    /// too, so the footprint ledger stays honest). Best-effort during
-    /// concurrent fits: a checked-out adapter is not counted until it
-    /// checks back in.
+    /// too, so the footprint ledger stays honest). Paged-out state is
+    /// deliberately excluded — it lives on disk, and bounding this
+    /// figure is the point of paging. Best-effort during concurrent
+    /// fits: a checked-out adapter is not counted until it checks back
+    /// in.
     pub fn state_bytes(&self) -> usize {
-        let live: usize = lock(&self.adapters)
-            .map
-            .values()
-            .map(|a| a.params.bytes() + a.opt.bytes())
-            .sum();
+        let live = lock(&self.adapters).resident_bytes();
         let passive: usize = lock(&self.replicas).values().map(Vec::len).sum();
         live + passive
     }
@@ -1541,28 +1662,28 @@ impl WorkerCore {
     /// Current number of in-flight fits (checked-out adapters) — the
     /// load figure a `Pong` heartbeat reply carries.
     pub fn load(&self) -> u64 {
-        lock(&self.adapters).busy.len() as u64
+        lock(&self.adapters).busy_len() as u64
     }
 
     /// Serialize one shard's full adapter + optimizer state as a
     /// bit-exact migration blob ([`crate::transport::wire::encode_state`]).
     /// Rejected while a fit for the key is in flight — a mid-step export
-    /// would capture a torn snapshot.
+    /// would capture a torn snapshot. A paged-out shard serves from its
+    /// page file (page files ARE migration blobs).
     pub fn export_state(&self, tenant: &str, user: usize, site: &str) -> Result<Vec<u8>> {
         let key = (tenant.to_string(), user, site.to_string());
-        let tab = lock(&self.adapters);
-        if tab.busy.contains(&key) {
+        let mut store = lock(&self.adapters);
+        if store.is_busy(&key) {
             bail!(
                 "worker {}: cannot export {} while a fit for it is in flight",
                 self.id,
                 key_label(&key)
             );
         }
-        let a = tab
-            .map
-            .get(&key)
-            .ok_or_else(|| anyhow!("worker {}: no adapter {}", self.id, key_label(&key)))?;
-        Ok(crate::transport::wire::encode_state(user, site, a))
+        store
+            .export_blob(&key)
+            .with_context(|| format!("worker {}: export failed", self.id))?
+            .ok_or_else(|| anyhow!("worker {}: no adapter {}", self.id, key_label(&key)))
     }
 
     /// Install a migration blob under `tenant`, replacing any existing
@@ -1571,32 +1692,32 @@ impl WorkerCore {
     pub fn import_state(&self, tenant: &str, blob: &[u8]) -> Result<(usize, String)> {
         let (user, site, adapter) = crate::transport::wire::decode_state(blob)?;
         let key = (tenant.to_string(), user, site.clone());
-        let mut tab = lock(&self.adapters);
-        if tab.busy.contains(&key) {
+        let mut store = lock(&self.adapters);
+        if store.is_busy(&key) {
             bail!(
                 "worker {}: cannot import {} while a fit for it is in flight",
                 self.id,
                 key_label(&key)
             );
         }
-        tab.map.insert(key, adapter);
+        store.insert(key, adapter);
         Ok((user, site))
     }
 
-    /// Drop a shard's state after it migrated away. Evicting an absent
-    /// key is a no-op; evicting a busy key is an error (the fit's
-    /// check-in would resurrect it).
+    /// Drop a shard's state after it migrated away (resident AND any
+    /// on-disk page). Evicting an absent key is a no-op; evicting a
+    /// busy key is an error (the fit's check-in would resurrect it).
     pub fn evict_state(&self, tenant: &str, user: usize, site: &str) -> Result<()> {
         let key = (tenant.to_string(), user, site.to_string());
-        let mut tab = lock(&self.adapters);
-        if tab.busy.contains(&key) {
+        let mut store = lock(&self.adapters);
+        if store.is_busy(&key) {
             bail!(
                 "worker {}: cannot evict {} while a fit for it is in flight",
                 self.id,
                 key_label(&key)
             );
         }
-        tab.map.remove(&key);
+        store.remove(&key);
         Ok(())
     }
 
@@ -1639,30 +1760,28 @@ impl WorkerCore {
     }
 
     fn checkout(&self, key: &TenantKey) -> Result<SiteAdapter> {
-        let mut tab = lock(&self.adapters);
+        let mut store = lock(&self.adapters);
         if lock(&self.chaos_panic_keys).remove(key) {
             // lint:allow(panic-safety): one-shot chaos hook; panics under the table lock on purpose
             panic!("injected fit panic for {}", key_label(key));
         }
-        match tab.map.remove(key) {
-            Some(a) => {
-                tab.busy.insert(key.clone());
-                Ok(a)
-            }
-            None if tab.busy.contains(key) => Err(anyhow!(
+        // take() faults paged keys in from disk; a corrupted page is
+        // THIS key's error (never a panic, never another key's problem)
+        match store.take(key) {
+            Ok(Some(a)) => Ok(a),
+            Ok(None) if store.is_busy(key) => Err(anyhow!(
                 "worker {}: adapter {} is busy (another fit for the same \
                  (user, site) is in flight)",
                 self.id,
                 key_label(key)
             )),
-            None => Err(anyhow!("worker {}: no adapter {}", self.id, key_label(key))),
+            Ok(None) => Err(anyhow!("worker {}: no adapter {}", self.id, key_label(key))),
+            Err(e) => Err(e.context(format!("worker {}: checkout failed", self.id))),
         }
     }
 
     fn checkin(&self, key: TenantKey, adapter: SiteAdapter) {
-        let mut tab = lock(&self.adapters);
-        tab.busy.remove(&key);
-        tab.map.insert(key, adapter);
+        lock(&self.adapters).checkin(key, adapter);
     }
 
     /// Serve one buffered-interval fit.
@@ -1703,7 +1822,7 @@ impl WorkerCore {
         key: &TenantKey,
         payload: &(dyn std::any::Any + Send),
     ) -> anyhow::Error {
-        let discarded = lock(&self.adapters).busy.remove(key);
+        let discarded = lock(&self.adapters).clear_busy(key);
         let what = crate::util::panic_message(payload);
         if discarded {
             anyhow!(
@@ -1942,15 +2061,12 @@ fn check_job_shapes(params: &AdapterParams, job: &FitJob) -> Result<()> {
     Ok(())
 }
 
-fn worker_main(
-    id: usize,
-    rx: Receiver<WorkerCmd>,
-    target: OffloadTarget,
-    manifest: Arc<Manifest>,
-    transfer: Option<TransferModel>,
-) {
+/// The bounded event loop behind one local worker: a SINGLE thread
+/// multiplexing every user sharded onto it — which is why 10^6 users
+/// never mean 10^6 threads. The core is built by the spawner (so a bad
+/// page dir fails the spawn) and moved in here.
+fn worker_main(core: WorkerCore, rx: Receiver<WorkerCmd>) {
     // a local pool is single-tenant: every key lives under tenant ""
-    let core = WorkerCore::new(id, target, manifest, transfer);
     while let Ok(cmd) = rx.recv() {
         match cmd {
             WorkerCmd::Register { user, site, adapter } => {
@@ -1975,6 +2091,9 @@ fn worker_main(
             }
             WorkerCmd::Evict { user, site, reply } => {
                 let _ = reply.send(core.evict_state("", user, &site));
+            }
+            WorkerCmd::PageStats(reply) => {
+                let _ = reply.send(core.page_stats());
             }
             WorkerCmd::Shutdown => break,
         }
@@ -2045,9 +2164,9 @@ mod tests {
         assert_eq!(keys, vec!["local-0", "local-1", "local-2"]);
         let mut seen = BTreeSet::new();
         for user in 0..64 {
-            let shard = pool.shard_of(user);
-            assert_eq!(shard, rendezvous_owner(&keys, user));
-            assert_eq!(pool.for_user(user).id(), pool.worker(shard).id());
+            let shard = pool.shard_of(user).unwrap();
+            assert_eq!(shard, rendezvous_owner(&keys, user).unwrap());
+            assert_eq!(pool.for_user(user).unwrap().id(), pool.worker(shard).id());
             seen.insert(shard);
         }
         // 64 users over 3 members: every member owns someone
@@ -2063,8 +2182,8 @@ mod tests {
         let three = member_keys(&["a:1".into(), "b:1".into(), "c:1".into()]);
         let mut moved = 0;
         for user in 0..500 {
-            let before = &two[rendezvous_owner(&two, user)];
-            let after = &three[rendezvous_owner(&three, user)];
+            let before = &two[rendezvous_owner(&two, user).unwrap()];
+            let after = &three[rendezvous_owner(&three, user).unwrap()];
             if before != after {
                 assert_eq!(after, "c:1", "user {user} moved {before} -> {after}");
                 moved += 1;
@@ -2077,11 +2196,46 @@ mod tests {
         // by c's removal — removal only re-homes the removed member's own
         // users (the weights of survivors never change)
         for user in 0..500 {
-            let o3 = rendezvous_owner(&three, user);
+            let o3 = rendezvous_owner(&three, user).unwrap();
             if three[o3] != "c:1" {
-                assert_eq!(two[rendezvous_owner(&two, user)], three[o3]);
+                assert_eq!(two[rendezvous_owner(&two, user).unwrap()], three[o3]);
             }
         }
+    }
+
+    /// The empty-member-set regression: a pool whose last member was
+    /// removed (or marked dead) before a placement must answer with a
+    /// named error, never an assert/index panic. The standalone
+    /// `rendezvous_owner` (used offline by `cola pool`) and the pool's
+    /// own placement surface agree on this.
+    #[test]
+    fn empty_member_set_is_a_named_error_not_a_panic() {
+        let err = rendezvous_owner(&[], 7).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("empty member set"), "{msg}");
+        assert!(msg.contains("user 7"), "{msg}");
+
+        let mut pool =
+            WorkerPool::spawn(1, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+        // placement works while the member lives...
+        assert_eq!(pool.shard_of(3).unwrap(), 0);
+        // ...then the operator removes the last member before the next
+        // dispatch (the exact sequence that used to panic)
+        let m = pool.remove_member(0);
+        m.transport().shutdown();
+        assert_eq!(pool.len(), 0);
+        for res in [
+            pool.shard_of(3).map(|_| ()),
+            pool.owner_key(3).map(|_| ()),
+            pool.for_user(3).map(|_| ()),
+            pool.place_user(3, &BTreeMap::new(), &BTreeSet::new()).map(|_| ()),
+        ] {
+            let msg = format!("{}", res.unwrap_err());
+            assert!(msg.contains("empty member set"), "{msg}");
+            assert!(msg.contains("user 3"), "{msg}");
+        }
+        // no owner -> no buddy, and still no panic
+        assert_eq!(pool.buddy_of(3), None);
     }
 
     #[test]
@@ -2268,7 +2422,7 @@ mod tests {
         let mut pool =
             WorkerPool::spawn(3, OffloadTarget::NativeCpu, manifest(), None).unwrap();
         let keys = pool.keys();
-        let before: Vec<usize> = (0..32).map(|u| pool.shard_of(u)).collect();
+        let before: Vec<usize> = (0..32).map(|u| pool.shard_of(u).unwrap()).collect();
         let loads: BTreeMap<String, u64> = [
             (keys[0].clone(), 4u64),
             (keys[1].clone(), 40), // 10x the fleet median
@@ -2281,9 +2435,9 @@ mod tests {
         let exclude = BTreeSet::new();
         let mut diverted = 0;
         for u in 100..164 {
-            let placed = pool.place_user(u, &tiers, &exclude);
+            let placed = pool.place_user(u, &tiers, &exclude).unwrap();
             assert_ne!(placed, 1, "hot member was handed new user {u}");
-            if pool.shard_of(u) != rendezvous_owner(&keys, u) {
+            if pool.shard_of(u).unwrap() != rendezvous_owner(&keys, u).unwrap() {
                 diverted += 1;
             }
         }
@@ -2292,13 +2446,13 @@ mod tests {
         assert!(diverted > 0, "shed tier never diverged from plain HRW");
         // existing users (placed before the load snapshot) never moved
         for (u, b) in before.iter().enumerate() {
-            assert_eq!(pool.shard_of(u), *b, "existing shard {u} moved");
+            assert_eq!(pool.shard_of(u).unwrap(), *b, "existing shard {u} moved");
         }
         // once the member cools off, re-placing a diverted user sends it
         // home and clears the override (plain HRW and shard_of agree)
         for u in 100..164 {
-            pool.place_user(u, &BTreeMap::new(), &exclude);
-            assert_eq!(pool.shard_of(u), rendezvous_owner(&keys, u));
+            pool.place_user(u, &BTreeMap::new(), &exclude).unwrap();
+            assert_eq!(pool.shard_of(u).unwrap(), rendezvous_owner(&keys, u).unwrap());
         }
     }
 
@@ -2313,9 +2467,9 @@ mod tests {
         // "exclude everyone" — the degenerate case we want
         let exclude: BTreeSet<String> = [String::new()].into_iter().collect();
         for u in 0..16 {
-            let placed = pool.place_user(u, &BTreeMap::new(), &exclude);
-            assert_eq!(placed, rendezvous_owner(&keys, u));
-            assert_eq!(pool.shard_of(u), placed);
+            let placed = pool.place_user(u, &BTreeMap::new(), &exclude).unwrap();
+            assert_eq!(placed, rendezvous_owner(&keys, u).unwrap());
+            assert_eq!(pool.shard_of(u).unwrap(), placed);
         }
     }
 
@@ -2328,7 +2482,7 @@ mod tests {
         let pool = WorkerPool::spawn(3, OffloadTarget::NativeCpu, manifest(), None).unwrap();
         let keys = pool.keys();
         for u in 0..64 {
-            let owner = pool.shard_of(u);
+            let owner = pool.shard_of(u).unwrap();
             let buddy = pool.buddy_of(u).expect("3-member pool must have a buddy");
             assert_ne!(buddy, owner, "buddy shares the owner's failure domain");
             let rest: Vec<String> = keys
@@ -2337,7 +2491,7 @@ mod tests {
                 .filter(|(i, _)| *i != owner)
                 .map(|(_, k)| k.clone())
                 .collect();
-            assert_eq!(keys[buddy], rest[rendezvous_owner(&rest, u)]);
+            assert_eq!(keys[buddy], rest[rendezvous_owner(&rest, u).unwrap()]);
         }
         let solo = WorkerPool::spawn(1, OffloadTarget::NativeCpu, manifest(), None).unwrap();
         assert!(solo.buddy_of(0).is_none());

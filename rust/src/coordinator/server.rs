@@ -313,8 +313,24 @@ impl Trainer {
         }
         let (pool, mut supervisor) = match self.cfg.offload_transport {
             TransportKind::Local => (
-                WorkerPool::spawn(self.cfg.workers, self.cfg.offload,
-                                  self.rt.manifest.clone(), transfer)?,
+                // state_working_set bounds resident adapters per worker;
+                // cold shards page to state_page_dir as bit-exact
+                // wire::encode_state blobs (curves are byte-identical
+                // paging on or off — crate::scale::store)
+                WorkerPool::spawn_paged(
+                    self.cfg.workers,
+                    self.cfg.offload,
+                    self.rt.manifest.clone(),
+                    transfer,
+                    (self.cfg.state_working_set > 0).then(|| {
+                        crate::scale::store::PagerCfg {
+                            dir: std::path::PathBuf::from(
+                                &self.cfg.state_page_dir,
+                            ),
+                            capacity: self.cfg.state_working_set,
+                        }
+                    }),
+                )?,
                 None,
             ),
             // remote daemons pick their own offload target (`cola worker
@@ -396,7 +412,7 @@ impl Trainer {
                         sup.checkpoint(user, &s.site, blob);
                     }
                 }
-                pool.for_user(user).register(user, &s.site, adapter)?;
+                pool.for_user(user)?.register(user, &s.site, adapter)?;
             }
         }
         self.pool = Some(pool);
@@ -804,7 +820,7 @@ impl Trainer {
                 // its reply applies, so a copy can be re-dispatched
                 // against a restored checkpoint
                 meta.push((user, site, keep_jobs.then(|| job.clone())));
-                let slot = per_worker.entry(pool.shard_of(user)).or_default();
+                let slot = per_worker.entry(pool.shard_of(user)?).or_default();
                 slot.0.push(i);
                 slot.1.push(job);
             }
@@ -1036,8 +1052,10 @@ impl Trainer {
         // per-slot owner snapshot BEFORE failover mutates the pool —
         // with load-aware placement the owner is whatever shard_of
         // says (overrides included), not the plain rendezvous winner
-        let slot_owners: Vec<String> =
-            slots.iter().map(|s| pool.owner_key(s.user)).collect();
+        let slot_owners: Vec<String> = slots
+            .iter()
+            .map(|s| pool.owner_key(s.user))
+            .collect::<Result<_>>()?;
         let dead = sup.find_dead(pool);
         let dead_keys: std::collections::BTreeSet<&String> =
             dead.iter().map(|&i| &old_keys[i]).collect();
@@ -1088,7 +1106,7 @@ impl Trainer {
                 )
             })?;
             timings.round_trips += 1;
-            retries.push((i, pool.for_user(s.user).fit(job)?));
+            retries.push((i, pool.for_user(s.user)?.fit(job)?));
         }
         for (i, rx) in retries {
             let s = &mut slots[i];
@@ -1123,7 +1141,10 @@ impl Trainer {
             if s.refreshed {
                 continue;
             }
-            match pool.for_user(s.user).export_state(s.user, &s.site) {
+            match pool
+                .for_user(s.user)
+                .and_then(|w| w.export_state(s.user, &s.site))
+            {
                 Ok(blob) => {
                     // the post-interval push point: the same blob seeds
                     // the shadow checkpoint AND the buddy replica, so a
@@ -1359,7 +1380,7 @@ impl Trainer {
         let mut blobs: Vec<Vec<u8>> = Vec::new();
         for user in 0..self.cfg.users {
             for s in &self.driver.sites {
-                blobs.push(pool.for_user(user).export_state(user, &s.site)?);
+                blobs.push(pool.for_user(user)?.export_state(user, &s.site)?);
             }
         }
         let total: usize = blobs.iter().map(|b| b.len() + 4).sum();
@@ -1377,7 +1398,7 @@ impl Trainer {
         self.pool
             .as_ref()
             .ok_or_else(|| anyhow!("no worker pool (coupled method?)"))?
-            .for_user(user)
+            .for_user(user)?
             .snapshot(user, site)
     }
 
@@ -1396,7 +1417,7 @@ impl Trainer {
         let sites: Vec<String> =
             self.driver.sites.iter().map(|s| s.site.clone()).collect();
         for site in sites {
-            let params = pool.for_user(user).snapshot(user, &site)?;
+            let params = pool.for_user(user)?.snapshot(user, &site)?;
             merge::merge_into(&mut self.weights, &site, &params)?;
         }
         Ok(())

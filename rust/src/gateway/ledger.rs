@@ -126,25 +126,48 @@ impl UsageLedger {
         })
     }
 
-    /// Enqueue one entry without blocking. A full channel drops the
-    /// entry (counted); a closed channel (shutdown race) also counts as
-    /// a drop.
+    /// Enqueue one entry without blocking. Only a FULL channel (writer
+    /// stalled on disk) drops the entry and bumps the counter — that is
+    /// the sampling trade `ledger_dropped` exists to surface. A closed
+    /// channel means the ledger is shutting down; a record racing that
+    /// close is not a capacity drop and must not inflate the counter
+    /// (the gateway joins the runner before closing the ledger, so by
+    /// then every job's rows are already enqueued).
     pub fn record(&self, entry: &UsageEntry) {
         let Some(tx) = &self.tx else {
-            self.dropped.fetch_add(1, Ordering::Relaxed);
             return;
         };
         match tx.try_send(entry.to_json()) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+            Ok(()) | Err(TrySendError::Disconnected(_)) => {}
+            Err(TrySendError::Full(_)) => {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
 
-    /// Entries dropped so far (full channel or shutdown race).
+    /// Entries dropped so far (full channel only).
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// A handle on the drop counter that outlives the ledger — the
+    /// gateway keeps one so `/healthz` can keep reporting
+    /// `ledger_dropped` after shutdown closed the ledger itself.
+    pub fn drop_counter(&self) -> Arc<AtomicU64> {
+        self.dropped.clone()
+    }
+
+    /// Close the channel, let the writer drain everything still
+    /// buffered, and join it — after this returns, every recorded line
+    /// is flushed to disk. Idempotent; `Drop` calls it too, but the
+    /// gateway closes explicitly on `/v1/shutdown` so buffered rows
+    /// can never be lost to process exit racing a lingering
+    /// connection thread's `Arc` clone.
+    pub fn close(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -152,10 +175,7 @@ impl Drop for UsageLedger {
     fn drop(&mut self) {
         // closing the channel lets the writer drain and exit; join so
         // buffered lines hit disk before the gateway reports "exited"
-        drop(self.tx.take());
-        if let Some(h) = self.writer.take() {
-            let _ = h.join();
-        }
+        self.close();
     }
 }
 
@@ -211,6 +231,46 @@ mod tests {
             let v = Json::parse(line).unwrap();
             assert_eq!(v.get("tenant").and_then(Json::as_str), Some("t"));
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The shutdown race must not masquerade as capacity loss: records
+    /// racing (or following) `close()` are discarded silently, and the
+    /// drop counter stays a pure try_send-Full count. The counter
+    /// handle also survives the ledger for post-shutdown `/healthz`.
+    #[test]
+    fn close_drains_and_shutdown_races_do_not_count_as_drops() {
+        let path = std::env::temp_dir().join(format!(
+            "cola_ledger_close_test_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut ledger = UsageLedger::open(path.to_str().unwrap()).unwrap();
+        let counter = ledger.drop_counter();
+        let e = UsageEntry {
+            tenant: "t".into(),
+            job: 1,
+            user: 0,
+            interval: 1,
+            step: 1,
+            bytes_offloaded: 1,
+            bytes_returned: 2,
+            unix_ms: now_unix_ms(),
+        };
+        for _ in 0..5 {
+            ledger.record(&e);
+        }
+        ledger.close();
+        // every buffered row is on disk once close() returns
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 5);
+        // a record after close is a shutdown race, not a capacity drop
+        ledger.record(&e);
+        assert_eq!(ledger.dropped(), 0);
+        assert_eq!(counter.load(Ordering::Relaxed), 0);
+        // close is idempotent (Drop will call it again)
+        ledger.close();
+        drop(ledger);
         let _ = std::fs::remove_file(&path);
     }
 }

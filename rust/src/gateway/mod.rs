@@ -173,7 +173,17 @@ struct Shared {
     jobs: JobRegistry,
     queue: Mutex<AdmissionQueue>,
     queue_cv: Condvar,
-    ledger: Option<UsageLedger>,
+    /// Behind a mutex so [`Gateway::join`] can TAKE and close it after
+    /// the runner exits. `Shared` itself sits in an `Arc` whose last
+    /// clone may be held by a lingering connection thread (the one
+    /// serving `POST /v1/shutdown`, typically) — relying on `Drop` to
+    /// drain the writer meant process exit could race it and lose the
+    /// final interval's buffered rows.
+    ledger: Mutex<Option<UsageLedger>>,
+    /// Counter handle that outlives the ledger, so `/healthz` keeps
+    /// reporting `ledger_dropped` (try_send-Full drops only) even
+    /// after shutdown closed the ledger. `None` = no ledger configured.
+    ledger_drops: Option<std::sync::Arc<std::sync::atomic::AtomicU64>>,
     stop: AtomicBool,
     paused: AtomicBool,
     /// Resolved listen address (for the shutdown self-connect wake).
@@ -201,6 +211,7 @@ impl Gateway {
         } else {
             Some(UsageLedger::open(&cfg.ledger)?)
         };
+        let ledger_drops = ledger.as_ref().map(UsageLedger::drop_counter);
         let listener = TcpListener::bind(&cfg.listen)
             .with_context(|| format!("binding gateway listener on {}", cfg.listen))?;
         let addr = listener.local_addr()?.to_string();
@@ -209,7 +220,8 @@ impl Gateway {
             jobs: JobRegistry::new(),
             queue: Mutex::new(AdmissionQueue::new(cfg.backlog)),
             queue_cv: Condvar::new(),
-            ledger,
+            ledger: Mutex::new(ledger),
+            ledger_drops,
             stop: AtomicBool::new(false),
             paused: AtomicBool::new(cfg.start_paused),
             addr,
@@ -256,7 +268,11 @@ impl Gateway {
 
     /// Block until the accept loop and runner exit (i.e. until someone
     /// calls [`Gateway::request_stop`] or `POST /v1/shutdown` arrives),
-    /// then flush the ledger.
+    /// then flush the ledger: the writer channel is closed, drained,
+    /// and joined HERE — not left to the `Arc<Shared>` drop, which a
+    /// lingering connection thread (the `/v1/shutdown` one included)
+    /// could keep alive past process exit, losing the final interval's
+    /// buffered rows.
     pub fn join(mut self) {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
@@ -264,11 +280,21 @@ impl Gateway {
         if let Some(h) = self.runner.take() {
             let _ = h.join();
         }
+        // runner is down, so every job's records are enqueued; drain
+        // them to disk before reporting "exited"
+        if let Some(mut ledger) = lock_recover(&self.shared.ledger).take() {
+            ledger.close();
+        }
     }
 
     /// Ledger entries dropped so far (0 when no ledger is configured).
+    /// Counts try_send-Full drops only — shutdown races never inflate
+    /// it — and stays readable after `join` closed the ledger.
     pub fn ledger_dropped(&self) -> u64 {
-        self.shared.ledger.as_ref().map_or(0, UsageLedger::dropped)
+        self.shared
+            .ledger_drops
+            .as_ref()
+            .map_or(0, |c| c.load(Ordering::Relaxed))
     }
 }
 
@@ -350,7 +376,12 @@ fn route(shared: &Arc<Shared>, w: &mut TcpStream, req: &Request) {
         obj.insert("ok".to_string(), Json::Bool(true));
         obj.insert(
             "ledger_dropped".to_string(),
-            Json::Num(shared.ledger.as_ref().map_or(0, UsageLedger::dropped) as f64),
+            Json::Num(
+                shared
+                    .ledger_drops
+                    .as_ref()
+                    .map_or(0, |c| c.load(Ordering::Relaxed)) as f64,
+            ),
         );
         json_body(w, 200, obj);
         return;
@@ -605,6 +636,9 @@ fn runner_main(shared: &Arc<Shared>) {
             return;
         };
         run_job(shared, &tenant, id);
+        // the job reached a terminal state either way — release its
+        // admission slot so the tenant's cap counts only live work
+        lock_recover(&shared.queue).finish(&tenant);
     }
 }
 
@@ -641,7 +675,7 @@ fn execute_job(shared: &Shared, tenant: &str, id: u64, src: &str) -> Result<()> 
         }
         interval_no += 1;
         shared.jobs.push_progress(id, progress_line(p, interval_no));
-        if let Some(ledger) = &shared.ledger {
+        if let Some(ledger) = lock_recover(&shared.ledger).as_ref() {
             // per-interval deltas, attributed evenly per user (the
             // joint batch divides evenly across users by construction)
             let d_off = p.bytes_offloaded.saturating_sub(last_off);

@@ -9,9 +9,14 @@
 //!    backlog only delays its own later jobs, never another tenant's
 //!    next job — the fairness regression in `tests/gateway_http.rs`
 //!    pins the exact interleaving.
-//! 2. **Bounded memory.** Each tenant holds at most `cap` queued jobs;
-//!    the gateway answers an overflowing submit with `429` instead of
-//!    buffering without limit.
+//! 2. **Bounded memory.** Each tenant holds at most `cap` slots,
+//!    counting queued jobs AND the job currently running ([`
+//!    AdmissionQueue::pop`] moves a job from queued to running;
+//!    [`AdmissionQueue::finish`] frees the slot). The gateway answers
+//!    an overflowing submit with `429` instead of buffering without
+//!    limit. Counting only the queue let a tenant hold `cap + 1` slots
+//!    (cap queued + one in flight) — fixed by including the running
+//!    job in the depth the admission check sees.
 //!
 //! The structure is deliberately deterministic (`BTreeMap`, sorted
 //! iteration): given the same admission order, the service order is a
@@ -25,26 +30,37 @@ use std::collections::{BTreeMap, VecDeque};
 pub struct AdmissionQueue {
     cap: usize,
     backlog: BTreeMap<String, VecDeque<u64>>,
+    /// Jobs popped but not yet finished, per tenant. A running job
+    /// still occupies one of its tenant's `cap` slots — otherwise a
+    /// tenant with one job in flight could keep `cap` more queued,
+    /// holding `cap + 1` slots total.
+    running: BTreeMap<String, usize>,
     /// Last tenant served; the next pop starts strictly after it in
     /// sorted order, wrapping.
     cursor: Option<String>,
 }
 
 impl AdmissionQueue {
-    /// `cap` = max queued jobs per tenant (>= 1).
+    /// `cap` = max in-flight + queued jobs per tenant (>= 1).
     pub fn new(cap: usize) -> AdmissionQueue {
-        AdmissionQueue { cap: cap.max(1), backlog: BTreeMap::new(), cursor: None }
+        AdmissionQueue {
+            cap: cap.max(1),
+            backlog: BTreeMap::new(),
+            running: BTreeMap::new(),
+            cursor: None,
+        }
     }
 
-    /// Enqueue a job. `Ok(depth)` = queued at that backlog depth;
-    /// `Err(cap)` = the tenant's backlog is full (caller answers 429).
+    /// Enqueue a job. `Ok(depth)` = admitted at that depth (queued +
+    /// running); `Err(cap)` = the tenant already holds `cap` slots
+    /// (caller answers 429).
     pub fn push(&mut self, tenant: &str, job: u64) -> Result<usize, usize> {
-        let q = self.backlog.entry(tenant.to_string()).or_default();
-        if q.len() >= self.cap {
+        if self.depth(tenant) >= self.cap {
             return Err(self.cap);
         }
+        let q = self.backlog.entry(tenant.to_string()).or_default();
         q.push_back(job);
-        Ok(q.len())
+        Ok(q.len() + self.running.get(tenant).copied().unwrap_or(0))
     }
 
     /// Dequeue the next job round-robin: the first tenant in sorted
@@ -71,11 +87,26 @@ impl AdmissionQueue {
         if self.backlog.get(&pick).is_some_and(VecDeque::is_empty) {
             self.backlog.remove(&pick);
         }
+        *self.running.entry(pick.clone()).or_insert(0) += 1;
         self.cursor = Some(pick.clone());
         Some((pick, job))
     }
 
-    /// Total queued jobs across tenants.
+    /// Release a popped job's slot once it finished (or failed). The
+    /// runner calls this after the job returns; finishing a tenant
+    /// with nothing running is a no-op, so a crash-recovered runner
+    /// can over-call safely.
+    pub fn finish(&mut self, tenant: &str) {
+        if let Some(n) = self.running.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                self.running.remove(tenant);
+            }
+        }
+    }
+
+    /// Total queued jobs across tenants (running jobs excluded — this
+    /// feeds the runner's "is there work" predicate).
     pub fn len(&self) -> usize {
         self.backlog.values().map(VecDeque::len).sum()
     }
@@ -84,9 +115,12 @@ impl AdmissionQueue {
         self.len() == 0
     }
 
-    /// Current backlog depth for one tenant.
+    /// Slots one tenant currently holds: queued jobs plus the running
+    /// one, which is the figure the `cap` admission check compares
+    /// against.
     pub fn depth(&self, tenant: &str) -> usize {
         self.backlog.get(tenant).map_or(0, VecDeque::len)
+            + self.running.get(tenant).copied().unwrap_or(0)
     }
 }
 
@@ -197,6 +231,9 @@ mod tests {
                         if sq.is_empty() {
                             shadow.remove(&t);
                         }
+                        // settle the job immediately so the shadow's
+                        // queued-only depth keeps matching `depth()`
+                        q.finish(&t);
                         cursor = Some(t);
                     }
                     (got, want) => panic!("pop mismatch: got {got:?}, want {want:?}"),
@@ -240,8 +277,36 @@ mod tests {
         assert_eq!(q.push("b", 9), Ok(1));
         assert_eq!(q.depth("a"), 2);
         assert_eq!(q.len(), 3);
-        // popping frees capacity
+        // popping alone does NOT free capacity — the job is running now
         q.pop().unwrap();
+        assert_eq!(q.push("a", 3), Err(2));
+        // finishing it does
+        q.finish("a");
         assert_eq!(q.push("a", 3), Ok(2));
+    }
+
+    /// The cap+1 regression: a tenant's in-flight job must keep holding
+    /// one of its slots until the runner finishes it, or cap queued +
+    /// one running = cap+1 slots.
+    #[test]
+    fn running_job_counts_against_the_cap() {
+        let mut q = AdmissionQueue::new(2);
+        assert_eq!(q.push("a", 1), Ok(1));
+        assert_eq!(q.push("a", 2), Ok(2));
+        let (t, j) = q.pop().unwrap();
+        assert_eq!((t.as_str(), j), ("a", 1));
+        // one queued + one running == cap: still full
+        assert_eq!(q.depth("a"), 2);
+        assert_eq!(q.push("a", 3), Err(2));
+        // the running job does not block OTHER tenants
+        assert_eq!(q.push("b", 9), Ok(1));
+        q.finish("a");
+        assert_eq!(q.depth("a"), 1);
+        assert_eq!(q.push("a", 3), Ok(2));
+        // finishing an idle or unknown tenant is a no-op
+        q.finish("a");
+        q.finish("a");
+        q.finish("nobody");
+        assert_eq!(q.depth("a"), 2);
     }
 }

@@ -53,6 +53,7 @@ pub mod merge;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod scale;
 pub mod tensor;
 pub mod transport;
 pub mod util;

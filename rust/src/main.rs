@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         "worker" => cmd_worker(&args),
         "pool" => cmd_pool(&args),
         "curvediff" => cmd_curvediff(&args),
+        "scale" => cmd_scale(&args),
         "demo" => cmd_demo(&args),
         "memory" => cmd_memory(&args),
         "table1" => cmd_table1(),
@@ -113,6 +114,22 @@ fn print_help() {
            curvediff  numerically compare two --loss_out curve files\n\
                     cola curvediff a.json b.json [--tol T]\n\
                     --tol T (relative tolerance; default 0 = bit-identical)\n\
+           scale    million-user traffic harness: Zipf arrivals, lazy\n\
+                    registration, LRU adapter-state paging to disk; prints\n\
+                    users/sec + p99 interval latency + resident bytes and\n\
+                    fails on any lost fit (see README \"Scale harness &\n\
+                    state paging\")\n\
+                    --users N (population, default 10000) --intervals N\n\
+                    --touches N (Zipf draws/interval) --workers N --seed S\n\
+                    --rows N (rows per fit job)\n\
+                    --working_set N (max resident adapters per worker;\n\
+                    0 = paging off) --page_dir <dir> (required with a\n\
+                    bounded working set)\n\
+                    --curve_out <file> (per-interval curve as f32 bit\n\
+                    patterns — byte-compare paged vs unpaged runs)\n\
+                    --out <file.json> (machine-readable summary)\n\
+                    --max_resident_bytes B (fail if the fleet's resident\n\
+                    state exceeds B — the CI bounded-memory gate)\n\
            pool     elastic-pool resize between runs: migrate shard state\n\
                     so the same daemons can serve a different topology\n\
                     --config <file.toml> (names users/sites/worker_addrs)\n\
@@ -569,6 +586,141 @@ fn cmd_curvediff(args: &Args) -> Result<()> {
         "curvediff: {compared} points compared, max relative deviation \
          {worst:.3e} (tol {tol:.3e}) — OK"
     );
+    Ok(())
+}
+
+/// `cola scale` — drive a large deterministic user population through
+/// the worker pool with Zipf-skewed arrivals and (optionally) a bounded
+/// LRU working set paging cold adapter state to disk. The harness
+/// itself is clock-free (it lives in the lint-scanned `scale/` tree);
+/// all wall-time measurement happens here, around
+/// [`cola::scale::ScaleHarness::run_interval`].
+fn cmd_scale(args: &Args) -> Result<()> {
+    const SCALE_KEYS: &[&str] = &[
+        "users", "intervals", "touches", "workers", "seed", "rows",
+        "working_set", "page_dir", "curve_out", "out", "max_resident_bytes",
+    ];
+    args.require_no_flags("scale")?;
+    for k in args.options.keys() {
+        if !SCALE_KEYS.contains(&k.as_str()) {
+            bail!("unknown scale option --{k} \
+                   (users|intervals|touches|workers|seed|rows|working_set|\
+                   page_dir|curve_out|out|max_resident_bytes)");
+        }
+    }
+    let cfg = cola::scale::ScaleCfg {
+        users: args.parse_or("users", 10_000)?,
+        intervals: args.parse_or("intervals", 20)?,
+        touches_per_interval: args.parse_or("touches", 256)?,
+        workers: args.parse_or("workers", 4)?,
+        working_set: args.parse_or("working_set", 0)?,
+        page_dir: args.get("page_dir").map(std::path::PathBuf::from),
+        seed: args.parse_or("seed", 0)?,
+        rows: args.parse_or("rows", 4)?,
+    };
+    let intervals = cfg.intervals;
+    println!(
+        "cola scale: {} users, {} intervals x {} touches, {} workers, \
+         working set {} ({}), seed {}",
+        cfg.users,
+        cfg.intervals,
+        cfg.touches_per_interval,
+        cfg.workers,
+        cfg.working_set,
+        if cfg.working_set == 0 { "paging off" } else { "paged" },
+        cfg.seed
+    );
+    let mut harness = cola::scale::ScaleHarness::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut interval_secs = Vec::with_capacity(intervals);
+    for i in 0..intervals {
+        let s = std::time::Instant::now();
+        let rep = harness.run_interval()?;
+        interval_secs.push(s.elapsed().as_secs_f64());
+        // progress every ~10% so a 10^6-user run isn't a silent minute
+        if intervals <= 10 || (i + 1) % (intervals / 10).max(1) == 0 {
+            let sum = harness.summary();
+            println!(
+                "  interval {:>4}/{intervals}: {} touched ({} new), \
+                 {:.1} MiB resident, {} faults",
+                i + 1,
+                rep.touched,
+                rep.new_users,
+                sum.resident_bytes as f64 / (1024.0 * 1024.0),
+                sum.page_stats.faults
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let sum = harness.summary();
+    let users_per_sec = sum.fits_ok as f64 / wall;
+    let mut sorted = interval_secs.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let p99 = sorted[((sorted.len() as f64 * 0.99).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1)];
+    let faults_per_interval = sum.page_stats.faults as f64 / intervals as f64;
+    println!(
+        "cola scale: {} users registered, {} fits ok / {} lost in {wall:.2}s \
+         ({users_per_sec:.0} users/sec, p99 interval {:.1} ms)",
+        sum.users_registered, sum.fits_ok, sum.fits_lost, p99 * 1e3
+    );
+    println!(
+        "  resident {:.1} MiB; paging: {} faults ({faults_per_interval:.1}/interval), \
+         {} evictions, {} writes, {} errors",
+        sum.resident_bytes as f64 / (1024.0 * 1024.0),
+        sum.page_stats.faults,
+        sum.page_stats.evictions,
+        sum.page_stats.page_writes,
+        sum.page_stats.page_errors
+    );
+    if let Some(path) = args.get("curve_out") {
+        std::fs::write(path, harness.curve_hex())
+            .with_context(|| format!("writing {path}"))?;
+        println!("  curve (f32 bit patterns) -> {path}");
+    }
+    if let Some(path) = args.get("out") {
+        let mut o = std::collections::BTreeMap::new();
+        let num = |v: f64| Json::Num(v);
+        o.insert("bench".to_string(), Json::Str("scale".to_string()));
+        o.insert("schema".to_string(), num(1.0));
+        o.insert("users".to_string(), num(harness.cfg().users as f64));
+        o.insert("intervals".to_string(), num(intervals as f64));
+        o.insert("workers".to_string(), num(harness.cfg().workers as f64));
+        o.insert("working_set".to_string(), num(harness.cfg().working_set as f64));
+        o.insert("users_registered".to_string(), num(sum.users_registered as f64));
+        o.insert("fits_ok".to_string(), num(sum.fits_ok as f64));
+        o.insert("fits_lost".to_string(), num(sum.fits_lost as f64));
+        o.insert("users_per_sec".to_string(), num(users_per_sec));
+        o.insert("p99_interval_ms".to_string(), num(p99 * 1e3));
+        o.insert("resident_bytes".to_string(), num(sum.resident_bytes as f64));
+        o.insert("page_faults".to_string(), num(sum.page_stats.faults as f64));
+        o.insert("page_faults_per_interval".to_string(), num(faults_per_interval));
+        o.insert("page_evictions".to_string(), num(sum.page_stats.evictions as f64));
+        o.insert("page_writes".to_string(), num(sum.page_stats.page_writes as f64));
+        o.insert("page_errors".to_string(), num(sum.page_stats.page_errors as f64));
+        std::fs::write(path, format!("{}\n", Json::Obj(o)))
+            .with_context(|| format!("writing {path}"))?;
+        println!("  summary -> {path}");
+    }
+    if sum.fits_lost > 0 {
+        bail!("{} fits lost — a healthy run loses none", sum.fits_lost);
+    }
+    if sum.page_stats.page_errors > 0 {
+        bail!("{} page errors — page files are corrupt or unwritable",
+              sum.page_stats.page_errors);
+    }
+    if let Some(cap) = args.get("max_resident_bytes") {
+        let cap: usize = cap.parse().context("--max_resident_bytes")?;
+        if sum.resident_bytes > cap {
+            bail!(
+                "resident state {} bytes exceeds --max_resident_bytes {cap} — \
+                 the working set is not bounding memory",
+                sum.resident_bytes
+            );
+        }
+        println!("  resident-bytes ceiling OK ({} <= {cap})", sum.resident_bytes);
+    }
     Ok(())
 }
 

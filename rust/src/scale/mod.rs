@@ -1,0 +1,370 @@
+//! Million-user scale harness (`cola scale`): a deterministic traffic
+//! generator that drives 10^5–10^6 lightweight users through the
+//! coordinator's worker pool with a seeded, realistic (Zipf) arrival
+//! distribution, against the LRU-paged state store in [`store`].
+//!
+//! The harness closes the ROADMAP's "heavy traffic from millions of
+//! users" item with two measurable claims:
+//!
+//! 1. **Bounded memory.** Resident adapter bytes depend on the
+//!    working-set size, not the user count: 10^6 registered users with
+//!    `working_set = 1024` hold ~1024 adapters per worker in memory and
+//!    page the rest to disk.
+//! 2. **Paging never moves a curve.** Every interval's summed merged
+//!    delta (dispatch order, same float-add order as the trainer) is
+//!    recorded as a curve point; the curve is byte-identical with
+//!    paging on or off at any working-set size, because a faulted-in
+//!    adapter is bitwise the adapter that was evicted.
+//!
+//! Determinism: everything the curve depends on — arrivals, adapter
+//! init, job data, dispatch order — is a pure function of
+//! [`ScaleCfg::seed`]. The harness itself reads no clocks; wall-time
+//! measurement (users/sec, p99 interval latency) belongs to the
+//! callers (`cola scale`, `benches/scale.rs`), which time
+//! [`ScaleHarness::run_interval`] from outside. This module is in
+//! `cola lint`'s curve-scoped deny set, so a clock or HashMap here
+//! fails CI.
+
+pub mod store;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::{AdapterParams, OptimizerCfg, SiteAdapter};
+use crate::config::{AdapterKind, OffloadTarget};
+use crate::coordinator::{FitJob, WorkerPool};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use store::{PageStats, PagerCfg};
+
+/// Adapter dims: deliberately tiny — the harness measures state
+/// logistics (placement, paging, dispatch) at user-count scale, not
+/// kernel throughput.
+const D_IN: usize = 6;
+const D_OUT: usize = 4;
+const RANK: usize = 2;
+const SITE: &str = "s";
+
+/// Domain-separation tags for the per-purpose RNG streams.
+const TAG_ARRIVALS: u64 = 0xA11;
+const TAG_INIT: u64 = 0x1417;
+const TAG_DATA: u64 = 0xDA7A;
+
+#[derive(Clone, Debug)]
+pub struct ScaleCfg {
+    /// Total user population arrivals are drawn from.
+    pub users: usize,
+    /// Adaptation intervals to run.
+    pub intervals: usize,
+    /// Zipf draws per interval (deduped — the active set per interval
+    /// is at most this big).
+    pub touches_per_interval: usize,
+    /// Local worker threads (each one event loop + one state store).
+    pub workers: usize,
+    /// Max resident adapters per worker; 0 = paging off.
+    pub working_set: usize,
+    /// Page-file root (each worker gets `<dir>/w<id>`). Required iff
+    /// `working_set > 0`.
+    pub page_dir: Option<PathBuf>,
+    pub seed: u64,
+    /// Rows per fit job.
+    pub rows: usize,
+}
+
+impl ScaleCfg {
+    /// Both-or-neither: a working set without a page dir (or vice
+    /// versa) is a half-configured pager, and silently ignoring half a
+    /// config is how curves stop being reproducible.
+    pub fn validate(&self) -> Result<()> {
+        if self.users == 0 || self.intervals == 0 || self.workers == 0 {
+            bail!("cola scale: users, intervals, and workers must all be >= 1");
+        }
+        if self.touches_per_interval == 0 || self.rows == 0 {
+            bail!("cola scale: touches and rows must be >= 1");
+        }
+        match (self.working_set, &self.page_dir) {
+            (0, Some(_)) => bail!(
+                "cola scale: --page_dir set but --working_set is 0 — refusing \
+                 to silently ignore it (set --working_set >= 1 to page)"
+            ),
+            (ws, None) if ws > 0 => bail!(
+                "cola scale: --working_set {ws} needs --page_dir (evicted \
+                 state has to live somewhere)"
+            ),
+            _ => Ok(()),
+        }
+    }
+
+    fn pager(&self) -> Option<PagerCfg> {
+        self.page_dir.as_ref().map(|dir| PagerCfg {
+            dir: dir.clone(),
+            capacity: self.working_set,
+        })
+    }
+}
+
+/// One interval's outcome.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IntervalReport {
+    /// distinct users touched this interval
+    pub touched: usize,
+    /// users registered for the first time (lazy registration)
+    pub new_users: usize,
+    /// fits that returned a result
+    pub fits_ok: u64,
+    /// fits that errored (must be 0 on a healthy run)
+    pub fits_lost: u64,
+    /// the curve point: summed merged deltas, dispatch order
+    pub curve_point: f32,
+}
+
+/// Cumulative run summary — the figures `BENCH_scale.json` and the
+/// scale-smoke CI gate read.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScaleSummary {
+    pub users_registered: usize,
+    pub fits_ok: u64,
+    pub fits_lost: u64,
+    /// resident adapter+optimizer bytes across the fleet, right now
+    pub resident_bytes: usize,
+    pub page_stats: PageStats,
+}
+
+pub struct ScaleHarness {
+    cfg: ScaleCfg,
+    pool: WorkerPool,
+    arrivals: Rng,
+    registered: BTreeSet<usize>,
+    curve: Vec<f32>,
+    fits_ok: u64,
+    fits_lost: u64,
+    interval: usize,
+}
+
+impl ScaleHarness {
+    pub fn new(cfg: ScaleCfg) -> Result<ScaleHarness> {
+        cfg.validate()?;
+        let manifest = std::sync::Arc::new(
+            crate::runtime::native::builtin::builtin_manifest(std::path::Path::new(
+                "artifacts",
+            )),
+        );
+        let pool = WorkerPool::spawn_paged(
+            cfg.workers,
+            OffloadTarget::NativeCpu,
+            manifest,
+            None,
+            cfg.pager(),
+        )
+        .context("spawning the scale-harness worker pool")?;
+        let mut seed_rng = Rng::new(cfg.seed);
+        let arrivals = seed_rng.fork(TAG_ARRIVALS);
+        Ok(ScaleHarness {
+            cfg,
+            pool,
+            arrivals,
+            registered: BTreeSet::new(),
+            curve: Vec::new(),
+            fits_ok: 0,
+            fits_lost: 0,
+            interval: 0,
+        })
+    }
+
+    /// Deterministic per-user adapter: init params from a user-keyed
+    /// stream so registration order can't change anyone's weights.
+    fn adapter_for(&self, user: usize) -> SiteAdapter {
+        let mut rng = Rng::new(self.cfg.seed ^ TAG_INIT).fork(user as u64);
+        let params =
+            AdapterParams::init(AdapterKind::LowRank, D_IN, D_OUT, RANK, RANK, &mut rng);
+        SiteAdapter::new(SITE, params, &OptimizerCfg::adamw(1e-3, 1e-4))
+    }
+
+    /// Deterministic per-(user, interval) job payload.
+    fn job_for(&self, user: usize, interval: usize) -> FitJob {
+        let mut rng =
+            Rng::new(self.cfg.seed ^ TAG_DATA).fork(user as u64).fork(interval as u64);
+        let rows = self.cfg.rows;
+        let x = Tensor::new(vec![rows, D_IN], rng.normal_vec(rows * D_IN, 1.0));
+        let ghat = Tensor::new(vec![rows, D_OUT], rng.normal_vec(rows * D_OUT, 1.0));
+        FitJob {
+            user,
+            site: SITE.to_string(),
+            x,
+            ghat,
+            grad_scale: 1.0,
+            merged: true,
+        }
+    }
+
+    /// Run one adaptation interval: draw the interval's active users
+    /// (Zipf-skewed — a hot head and a long cold tail, which is what
+    /// makes an LRU working set realistic), lazily register first-time
+    /// arrivals, dispatch one fit per active user, and fold the merged
+    /// deltas into this interval's curve point in dispatch order.
+    pub fn run_interval(&mut self) -> Result<IntervalReport> {
+        let interval = self.interval;
+        self.interval += 1;
+        // dedup via BTreeSet: the active set is sorted, so dispatch
+        // order is a pure function of the draw — not of set iteration
+        let mut active: BTreeSet<usize> = BTreeSet::new();
+        for _ in 0..self.cfg.touches_per_interval {
+            active.insert(self.arrivals.zipf(self.cfg.users));
+        }
+        let mut report = IntervalReport { touched: active.len(), ..Default::default() };
+        // lazy registration: a user costs nothing until it first shows
+        // up — 10^6 configured users don't mean 10^6 upfront adapters
+        for &user in &active {
+            if self.registered.insert(user) {
+                report.new_users += 1;
+                let adapter = self.adapter_for(user);
+                self.pool.for_user(user)?.register(user, SITE, adapter)?;
+            }
+        }
+        // dispatch everything, then collect in dispatch order: fits on
+        // different workers overlap, and the float-add order of the
+        // curve point stays fixed (same contract as the trainer's
+        // buffer-drain order)
+        let mut pending = Vec::with_capacity(active.len());
+        for &user in &active {
+            let job = self.job_for(user, interval);
+            pending.push((user, self.pool.for_user(user)?.fit(job)?));
+        }
+        let mut point = 0.0f32;
+        for (user, rx) in pending {
+            match rx.recv() {
+                Ok(Ok(r)) => {
+                    report.fits_ok += 1;
+                    if let Some(d) = &r.delta_diff {
+                        point += d.data().iter().sum::<f32>();
+                    }
+                }
+                Ok(Err(e)) => {
+                    report.fits_lost += 1;
+                    eprintln!("warning: scale fit lost for user {user}: {e:#}");
+                }
+                Err(_) => {
+                    report.fits_lost += 1;
+                    eprintln!("warning: scale fit reply channel died for user {user}");
+                }
+            }
+        }
+        report.curve_point = point;
+        self.curve.push(point);
+        self.fits_ok += report.fits_ok;
+        self.fits_lost += report.fits_lost;
+        Ok(report)
+    }
+
+    /// Run all configured intervals back to back (tests and the bench's
+    /// non-timed warmup use this; `cola scale` loops `run_interval`
+    /// itself to time each one).
+    pub fn run_all(&mut self) -> Result<ScaleSummary> {
+        for _ in self.interval..self.cfg.intervals {
+            self.run_interval()?;
+        }
+        Ok(self.summary())
+    }
+
+    pub fn cfg(&self) -> &ScaleCfg {
+        &self.cfg
+    }
+
+    pub fn curve(&self) -> &[f32] {
+        &self.curve
+    }
+
+    /// The curve as lossless hex f32 bit patterns, one per line — the
+    /// byte-comparable artifact the paging-determinism tests and the
+    /// `--curve_out` flag emit. (`{:.6}` formatting would hide a 1-ulp
+    /// divergence; bit patterns can't.)
+    pub fn curve_hex(&self) -> String {
+        let mut out = String::with_capacity(self.curve.len() * 9);
+        for p in &self.curve {
+            out.push_str(&format!("{:08x}\n", p.to_bits()));
+        }
+        out
+    }
+
+    pub fn summary(&self) -> ScaleSummary {
+        ScaleSummary {
+            users_registered: self.registered.len(),
+            fits_ok: self.fits_ok,
+            fits_lost: self.fits_lost,
+            resident_bytes: self.pool.total_state_bytes(),
+            page_stats: self.pool.total_page_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cola_scale_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cfg(working_set: usize, page_dir: Option<PathBuf>) -> ScaleCfg {
+        ScaleCfg {
+            users: 64,
+            intervals: 4,
+            touches_per_interval: 24,
+            workers: 2,
+            working_set,
+            page_dir,
+            seed: 7,
+            rows: 3,
+        }
+    }
+
+    #[test]
+    fn half_configured_pager_is_rejected() {
+        assert!(cfg(2, None).validate().is_err());
+        assert!(cfg(0, Some(PathBuf::from("/tmp/x"))).validate().is_err());
+        assert!(cfg(0, None).validate().is_ok());
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_and_zipf_skewed() {
+        let mut a = Rng::new(7).fork(TAG_ARRIVALS);
+        let mut b = Rng::new(7).fork(TAG_ARRIVALS);
+        let mut head = 0;
+        for _ in 0..1000 {
+            let u = a.zipf(1000);
+            assert_eq!(u, b.zipf(1000));
+            if u < 100 {
+                head += 1;
+            }
+        }
+        // zipf is u^3-concentrated: P(rank < n/10) = 0.1^(1/3) ~ 46% —
+        // uniform would put ~100 of 1000 in the top decile
+        assert!(head > 300, "arrival skew looks uniform: {head}/1000 in head");
+    }
+
+    #[test]
+    fn paged_run_matches_unpaged_run_byte_for_byte() {
+        let mut plain = ScaleHarness::new(cfg(0, None)).unwrap();
+        let plain_summary = plain.run_all().unwrap();
+        assert_eq!(plain_summary.fits_lost, 0);
+        assert_eq!(plain_summary.page_stats, PageStats::default());
+
+        let dir = tmpdir("match");
+        let mut paged = ScaleHarness::new(cfg(2, Some(dir.clone()))).unwrap();
+        let paged_summary = paged.run_all().unwrap();
+        assert_eq!(paged_summary.fits_lost, 0);
+        // ws=2 under ~12 active users per worker MUST page...
+        assert!(paged_summary.page_stats.faults > 0, "working set never faulted");
+        assert_eq!(paged_summary.page_stats.page_errors, 0);
+        // ...and the curves are byte-identical anyway
+        assert_eq!(plain.curve_hex(), paged.curve_hex());
+        // bounded residency: at most ws adapters resident per worker
+        assert!(paged_summary.resident_bytes < plain_summary.resident_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

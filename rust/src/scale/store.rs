@@ -1,0 +1,513 @@
+//! Keyed adapter/optimizer state store with a bounded LRU working set.
+//!
+//! Every worker holds its users' `(tenant, user, site)` adapter state
+//! here. Unpaged, the store is exactly the old in-memory table: a
+//! `BTreeMap` plus the busy set the checkout/checkin protocol needs.
+//! With a [`PagerCfg`], the resident map is capped at `capacity`
+//! entries and cold state is paged to disk — which is what lets one
+//! worker serve 10^5–10^6 users with memory proportional to the
+//! working set, not the user count (ADR 006).
+//!
+//! # Page format
+//!
+//! A page file is the bit-exact migration blob
+//! [`crate::transport::wire::encode_state`] produces — the same bytes
+//! that cross the wire for shard migration and buddy replication. That
+//! buys three things for free: the round trip is already proven
+//! bit-exact (params AND optimizer moments), corruption is detected by
+//! the blob's own framing checks, and an exported page can be imported
+//! by any other worker unchanged. Paging therefore can never move a
+//! loss curve: a faulted-in adapter is bitwise the adapter that was
+//! evicted.
+//!
+//! # Recency without wall clocks
+//!
+//! LRU ordering uses a logical u64 clock bumped on every insert and
+//! checkin — never `Instant`/`SystemTime`, so eviction order is a pure
+//! function of the access sequence and the store stays inside the
+//! curve-scoped determinism deny set (`cola lint` scans this module).
+//!
+//! # Failure semantics
+//!
+//! - A page that fails to *read* (missing, truncated, corrupted, or
+//!   decoding to a different key) is a per-key error naming the
+//!   (tenant, user, site); it never panics and never poisons other
+//!   keys.
+//! - A page that fails to *write* during eviction keeps the entry
+//!   resident and warns: the working set degrades (memory grows past
+//!   the cap) but state is never lost to a full disk.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::adapters::SiteAdapter;
+
+/// Fully-qualified state key: `(tenant, user, site)`. Structurally the
+/// coordinator's `TenantKey`; redeclared here so `scale` never depends
+/// on `coordinator` (the dependency points the other way).
+pub type StoreKey = (String, usize, String);
+
+/// Where and how much to page.
+#[derive(Clone, Debug)]
+pub struct PagerCfg {
+    /// Directory the page files live in (created if missing). Each
+    /// worker must get its OWN directory — pages are keyed per store.
+    pub dir: PathBuf,
+    /// Max resident (in-memory) entries; must be >= 1. Checked-out
+    /// adapters don't count against it (they live on the fitting
+    /// thread's stack), so the true ceiling is `capacity` + in-flight.
+    pub capacity: usize,
+}
+
+/// Paging counters, cheap enough to read every interval.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageStats {
+    /// cold accesses served from disk
+    pub faults: u64,
+    /// entries written out to make room
+    pub evictions: u64,
+    /// page files written (== evictions unless writes failed)
+    pub page_writes: u64,
+    /// failed page reads/writes (each also warned or errored per key)
+    pub page_errors: u64,
+}
+
+struct Entry {
+    adapter: SiteAdapter,
+    /// logical-clock stamp of the last insert/checkin — LRU order
+    stamp: u64,
+}
+
+struct Pager {
+    dir: PathBuf,
+    capacity: usize,
+    /// The authority on what lives on disk. A file without a `paged`
+    /// entry is stale garbage (tolerated, overwritten on next evict);
+    /// a `paged` entry without a readable file is a per-key error.
+    paged: BTreeSet<StoreKey>,
+}
+
+/// The store. Not internally locked — callers (the worker core) wrap
+/// it in their own mutex, exactly like the table it replaced.
+pub struct KeyedStateStore {
+    resident: BTreeMap<StoreKey, Entry>,
+    /// keys checked out by an in-flight fit
+    busy: BTreeSet<StoreKey>,
+    clock: u64,
+    pager: Option<Pager>,
+    stats: PageStats,
+}
+
+impl KeyedStateStore {
+    /// Unpaged store: plain in-memory table, zero behavior change.
+    pub fn new() -> KeyedStateStore {
+        KeyedStateStore {
+            resident: BTreeMap::new(),
+            busy: BTreeSet::new(),
+            clock: 0,
+            pager: None,
+            stats: PageStats::default(),
+        }
+    }
+
+    /// Paged store rooted at `cfg.dir` (created here so the first
+    /// eviction can't fail on a missing directory).
+    pub fn with_pager(cfg: PagerCfg) -> Result<KeyedStateStore> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating page dir {}", cfg.dir.display()))?;
+        let mut s = KeyedStateStore::new();
+        s.pager = Some(Pager {
+            dir: cfg.dir,
+            capacity: cfg.capacity.max(1),
+            paged: BTreeSet::new(),
+        });
+        Ok(s)
+    }
+
+    pub fn stats(&self) -> PageStats {
+        self.stats
+    }
+
+    pub fn is_busy(&self, key: &StoreKey) -> bool {
+        self.busy.contains(key)
+    }
+
+    pub fn busy_len(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// Un-busy a key (checkin and panic-release paths). Returns whether
+    /// it was busy.
+    pub fn clear_busy(&mut self, key: &StoreKey) -> bool {
+        self.busy.remove(key)
+    }
+
+    /// Bytes of RESIDENT adapter + optimizer state. Paged-out entries
+    /// deliberately don't count — bounding this figure is the whole
+    /// point of paging, and it is what the memory ledger reports.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident
+            .values()
+            .map(|e| e.adapter.params.bytes() + e.adapter.opt.bytes())
+            .sum()
+    }
+
+    /// Install (or replace) state for a key, evicting over-capacity
+    /// cold entries to disk. Callers must have rejected busy keys
+    /// already (registration/import during an in-flight fit).
+    pub fn insert(&mut self, key: StoreKey, adapter: SiteAdapter) {
+        if let Some(p) = &mut self.pager {
+            // a fresh insert supersedes any page on disk for the key
+            if p.paged.remove(&key) {
+                let _ = std::fs::remove_file(page_path(&p.dir, &key));
+            }
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        self.resident.insert(key, Entry { adapter, stamp });
+        self.enforce_capacity();
+    }
+
+    /// Check a key out for a fit: remove it from the resident map (or
+    /// fault it in from disk), mark it busy. `Ok(None)` = the key is
+    /// neither resident, paged, nor busy — the caller turns that into
+    /// its "no adapter" / "busy" error. `Err` = the key IS paged but
+    /// its page failed to read — a per-key error, never a panic.
+    pub fn take(&mut self, key: &StoreKey) -> Result<Option<SiteAdapter>> {
+        if let Some(e) = self.resident.remove(key) {
+            self.busy.insert(key.clone());
+            return Ok(Some(e.adapter));
+        }
+        if self.pager.as_ref().is_some_and(|p| p.paged.contains(key)) {
+            let adapter = self.fault_in(key)?;
+            if let Some(p) = self.pager.as_mut() {
+                p.paged.remove(key);
+                let _ = std::fs::remove_file(page_path(&p.dir, key));
+            }
+            self.busy.insert(key.clone());
+            return Ok(Some(adapter));
+        }
+        Ok(None)
+    }
+
+    /// A clone of a key's state without checking it out (snapshots).
+    /// Paged keys are read from disk but stay paged — a read-only peek
+    /// must not churn the working set.
+    pub fn peek_clone(&mut self, key: &StoreKey) -> Result<Option<SiteAdapter>> {
+        if let Some(e) = self.resident.get(key) {
+            return Ok(Some(e.adapter.clone()));
+        }
+        if self.pager.as_ref().is_some_and(|p| p.paged.contains(key)) {
+            return self.fault_in(key).map(Some);
+        }
+        Ok(None)
+    }
+
+    /// The key's state as a migration blob — from memory or straight
+    /// off disk (page files ARE migration blobs).
+    pub fn export_blob(&mut self, key: &StoreKey) -> Result<Option<Vec<u8>>> {
+        if let Some(e) = self.resident.get(key) {
+            return Ok(Some(crate::transport::wire::encode_state(
+                key.1, &key.2, &e.adapter,
+            )));
+        }
+        if self.pager.as_ref().is_some_and(|p| p.paged.contains(key)) {
+            // round-trip through decode so a corrupted page surfaces
+            // here as this key's error, not later on a peer's import
+            let adapter = self.fault_in(key)?;
+            return Ok(Some(crate::transport::wire::encode_state(
+                key.1, &key.2, &adapter,
+            )));
+        }
+        Ok(None)
+    }
+
+    /// Whether the key has state, resident or paged.
+    pub fn contains(&self, key: &StoreKey) -> bool {
+        self.resident.contains_key(key)
+            || self.pager.as_ref().is_some_and(|p| p.paged.contains(key))
+    }
+
+    /// Drop a key's state everywhere (evict-after-migration). Absent
+    /// keys are a no-op.
+    pub fn remove(&mut self, key: &StoreKey) {
+        self.resident.remove(key);
+        if let Some(p) = &mut self.pager {
+            if p.paged.remove(key) {
+                let _ = std::fs::remove_file(page_path(&p.dir, key));
+            }
+        }
+    }
+
+    /// Return a checked-out adapter. Infallible by contract (the fit
+    /// path cannot handle a failing checkin); an over-capacity page
+    /// WRITE failure degrades to keeping the entry resident, loudly.
+    pub fn checkin(&mut self, key: StoreKey, adapter: SiteAdapter) {
+        self.busy.remove(&key);
+        self.clock += 1;
+        let stamp = self.clock;
+        self.resident.insert(key, Entry { adapter, stamp });
+        self.enforce_capacity();
+    }
+
+    fn fault_in(&mut self, key: &StoreKey) -> Result<SiteAdapter> {
+        let p = self.pager.as_ref().ok_or_else(|| {
+            anyhow!("state store: fault for {} without a pager", label(key))
+        })?;
+        let path = page_path(&p.dir, key);
+        let blob = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                self.stats.page_errors += 1;
+                return Err(anyhow!(
+                    "state page for {} unreadable at {} ({e}); this \
+                     (user, site) is lost but no other key is affected",
+                    label(key),
+                    path.display()
+                ));
+            }
+        };
+        let decoded = crate::transport::wire::decode_state(&blob);
+        let (user, site, adapter) = match decoded {
+            Ok(t) => t,
+            Err(e) => {
+                self.stats.page_errors += 1;
+                return Err(anyhow!(
+                    "state page for {} at {} is corrupted ({e:#}); this \
+                     (user, site) is lost but no other key is affected",
+                    label(key),
+                    path.display()
+                ));
+            }
+        };
+        if user != key.1 || site != key.2 {
+            self.stats.page_errors += 1;
+            return Err(anyhow!(
+                "state page for {} at {} decodes to (user {user}, site \
+                 {site}) — wrong key; refusing to serve it",
+                label(key),
+                path.display()
+            ));
+        }
+        self.stats.faults += 1;
+        Ok(adapter)
+    }
+
+    fn enforce_capacity(&mut self) {
+        let Some(cap) = self.pager.as_ref().map(|p| p.capacity) else {
+            return;
+        };
+        while self.resident.len() > cap {
+            // least-recent stamp = coldest entry (busy keys are never
+            // resident, so everything here is evictable)
+            let Some(victim) = self
+                .resident
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+            else {
+                return;
+            };
+            let Some(e) = self.resident.get(&victim) else {
+                return;
+            };
+            let blob =
+                crate::transport::wire::encode_state(victim.1, &victim.2, &e.adapter);
+            let Some(p) = self.pager.as_mut() else {
+                return;
+            };
+            match write_page(&p.dir, &victim, &blob) {
+                Ok(()) => {
+                    p.paged.insert(victim.clone());
+                    self.resident.remove(&victim);
+                    self.stats.evictions += 1;
+                    self.stats.page_writes += 1;
+                }
+                Err(e) => {
+                    // keep the entry resident: exceeding the working
+                    // set beats losing optimizer state to a full disk
+                    self.stats.page_errors += 1;
+                    eprintln!(
+                        "warning: paging {} out failed ({e:#}); keeping it \
+                         resident (working set exceeds its cap until disk \
+                         recovers)",
+                        label(&victim)
+                    );
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl Default for KeyedStateStore {
+    fn default() -> Self {
+        KeyedStateStore::new()
+    }
+}
+
+fn label(key: &StoreKey) -> String {
+    if key.0.is_empty() {
+        format!("({}, {})", key.1, key.2)
+    } else {
+        format!("(tenant {}, user {}, site {})", key.0, key.1, key.2)
+    }
+}
+
+/// FNV-1a over the full key label — disambiguates keys whose sanitized
+/// filename prefixes collide (e.g. sites `a.b` and `a_b`).
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .take(40)
+        .collect()
+}
+
+fn page_path(dir: &Path, key: &StoreKey) -> PathBuf {
+    let full = format!("{}\u{1f}{}\u{1f}{}", key.0, key.1, key.2);
+    dir.join(format!(
+        "{}__{}__{}.{:016x}.page",
+        sanitize(&key.0),
+        key.1,
+        sanitize(&key.2),
+        fnv1a64(&full)
+    ))
+}
+
+/// Write-then-rename so a crash mid-write leaves no half page under the
+/// real name (a stale `.tmp` is garbage the next write overwrites).
+fn write_page(dir: &Path, key: &StoreKey, blob: &[u8]) -> Result<()> {
+    let path = page_path(dir, key);
+    let tmp = path.with_extension("page.tmp");
+    std::fs::write(&tmp, blob)
+        .with_context(|| format!("writing page {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing page {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::{AdapterParams, OptimizerCfg};
+    use crate::config::AdapterKind;
+
+    fn adapter(seed: u64) -> SiteAdapter {
+        let mut rng = crate::rng::Rng::new(seed);
+        let params = AdapterParams::init(AdapterKind::LowRank, 6, 4, 3, 5, &mut rng);
+        SiteAdapter::new("s", params, &OptimizerCfg::adamw(1e-3, 1e-4))
+    }
+
+    fn key(user: usize) -> StoreKey {
+        (String::new(), user, "s".to_string())
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cola_store_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn unpaged_store_is_a_plain_table() {
+        let mut s = KeyedStateStore::new();
+        s.insert(key(0), adapter(1));
+        s.insert(key(1), adapter(2));
+        assert!(s.contains(&key(0)));
+        let a = s.take(&key(0)).unwrap().unwrap();
+        assert!(s.is_busy(&key(0)));
+        assert_eq!(s.take(&key(0)).unwrap().map(|_| ()), None);
+        s.checkin(key(0), a);
+        assert!(!s.is_busy(&key(0)));
+        assert_eq!(s.stats(), PageStats::default());
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_and_faults_it_back_bitwise() {
+        let dir = tmpdir("lru");
+        let mut s = KeyedStateStore::with_pager(PagerCfg {
+            dir: dir.clone(),
+            capacity: 2,
+        })
+        .unwrap();
+        for u in 0..3 {
+            s.insert(key(u), adapter(10 + u as u64));
+        }
+        // capacity 2: user 0 (coldest) went to disk
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.resident.len(), 2);
+        assert!(s.contains(&key(0)));
+        let reference = crate::transport::wire::encode_state(0, "s", &adapter(10));
+        // touch user 0: faulted back bit-identical to what was stored
+        let a0 = s.take(&key(0)).unwrap().unwrap();
+        assert_eq!(s.stats().faults, 1);
+        assert_eq!(crate::transport::wire::encode_state(0, "s", &a0), reference);
+        // checking it back in pushes the new coldest (user 1) out
+        s.checkin(key(0), a0);
+        assert_eq!(s.stats().evictions, 2);
+        assert!(s.contains(&key(1)));
+        // export of a paged key round-trips through the page file
+        let blob = s.export_blob(&key(1)).unwrap().unwrap();
+        assert_eq!(
+            blob,
+            crate::transport::wire::encode_state(1, "s", &adapter(11))
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_page_is_a_per_key_error_not_a_panic() {
+        let dir = tmpdir("corrupt");
+        let mut s = KeyedStateStore::with_pager(PagerCfg {
+            dir: dir.clone(),
+            capacity: 1,
+        })
+        .unwrap();
+        s.insert(key(0), adapter(1));
+        s.insert(key(1), adapter(2)); // pages user 0 out
+        let path = page_path(&dir, &key(0));
+        std::fs::write(&path, b"definitely not a state blob").unwrap();
+        let err = s.take(&key(0)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("(0, s)"), "{msg}");
+        assert!(msg.contains("no other key is affected"), "{msg}");
+        assert_eq!(s.stats().page_errors, 1);
+        // the OTHER key still serves fine
+        assert!(s.take(&key(1)).unwrap().is_some());
+        // a missing page errors the same way (named, no panic)
+        let _ = std::fs::remove_file(&path);
+        let err = s.peek_clone(&key(0)).unwrap_err();
+        assert!(format!("{err}").contains("unreadable"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn remove_drops_the_page_file_too() {
+        let dir = tmpdir("rm");
+        let mut s = KeyedStateStore::with_pager(PagerCfg {
+            dir: dir.clone(),
+            capacity: 1,
+        })
+        .unwrap();
+        s.insert(key(0), adapter(1));
+        s.insert(key(1), adapter(2));
+        let p0 = page_path(&dir, &key(0));
+        assert!(p0.exists());
+        s.remove(&key(0));
+        assert!(!p0.exists());
+        assert!(!s.contains(&key(0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

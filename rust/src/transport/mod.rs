@@ -164,6 +164,14 @@ pub trait Transport: Send {
         0
     }
 
+    /// Adapter-state paging counters (faults, evictions, page writes,
+    /// page errors) for workers running an LRU-paged state store.
+    /// Unpaged and remote transports report zeros — paging is a local
+    /// working-set concern, not a wire-protocol one.
+    fn page_stats(&self) -> Result<crate::scale::store::PageStats> {
+        Ok(crate::scale::store::PageStats::default())
+    }
+
     /// Release this link. For a local worker the thread exits; for a
     /// TCP worker only the connection closes — the daemon (and its
     /// adapter state) stays up for reconnects. Use

@@ -1,0 +1,191 @@
+//! Paging-determinism integration tests (README §Scale harness & state
+//! paging): an LRU working set paging cold adapter state to disk must
+//! be invisible in every number the system produces. Three angles:
+//!
+//! 1. the scale harness's loss-proxy curve is byte-identical paging on
+//!    or off, at ANY working-set size (including the ws=1 thrash case);
+//! 2. an evict-then-touch round trip through the page file preserves
+//!    AdamW optimizer moments bitwise (exercised at the WorkerPool
+//!    level, through the same checkout/checkin path fits use);
+//! 3. a corrupted page file is a per-key fit error — the worker keeps
+//!    serving every other key and never panics.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cola::adapters::{AdapterParams, OptimizerCfg, SiteAdapter};
+use cola::config::{AdapterKind, OffloadTarget};
+use cola::coordinator::{FitJob, WorkerPool};
+use cola::rng::Rng;
+use cola::runtime::Manifest;
+use cola::scale::store::PagerCfg;
+use cola::scale::{ScaleCfg, ScaleHarness};
+use cola::tensor::Tensor;
+
+fn manifest() -> Arc<Manifest> {
+    Arc::new(Manifest::load_or_builtin(std::path::Path::new("artifacts")).unwrap())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("cola_scale_paging_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn harness_cfg(working_set: usize, page_dir: Option<PathBuf>) -> ScaleCfg {
+    ScaleCfg {
+        users: 48,
+        intervals: 5,
+        touches_per_interval: 20,
+        workers: 2,
+        working_set,
+        page_dir,
+        seed: 0xBEEF,
+        rows: 3,
+    }
+}
+
+#[test]
+fn curves_are_byte_identical_at_any_working_set_size() {
+    let mut reference = ScaleHarness::new(harness_cfg(0, None)).unwrap();
+    let ref_summary = reference.run_all().unwrap();
+    assert_eq!(ref_summary.fits_lost, 0);
+
+    // ws=1 thrashes (every touch after the first evicts something),
+    // ws=2 pages heavily, ws=64 barely pages — all must match the
+    // unpaged curve byte for byte
+    for ws in [1usize, 2, 64] {
+        let dir = tmpdir(&format!("ws{ws}"));
+        let mut paged =
+            ScaleHarness::new(harness_cfg(ws, Some(dir.clone()))).unwrap();
+        let summary = paged.run_all().unwrap();
+        assert_eq!(summary.fits_lost, 0, "ws={ws} lost fits");
+        assert_eq!(summary.page_stats.page_errors, 0, "ws={ws} page errors");
+        assert_eq!(
+            reference.curve_hex(),
+            paged.curve_hex(),
+            "ws={ws}: paging moved the curve"
+        );
+        // same population either way
+        assert_eq!(summary.users_registered, ref_summary.users_registered);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+const D_IN: usize = 6;
+const D_OUT: usize = 4;
+
+fn adapter(seed: u64) -> SiteAdapter {
+    let mut rng = Rng::new(seed);
+    let params = AdapterParams::init(AdapterKind::LowRank, D_IN, D_OUT, 3, 5, &mut rng);
+    SiteAdapter::new("s", params, &OptimizerCfg::adamw(1e-3, 1e-4))
+}
+
+fn fit_job(user: usize, round: u64) -> FitJob {
+    let mut rng = Rng::new(user as u64 * 1000 + round);
+    FitJob {
+        user,
+        site: "s".to_string(),
+        x: Tensor::new(vec![3, D_IN], rng.normal_vec(3 * D_IN, 1.0)),
+        ghat: Tensor::new(vec![3, D_OUT], rng.normal_vec(3 * D_OUT, 1.0)),
+        grad_scale: 1.0,
+        merged: true,
+    }
+}
+
+/// Drive the same interleaved fit sequence through a pool; returns the
+/// final per-user state blobs (params + optimizer moments, bit-exact).
+fn run_fits(pool: &WorkerPool, users: usize, rounds: u64) -> Vec<Vec<u8>> {
+    for u in 0..users {
+        pool.for_user(u).unwrap().register(u, "s", adapter(u as u64)).unwrap();
+    }
+    for round in 0..rounds {
+        // interleave so a small working set evicts and faults every key
+        // repeatedly between its touches
+        for u in 0..users {
+            let rx = pool.for_user(u).unwrap().fit(fit_job(u, round)).unwrap();
+            rx.recv().unwrap().unwrap();
+        }
+    }
+    (0..users)
+        .map(|u| pool.for_user(u).unwrap().export_state(u, "s").unwrap())
+        .collect()
+}
+
+#[test]
+fn evict_then_touch_round_trips_adamw_moments_bitwise() {
+    let users = 5;
+    let plain = WorkerPool::spawn(1, OffloadTarget::NativeCpu, manifest(), None).unwrap();
+    let plain_blobs = run_fits(&plain, users, 4);
+    drop(plain);
+
+    // capacity 1 with 5 users: every single fit faults its adapter in
+    // from disk and every checkin evicts another — the worst case for
+    // any bit that doesn't survive the page format
+    let dir = tmpdir("moments");
+    let paged = WorkerPool::spawn_paged(
+        1,
+        OffloadTarget::NativeCpu,
+        manifest(),
+        None,
+        Some(PagerCfg { dir: dir.clone(), capacity: 1 }),
+    )
+    .unwrap();
+    let paged_blobs = run_fits(&paged, users, 4);
+    let stats = paged.total_page_stats();
+    assert!(stats.faults > 0, "capacity 1 never faulted");
+    assert_eq!(stats.page_errors, 0);
+    drop(paged);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // export_state blobs carry params AND optimizer moments; byte
+    // equality here is the full AdamW state surviving eviction bitwise
+    for (u, (a, b)) in plain_blobs.iter().zip(&paged_blobs).enumerate() {
+        assert_eq!(a, b, "user {u}: state blob diverged after paging");
+    }
+}
+
+#[test]
+fn corrupted_page_is_a_per_key_fit_error_not_a_panic() {
+    let dir = tmpdir("corrupt");
+    let pool = WorkerPool::spawn_paged(
+        1,
+        OffloadTarget::NativeCpu,
+        manifest(),
+        None,
+        Some(PagerCfg { dir: dir.clone(), capacity: 1 }),
+    )
+    .unwrap();
+    // registering user 1 evicts user 0's state to disk (capacity 1)
+    pool.for_user(0).unwrap().register(0, "s", adapter(0)).unwrap();
+    pool.for_user(1).unwrap().register(1, "s", adapter(1)).unwrap();
+
+    // find user 0's page file under w0/ and trash it
+    let w0 = dir.join("w0");
+    let mut corrupted = 0;
+    for entry in std::fs::read_dir(&w0).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if name.starts_with("__0__s.") {
+            std::fs::write(&path, b"not a state blob").unwrap();
+            corrupted += 1;
+        }
+    }
+    assert_eq!(corrupted, 1, "expected exactly one page file for (0, s) in w0/");
+
+    // touching the corrupted key is an error carried in the fit reply —
+    // not a worker panic, not a poisoned pool
+    let rx = pool.for_user(0).unwrap().fit(fit_job(0, 0)).unwrap();
+    let err = rx.recv().unwrap().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("(0, s)"), "error does not name the key: {msg}");
+
+    // every other key still serves fits on the same worker
+    let rx = pool.for_user(1).unwrap().fit(fit_job(1, 0)).unwrap();
+    rx.recv().unwrap().unwrap();
+    assert!(pool.for_user(1).unwrap().snapshot(1, "s").is_ok());
+
+    drop(pool);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -110,7 +110,7 @@ fn assert_curves_eq(a: &RunReport, b: &RunReport, what: &str) {
 /// the one worth killing if the test wants guaranteed lost fits.
 fn victim_of(addr_a: &str, addr_b: &str) -> bool {
     let keys = member_keys(&[addr_a.to_string(), addr_b.to_string()]);
-    keys[rendezvous_owner(&keys, 0)] == addr_a
+    keys[rendezvous_owner(&keys, 0).unwrap()] == addr_a
 }
 
 /// Invariant 1 (the acceptance criterion): the ENTIRE primary fleet is
@@ -548,7 +548,7 @@ fn offline_pool_add_migrates_existing_state_instead_of_erroring() {
     .into_iter()
     .collect();
     for user in 0..USERS {
-        let owner = &keys2[rendezvous_owner(&keys2, user)];
+        let owner = &keys2[rendezvous_owner(&keys2, user).unwrap()];
         let w = by_addr[owner.as_str()];
         w.register(user, "s", lowrank_adapter(100 + user as u64)).unwrap();
         w.fit(job(user)).unwrap().recv().unwrap().unwrap();
@@ -558,7 +558,7 @@ fn offline_pool_add_migrates_existing_state_instead_of_erroring() {
         .map(|user| {
             let shadow = cola::coordinator::WorkerCore::new(
                 0, cola::config::OffloadTarget::NativeCpu, manifest(), None);
-            let owner = &keys2[rendezvous_owner(&keys2, user)];
+            let owner = &keys2[rendezvous_owner(&keys2, user).unwrap()];
             let blob = by_addr[owner.as_str()].export_state(user, "s").unwrap();
             shadow.import_state("", &blob).unwrap();
             shadow.fit("", job(user)).unwrap().new_params.unwrap()
@@ -571,8 +571,8 @@ fn offline_pool_add_migrates_existing_state_instead_of_erroring() {
     assert!(stats.bytes_moved > 0);
 
     for user in 0..USERS {
-        let old_owner = &keys2[rendezvous_owner(&keys2, user)];
-        let new_owner = &keys3[rendezvous_owner(&keys3, user)];
+        let old_owner = &keys2[rendezvous_owner(&keys2, user).unwrap()];
+        let new_owner = &keys3[rendezvous_owner(&keys3, user).unwrap()];
         let w_new = by_addr[cola::coordinator::key_addr(new_owner)];
         // the (possibly migrated) state serves a fit bit-identical to
         // the never-migrated reference — moments made the trip intact
